@@ -1,0 +1,60 @@
+//! Scheduling a realistic scientific workflow: the simulated Cycles
+//! agro-ecosystem model (the paper's application-specific dataset),
+//! including the paper's Figure-9 anomaly — on communication-heavy
+//! cycles workflows the usually-terrible Quickest comparison function
+//! wins.
+//!
+//! ```bash
+//! cargo run --release --example cycles_workflow
+//! ```
+
+use ptgs::prelude::*;
+use ptgs::ranks::native;
+
+fn main() {
+    // One communication-heavy cycles instance (CCR = 5).
+    let spec = DatasetSpec { count: 25, ..DatasetSpec::new(Structure::Cycles, 5.0) };
+    let instances = spec.generate();
+    let inst = &instances[0];
+
+    println!("workflow {} — {} tasks, {} machines, CCR {:.2}", inst.name,
+        inst.graph.len(), inst.network.len(), inst.ccr());
+    let ranks = native::ranks(inst);
+    let cp = ranks.critical_path(inst, 1e-9);
+    println!("critical path ({} tasks, length {:.1}):", cp.len(), ranks.cp_value());
+    for &t in &cp {
+        println!("  {}", inst.graph.name(t));
+    }
+
+    // Compare the three comparison functions (HEFT-style otherwise)
+    // across the whole dataset — the Fig. 9 experiment in miniature.
+    println!("\nmean makespan over {} cycles_ccr_5 instances:", instances.len());
+    for compare in CompareFn::ALL {
+        let cfg = SchedulerConfig { compare, ..SchedulerConfig::heft() };
+        let s = cfg.build();
+        let mean: f64 = instances
+            .iter()
+            .map(|i| {
+                let sched = s.schedule(i);
+                assert!(sched.validate(i).is_ok());
+                sched.makespan()
+            })
+            .sum::<f64>()
+            / instances.len() as f64;
+        println!("  {:<10} {mean:10.2}", format!("{compare}"));
+    }
+    println!("\nWith CCR = 5, data movement dominates; Quickest's refusal to");
+    println!("chase early slots on remote nodes keeps work local and wins —");
+    println!("the paper's headline dataset-specific reversal (Fig. 9).");
+
+    // Show where the schedule actually places the pipeline stages.
+    let s = SchedulerConfig::heft().build().schedule(inst);
+    println!("\nHEFT placement (makespan {:.1}):", s.makespan());
+    for node in 0..inst.network.len() {
+        let tasks: Vec<String> = s
+            .timeline(node)
+            .map(|a| inst.graph.name(a.task).to_string())
+            .collect();
+        println!("  node {node} (speed {:.2}): {}", inst.network.speed(node), tasks.join(" → "));
+    }
+}

@@ -1,0 +1,8 @@
+// tiny driver: run the 72-scheduler sweep many times for profiling
+fn main() {
+    use ptgs::benchmark::Harness;
+    use ptgs::datasets::{DatasetSpec, Structure};
+    let specs: Vec<_> = Structure::ALL.iter().map(|&s| DatasetSpec { count: 10, ..DatasetSpec::new(s, 1.0) }).collect();
+    let h = Harness::all_schedulers();
+    for _ in 0..50 { std::hint::black_box(h.run_all(&specs)); }
+}

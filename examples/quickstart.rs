@@ -1,0 +1,60 @@
+//! Quickstart: build a task graph and a network by hand, schedule it
+//! with HEFT, and print the resulting schedule.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ptgs::prelude::*;
+
+fn main() {
+    // A small fork-join workflow: preprocess → {3 × analyze} → report.
+    let mut g = TaskGraph::new();
+    let pre = g.add_task("preprocess", 2.0);
+    let analyzers: Vec<_> = (0..3)
+        .map(|i| g.add_task(format!("analyze_{i}"), 4.0 + i as f64))
+        .collect();
+    let report = g.add_task("report", 1.5);
+    for &a in &analyzers {
+        g.add_edge(pre, a, 1.0); // 1 unit of data to each analyzer
+        g.add_edge(a, report, 0.5);
+    }
+
+    // Three heterogeneous machines: speeds 1×, 2×, 4×; all links 2.0.
+    let network = Network::new(vec![1.0, 2.0, 4.0], vec![2.0; 9]);
+    let inst = ProblemInstance::new("quickstart", g, network);
+    println!("instance: {} tasks on {} nodes (CCR = {:.2})",
+        inst.graph.len(), inst.network.len(), inst.ccr());
+
+    // Schedule with HEFT (= UpwardRanking + insertion + EFT) …
+    let heft = SchedulerConfig::heft().build();
+    let schedule = heft.schedule(&inst);
+    schedule.validate(&inst).expect("schedule must satisfy §I-A");
+    println!("\nHEFT schedule (makespan {:.4}):", schedule.makespan());
+    let mut rows: Vec<_> = schedule.assignments().collect();
+    rows.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    for a in rows {
+        println!(
+            "  [{:7.3} – {:7.3}] node {}  {}",
+            a.start, a.end, a.node, inst.graph.name(a.task)
+        );
+    }
+
+    // … and compare all 72 parametric schedulers on this one instance.
+    println!("\nall 72 schedulers on this instance:");
+    let mut results: Vec<(String, f64)> = SchedulerConfig::all()
+        .into_iter()
+        .map(|cfg| {
+            let s = cfg.build().schedule(&inst);
+            (cfg.name(), s.makespan())
+        })
+        .collect();
+    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (name, makespan) in results.iter().take(5) {
+        println!("  {makespan:8.4}  {name}   <- best");
+    }
+    println!("  …");
+    for (name, makespan) in results.iter().rev().take(3).rev() {
+        println!("  {makespan:8.4}  {name}");
+    }
+}

@@ -1,0 +1,62 @@
+//! End-to-end driver: the full paper reproduction on a real workload.
+//!
+//! Runs all 72 parametric schedulers over all 20 datasets (4 structures
+//! × 5 CCRs) through the parallel coordinator, then regenerates every
+//! table and figure of the paper's evaluation into `results/`.
+//!
+//! With `--quick` (or env `PTGS_QUICK=1`) it uses 20 instances per
+//! dataset instead of the paper's 100, which finishes in well under a
+//! minute on a laptop-class machine.
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper           # full (100)
+//! cargo run --release --example reproduce_paper -- --quick
+//! ```
+
+use std::time::Instant;
+
+use ptgs::analysis::Artifact;
+use ptgs::benchmark::HarnessOptions;
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::DatasetSpec;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("PTGS_QUICK").is_ok();
+    let count = if quick { 20 } else { 100 };
+    let specs = DatasetSpec::all(count, 0x5A6A_5EED);
+    println!(
+        "reproducing: 72 schedulers × {} datasets × {count} instances",
+        specs.len()
+    );
+
+    let coord = Coordinator {
+        options: CoordinatorOptions {
+            harness: HarnessOptions { validate: true, timing_repeats: 3 },
+            ..Default::default()
+        },
+        ..Coordinator::all_schedulers()
+    };
+    let t0 = Instant::now();
+    let results = coord.run_blocking(&specs);
+    println!(
+        "benchmark done: {} records in {:.1}s on {} workers",
+        results.records.len(),
+        t0.elapsed().as_secs_f64(),
+        coord.options.workers
+    );
+
+    let out_dir = std::path::Path::new("results");
+    results
+        .save(&out_dir.join("benchmark.json"))
+        .expect("save results");
+
+    for artifact in Artifact::ALL {
+        let text = artifact.generate(&results, out_dir).expect("artifact");
+        println!("\n================= {} =================", artifact.id());
+        println!("{text}");
+    }
+    ptgs::analysis::write_report(&results, out_dir, t0.elapsed().as_secs_f64())
+        .expect("report");
+    println!("CSV data + REPORT.md for every table/figure written to results/");
+}

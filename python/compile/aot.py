@@ -1,0 +1,103 @@
+"""AOT-lower the L2 rank model to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Emitted artifacts (one per padded graph size N):
+
+    artifacts/ranks_b{B}_n{N}.hlo.txt   — jitted `model.ranks` for shapes
+                                          m: f32[B, N, N], w: f32[B, N]
+    artifacts/manifest.json             — machine-readable shape manifest
+                                          consumed by rust/src/runtime/
+
+Run via ``make artifacts`` (idempotent: skipped when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (batch, padded-size) variants compiled ahead of time. Rust picks the
+# smallest N >= |T| and pads the batch to B. Graphs with |T| > max N fall
+# back to the native Rust rank engine.
+VARIANTS: list[tuple[int, int]] = [(8, 16), (8, 32), (8, 64)]
+
+# Static fixpoint iteration bound baked into each artifact. Sound for
+# every graph whose longest path has <= ITERS edges (the Rust runtime
+# checks this and falls back to the native engine otherwise). The
+# benchmark families are shallow (trees: <= 3, chains: <= 4, cycles:
+# <= 3), so 16 is generous while cutting the n=64 artifact's tropical
+# matvec count by 4x (EXPERIMENTS.md §Perf).
+ITERS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ranks(batch: int, n: int, iters: int | None = None) -> str:
+    spec_m = jax.ShapeDtypeStruct((batch, n, n), jax.numpy.float32)
+    spec_w = jax.ShapeDtypeStruct((batch, n), jax.numpy.float32)
+    fn = functools.partial(model.ranks, iters=iters)
+    lowered = jax.jit(fn).lower(spec_m, spec_w)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        default="../artifacts",
+        help="artifact output directory (default: ../artifacts)",
+    )
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"neg": model.NEG, "entries": []}
+    for batch, n in VARIANTS:
+        iters = min(ITERS, n)
+        name = f"ranks_b{batch}_n{n}.hlo.txt"
+        text = lower_ranks(batch, n, iters)
+        (out_dir / name).write_text(text)
+        manifest["entries"].append(
+            {
+                "file": name,
+                "entry": "ranks",
+                "batch": batch,
+                "n": n,
+                "iters": iters,
+                "inputs": [
+                    {"name": "m", "shape": [batch, n, n], "dtype": "f32"},
+                    {"name": "w", "shape": [batch, n], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"name": "up", "shape": [batch, n], "dtype": "f32"},
+                    {"name": "down", "shape": [batch, n], "dtype": "f32"},
+                ],
+            }
+        )
+        print(f"wrote {out_dir / name} ({len(text)} chars)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the tropical (max-plus) kernels.
+
+These are the correctness references the Pallas kernels in
+``tropical.py`` are tested against (``python/tests/test_kernel.py``).
+They are deliberately written in the most obvious vectorized form; no
+tiling, no grid, no VMEM considerations.
+
+The (max, +) semiring replaces (+, *) of ordinary linear algebra:
+
+    (A (x) B)[i, j] = max_k A[i, k] + B[k, j]
+    (M (x) v)[i]    = max_j M[i, j] + v[j]
+
+The additive identity ("bottom", no edge) is -inf; we encode it with the
+large-negative sentinel ``NEG`` so that AOT artifacts avoid genuine
+infinities (XLA handles them, but finite sentinels keep padding math
+well-defined under subtraction too).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# "Bottom" of the max-plus semiring. Finite so that NEG + NEG does not
+# overflow to -inf in f32 (-1e30 + -1e30 = -2e30, still finite in f32's
+# +/-3.4e38 range) and so padding rows stay inert through N iterations.
+NEG = -1.0e30
+
+
+def tropical_matvec_ref(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """(max,+) matrix-vector product, batched over leading dims.
+
+    m: (..., N, N), v: (..., N)  ->  (..., N)
+    out[..., i] = max_j m[..., i, j] + v[..., j]
+    """
+    return jnp.max(m + v[..., None, :], axis=-1)
+
+
+def tropical_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(max,+) matrix-matrix product, batched over leading dims.
+
+    a: (..., N, K), b: (..., K, M) -> (..., N, M)
+    out[..., i, j] = max_k a[..., i, k] + b[..., k, j]
+    """
+    return jnp.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+def tropical_closure_ref(m: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Longest-path closure  I (+) M (+) M^2 (+) ...  via repeated squaring.
+
+    ``I`` in max-plus has 0 on the diagonal and NEG elsewhere. After
+    ceil(log2(iters)) squarings of (I (+) M) the entry [i, j] is the
+    longest-path weight from i to j (<= NEG/2 if unreachable), for paths
+    of length <= iters.
+    """
+    n = m.shape[-1]
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG)
+    x = jnp.maximum(m, eye)
+    k = 1
+    while k < iters:
+        x = tropical_matmul_ref(x, x)
+        k *= 2
+    return x
+
+
+def upward_rank_ref(m: jnp.ndarray, w: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Reference upward rank (HEFT) on padded tropical adjacency.
+
+    rank_u[i] = w[i] + max(0, max_j (m[i, j] + rank_u[j]))
+
+    m[i, j] is the mean communication cost of edge i->j (NEG if absent),
+    w[i] the mean execution cost. Converges after `iters` >= longest path
+    length iterations; padding tasks (w = 0, no edges) stay at 0.
+    """
+    r = w
+    for _ in range(iters):
+        r = w + jnp.maximum(tropical_matvec_ref(m, r), 0.0)
+    return r
+
+
+def downward_rank_ref(m: jnp.ndarray, w: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Reference downward rank (CPoP).
+
+    rank_d[j] = max(0, max_i (rank_d[i] + w[i] + m[i, j]))   (0 at sources)
+    """
+    mt = jnp.swapaxes(m, -1, -2)
+    d = jnp.zeros_like(w)
+    for _ in range(iters):
+        d = jnp.maximum(tropical_matvec_ref(mt, d + w), 0.0)
+    return d

@@ -1,0 +1,166 @@
+"""L1: Pallas kernels for the tropical (max-plus) semiring.
+
+These kernels are the dense hot-spot of the rank engine (L2,
+``compile.model``): iterated max-plus matrix-vector products over padded
+task-graph adjacency matrices compute UpwardRank / DownwardRank for a
+whole *batch* of task graphs at once.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+
+* The batch dimension is the leading grid axis — one program instance per
+  (graph, row-tile, col-tile), streaming adjacency tiles HBM -> VMEM via
+  ``BlockSpec``.
+* The inner reduction is a vector ``max`` — a VPU op. There is no MXU
+  (systolic bfloat16 matmul) analogue of (max, +), so the kernel roofline
+  is deliberately VPU-bound; tile sizes are chosen for VMEM residency
+  (a 64x64 f32 tile is 16 KiB, far below the ~16 MiB VMEM budget, so we
+  can hold M-tile + v-tile + out-tile simultaneously and let the
+  pipeline double-buffer the HBM loads).
+* ``interpret=True`` always: the CPU PJRT client cannot execute Mosaic
+  custom-calls. Correctness is validated against ``ref.py``; TPU
+  performance is argued analytically in DESIGN.md.
+
+The reduction over column tiles is carried *through the grid*: the output
+block for a given (batch, row-tile) is revisited for every column tile
+and combined with ``jnp.maximum``. Pallas guarantees sequential grid
+iteration on TPU (and in interpret mode), making this accumulation
+well-defined.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG
+
+__all__ = ["NEG", "tropical_matvec", "tropical_matmul", "default_block"]
+
+
+def default_block(n: int) -> int:
+    """Largest power-of-two tile <= min(n, 32) that divides n.
+
+    All padded sizes used by the AOT artifacts (16/32/64) are powers of
+    two, so this returns 16 or 32; the fallback loop handles odd sizes
+    used in tests.
+    """
+    for cand in (32, 16, 8, 4, 2, 1):
+        if cand <= n and n % cand == 0:
+            return cand
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# max-plus mat-vec:  out[b, i] = max_j m[b, i, j] + v[b, j]
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(m_ref, v_ref, o_ref):
+    """One (batch, row-tile, col-tile) program of the tropical matvec.
+
+    m_ref: (1, BI, BJ) adjacency tile in VMEM
+    v_ref: (1, BJ)     rank-vector tile in VMEM
+    o_ref: (1, BI)     output tile, revisited across the col-tile axis
+    """
+    j = pl.program_id(2)
+    # (BI, BJ) + (1, BJ) -> reduce over the col axis.
+    part = jnp.max(m_ref[0] + v_ref[0][None, :], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0, :] = part
+
+    @pl.when(j > 0)
+    def _accumulate():
+        o_ref[0, :] = jnp.maximum(o_ref[0, :], part)
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j"))
+def tropical_matvec(
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_i: int | None = None,
+    block_j: int | None = None,
+) -> jnp.ndarray:
+    """Batched (max,+) matrix-vector product via Pallas.
+
+    m: (B, N, N) tropical adjacency (NEG = no edge), v: (B, N).
+    Returns out: (B, N) with out[b,i] = max_j m[b,i,j] + v[b,j].
+    """
+    b, n, n2 = m.shape
+    assert n == n2, f"square matrices required, got {m.shape}"
+    assert v.shape == (b, n), f"shape mismatch: {m.shape} vs {v.shape}"
+    bi = block_i or default_block(n)
+    bj = block_j or default_block(n)
+    assert n % bi == 0 and n % bj == 0, (n, bi, bj)
+
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(b, n // bi, n // bj),
+        in_specs=[
+            pl.BlockSpec((1, bi, bj), lambda b_, i, j: (b_, i, j)),
+            pl.BlockSpec((1, bj), lambda b_, i, j: (b_, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bi), lambda b_, i, j: (b_, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), m.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(m, v)
+
+
+# ---------------------------------------------------------------------------
+# max-plus mat-mul:  out[b, i, j] = max_k a[b, i, k] + c[b, k, j]
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (batch, i-tile, j-tile, k-tile) program of the tropical matmul."""
+    k = pl.program_id(3)
+    # (BI, BK, 1) + (1, BK, BJ) -> (BI, BK, BJ), reduce over k.
+    part = jnp.max(a_ref[0][:, :, None] + b_ref[0][None, :, :], axis=1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0, :, :] = part
+
+    @pl.when(k > 0)
+    def _accumulate():
+        o_ref[0, :, :] = jnp.maximum(o_ref[0, :, :], part)
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "block_k"))
+def tropical_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_i: int | None = None,
+    block_j: int | None = None,
+    block_k: int | None = None,
+) -> jnp.ndarray:
+    """Batched (max,+) matrix product via Pallas.
+
+    a: (B, N, K), b: (B, K, M) -> (B, N, M). Used by the longest-path
+    closure (repeated squaring) path of the rank engine.
+    """
+    nb, n, k = a.shape
+    nb2, k2, m = b.shape
+    assert nb == nb2 and k == k2, f"shape mismatch: {a.shape} vs {b.shape}"
+    bi = block_i or default_block(n)
+    bj = block_j or default_block(m)
+    bk = block_k or default_block(k)
+    assert n % bi == 0 and m % bj == 0 and k % bk == 0
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(nb, n // bi, m // bj, k // bk),
+        in_specs=[
+            pl.BlockSpec((1, bi, bk), lambda b_, i, j, kk: (b_, i, kk)),
+            pl.BlockSpec((1, bk, bj), lambda b_, i, j, kk: (b_, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bi, bj), lambda b_, i, j, kk: (b_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, n, m), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,140 @@
+"""L2: batched task-rank model in JAX, built on the L1 Pallas kernels.
+
+This is the compute graph that ``aot.py`` lowers to HLO text for the
+Rust runtime. Given a *batch* of task graphs, each encoded as
+
+* ``m``  — (B, N, N) tropical adjacency: ``m[b, i, j]`` is the mean
+  communication cost of edge ``i -> j`` in graph ``b`` (``NEG`` when the
+  edge is absent, including all padding rows/columns), and
+* ``w``  — (B, N) mean execution costs (0 for padding tasks),
+
+it computes, entirely with (max, +) algebra:
+
+* ``up``   — UpwardRank  (the HEFT priority),
+* ``down`` — DownwardRank, and thereby CPoP rank = up + down and the
+  critical-path value = max_i (up + down)[i].
+
+Convergence: one tropical mat-vec per iteration propagates rank
+information one edge; after ``N`` iterations every path (longest possible
+path in an N-node DAG has N-1 edges) has been accounted for, so running
+exactly ``N`` steps of ``lax.fori_loop`` is a guaranteed fixpoint. On a
+DAG the iteration is monotone and idempotent at the fixpoint, so the
+extra steps are harmless (and keep the lowered HLO shape static).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.tropical import NEG, tropical_matmul, tropical_matvec
+
+__all__ = [
+    "NEG",
+    "upward_rank",
+    "downward_rank",
+    "ranks",
+    "closure",
+    "encode_dag",
+]
+
+
+def upward_rank(
+    m: jnp.ndarray, w: jnp.ndarray, iters: int | None = None
+) -> jnp.ndarray:
+    """Batched UpwardRank.
+
+    rank_u[i] = w[i] + max(0, max_j (m[i, j] + rank_u[j]))
+
+    The ``max(..., 0)`` handles sink tasks (empty successor set) and
+    simultaneously neutralizes NEG propagation out of padding columns.
+
+    ``iters`` bounds the fixpoint iteration count; it must be at least
+    the graph's longest path length (in edges). ``None`` = N, the
+    always-safe bound. The AOT artifacts use a smaller static bound (the
+    benchmark graph families are shallow) and the Rust runtime falls
+    back to the native engine for deeper graphs — see EXPERIMENTS.md
+    §Perf for the measured effect.
+    """
+    n = m.shape[-1]
+    iters = n if iters is None else iters
+
+    def body(_, r):
+        return w + jnp.maximum(tropical_matvec(m, r), 0.0)
+
+    return lax.fori_loop(0, iters, body, w)
+
+
+def downward_rank(
+    m: jnp.ndarray, w: jnp.ndarray, iters: int | None = None
+) -> jnp.ndarray:
+    """Batched DownwardRank.
+
+    rank_d[j] = max(0, max_i (rank_d[i] + w[i] + m[i, j]))   (0 at sources)
+    """
+    n = m.shape[-1]
+    iters = n if iters is None else iters
+    mt = jnp.swapaxes(m, -1, -2)
+
+    def body(_, d):
+        return jnp.maximum(tropical_matvec(mt, d + w), 0.0)
+
+    return lax.fori_loop(0, iters, body, jnp.zeros_like(w))
+
+
+def ranks(
+    m: jnp.ndarray, w: jnp.ndarray, iters: int | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The AOT entry point: (up, down) ranks for a batch of graphs.
+
+    CPoP rank and the critical-path value are cheap combinations of the
+    two outputs; the Rust side computes them (`up + down`, `max`) to keep
+    the artifact minimal and reusable.
+    """
+    return upward_rank(m, w, iters), downward_rank(m, w, iters)
+
+
+def closure(m: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs longest-path closure by log-depth repeated squaring.
+
+    Used by the alternate critical-path extraction path and exercised in
+    tests; not part of the default AOT artifact set.
+    """
+    n = m.shape[-1]
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG)
+    x = jnp.maximum(m, jnp.broadcast_to(eye, m.shape))
+    steps = max(1, (n - 1).bit_length())
+
+    def body(_, acc):
+        return tropical_matmul(acc, acc)
+
+    return lax.fori_loop(0, steps, body, x)
+
+
+# ---------------------------------------------------------------------------
+# Host-side encoding helper (tests + documentation of the wire format;
+# the Rust runtime re-implements this in rust/src/runtime/encode.rs).
+# ---------------------------------------------------------------------------
+
+
+def encode_dag(
+    n_pad: int,
+    num_tasks: int,
+    edges: list[tuple[int, int, float]],
+    exec_costs: list[float],
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode one DAG into padded (m, w) arrays (no batch dim).
+
+    ``edges`` holds (src, dst, mean_comm_cost); ``exec_costs`` the mean
+    execution cost per task. Padding tasks get w = 0 and no edges, so
+    their ranks are identically 0 and never interfere with real tasks.
+    """
+    assert num_tasks <= n_pad, (num_tasks, n_pad)
+    m = jnp.full((n_pad, n_pad), NEG, dtype=jnp.float32)
+    for src, dst, cost in edges:
+        assert 0 <= src < num_tasks and 0 <= dst < num_tasks
+        m = m.at[src, dst].set(cost)
+    w = jnp.zeros((n_pad,), dtype=jnp.float32)
+    w = w.at[:num_tasks].set(jnp.asarray(exec_costs, dtype=jnp.float32))
+    return m, w

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas tropical kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, batch sizes, tile sizes, value ranges (incl.
+the NEG no-edge sentinel) and asserts allclose against ref.py — the core
+correctness signal for the kernel layer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import (
+    NEG,
+    downward_rank_ref,
+    tropical_closure_ref,
+    tropical_matmul_ref,
+    tropical_matvec_ref,
+    upward_rank_ref,
+)
+from compile.kernels.tropical import default_block, tropical_matmul, tropical_matvec
+
+# Sizes that divide evenly by some power-of-two block. Keep them small:
+# interpret mode executes the grid sequentially in numpy.
+SIZES = [2, 4, 8, 16, 32]
+BATCHES = [1, 2, 5]
+
+
+def rand_tropical(rng: np.random.Generator, shape, edge_p: float = 0.5):
+    """Random tropical matrix: finite weights w.p. edge_p, NEG otherwise."""
+    vals = rng.uniform(-5.0, 5.0, size=shape).astype(np.float32)
+    mask = rng.uniform(size=shape) < edge_p
+    return jnp.asarray(np.where(mask, vals, NEG))
+
+
+# ---------------------------------------------------------------------------
+# matvec
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.sampled_from(BATCHES),
+    n=st.sampled_from(SIZES),
+    edge_p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(b, n, edge_p, seed):
+    rng = np.random.default_rng(seed)
+    m = rand_tropical(rng, (b, n, n), edge_p)
+    v = jnp.asarray(rng.uniform(-5.0, 5.0, size=(b, n)).astype(np.float32))
+    got = tropical_matvec(m, v)
+    want = tropical_matvec_ref(m, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bi", [1, 2, 4, 8])
+@pytest.mark.parametrize("bj", [1, 2, 4, 8])
+def test_matvec_block_shapes(bi, bj):
+    """All tile decompositions give the same answer (grid accumulation)."""
+    rng = np.random.default_rng(7)
+    m = rand_tropical(rng, (2, 8, 8))
+    v = jnp.asarray(rng.uniform(-1.0, 1.0, size=(2, 8)).astype(np.float32))
+    got = tropical_matvec(m, v, block_i=bi, block_j=bj)
+    want = tropical_matvec_ref(m, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_matvec_all_neg_row():
+    """A task with no successors reduces to something <= NEG/2 (inert)."""
+    m = jnp.full((1, 4, 4), NEG, dtype=jnp.float32)
+    v = jnp.zeros((1, 4), dtype=jnp.float32)
+    got = np.asarray(tropical_matvec(m, v))
+    assert (got <= NEG / 2).all()
+
+
+def test_matvec_identity():
+    """Tropical identity (0 diag, NEG off-diag) is a no-op."""
+    n = 8
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG).astype(jnp.float32)[None]
+    v = jnp.asarray(np.linspace(-3, 3, n, dtype=np.float32))[None]
+    got = tropical_matvec(eye, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(v), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    n=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(b, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_tropical(rng, (b, n, n))
+    c = rand_tropical(rng, (b, n, n))
+    got = tropical_matmul(a, c)
+    want = tropical_matmul_ref(a, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_matmul_rectangular():
+    rng = np.random.default_rng(3)
+    a = rand_tropical(rng, (2, 4, 8))
+    c = rand_tropical(rng, (2, 8, 16))
+    got = tropical_matmul(a, c)
+    want = tropical_matmul_ref(a, c)
+    assert got.shape == (2, 4, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_matmul_associative():
+    """(A⊗B)⊗C == A⊗(B⊗C) — semiring associativity through the kernel."""
+    rng = np.random.default_rng(11)
+    a = rand_tropical(rng, (1, 8, 8), 0.8)
+    b = rand_tropical(rng, (1, 8, 8), 0.8)
+    c = rand_tropical(rng, (1, 8, 8), 0.8)
+    left = tropical_matmul(tropical_matmul(a, b), c)
+    right = tropical_matmul(a, tropical_matmul(b, c))
+    # NEG-involved entries accumulate sentinel sums; compare only "real" ones.
+    l, r = np.asarray(left), np.asarray(right)
+    real = (l > NEG / 2) & (r > NEG / 2)
+    np.testing.assert_allclose(l[real], r[real], rtol=1e-5)
+    assert ((l > NEG / 2) == (r > NEG / 2)).all()
+
+
+# ---------------------------------------------------------------------------
+# default_block
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,expect", [(1, 1), (2, 2), (6, 2), (8, 8), (16, 16), (32, 32), (64, 32), (48, 16)])
+def test_default_block(n, expect):
+    assert default_block(n) == expect
+    assert n % default_block(n) == 0
+
+
+# ---------------------------------------------------------------------------
+# rank recurrences through the kernel (ref-level sanity; model-level tests
+# with a python DAG oracle live in test_model.py)
+# ---------------------------------------------------------------------------
+
+
+def test_upward_rank_ref_chain():
+    """Chain 0->1->2 with unit costs: ranks are 3+2c, 2+c, 1 (comm c=0.5)."""
+    n = 4
+    m = np.full((1, n, n), NEG, dtype=np.float32)
+    m[0, 0, 1] = 0.5
+    m[0, 1, 2] = 0.5
+    w = np.zeros((1, n), dtype=np.float32)
+    w[0, :3] = 1.0
+    up = np.asarray(upward_rank_ref(jnp.asarray(m), jnp.asarray(w), n))
+    np.testing.assert_allclose(up[0, :3], [4.0, 2.5, 1.0], rtol=1e-6)
+    assert up[0, 3] == 0.0  # padding task untouched
+
+
+def test_downward_rank_ref_chain():
+    n = 4
+    m = np.full((1, n, n), NEG, dtype=np.float32)
+    m[0, 0, 1] = 0.5
+    m[0, 1, 2] = 0.5
+    w = np.zeros((1, n), dtype=np.float32)
+    w[0, :3] = 1.0
+    down = np.asarray(downward_rank_ref(jnp.asarray(m), jnp.asarray(w), n))
+    np.testing.assert_allclose(down[0, :3], [0.0, 1.5, 3.0], rtol=1e-6)
+
+
+def test_closure_matches_iterated_matmul():
+    rng = np.random.default_rng(5)
+    m = rand_tropical(rng, (1, 8, 8), 0.3)
+    c = np.asarray(tropical_closure_ref(m, 8))
+    # closure diagonal >= 0 (empty path)
+    assert (np.diagonal(c, axis1=-2, axis2=-1) >= 0).all()

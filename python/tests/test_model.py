@@ -1,0 +1,176 @@
+"""L2 correctness: the batched JAX rank model vs a pure-Python DAG oracle.
+
+The oracle computes UpwardRank / DownwardRank by memoized recursion over
+an explicit adjacency list — a completely independent code path from the
+tropical-algebra fixpoint iteration the model uses.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import NEG
+
+
+# ---------------------------------------------------------------------------
+# Pure-python oracle
+# ---------------------------------------------------------------------------
+
+
+def oracle_upward(n, succ, comm, w):
+    """rank_u[i] = w[i] + max(0, max_{j in succ(i)} comm[i,j] + rank_u[j])."""
+    memo = {}
+
+    def rank(i):
+        if i not in memo:
+            best = 0.0
+            for j in succ[i]:
+                best = max(best, comm[(i, j)] + rank(j))
+            memo[i] = w[i] + best
+        return memo[i]
+
+    return [rank(i) for i in range(n)]
+
+
+def oracle_downward(n, pred, comm, w):
+    """rank_d[j] = max(0, max_{i in pred(j)} rank_d[i] + w[i] + comm[i,j])."""
+    memo = {}
+
+    def rank(j):
+        if j not in memo:
+            best = 0.0
+            for i in pred[j]:
+                best = max(best, rank(i) + w[i] + comm[(i, j)])
+            memo[j] = best
+        return memo[j]
+
+    return [rank(j) for j in range(n)]
+
+
+def random_dag(rng: np.random.Generator, n: int, edge_p: float):
+    """Random DAG on vertices 0..n-1 with edges only i -> j for i < j
+    (vertex order doubles as a topological order)."""
+    succ = {i: [] for i in range(n)}
+    pred = {i: [] for i in range(n)}
+    comm = {}
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.uniform() < edge_p:
+                succ[i].append(j)
+                pred[j].append(i)
+                comm[(i, j)] = float(rng.uniform(0.1, 3.0))
+    w = [float(rng.uniform(0.1, 3.0)) for _ in range(n)]
+    return succ, pred, comm, w
+
+
+def encode(n_pad, n, comm, w):
+    edges = [(i, j, c) for (i, j), c in comm.items()]
+    return model.encode_dag(n_pad, n, edges, w)
+
+
+# ---------------------------------------------------------------------------
+# Model vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 14),
+    edge_p=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ranks_match_oracle(n, edge_p, seed):
+    rng = np.random.default_rng(seed)
+    succ, pred, comm, w = random_dag(rng, n, edge_p)
+    n_pad = 16
+    m, wv = encode(n_pad, n, comm, w)
+    up, down = model.ranks(m[None], wv[None])
+    up, down = np.asarray(up)[0], np.asarray(down)[0]
+
+    want_up = oracle_upward(n, succ, comm, w)
+    want_down = oracle_downward(n, pred, comm, w)
+    np.testing.assert_allclose(up[:n], want_up, rtol=1e-5)
+    np.testing.assert_allclose(down[:n], want_down, rtol=1e-5)
+    # Padding tasks stay identically zero.
+    np.testing.assert_array_equal(up[n:], 0.0)
+    np.testing.assert_array_equal(down[n:], 0.0)
+
+
+def test_batch_independence():
+    """Graphs in a batch do not contaminate each other."""
+    rng = np.random.default_rng(42)
+    n_pad = 16
+    ms, ws = [], []
+    singles = []
+    for _ in range(4):
+        n = int(rng.integers(2, 12))
+        succ, pred, comm, w = random_dag(rng, n, 0.4)
+        m, wv = encode(n_pad, n, comm, w)
+        ms.append(m)
+        ws.append(wv)
+        singles.append(model.ranks(m[None], wv[None]))
+    up_b, down_b = model.ranks(jnp.stack(ms), jnp.stack(ws))
+    for b, (up_s, down_s) in enumerate(singles):
+        np.testing.assert_allclose(np.asarray(up_b)[b], np.asarray(up_s)[0], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(down_b)[b], np.asarray(down_s)[0], rtol=1e-6)
+
+
+def test_cpop_and_critical_path_value():
+    """up + down is constant (= CP length) exactly on critical-path tasks."""
+    # Diamond: 0 -> {1, 2} -> 3, task 1 heavier => CP = 0-1-3.
+    edges = [(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)]
+    w = [1.0, 5.0, 1.0, 1.0]
+    m, wv = model.encode_dag(8, 4, edges, w)
+    up, down = model.ranks(m[None], wv[None])
+    cpop = np.asarray(up)[0] + np.asarray(down)[0]
+    cp_value = cpop.max()
+    np.testing.assert_allclose(cp_value, 1 + 1 + 5 + 1 + 1, rtol=1e-6)
+    on_cp = cpop[:4] > cp_value - 1e-5
+    np.testing.assert_array_equal(on_cp, [True, True, False, True])
+
+
+def test_closure_longest_paths():
+    edges = [(0, 1, 2.0), (1, 2, 3.0), (0, 2, 1.0)]
+    m, _ = model.encode_dag(8, 3, edges, [0.0, 0.0, 0.0])
+    c = np.asarray(model.closure(m[None]))[0]
+    assert np.isclose(c[0, 1], 2.0)
+    assert np.isclose(c[0, 2], 5.0)  # 0->1->2 beats direct 0->2
+    assert np.isclose(c[1, 2], 3.0)
+    assert c[2, 0] <= NEG / 2  # unreachable
+    assert (np.diag(c) == 0).all()
+
+
+def test_bounded_iters_match_full_when_depth_covered():
+    """iters >= longest path ⇒ identical ranks to the always-safe N bound."""
+    rng = np.random.default_rng(8)
+    n, n_pad = 12, 16
+    succ, pred, comm, w = random_dag(rng, n, 0.3)
+    # longest path in a 12-vertex DAG is <= 11 < 16, and usually ~4.
+    m, wv = encode(n_pad, n, comm, w)
+    up_full, down_full = model.ranks(m[None], wv[None])
+    up_b, down_b = model.ranks(m[None], wv[None], iters=n)  # depth <= n-1
+    np.testing.assert_allclose(np.asarray(up_b), np.asarray(up_full), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(down_b), np.asarray(down_full), rtol=1e-6)
+
+
+def test_insufficient_iters_underestimates():
+    """A chain deeper than iters: ranks are cut off (sanity of the bound)."""
+    length = 10
+    edges = [(i, i + 1, 1.0) for i in range(length - 1)]
+    w = [1.0] * length
+    m, wv = model.encode_dag(16, length, edges, w)
+    up_full = np.asarray(model.upward_rank(m[None], wv[None]))[0]
+    up_cut = np.asarray(model.upward_rank(m[None], wv[None], iters=3))[0]
+    assert up_cut[0] < up_full[0], "iteration bound must matter on deep chains"
+
+
+def test_encode_dag_shapes_and_padding():
+    m, w = model.encode_dag(16, 3, [(0, 2, 1.5)], [1.0, 2.0, 3.0])
+    assert m.shape == (16, 16) and w.shape == (16,)
+    assert np.asarray(m)[0, 2] == 1.5
+    assert (np.asarray(m)[3:, :] <= NEG / 2).all()
+    assert (np.asarray(w)[3:] == 0).all()

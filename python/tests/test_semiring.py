@@ -1,0 +1,99 @@
+"""Algebraic property tests: the Pallas kernels implement a genuine
+(max, +) semiring — identity, associativity, commutativity of (+)=max,
+distributivity of (x)=+ over max, and monotonicity. These laws are what
+the rank fixpoint iteration's correctness rests on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import NEG
+from compile.kernels.tropical import tropical_matmul, tropical_matvec
+
+
+def rand(rng, shape, edge_p=0.7):
+    vals = rng.uniform(-4.0, 4.0, size=shape).astype(np.float32)
+    mask = rng.uniform(size=shape) < edge_p
+    return jnp.asarray(np.where(mask, vals, NEG))
+
+
+def real_mask(*arrays):
+    """Entries where no NEG sentinel participated (finite-math region)."""
+    m = np.ones(np.asarray(arrays[0]).shape, dtype=bool)
+    for a in arrays:
+        m &= np.asarray(a) > NEG / 2
+    return m
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_identity_matrix(n, seed):
+    rng = np.random.default_rng(seed)
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG).astype(jnp.float32)[None]
+    a = rand(rng, (1, n, n))
+    left = tropical_matmul(eye, a)
+    right = tropical_matmul(a, eye)
+    la, ra, aa = np.asarray(left), np.asarray(right), np.asarray(a)
+    m = real_mask(aa)
+    np.testing.assert_allclose(la[m], aa[m], rtol=1e-6)
+    np.testing.assert_allclose(ra[m], aa[m], rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_matvec_consistent_with_matmul(n, seed):
+    """M (x) v == (M (x) V)[:, 0] where V is v as a column matrix."""
+    rng = np.random.default_rng(seed)
+    m = rand(rng, (1, n, n))
+    v = jnp.asarray(rng.uniform(-4, 4, size=(1, n)).astype(np.float32))
+    via_vec = tropical_matvec(m, v)
+    via_mat = tropical_matmul(m, v[:, :, None])[:, :, 0]
+    np.testing.assert_allclose(
+        np.asarray(via_vec), np.asarray(via_mat), rtol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_distributivity(seed):
+    """A (x) max(B, C) == max(A (x) B, A (x) C)."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    a = rand(rng, (1, n, n))
+    b = rand(rng, (1, n, n))
+    c = rand(rng, (1, n, n))
+    left = tropical_matmul(a, jnp.maximum(b, c))
+    right = jnp.maximum(tropical_matmul(a, b), tropical_matmul(a, c))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_monotonicity(seed):
+    """v <= w (elementwise) ⇒ M (x) v <= M (x) w."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    m = rand(rng, (1, n, n))
+    v = jnp.asarray(rng.uniform(-4, 4, size=(1, n)).astype(np.float32))
+    w = v + jnp.asarray(rng.uniform(0, 2, size=(1, n)).astype(np.float32))
+    mv = np.asarray(tropical_matvec(m, v))
+    mw = np.asarray(tropical_matvec(m, w))
+    assert (mv <= mw + 1e-5).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_scalar_translation_equivariance(seed):
+    """M (x) (v + c) == (M (x) v) + c — tropical 'scalar multiplication'."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    m = rand(rng, (1, n, n), edge_p=1.0)  # all finite to keep +c exact
+    v = jnp.asarray(rng.uniform(-4, 4, size=(1, n)).astype(np.float32))
+    c = np.float32(rng.uniform(-3, 3))
+    left = tropical_matvec(m, v + c)
+    right = tropical_matvec(m, v) + c
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), rtol=1e-5)

@@ -1,0 +1,86 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * **lookahead depth** (the paper's future-work component): quality
+//!   vs runtime as k grows — the quality/runtime knob in action;
+//! * **coordinator chunk size**: sharding granularity vs queue/channel
+//!   overhead;
+//! * **timing repeats**: the min-of-k runtime estimator's cost.
+
+use std::hint::black_box;
+
+use ptgs::benchlib::Bencher;
+use ptgs::benchmark::HarnessOptions;
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::scheduler::{LookaheadScheduler, SchedulerConfig};
+
+fn instances() -> Vec<ProblemInstance> {
+    DatasetSpec { count: 10, ..DatasetSpec::new(Structure::OutTrees, 1.0) }.generate()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // --- lookahead depth: runtime cost + achieved makespan ------------
+    let insts = instances();
+    for depth in [0usize, 1, 2] {
+        let la = LookaheadScheduler::new(SchedulerConfig::heft(), depth);
+        // Report the mean makespan once (quality side of the ablation).
+        let mean: f64 = insts
+            .iter()
+            .map(|i| la.schedule(i).makespan())
+            .sum::<f64>()
+            / insts.len() as f64;
+        println!("# lookahead depth {depth}: mean makespan {mean:.4}");
+        b.bench(&format!("lookahead/depth_{depth}"), || {
+            for inst in &insts {
+                black_box(la.schedule(black_box(inst)));
+            }
+        });
+    }
+
+    // --- coordinator chunk size ----------------------------------------
+    let specs =
+        vec![DatasetSpec { count: 20, ..DatasetSpec::new(Structure::Chains, 1.0) }];
+    for chunk in [1usize, 5, 20] {
+        let coord = Coordinator {
+            options: CoordinatorOptions { chunk_size: chunk, ..Default::default() },
+            ..Coordinator::with_schedulers(vec![
+                SchedulerConfig::heft(),
+                SchedulerConfig::mct(),
+            ])
+        };
+        b.bench(&format!("coordinator/chunk_{chunk}"), || {
+            black_box(coord.run_blocking(black_box(&specs)));
+        });
+    }
+
+    // --- timing repeats (runtime-ratio estimator cost) -----------------
+    for repeats in [1usize, 3, 5] {
+        let coord = Coordinator {
+            options: CoordinatorOptions {
+                harness: HarnessOptions { validate: false, timing_repeats: repeats },
+                ..Default::default()
+            },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
+        };
+        b.bench(&format!("timing_repeats/k_{repeats}"), || {
+            black_box(coord.run_blocking(black_box(&specs)));
+        });
+    }
+
+    // --- schedule validation overhead ----------------------------------
+    for validate in [false, true] {
+        let coord = Coordinator {
+            options: CoordinatorOptions {
+                harness: HarnessOptions { validate, timing_repeats: 1 },
+                ..Default::default()
+            },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
+        };
+        b.bench(&format!("validate/{validate}"), || {
+            black_box(coord.run_blocking(black_box(&specs)));
+        });
+    }
+}

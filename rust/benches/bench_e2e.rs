@@ -1,0 +1,63 @@
+//! End-to-end benchmark-sweep throughput: the full coordinator pipeline
+//! (generate → schedule 72 algorithms → aggregate), the workload whose
+//! wall-clock regenerates every paper table/figure. Also benchmarks the
+//! analysis pipeline (ratios → means → pareto) on realistic record piles.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use ptgs::benchlib::{Bencher, Config};
+use ptgs::benchmark::{BenchmarkResults, Harness};
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::scheduler::SchedulerConfig;
+
+fn specs(count: usize) -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec { count, ..DatasetSpec::new(Structure::Chains, 1.0) },
+        DatasetSpec { count, ..DatasetSpec::new(Structure::InTrees, 1.0) },
+    ]
+}
+
+fn main() {
+    // These are heavy end-to-end runs: fewer, longer samples.
+    let mut b = Bencher::from_env().with_config(Config {
+        measure_time: Duration::from_millis(300),
+        samples: 5,
+        warmup: Duration::from_millis(200),
+    });
+    let count = 5;
+
+    let h = Harness::all_schedulers();
+    b.bench("sweep72/serial", || {
+        black_box(h.run_all(&specs(count)));
+    });
+
+    for workers in [2usize, 4, 8] {
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers, chunk_size: 1, ..Default::default() },
+            ..Coordinator::all_schedulers()
+        };
+        b.bench(&format!("sweep72/coordinator_{workers}w"), || {
+            black_box(coord.run_blocking(&specs(count)));
+        });
+    }
+
+    // Analysis pipeline on a realistic pile.
+    let results = BenchmarkResults::new(
+        specs(5)
+            .iter()
+            .flat_map(|s| Harness::all_schedulers().run_dataset(s))
+            .collect(),
+    );
+    b.bench("analysis/ratios", || {
+        black_box(results.ratios());
+    });
+    b.bench("analysis/mean_ratios", || {
+        black_box(results.mean_ratios());
+    });
+    let means = results.mean_ratios();
+    b.bench("analysis/pareto", || {
+        black_box(ptgs::analysis::ParetoAnalysis::from_means(black_box(&means)));
+    });
+}

@@ -1,0 +1,59 @@
+//! Rank-engine benchmarks: native f64 DP vs the AOT-compiled JAX/Pallas
+//! tropical kernels through PJRT, single-instance and batched.
+//!
+//! The XLA benches only run when `artifacts/manifest.json` exists
+//! (`make artifacts`).
+
+use std::hint::black_box;
+
+use ptgs::benchlib::Bencher;
+use ptgs::datasets::random_network;
+use ptgs::datasets::rng::Rng;
+use ptgs::datasets::trees::{gen_tree_with, Direction};
+use ptgs::instance::ProblemInstance;
+use ptgs::ranks::native;
+use ptgs::runtime::RankEngine;
+
+fn instances(count: usize, levels: usize) -> Vec<ProblemInstance> {
+    (0..count)
+        .map(|i| {
+            let mut rng = Rng::seeded(1000 + i as u64);
+            let g = gen_tree_with(&mut rng, Direction::Out, levels, 3);
+            ProblemInstance::new(format!("i{i}"), g, random_network(&mut rng))
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    for levels in [3usize, 4] {
+        let insts = instances(8, levels);
+        let n = insts[0].graph.len();
+        b.bench(&format!("ranks_native/tasks_{n}"), || {
+            for inst in &insts {
+                black_box(native::ranks(black_box(inst)));
+            }
+        });
+    }
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping ranks_xla: run `make artifacts` first");
+        return;
+    }
+    let engine = RankEngine::load("artifacts").expect("artifacts load");
+    for levels in [3usize, 4] {
+        let insts = instances(8, levels);
+        let n = insts[0].graph.len();
+        // Batched: one PJRT dispatch for the whole chunk.
+        b.bench(&format!("ranks_xla/batched_tasks_{n}"), || {
+            black_box(engine.ranks_batch(black_box(&insts)).unwrap());
+        });
+        // One-at-a-time: per-dispatch overhead.
+        b.bench(&format!("ranks_xla/single_tasks_{n}"), || {
+            for inst in &insts {
+                black_box(engine.ranks_one(black_box(inst)).unwrap());
+            }
+        });
+    }
+}

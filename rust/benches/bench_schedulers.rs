@@ -1,0 +1,82 @@
+//! Scheduler-runtime microbenchmarks — the engine behind every runtime
+//! ratio in the paper (Table I, Figs. 3–10 right-hand panels).
+//!
+//! One group per algorithmic component axis, on a fixed reference
+//! instance set, so `cargo bench` directly exposes the runtime cost of
+//! each component (insertion vs append, sufferage, CP reservation,
+//! priority function).
+
+use std::hint::black_box;
+
+use ptgs::benchlib::Bencher;
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::scheduler::{PriorityFn, SchedulerConfig};
+
+fn reference_instances() -> Vec<ProblemInstance> {
+    // A mix of all four structures at CCR 1, 5 instances each.
+    Structure::ALL
+        .iter()
+        .flat_map(|&s| DatasetSpec { count: 5, ..DatasetSpec::new(s, 1.0) }.generate())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let instances = reference_instances();
+
+    // --- classics (paper Table I rows with citations) -----------------
+    for (name, cfg) in [
+        ("classic/HEFT", SchedulerConfig::heft()),
+        ("classic/CPoP", SchedulerConfig::cpop()),
+        ("classic/MCT", SchedulerConfig::mct()),
+        ("classic/MET", SchedulerConfig::met()),
+        ("classic/Sufferage", SchedulerConfig::sufferage_classic()),
+    ] {
+        let s = cfg.build();
+        b.bench(name, || {
+            for inst in &instances {
+                black_box(s.schedule(black_box(inst)));
+            }
+        });
+    }
+
+    // --- one component flipped at a time off HEFT ----------------------
+    let base = SchedulerConfig::heft();
+    for (name, cfg) in [
+        ("axis/base_heft", base),
+        ("axis/append_only", SchedulerConfig { append_only: true, ..base }),
+        ("axis/critical_path", SchedulerConfig { critical_path: true, ..base }),
+        ("axis/sufferage", SchedulerConfig { sufferage: true, ..base }),
+        (
+            "axis/arbitrary_topological",
+            SchedulerConfig { priority: PriorityFn::ArbitraryTopological, ..base },
+        ),
+        (
+            "axis/cpop_ranking",
+            SchedulerConfig { priority: PriorityFn::CPoPRanking, ..base },
+        ),
+    ] {
+        let s = cfg.build();
+        b.bench(name, || {
+            for inst in &instances {
+                black_box(s.schedule(black_box(inst)));
+            }
+        });
+    }
+
+    // --- HEFT runtime vs graph size -----------------------------------
+    use ptgs::datasets::rng::Rng;
+    use ptgs::datasets::trees::{gen_tree_with, Direction};
+    use ptgs::datasets::random_network;
+    let s = SchedulerConfig::heft().build();
+    for levels in [2usize, 3, 4, 5, 6] {
+        let mut rng = Rng::seeded(levels as u64);
+        let g = gen_tree_with(&mut rng, Direction::Out, levels, 3);
+        let inst = ProblemInstance::new("scale", g, random_network(&mut rng));
+        let name = format!("heft_scaling/tasks_{}", inst.graph.len());
+        b.bench(&name, || {
+            black_box(s.schedule(black_box(&inst)));
+        });
+    }
+}

@@ -1,0 +1,57 @@
+//! Window-finding microbenchmarks: the inner loop of every scheduling
+//! iteration (insertion-based gap scan vs append-only tail lookup).
+
+use std::hint::black_box;
+
+use ptgs::benchlib::Bencher;
+use ptgs::graph::TaskGraph;
+use ptgs::instance::ProblemInstance;
+use ptgs::network::Network;
+use ptgs::schedule::{Assignment, Schedule};
+use ptgs::scheduler::{data_available_time, window_append_only, window_insertion};
+
+/// A node timeline with `k` busy slots and small gaps between them, plus
+/// one unscheduled probe task with `preds` scheduled predecessors.
+fn setup(k: usize, preds: usize) -> (ProblemInstance, Schedule, usize) {
+    let mut g = TaskGraph::new();
+    for i in 0..(k + preds) {
+        g.add_task(format!("f{i}"), 1.0);
+    }
+    let probe = g.add_task("probe", 1.0);
+    for p in 0..preds {
+        g.add_edge(k + p, probe, 1.0);
+    }
+    let inst = ProblemInstance::new("w", g, Network::homogeneous(2, 1.0));
+
+    let mut s = Schedule::new(inst.graph.len(), 2);
+    for i in 0..k {
+        let start = i as f64 * 1.5; // 0.5-wide gaps
+        s.insert(Assignment { task: i, node: 0, start, end: start + 1.0 });
+    }
+    for p in 0..preds {
+        let start = p as f64 * 1.5;
+        s.insert(Assignment { task: k + p, node: 1, start, end: start + 1.0 });
+    }
+    (inst, s, probe)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    for k in [4usize, 16, 64, 256] {
+        let (inst, sched, probe) = setup(k, 3);
+        b.bench(&format!("window/insertion_{k}"), || {
+            black_box(window_insertion(&inst, &sched, probe, 0));
+        });
+        b.bench(&format!("window/append_only_{k}"), || {
+            black_box(window_append_only(&inst, &sched, probe, 0));
+        });
+    }
+
+    for preds in [1usize, 4, 16] {
+        let (inst, sched, probe) = setup(8, preds);
+        b.bench(&format!("dat/preds_{preds}"), || {
+            black_box(data_available_time(&inst, &sched, probe, 0));
+        });
+    }
+}

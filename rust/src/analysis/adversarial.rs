@@ -1,0 +1,237 @@
+//! Adversarial scheduler comparison — the paper's closing future-work
+//! pointer ("an adversarial approach to comparing algorithms was
+//! recently proposed … it may be interesting to evaluate the scheduling
+//! algorithms and algorithmic components using this approach", §V,
+//! citing Coleman & Krishnamachari [14]).
+//!
+//! Instead of averaging over a fixed dataset, we *search* for problem
+//! instances on which scheduler `A` does maximally worse than scheduler
+//! `B`: a simple (1+λ) evolutionary loop that perturbs task costs, edge
+//! data sizes, node speeds and link strengths of a seed instance,
+//! keeping the mutant with the highest makespan ratio `m(A)/m(B)`.
+//! Deterministic given the seed — failures reproduce exactly.
+
+use crate::datasets::rng::Rng;
+use crate::datasets::DatasetSpec;
+use crate::graph::TaskGraph;
+use crate::instance::ProblemInstance;
+use crate::network::Network;
+use crate::scheduler::SchedulerConfig;
+
+/// Result of an adversarial search.
+#[derive(Debug, Clone)]
+pub struct AdversarialResult {
+    /// The instance maximizing `m(A)/m(B)` found within the budget.
+    pub instance: ProblemInstance,
+    /// The achieved ratio (≥ the seed instance's ratio).
+    pub ratio: f64,
+    /// Ratio of the unperturbed seed instance.
+    pub seed_ratio: f64,
+    /// Generations actually run.
+    pub generations: usize,
+}
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct AdversarialOptions {
+    /// Mutants per generation (λ).
+    pub offspring: usize,
+    /// Generations.
+    pub generations: usize,
+    /// Multiplicative weight-perturbation range: each mutated weight is
+    /// scaled by `exp(U(−strength, strength))`.
+    pub strength: f64,
+    /// Fraction of weights mutated per offspring.
+    pub rate: f64,
+}
+
+impl Default for AdversarialOptions {
+    fn default() -> Self {
+        AdversarialOptions { offspring: 16, generations: 50, strength: 0.6, rate: 0.3 }
+    }
+}
+
+fn ratio(a: &SchedulerConfig, b: &SchedulerConfig, inst: &ProblemInstance) -> f64 {
+    let ma = a.build().schedule(inst).makespan();
+    let mb = b.build().schedule(inst).makespan();
+    if mb <= 0.0 {
+        1.0
+    } else {
+        ma / mb
+    }
+}
+
+/// Mutate one instance: multiplicative noise on a random subset of the
+/// weights (graph costs/data, node speeds, link strengths), preserving
+/// topology. Weights stay positive by construction.
+fn mutate(inst: &ProblemInstance, rng: &mut Rng, opts: &AdversarialOptions) -> ProblemInstance {
+    let g = &inst.graph;
+    let perturb = |rng: &mut Rng, w: f64| -> f64 {
+        w * rng.uniform_in(-opts.strength, opts.strength).exp()
+    };
+
+    let mut ng = TaskGraph::new();
+    for t in 0..g.len() {
+        let cost = if rng.uniform() < opts.rate {
+            perturb(rng, g.cost(t))
+        } else {
+            g.cost(t)
+        };
+        ng.add_task(g.name(t), cost);
+    }
+    for (s, d, w) in g.edges() {
+        let w = if rng.uniform() < opts.rate { perturb(rng, w) } else { w };
+        ng.add_edge(s, d, w);
+    }
+
+    let n = inst.network.len();
+    let speeds: Vec<f64> = (0..n)
+        .map(|v| {
+            let s = inst.network.speed(v);
+            if rng.uniform() < opts.rate {
+                perturb(rng, s)
+            } else {
+                s
+            }
+        })
+        .collect();
+    let mut links = vec![0.0; n * n];
+    for i in 0..n {
+        links[i * n + i] = 1.0;
+        for j in (i + 1)..n {
+            let w = inst.network.link(i, j);
+            let w = if rng.uniform() < opts.rate { perturb(rng, w) } else { w };
+            links[i * n + j] = w;
+            links[j * n + i] = w;
+        }
+    }
+    ProblemInstance::new(
+        format!("{}~adv", inst.name),
+        ng,
+        Network::new(speeds, links),
+    )
+}
+
+/// Search for an instance on which `a` is maximally worse than `b`,
+/// starting from a dataset-sampled seed instance.
+pub fn adversarial_search(
+    a: &SchedulerConfig,
+    b: &SchedulerConfig,
+    seed_spec: &DatasetSpec,
+    rng_seed: u64,
+    opts: &AdversarialOptions,
+) -> AdversarialResult {
+    let mut rng = Rng::seeded(rng_seed);
+    let mut champion = {
+        let mut stream = seed_spec.instance_rng(0);
+        seed_spec.generate_one(&mut stream)
+    };
+    let seed_ratio = ratio(a, b, &champion);
+    let mut best = seed_ratio;
+
+    for _gen in 0..opts.generations {
+        let mut improved = false;
+        for _ in 0..opts.offspring {
+            let cand = mutate(&champion, &mut rng, opts);
+            let r = ratio(a, b, &cand);
+            if r > best {
+                best = r;
+                champion = cand;
+                improved = true;
+            }
+        }
+        // Restart pressure: if a full generation stalls, widen mutations
+        // a touch by mutating the champion unconditionally once.
+        if !improved {
+            let cand = mutate(&champion, &mut rng, opts);
+            let r = ratio(a, b, &cand);
+            if r > best {
+                best = r;
+                champion = cand;
+            }
+        }
+    }
+    AdversarialResult {
+        instance: champion,
+        ratio: best,
+        seed_ratio,
+        generations: opts.generations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Structure;
+
+    fn small_opts() -> AdversarialOptions {
+        AdversarialOptions { offspring: 6, generations: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn finds_instances_where_quickest_loses_badly() {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::OutTrees, 0.5) };
+        let res = adversarial_search(
+            &SchedulerConfig::met(),  // Quickest-based
+            &SchedulerConfig::heft(),
+            &spec,
+            7,
+            &small_opts(),
+        );
+        assert!(res.ratio >= res.seed_ratio, "search must never regress");
+        assert!(res.ratio > 1.0, "MET must be beatable somewhere");
+        // The adversarial instance is a real, valid instance.
+        assert!(res.instance.validate().is_ok());
+        let s = SchedulerConfig::met().build().schedule(&res.instance);
+        assert!(s.validate(&res.instance).is_ok());
+    }
+
+    #[test]
+    fn self_comparison_stays_at_one() {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let res = adversarial_search(
+            &SchedulerConfig::heft(),
+            &SchedulerConfig::heft(),
+            &spec,
+            3,
+            &small_opts(),
+        );
+        assert!((res.ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+        let r1 = adversarial_search(
+            &SchedulerConfig::mct(),
+            &SchedulerConfig::heft(),
+            &spec,
+            11,
+            &small_opts(),
+        );
+        let r2 = adversarial_search(
+            &SchedulerConfig::mct(),
+            &SchedulerConfig::heft(),
+            &spec,
+            11,
+            &small_opts(),
+        );
+        assert_eq!(r1.ratio, r2.ratio);
+        assert_eq!(r1.instance, r2.instance);
+    }
+
+    #[test]
+    fn mutation_preserves_topology() {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Cycles, 1.0) };
+        let mut stream = spec.instance_rng(0);
+        let inst = spec.generate_one(&mut stream);
+        let mut rng = Rng::seeded(5);
+        let mutant = mutate(&inst, &mut rng, &AdversarialOptions::default());
+        assert_eq!(mutant.graph.len(), inst.graph.len());
+        assert_eq!(mutant.graph.num_edges(), inst.graph.num_edges());
+        let e1: Vec<(usize, usize)> = inst.graph.edges().map(|(s, d, _)| (s, d)).collect();
+        let e2: Vec<(usize, usize)> = mutant.graph.edges().map(|(s, d, _)| (s, d)).collect();
+        assert_eq!(e1, e2);
+        assert!(mutant.validate().is_ok());
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-component effect analysis (paper §IV-A, Figures 4–9): how does
+//! each algorithmic component, marginalized over all the others, shift
+//! the makespan- and runtime-ratio distributions?
+
+
+use crate::benchmark::{metrics::Stats, BenchmarkResults};
+use crate::scheduler::{CompareFn, PriorityFn, SchedulerConfig};
+
+/// The five algorithmic components of the parametric scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    Priority,
+    Compare,
+    AppendOnly,
+    CriticalPath,
+    Sufferage,
+}
+
+impl Component {
+    pub const ALL: [Component; 5] = [
+        Component::Priority,
+        Component::Compare,
+        Component::AppendOnly,
+        Component::CriticalPath,
+        Component::Sufferage,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Component::Priority => "initial_priority",
+            Component::Compare => "compare",
+            Component::AppendOnly => "append_only",
+            Component::CriticalPath => "critical_path",
+            Component::Sufferage => "sufferage",
+        }
+    }
+
+    /// The component's value in a given configuration, as a label.
+    pub fn value_of(&self, cfg: &SchedulerConfig) -> &'static str {
+        match self {
+            Component::Priority => match cfg.priority {
+                PriorityFn::UpwardRanking => "UpwardRanking",
+                PriorityFn::CPoPRanking => "CPoPRanking",
+                PriorityFn::ArbitraryTopological => "ArbitraryTopological",
+            },
+            Component::Compare => match cfg.compare {
+                CompareFn::Eft => "EFT",
+                CompareFn::Est => "EST",
+                CompareFn::Quickest => "Quickest",
+            },
+            Component::AppendOnly => bool_label(cfg.append_only),
+            Component::CriticalPath => bool_label(cfg.critical_path),
+            Component::Sufferage => bool_label(cfg.sufferage),
+        }
+    }
+
+    /// All values this component takes, in presentation order.
+    pub fn values(&self) -> Vec<&'static str> {
+        match self {
+            Component::Priority => vec!["UpwardRanking", "ArbitraryTopological", "CPoPRanking"],
+            Component::Compare => vec!["EFT", "EST", "Quickest"],
+            _ => vec!["False", "True"],
+        }
+    }
+}
+
+fn bool_label(b: bool) -> &'static str {
+    if b {
+        "True"
+    } else {
+        "False"
+    }
+}
+
+impl std::fmt::Display for Component {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// The effect of one component value: ratio distributions over every
+/// per-instance measurement of every scheduler having that value.
+#[derive(Debug, Clone)]
+pub struct EffectRow {
+    pub component: String,
+    pub value: String,
+    pub makespan: Stats,
+    pub runtime: Stats,
+}
+
+/// Marginal effect of `component` over all datasets (Figures 4–8) or a
+/// single dataset (Figure 9) when `dataset` is `Some`.
+pub fn effect(
+    results: &BenchmarkResults,
+    component: Component,
+    dataset: Option<&str>,
+) -> Vec<EffectRow> {
+    let ratios = results.ratios();
+    component
+        .values()
+        .into_iter()
+        .filter_map(|value| {
+            let mut ms = Vec::new();
+            let mut ts = Vec::new();
+            for r in &ratios {
+                if let Some(d) = dataset {
+                    if r.dataset != d {
+                        continue;
+                    }
+                }
+                let Some(cfg) = SchedulerConfig::from_name(&r.scheduler) else {
+                    continue; // non-parametric scheduler in the mix
+                };
+                if component.value_of(&cfg) == value {
+                    ms.push(r.makespan_ratio);
+                    ts.push(r.runtime_ratio);
+                }
+            }
+            // Partial scheduler sets (e.g. `ptgs benchmark --schedulers
+            // HEFT,MCT`) simply have no measurements for some component
+            // values; omit those rows rather than failing.
+            if ms.is_empty() {
+                return None;
+            }
+            Some(EffectRow {
+                component: component.as_str().into(),
+                value: value.into(),
+                makespan: Stats::of(&ms),
+                runtime: Stats::of(&ts),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmark::{Harness, Record};
+    use crate::datasets::{DatasetSpec, Structure};
+
+    fn tiny_results() -> BenchmarkResults {
+        let h = Harness::with_schedulers(SchedulerConfig::all());
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        BenchmarkResults::new(h.run_dataset(&spec))
+    }
+
+    #[test]
+    fn component_values_cover_all_configs() {
+        for comp in Component::ALL {
+            let values = comp.values();
+            for cfg in SchedulerConfig::all() {
+                assert!(values.contains(&comp.value_of(&cfg)));
+            }
+        }
+    }
+
+    #[test]
+    fn effect_partitions_measurements() {
+        let results = tiny_results();
+        let total = 72 * 2;
+        for comp in Component::ALL {
+            let rows = effect(&results, comp, None);
+            let n: usize = rows.iter().map(|r| r.makespan.n).sum();
+            assert_eq!(n, total, "{comp} must partition all measurements");
+        }
+    }
+
+    #[test]
+    fn effect_means_at_least_one() {
+        let results = tiny_results();
+        for row in effect(&results, Component::Compare, None) {
+            assert!(row.makespan.mean >= 1.0);
+            assert!(row.runtime.mean >= 1.0);
+        }
+    }
+
+    #[test]
+    fn dataset_filter_respected() {
+        let results = tiny_results();
+        let rows = effect(&results, Component::Sufferage, Some("chains_ccr_1"));
+        let n: usize = rows.iter().map(|r| r.makespan.n).sum();
+        assert_eq!(n, 144);
+    }
+
+    #[test]
+    fn partial_scheduler_sets_omit_empty_rows() {
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let results = BenchmarkResults::new(h.run_dataset(&spec));
+        let rows = effect(&results, Component::Compare, None);
+        assert_eq!(rows.len(), 1, "only EFT measured");
+        assert_eq!(rows[0].value, "EFT");
+    }
+
+    #[test]
+    fn skips_unknown_schedulers() {
+        let mut results = tiny_results();
+        results.records.push(Record {
+            scheduler: "SomeBaseline".into(),
+            dataset: "chains_ccr_1".into(),
+            instance: 0,
+            makespan: 1.0,
+            runtime_ns: 1,
+            num_tasks: 1,
+            num_nodes: 1,
+        });
+        // Must not panic; unknown scheduler is simply excluded.
+        let _ = effect(&results, Component::Compare, None);
+    }
+}

@@ -1,0 +1,151 @@
+//! Pairwise interaction analysis (paper Figure 10): mean makespan ratio
+//! as a function of two factors — two algorithmic components, or one
+//! component crossed with a dataset property (structure family or CCR).
+
+use std::collections::BTreeMap;
+
+use super::effects::Component;
+use crate::benchmark::BenchmarkResults;
+use crate::scheduler::SchedulerConfig;
+
+/// A dataset-side grouping factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetFactor {
+    /// Task-graph family (`in_trees`, `out_trees`, `chains`, `cycles`).
+    Structure,
+    /// Communication-to-computation ratio (`0.2` … `5`).
+    Ccr,
+}
+
+/// Parse a paper-style dataset name `<structure>_ccr_<ccr>` into its
+/// two factors.
+pub fn parse_dataset_name(name: &str) -> Option<(String, String)> {
+    let idx = name.rfind("_ccr_")?;
+    Some((name[..idx].to_string(), name[idx + 5..].to_string()))
+}
+
+/// One cell of an interaction table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InteractionCell {
+    pub a: String,
+    pub b: String,
+    pub mean_makespan_ratio: f64,
+    pub mean_runtime_ratio: f64,
+    pub n: usize,
+}
+
+/// Interaction between two scheduler components (e.g. Fig. 10a:
+/// `append_only × initial_priority`), averaged over all datasets.
+pub fn component_interaction(
+    results: &BenchmarkResults,
+    comp_a: Component,
+    comp_b: Component,
+) -> Vec<InteractionCell> {
+    group(results, |r| {
+        let cfg = SchedulerConfig::from_name(&r.scheduler)?;
+        Some((
+            comp_a.value_of(&cfg).to_string(),
+            comp_b.value_of(&cfg).to_string(),
+        ))
+    })
+}
+
+/// Interaction between a scheduler component and a dataset factor
+/// (e.g. Fig. 10b: `compare × CCR`; Fig. 10c/d: `× structure`).
+pub fn dataset_interaction(
+    results: &BenchmarkResults,
+    comp: Component,
+    factor: DatasetFactor,
+) -> Vec<InteractionCell> {
+    group(results, |r| {
+        let cfg = SchedulerConfig::from_name(&r.scheduler)?;
+        let (structure, ccr) = parse_dataset_name(&r.dataset)?;
+        let b = match factor {
+            DatasetFactor::Structure => structure,
+            DatasetFactor::Ccr => ccr,
+        };
+        Some((comp.value_of(&cfg).to_string(), b))
+    })
+}
+
+fn group(
+    results: &BenchmarkResults,
+    key: impl Fn(&crate::benchmark::RatioRecord) -> Option<(String, String)>,
+) -> Vec<InteractionCell> {
+    let mut acc: BTreeMap<(String, String), (f64, f64, usize)> = BTreeMap::new();
+    for r in results.ratios() {
+        if let Some(k) = key(&r) {
+            let e = acc.entry(k).or_insert((0.0, 0.0, 0));
+            e.0 += r.makespan_ratio;
+            e.1 += r.runtime_ratio;
+            e.2 += 1;
+        }
+    }
+    acc.into_iter()
+        .map(|((a, b), (m, t, n))| InteractionCell {
+            a,
+            b,
+            mean_makespan_ratio: m / n as f64,
+            mean_runtime_ratio: t / n as f64,
+            n,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmark::Harness;
+    use crate::datasets::{DatasetSpec, Structure};
+
+    fn results_two_datasets() -> BenchmarkResults {
+        let h = Harness::with_schedulers(SchedulerConfig::all());
+        let mut records = Vec::new();
+        for (st, ccr) in [(Structure::Chains, 1.0), (Structure::InTrees, 5.0)] {
+            let spec = DatasetSpec { count: 2, ..DatasetSpec::new(st, ccr) };
+            records.extend(h.run_dataset(&spec));
+        }
+        BenchmarkResults::new(records)
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            parse_dataset_name("in_trees_ccr_0.2"),
+            Some(("in_trees".into(), "0.2".into()))
+        );
+        assert_eq!(
+            parse_dataset_name("cycles_ccr_5"),
+            Some(("cycles".into(), "5".into()))
+        );
+        assert_eq!(parse_dataset_name("nope"), None);
+    }
+
+    #[test]
+    fn component_interaction_full_grid() {
+        let results = results_two_datasets();
+        let cells =
+            component_interaction(&results, Component::AppendOnly, Component::Priority);
+        assert_eq!(cells.len(), 2 * 3);
+        let total: usize = cells.iter().map(|c| c.n).sum();
+        assert_eq!(total, 72 * 2 * 2, "cells partition all measurements");
+    }
+
+    #[test]
+    fn dataset_interaction_by_structure() {
+        let results = results_two_datasets();
+        let cells = dataset_interaction(&results, Component::Compare, DatasetFactor::Structure);
+        // 3 compare values × 2 structures present
+        assert_eq!(cells.len(), 6);
+        assert!(cells.iter().all(|c| c.mean_makespan_ratio >= 1.0));
+    }
+
+    #[test]
+    fn dataset_interaction_by_ccr() {
+        let results = results_two_datasets();
+        let cells = dataset_interaction(&results, Component::Compare, DatasetFactor::Ccr);
+        let ccrs: std::collections::HashSet<&str> =
+            cells.iter().map(|c| c.b.as_str()).collect();
+        assert_eq!(ccrs, ["1", "5"].into_iter().collect());
+    }
+}

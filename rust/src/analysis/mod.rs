@@ -1,0 +1,384 @@
+//! Analysis & reproduction: turn benchmark records into every table and
+//! figure of the paper's evaluation section (see DESIGN.md §4).
+
+pub mod adversarial;
+pub mod effects;
+pub mod interactions;
+pub mod pareto;
+pub mod render;
+pub mod report;
+
+pub use adversarial::{adversarial_search, AdversarialOptions, AdversarialResult};
+pub use effects::{effect, Component, EffectRow};
+pub use report::write_report;
+pub use interactions::{
+    component_interaction, dataset_interaction, parse_dataset_name, DatasetFactor,
+};
+pub use pareto::{pareto_front, ParetoAnalysis, ParetoPoint};
+
+use std::path::Path;
+
+use crate::benchmark::BenchmarkResults;
+use crate::scheduler::SchedulerConfig;
+use render::{ascii_table, fmt_f, write_csv};
+
+/// Every reproducible artifact of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Artifact {
+    Table1,
+    Fig3a,
+    Fig3b,
+    Fig4,
+    Fig5,
+    Fig6,
+    Fig7,
+    Fig8,
+    Fig9,
+    Fig10a,
+    Fig10b,
+    Fig10c,
+    Fig10d,
+}
+
+impl Artifact {
+    pub const ALL: [Artifact; 13] = [
+        Artifact::Table1,
+        Artifact::Fig3a,
+        Artifact::Fig3b,
+        Artifact::Fig4,
+        Artifact::Fig5,
+        Artifact::Fig6,
+        Artifact::Fig7,
+        Artifact::Fig8,
+        Artifact::Fig9,
+        Artifact::Fig10a,
+        Artifact::Fig10b,
+        Artifact::Fig10c,
+        Artifact::Fig10d,
+    ];
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            Artifact::Table1 => "table1",
+            Artifact::Fig3a => "fig3a",
+            Artifact::Fig3b => "fig3b",
+            Artifact::Fig4 => "fig4",
+            Artifact::Fig5 => "fig5",
+            Artifact::Fig6 => "fig6",
+            Artifact::Fig7 => "fig7",
+            Artifact::Fig8 => "fig8",
+            Artifact::Fig9 => "fig9",
+            Artifact::Fig10a => "fig10a",
+            Artifact::Fig10b => "fig10b",
+            Artifact::Fig10c => "fig10c",
+            Artifact::Fig10d => "fig10d",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Artifact> {
+        Artifact::ALL.iter().copied().find(|a| a.id() == id)
+    }
+
+    pub fn description(&self) -> &'static str {
+        match self {
+            Artifact::Table1 => "schedulers pareto-optimal for >=1 dataset, with components",
+            Artifact::Fig3a => "pareto scatter: mean makespan vs runtime ratio per dataset",
+            Artifact::Fig3b => "pareto rank grid: scheduler x dataset",
+            Artifact::Fig4 => "effect of initial priority function (all datasets)",
+            Artifact::Fig5 => "effect of comparison function (all datasets)",
+            Artifact::Fig6 => "effect of insertion vs append-only (all datasets)",
+            Artifact::Fig7 => "effect of critical-path reservation (all datasets)",
+            Artifact::Fig8 => "effect of sufferage (all datasets)",
+            Artifact::Fig9 => "effect of comparison function on cycles_ccr_5",
+            Artifact::Fig10a => "interaction: append_only x initial_priority",
+            Artifact::Fig10b => "interaction: compare x CCR",
+            Artifact::Fig10c => "interaction: compare x dataset structure",
+            Artifact::Fig10d => "interaction: critical_path x dataset structure",
+        }
+    }
+
+    /// Generate this artifact: write `<out_dir>/<id>.csv` and return the
+    /// ASCII rendering.
+    pub fn generate(
+        &self,
+        results: &BenchmarkResults,
+        out_dir: &Path,
+    ) -> std::io::Result<String> {
+        let csv = out_dir.join(format!("{}.csv", self.id()));
+        match self {
+            Artifact::Table1 => table1(results, &csv),
+            Artifact::Fig3a => fig3a(results, &csv),
+            Artifact::Fig3b => fig3b(results, &csv),
+            Artifact::Fig4 => effect_figure(results, Component::Priority, None, &csv),
+            Artifact::Fig5 => effect_figure(results, Component::Compare, None, &csv),
+            Artifact::Fig6 => effect_figure(results, Component::AppendOnly, None, &csv),
+            Artifact::Fig7 => effect_figure(results, Component::CriticalPath, None, &csv),
+            Artifact::Fig8 => effect_figure(results, Component::Sufferage, None, &csv),
+            Artifact::Fig9 => {
+                effect_figure(results, Component::Compare, Some("cycles_ccr_5"), &csv)
+            }
+            Artifact::Fig10a => interaction_figure(
+                results,
+                Interaction::Components(Component::AppendOnly, Component::Priority),
+                &csv,
+            ),
+            Artifact::Fig10b => interaction_figure(
+                results,
+                Interaction::Dataset(Component::Compare, DatasetFactor::Ccr),
+                &csv,
+            ),
+            Artifact::Fig10c => interaction_figure(
+                results,
+                Interaction::Dataset(Component::Compare, DatasetFactor::Structure),
+                &csv,
+            ),
+            Artifact::Fig10d => interaction_figure(
+                results,
+                Interaction::Dataset(Component::CriticalPath, DatasetFactor::Structure),
+                &csv,
+            ),
+        }
+    }
+}
+
+enum Interaction {
+    Components(Component, Component),
+    Dataset(Component, DatasetFactor),
+}
+
+/// Table I: schedulers pareto-optimal for at least one dataset, with
+/// their five component values.
+fn table1(results: &BenchmarkResults, csv: &Path) -> std::io::Result<String> {
+    let pa = ParetoAnalysis::from_means(&results.mean_ratios());
+    let headers = vec![
+        "scheduler",
+        "initial_priority",
+        "append_only",
+        "compare",
+        "critical_path",
+        "sufferage",
+    ];
+    let mut rows = Vec::new();
+    for name in pa.pareto_anywhere() {
+        let Some(cfg) = SchedulerConfig::from_name(&name) else { continue };
+        rows.push(vec![
+            name.clone(),
+            Component::Priority.value_of(&cfg).to_string(),
+            Component::AppendOnly.value_of(&cfg).to_string(),
+            Component::Compare.value_of(&cfg).to_string(),
+            Component::CriticalPath.value_of(&cfg).to_string(),
+            Component::Sufferage.value_of(&cfg).to_string(),
+        ]);
+    }
+    write_csv(csv, &headers, &rows)?;
+    let total = results.schedulers().len();
+    Ok(format!(
+        "Table I — {} of {} schedulers pareto-optimal for >=1 dataset\n{}",
+        rows.len(),
+        total,
+        ascii_table(&headers, &rows)
+    ))
+}
+
+/// Fig 3a data: per dataset, every scheduler's mean ratios + pareto flag.
+fn fig3a(results: &BenchmarkResults, csv: &Path) -> std::io::Result<String> {
+    let pa = ParetoAnalysis::from_means(&results.mean_ratios());
+    let headers = vec!["dataset", "scheduler", "makespan_ratio", "runtime_ratio", "pareto"];
+    let mut rows = Vec::new();
+    for (dataset, points) in &pa.per_dataset {
+        for p in points {
+            rows.push(vec![
+                dataset.clone(),
+                p.scheduler.clone(),
+                fmt_f(p.makespan_ratio, 4),
+                fmt_f(p.runtime_ratio, 4),
+                p.pareto.to_string(),
+            ]);
+        }
+    }
+    write_csv(csv, &headers, &rows)?;
+    // ASCII: per-dataset pareto fronts only (the blue markers).
+    let mut out = String::from("Fig 3a — pareto fronts per dataset (pareto points only)\n");
+    let front_rows: Vec<Vec<String>> = pa
+        .per_dataset
+        .iter()
+        .flat_map(|(d, ps)| {
+            ps.iter().filter(|p| p.pareto).map(move |p| {
+                vec![
+                    d.clone(),
+                    p.scheduler.clone(),
+                    fmt_f(p.makespan_ratio, 3),
+                    fmt_f(p.runtime_ratio, 3),
+                ]
+            })
+        })
+        .collect();
+    out.push_str(&ascii_table(
+        &["dataset", "scheduler", "makespan_ratio", "runtime_ratio"],
+        &front_rows,
+    ));
+    Ok(out)
+}
+
+/// Fig 3b: pareto rank grid (scheduler × dataset; blank = not pareto).
+fn fig3b(results: &BenchmarkResults, csv: &Path) -> std::io::Result<String> {
+    let pa = ParetoAnalysis::from_means(&results.mean_ratios());
+    let grid = pa.rank_grid();
+    let datasets: Vec<String> = grid.keys().cloned().collect();
+    let schedulers = pa.pareto_anywhere();
+
+    let mut headers: Vec<&str> = vec!["scheduler"];
+    let ds_refs: Vec<String> = datasets.clone();
+    headers.extend(ds_refs.iter().map(|s| s.as_str()));
+    let mut rows = Vec::new();
+    for s in &schedulers {
+        let mut row = vec![s.clone()];
+        for d in &datasets {
+            row.push(
+                grid[d]
+                    .get(s)
+                    .map(|r| r.to_string())
+                    .unwrap_or_default(),
+            );
+        }
+        rows.push(row);
+    }
+    write_csv(csv, &headers, &rows)?;
+    Ok(format!("Fig 3b — pareto rank grid\n{}", ascii_table(&headers, &rows)))
+}
+
+/// Figures 4–9: marginal effect of one component.
+fn effect_figure(
+    results: &BenchmarkResults,
+    comp: Component,
+    dataset: Option<&str>,
+    csv: &Path,
+) -> std::io::Result<String> {
+    let rows_data = effect(results, comp, dataset);
+    let headers = vec![
+        "value",
+        "makespan_mean",
+        "makespan_std",
+        "makespan_q25",
+        "makespan_median",
+        "makespan_q75",
+        "runtime_mean",
+        "runtime_std",
+        "runtime_q25",
+        "runtime_median",
+        "runtime_q75",
+        "n",
+    ];
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| {
+            vec![
+                r.value.clone(),
+                fmt_f(r.makespan.mean, 4),
+                fmt_f(r.makespan.std, 4),
+                fmt_f(r.makespan.q25, 4),
+                fmt_f(r.makespan.median, 4),
+                fmt_f(r.makespan.q75, 4),
+                fmt_f(r.runtime.mean, 4),
+                fmt_f(r.runtime.std, 4),
+                fmt_f(r.runtime.q25, 4),
+                fmt_f(r.runtime.median, 4),
+                fmt_f(r.runtime.q75, 4),
+                r.makespan.n.to_string(),
+            ]
+        })
+        .collect();
+    write_csv(csv, &headers, &rows)?;
+    let scope = dataset.unwrap_or("all datasets");
+    Ok(format!(
+        "Effect of {comp} ({scope})\n{}",
+        ascii_table(&headers, &rows)
+    ))
+}
+
+/// Figure 10 panels: two-factor interaction tables.
+fn interaction_figure(
+    results: &BenchmarkResults,
+    kind: Interaction,
+    csv: &Path,
+) -> std::io::Result<String> {
+    let (cells, label_a, label_b) = match kind {
+        Interaction::Components(a, b) => {
+            (component_interaction(results, a, b), a.as_str(), b.as_str())
+        }
+        Interaction::Dataset(a, f) => (
+            dataset_interaction(results, a, f),
+            a.as_str(),
+            match f {
+                DatasetFactor::Structure => "structure",
+                DatasetFactor::Ccr => "ccr",
+            },
+        ),
+    };
+    let headers = vec![label_a, label_b, "mean_makespan_ratio", "mean_runtime_ratio", "n"];
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.a.clone(),
+                c.b.clone(),
+                fmt_f(c.mean_makespan_ratio, 4),
+                fmt_f(c.mean_runtime_ratio, 4),
+                c.n.to_string(),
+            ]
+        })
+        .collect();
+    write_csv(csv, &headers, &rows)?;
+    Ok(format!(
+        "Interaction {label_a} × {label_b}\n{}",
+        ascii_table(&headers, &rows)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmark::Harness;
+    use crate::datasets::{DatasetSpec, Structure};
+
+    fn tiny_results() -> BenchmarkResults {
+        let h = Harness::with_schedulers(SchedulerConfig::all());
+        let mut records = Vec::new();
+        for (st, ccr) in [(Structure::Chains, 1.0), (Structure::Cycles, 5.0)] {
+            let spec = DatasetSpec { count: 2, ..DatasetSpec::new(st, ccr) };
+            records.extend(h.run_dataset(&spec));
+        }
+        BenchmarkResults::new(records)
+    }
+
+    #[test]
+    fn artifact_ids_roundtrip() {
+        for a in Artifact::ALL {
+            assert_eq!(Artifact::from_id(a.id()), Some(a));
+        }
+        assert_eq!(Artifact::from_id("nope"), None);
+    }
+
+    #[test]
+    fn all_artifacts_generate() {
+        let results = tiny_results();
+        let dir = std::env::temp_dir().join("ptgs_artifacts_test");
+        for a in Artifact::ALL {
+            let text = a.generate(&results, &dir).unwrap_or_else(|e| {
+                panic!("artifact {} failed: {e}", a.id())
+            });
+            assert!(!text.is_empty(), "{}", a.id());
+            assert!(dir.join(format!("{}.csv", a.id())).exists());
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn table1_lists_subset_of_schedulers() {
+        let results = tiny_results();
+        let dir = std::env::temp_dir().join("ptgs_t1_test");
+        let text = Artifact::Table1.generate(&results, &dir).unwrap();
+        assert!(text.contains("pareto-optimal"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,169 @@
+//! Pareto-front analysis over (makespan ratio, runtime ratio) means —
+//! the machinery behind the paper's Table I and Figures 3a/3b.
+
+use std::collections::BTreeMap;
+
+use crate::benchmark::MeanRatios;
+
+/// One scheduler's position for one dataset, with its pareto flag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    pub scheduler: String,
+    pub makespan_ratio: f64,
+    pub runtime_ratio: f64,
+    pub pareto: bool,
+}
+
+/// Indices of the pareto-optimal points (minimizing both coordinates).
+///
+/// A point is pareto-optimal iff no other point weakly dominates it:
+/// `other.m ≤ m ∧ other.r ≤ r` with at least one strict inequality.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<bool> {
+    let dominated = |i: usize| {
+        points.iter().enumerate().any(|(j, &(mj, rj))| {
+            let (mi, ri) = points[i];
+            j != i && mj <= mi && rj <= ri && (mj < mi || rj < ri)
+        })
+    };
+    (0..points.len()).map(|i| !dominated(i)).collect()
+}
+
+/// Pareto analysis of a full benchmark: per-dataset fronts plus the
+/// cross-dataset "pareto anywhere" scheduler set of Table I.
+#[derive(Debug, Clone)]
+pub struct ParetoAnalysis {
+    /// dataset → all schedulers' points (sorted by runtime ratio).
+    pub per_dataset: BTreeMap<String, Vec<ParetoPoint>>,
+}
+
+impl ParetoAnalysis {
+    /// Build from per-(scheduler, dataset) mean ratios.
+    pub fn from_means(means: &[MeanRatios]) -> Self {
+        let mut by_dataset: BTreeMap<String, Vec<&MeanRatios>> = BTreeMap::new();
+        for m in means {
+            by_dataset.entry(m.dataset.clone()).or_default().push(m);
+        }
+        let mut per_dataset = BTreeMap::new();
+        for (dataset, ms) in by_dataset {
+            let coords: Vec<(f64, f64)> =
+                ms.iter().map(|m| (m.makespan_ratio, m.runtime_ratio)).collect();
+            let flags = pareto_front(&coords);
+            let mut points: Vec<ParetoPoint> = ms
+                .iter()
+                .zip(flags)
+                .map(|(m, pareto)| ParetoPoint {
+                    scheduler: m.scheduler.clone(),
+                    makespan_ratio: m.makespan_ratio,
+                    runtime_ratio: m.runtime_ratio,
+                    pareto,
+                })
+                .collect();
+            points.sort_by(|a, b| {
+                a.runtime_ratio
+                    .partial_cmp(&b.runtime_ratio)
+                    .unwrap()
+                    .then(a.scheduler.cmp(&b.scheduler))
+            });
+            per_dataset.insert(dataset, points);
+        }
+        ParetoAnalysis { per_dataset }
+    }
+
+    /// Schedulers that are pareto-optimal for ≥ 1 dataset (Table I rows),
+    /// sorted by name.
+    pub fn pareto_anywhere(&self) -> Vec<String> {
+        let mut set: Vec<String> = self
+            .per_dataset
+            .values()
+            .flatten()
+            .filter(|p| p.pareto)
+            .map(|p| p.scheduler.clone())
+            .collect();
+        set.sort();
+        set.dedup();
+        set
+    }
+
+    /// Fig-3b grid: for every dataset, pareto schedulers ranked 1..k by
+    /// ascending runtime ratio (1 = fastest / worst-makespan corner).
+    /// Returns dataset → (scheduler → rank).
+    pub fn rank_grid(&self) -> BTreeMap<String, BTreeMap<String, usize>> {
+        let mut grid = BTreeMap::new();
+        for (dataset, points) in &self.per_dataset {
+            let mut ranks = BTreeMap::new();
+            let mut rank = 0usize;
+            for p in points {
+                // points are pre-sorted by runtime ratio
+                if p.pareto {
+                    rank += 1;
+                    ranks.insert(p.scheduler.clone(), rank);
+                }
+            }
+            grid.insert(dataset.clone(), ranks);
+        }
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mr(s: &str, d: &str, m: f64, r: f64) -> MeanRatios {
+        MeanRatios {
+            scheduler: s.into(),
+            dataset: d.into(),
+            makespan_ratio: m,
+            runtime_ratio: r,
+            instances: 10,
+        }
+    }
+
+    #[test]
+    fn front_basic() {
+        // B dominated by A; C trades off; D duplicate of A (both kept —
+        // neither strictly dominates the other... actually equal points
+        // weakly dominate each other with no strict part, so both stay).
+        let pts = vec![(1.0, 2.0), (2.0, 3.0), (2.0, 1.0), (1.0, 2.0)];
+        let flags = pareto_front(&pts);
+        assert_eq!(flags, vec![true, false, true, true]);
+    }
+
+    #[test]
+    fn front_single_point() {
+        assert_eq!(pareto_front(&[(5.0, 5.0)]), vec![true]);
+    }
+
+    #[test]
+    fn analysis_per_dataset_and_anywhere() {
+        let means = vec![
+            mr("fast_bad", "d1", 2.0, 1.0),
+            mr("slow_good", "d1", 1.0, 3.0),
+            mr("dominated", "d1", 2.5, 3.5),
+            mr("fast_bad", "d2", 1.0, 1.0), // dominates everything in d2
+            mr("slow_good", "d2", 1.5, 3.0),
+            mr("dominated", "d2", 2.0, 2.0),
+        ];
+        let pa = ParetoAnalysis::from_means(&means);
+        let d1: Vec<(&str, bool)> = pa.per_dataset["d1"]
+            .iter()
+            .map(|p| (p.scheduler.as_str(), p.pareto))
+            .collect();
+        assert_eq!(d1, vec![("fast_bad", true), ("slow_good", true), ("dominated", false)]);
+        assert_eq!(pa.pareto_anywhere(), vec!["fast_bad".to_string(), "slow_good".to_string()]);
+    }
+
+    #[test]
+    fn rank_grid_orders_by_runtime() {
+        let means = vec![
+            mr("a", "d", 3.0, 1.0),
+            mr("b", "d", 2.0, 2.0),
+            mr("c", "d", 1.0, 3.0),
+        ];
+        let pa = ParetoAnalysis::from_means(&means);
+        let grid = pa.rank_grid();
+        assert_eq!(grid["d"]["a"], 1);
+        assert_eq!(grid["d"]["b"], 2);
+        assert_eq!(grid["d"]["c"], 3);
+    }
+}

@@ -1,0 +1,74 @@
+//! Consolidated reproduction report: every artifact rendered into one
+//! Markdown document (`results/REPORT.md`), with run metadata — the
+//! single file to read after `ptgs reproduce`.
+
+use std::path::Path;
+
+use super::Artifact;
+use crate::benchmark::BenchmarkResults;
+
+/// Generate every artifact and write `<out_dir>/REPORT.md`. Returns the
+/// report text.
+pub fn write_report(
+    results: &BenchmarkResults,
+    out_dir: &Path,
+    elapsed_secs: f64,
+) -> std::io::Result<String> {
+    let mut md = String::new();
+    md.push_str("# PTGS reproduction report\n\n");
+    md.push_str(&format!(
+        "- records: **{}** ({} schedulers × {} datasets)\n",
+        results.records.len(),
+        results.schedulers().len(),
+        results.datasets().len(),
+    ));
+    let instances: std::collections::HashSet<(&str, usize)> = results
+        .records
+        .iter()
+        .map(|r| (r.dataset.as_str(), r.instance))
+        .collect();
+    md.push_str(&format!("- problem instances: **{}**\n", instances.len()));
+    md.push_str(&format!("- benchmark wall-clock: **{elapsed_secs:.2} s**\n"));
+    md.push_str("- per-artifact CSVs: this directory\n\n");
+
+    for artifact in Artifact::ALL {
+        let text = artifact.generate(results, out_dir)?;
+        md.push_str(&format!(
+            "## {} — {}\n\n```text\n{}\n```\n\n",
+            artifact.id(),
+            artifact.description(),
+            text.trim_end()
+        ));
+    }
+
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(out_dir.join("REPORT.md"), &md)?;
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmark::Harness;
+    use crate::datasets::{DatasetSpec, Structure};
+    use crate::scheduler::SchedulerConfig;
+
+    #[test]
+    fn report_contains_every_artifact() {
+        let h = Harness::with_schedulers(SchedulerConfig::all());
+        let mut records = Vec::new();
+        for (s, ccr) in [(Structure::Chains, 1.0), (Structure::Cycles, 5.0)] {
+            let spec = DatasetSpec { count: 2, ..DatasetSpec::new(s, ccr) };
+            records.extend(h.run_dataset(&spec));
+        }
+        let results = BenchmarkResults::new(records);
+        let dir = std::env::temp_dir().join("ptgs_report_test");
+        let md = write_report(&results, &dir, 1.25).unwrap();
+        for artifact in Artifact::ALL {
+            assert!(md.contains(&format!("## {}", artifact.id())), "{}", artifact.id());
+        }
+        assert!(md.contains("1.25 s"));
+        assert!(dir.join("REPORT.md").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal criterion-style benchmark harness (the vendored crate set has
+//! no `criterion`; DESIGN.md §Substitutions).
+//!
+//! Measures wall-clock per iteration with automatic calibration (targets
+//! ~`measure_time` per sample), reports mean ± std and min over samples,
+//! and honors the standard `cargo bench -- <filter>` argument. Output is
+//! one aligned line per benchmark:
+//!
+//! ```text
+//! group/name                time: [  12.345 µs ±  0.40 µs]  min   11.98 µs  (100 iters × 20 samples)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Target wall-clock per *sample* (a sample = `iters` iterations).
+    pub measure_time: Duration,
+    /// Samples per benchmark.
+    pub samples: usize,
+    /// Warm-up time before calibration.
+    pub warmup: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            measure_time: Duration::from_millis(50),
+            samples: 20,
+            warmup: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Per-benchmark measurement result (also returned for programmatic use
+/// by the perf harness in EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+/// The top-level bench context handed to `main`.
+pub struct Bencher {
+    config: Config,
+    filter: Option<String>,
+    pub results: Vec<Measurement>,
+}
+
+impl Bencher {
+    /// Build from `cargo bench -- <filter>` process arguments.
+    pub fn from_env() -> Self {
+        // cargo passes `--bench`; any other non-flag arg is a filter.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        Bencher { config: Config::default(), filter, results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, config: Config) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run one benchmark. `f` is called repeatedly; use
+    /// [`std::hint::black_box`] inside to defeat const-folding.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warm-up.
+        let t0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while t0.elapsed() < self.config.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // Calibrate iterations per sample from the warm-up rate.
+        let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.config.measure_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        // Measure.
+        let mut sample_secs = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_secs.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let n = sample_secs.len() as f64;
+        let mean = sample_secs.iter().sum::<f64>() / n;
+        let var = sample_secs.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+        let min = sample_secs.iter().cloned().fold(f64::INFINITY, f64::min);
+
+        let m = Measurement {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(min),
+            iters_per_sample: iters,
+            samples: self.config.samples,
+        };
+        println!(
+            "{:<44} time: [{:>10} ± {:>9}]  min {:>10}  ({} iters × {} samples)",
+            m.name,
+            fmt_dur(m.mean),
+            fmt_dur(m.std),
+            fmt_dur(m.min),
+            m.iters_per_sample,
+            m.samples
+        );
+        self.results.push(m);
+    }
+}
+
+/// Human-friendly duration with 3 significant figures.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_config() -> Config {
+        Config {
+            measure_time: Duration::from_micros(200),
+            samples: 3,
+            warmup: Duration::from_micros(200),
+        }
+    }
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { config: fast_config(), filter: None, results: Vec::new() };
+        let mut x = 0u64;
+        b.bench("noop", || {
+            x = std::hint::black_box(x.wrapping_add(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean.as_nanos() > 0);
+        assert!(b.results[0].min <= b.results[0].mean);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher {
+            config: fast_config(),
+            filter: Some("yes".into()),
+            results: Vec::new(),
+        };
+        b.bench("no_match", || {});
+        assert!(b.results.is_empty());
+        b.bench("yes_match", || {});
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,226 @@
+//! Extended schedule-quality metrics (paper §II / related work [7]):
+//! **speedup**, **efficiency**, and **slack**, alongside the primary
+//! makespan-ratio metric.
+//!
+//! * *speedup* — serial execution time on the fastest node divided by
+//!   the schedule's makespan (how much the schedule gains over running
+//!   everything on the single best machine);
+//! * *efficiency* — speedup per network node (utilization of the added
+//!   hardware);
+//! * *slack* — mean over tasks of `makespan − len(t) − dist(t)`, where
+//!   `dist(t)` is the longest start-to-finish path *in the schedule*
+//!   that ends with `t` (a robustness measure: how much the schedule
+//!   can absorb per-task delays without growing the makespan).
+//!
+//! These are the metrics the paper's related-work section lists as the
+//! common alternatives to makespan ratio; exposing them makes the
+//! harness usable for the comparison methodologies of [7]–[9].
+
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+use crate::schedule::Schedule;
+
+/// Extended metrics of one schedule on one instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExtendedMetrics {
+    pub makespan: f64,
+    pub speedup: f64,
+    pub efficiency: f64,
+    pub slack: f64,
+}
+
+/// Serial baseline: every task on the fastest node, back to back
+/// (no communication — all data is local).
+pub fn serial_time_fastest(inst: &ProblemInstance) -> f64 {
+    let fastest = inst.network.fastest_node();
+    (0..inst.graph.len())
+        .map(|t| inst.network.exec_time(inst.graph.cost(t), fastest))
+        .sum()
+}
+
+/// Longest schedule-respecting path finishing at each task.
+///
+/// `dist(t) = (end(t) − start(t)) + max over schedule-predecessors p of
+/// dist(p) + lag`, where schedule-predecessors are both DAG
+/// predecessors (with communication lag) and the previous task on the
+/// same node (zero lag). Computed over tasks in start-time order.
+fn schedule_distances(inst: &ProblemInstance, sched: &Schedule) -> Vec<f64> {
+    let g = &inst.graph;
+    let n = g.len();
+    let mut order: Vec<TaskId> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        sched
+            .assignment(a)
+            .unwrap()
+            .start
+            .partial_cmp(&sched.assignment(b).unwrap().start)
+            .unwrap()
+    });
+
+    // Previous task on the same node, by timeline position.
+    let mut prev_on_node: Vec<Option<TaskId>> = vec![None; n];
+    for node in 0..inst.network.len() {
+        let mut prev: Option<TaskId> = None;
+        for a in sched.timeline(node) {
+            prev_on_node[a.task] = prev;
+            prev = Some(a.task);
+        }
+    }
+
+    // Next task on the same node (for the suffix pass).
+    let mut next_on_node: Vec<Option<TaskId>> = vec![None; n];
+    for node in 0..inst.network.len() {
+        let tl: Vec<TaskId> = sched.timeline(node).map(|a| a.task).collect();
+        for w in tl.windows(2) {
+            next_on_node[w[0]] = Some(w[1]);
+        }
+    }
+
+    // Prefix pass: longest path ending at (and including) t.
+    let mut prefix = vec![0.0; n];
+    for &t in &order {
+        let a = sched.assignment(t).unwrap();
+        let own = a.end - a.start;
+        let mut longest = 0.0f64;
+        for &(p, _) in g.predecessors(t) {
+            longest = longest.max(prefix[p]);
+        }
+        if let Some(p) = prev_on_node[t] {
+            longest = longest.max(prefix[p]);
+        }
+        prefix[t] = longest + own;
+    }
+
+    // Suffix pass: longest path starting at (and including) t.
+    let mut suffix = vec![0.0; n];
+    for &t in order.iter().rev() {
+        let a = sched.assignment(t).unwrap();
+        let own = a.end - a.start;
+        let mut longest = 0.0f64;
+        for &(s, _) in g.successors(t) {
+            longest = longest.max(suffix[s]);
+        }
+        if let Some(s) = next_on_node[t] {
+            longest = longest.max(suffix[s]);
+        }
+        suffix[t] = longest + own;
+    }
+
+    // Total path length through t (t counted once).
+    (0..n)
+        .map(|t| {
+            let a = sched.assignment(t).unwrap();
+            prefix[t] + suffix[t] - (a.end - a.start)
+        })
+        .collect()
+}
+
+/// Compute all extended metrics for a (validated) complete schedule.
+pub fn extended_metrics(inst: &ProblemInstance, sched: &Schedule) -> ExtendedMetrics {
+    let makespan = sched.makespan();
+    let n = inst.graph.len();
+    if n == 0 || makespan == 0.0 {
+        return ExtendedMetrics { makespan, speedup: 1.0, efficiency: 1.0, slack: 0.0 };
+    }
+    let serial = serial_time_fastest(inst);
+    let speedup = serial / makespan;
+    let efficiency = speedup / inst.network.len() as f64;
+    // slack(t) = makespan − (longest schedule path through t): how far
+    // t can slip before it stretches the schedule.
+    let dist = schedule_distances(inst, sched);
+    let slack = (0..n).map(|t| makespan - dist[t]).sum::<f64>() / n as f64;
+    ExtendedMetrics { makespan, speedup, efficiency, slack }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::scheduler::SchedulerConfig;
+
+    fn parallel_instance() -> ProblemInstance {
+        // 4 independent unit tasks, 2 unit-speed nodes.
+        let mut g = TaskGraph::new();
+        for i in 0..4 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        ProblemInstance::new("par", g, Network::homogeneous(2, 1.0))
+    }
+
+    #[test]
+    fn speedup_and_efficiency_perfect_parallelism() {
+        let inst = parallel_instance();
+        let s = SchedulerConfig::mct().build().schedule(&inst);
+        // 4 tasks on 2 nodes: makespan 2, serial 4 → speedup 2, eff 1.
+        assert!((s.makespan() - 2.0).abs() < 1e-9);
+        let m = extended_metrics(&inst, &s);
+        assert!((m.speedup - 2.0).abs() < 1e-9);
+        assert!((m.efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_baseline_uses_fastest_node() {
+        let mut inst = parallel_instance();
+        inst.network = Network::new(vec![1.0, 4.0], vec![1.0; 4]);
+        assert!((serial_time_fastest(&inst) - 1.0).abs() < 1e-9); // 4·(1/4)
+    }
+
+    #[test]
+    fn slack_zero_on_tight_chain() {
+        // A chain on one node: every task is on the critical path of the
+        // schedule; slack must be ~0.
+        let mut g = TaskGraph::new();
+        for i in 0..3 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        g.add_edge(0, 1, 0.1);
+        g.add_edge(1, 2, 0.1);
+        let inst = ProblemInstance::new("chain", g, Network::homogeneous(1, 1.0));
+        let s = SchedulerConfig::heft().build().schedule(&inst);
+        let m = extended_metrics(&inst, &s);
+        assert!(m.slack.abs() < 1e-9, "slack {}", m.slack);
+        assert!((m.speedup - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slack_positive_with_idle_branch() {
+        // Heavy branch + light branch from a source: the light branch
+        // has room to slip.
+        let mut g = TaskGraph::new();
+        g.add_task("src", 1.0);
+        g.add_task("heavy", 10.0);
+        g.add_task("light", 1.0);
+        g.add_edge(0, 1, 0.1);
+        g.add_edge(0, 2, 0.1);
+        let inst = ProblemInstance::new("branch", g, Network::homogeneous(2, 1.0));
+        let s = SchedulerConfig::heft().build().schedule(&inst);
+        let m = extended_metrics(&inst, &s);
+        assert!(m.slack > 0.5, "slack {}", m.slack);
+    }
+
+    #[test]
+    fn empty_schedule_degenerate() {
+        let inst = ProblemInstance::new(
+            "e",
+            TaskGraph::new(),
+            Network::homogeneous(2, 1.0),
+        );
+        let s = Schedule::new(0, 2);
+        let m = extended_metrics(&inst, &s);
+        assert_eq!(m.speedup, 1.0);
+        assert_eq!(m.slack, 0.0);
+    }
+
+    #[test]
+    fn metrics_on_all_72() {
+        let inst = parallel_instance();
+        for cfg in SchedulerConfig::all() {
+            let s = cfg.build().schedule(&inst);
+            let m = extended_metrics(&inst, &s);
+            assert!(m.speedup >= 1.0 - 1e-9, "{}: speedup {}", cfg.name(), m.speedup);
+            assert!(m.efficiency <= 1.0 + 1e-9, "{}", cfg.name());
+            assert!(m.slack >= -1e-9, "{}: slack {}", cfg.name(), m.slack);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Ratio computation and aggregation over benchmark [`Record`]s.
+
+use std::collections::HashMap;
+
+use super::BenchmarkResults;
+#[cfg(test)]
+use super::Record;
+
+/// Per-instance ratios of one scheduler against the evaluated set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RatioRecord {
+    pub scheduler: String,
+    pub dataset: String,
+    pub instance: usize,
+    pub makespan_ratio: f64,
+    pub runtime_ratio: f64,
+}
+
+/// Mean ratios of one scheduler on one dataset (the unit of the paper's
+/// pareto plots, Fig. 3a).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeanRatios {
+    pub scheduler: String,
+    pub dataset: String,
+    pub makespan_ratio: f64,
+    pub runtime_ratio: f64,
+    pub instances: usize,
+}
+
+impl BenchmarkResults {
+    /// Per-instance ratios against the min over all schedulers present.
+    pub fn ratios(&self) -> Vec<RatioRecord> {
+        // min makespan / runtime per (dataset, instance)
+        let mut mins: HashMap<(&str, usize), (f64, u64)> = HashMap::new();
+        for r in &self.records {
+            let e = mins
+                .entry((r.dataset.as_str(), r.instance))
+                .or_insert((f64::INFINITY, u64::MAX));
+            e.0 = e.0.min(r.makespan);
+            e.1 = e.1.min(r.runtime_ns);
+        }
+        self.records
+            .iter()
+            .map(|r| {
+                let &(min_m, min_t) = mins.get(&(r.dataset.as_str(), r.instance)).unwrap();
+                RatioRecord {
+                    scheduler: r.scheduler.clone(),
+                    dataset: r.dataset.clone(),
+                    instance: r.instance,
+                    // Degenerate zero-makespan instances (empty graphs)
+                    // count as ratio 1 for every scheduler.
+                    makespan_ratio: if min_m > 0.0 { r.makespan / min_m } else { 1.0 },
+                    runtime_ratio: r.runtime_ns as f64 / min_t as f64,
+                }
+            })
+            .collect()
+    }
+
+    /// Mean ratios per (scheduler, dataset).
+    pub fn mean_ratios(&self) -> Vec<MeanRatios> {
+        let ratios = self.ratios();
+        let mut acc: HashMap<(String, String), (f64, f64, usize)> = HashMap::new();
+        for r in ratios {
+            let e = acc.entry((r.scheduler, r.dataset)).or_insert((0.0, 0.0, 0));
+            e.0 += r.makespan_ratio;
+            e.1 += r.runtime_ratio;
+            e.2 += 1;
+        }
+        let mut out: Vec<MeanRatios> = acc
+            .into_iter()
+            .map(|((scheduler, dataset), (m, t, n))| MeanRatios {
+                scheduler,
+                dataset,
+                makespan_ratio: m / n as f64,
+                runtime_ratio: t / n as f64,
+                instances: n,
+            })
+            .collect();
+        out.sort_by(|a, b| (a.dataset.clone(), a.scheduler.clone())
+            .cmp(&(b.dataset.clone(), b.scheduler.clone())));
+        out
+    }
+
+    /// Mean ratios per scheduler over *all* datasets (the paper's
+    /// "across all datasets" aggregation in Figs. 4–8).
+    pub fn overall_mean_ratios(&self) -> Vec<MeanRatios> {
+        let ratios = self.ratios();
+        let mut acc: HashMap<String, (f64, f64, usize)> = HashMap::new();
+        for r in ratios {
+            let e = acc.entry(r.scheduler).or_insert((0.0, 0.0, 0));
+            e.0 += r.makespan_ratio;
+            e.1 += r.runtime_ratio;
+            e.2 += 1;
+        }
+        let mut out: Vec<MeanRatios> = acc
+            .into_iter()
+            .map(|(scheduler, (m, t, n))| MeanRatios {
+                scheduler,
+                dataset: "ALL".into(),
+                makespan_ratio: m / n as f64,
+                runtime_ratio: t / n as f64,
+                instances: n,
+            })
+            .collect();
+        out.sort_by(|a, b| a.scheduler.cmp(&b.scheduler));
+        out
+    }
+}
+
+/// Simple descriptive statistics for effect plots (Figs. 4–10).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub q25: f64,
+    pub median: f64,
+    pub q75: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn of(values: &[f64]) -> Stats {
+        assert!(!values.is_empty(), "stats of empty slice");
+        let n = values.len();
+        let mean = values.iter().sum::<f64>() / n as f64;
+        let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            // Linear interpolation between closest ranks.
+            let idx = p * (n - 1) as f64;
+            let lo = idx.floor() as usize;
+            let hi = idx.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                sorted[lo] + (idx - lo as f64) * (sorted[hi] - sorted[lo])
+            }
+        };
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            q25: q(0.25),
+            median: q(0.5),
+            q75: q(0.75),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(s: &str, d: &str, i: usize, m: f64, t: u64) -> Record {
+        Record {
+            scheduler: s.into(),
+            dataset: d.into(),
+            instance: i,
+            makespan: m,
+            runtime_ns: t,
+            num_tasks: 4,
+            num_nodes: 2,
+        }
+    }
+
+    #[test]
+    fn ratios_against_per_instance_min() {
+        let res = BenchmarkResults::new(vec![
+            rec("A", "d", 0, 10.0, 100),
+            rec("B", "d", 0, 20.0, 50),
+            rec("A", "d", 1, 8.0, 80),
+            rec("B", "d", 1, 4.0, 40),
+        ]);
+        let ratios = res.ratios();
+        let get = |s: &str, i: usize| {
+            ratios
+                .iter()
+                .find(|r| r.scheduler == s && r.instance == i)
+                .unwrap()
+        };
+        assert_eq!(get("A", 0).makespan_ratio, 1.0);
+        assert_eq!(get("B", 0).makespan_ratio, 2.0);
+        assert_eq!(get("A", 0).runtime_ratio, 2.0);
+        assert_eq!(get("B", 0).runtime_ratio, 1.0);
+        assert_eq!(get("A", 1).makespan_ratio, 2.0);
+        assert_eq!(get("B", 1).makespan_ratio, 1.0);
+    }
+
+    #[test]
+    fn mean_ratios_aggregate() {
+        let res = BenchmarkResults::new(vec![
+            rec("A", "d", 0, 10.0, 100),
+            rec("B", "d", 0, 20.0, 100),
+            rec("A", "d", 1, 8.0, 100),
+            rec("B", "d", 1, 4.0, 100),
+        ]);
+        let means = res.mean_ratios();
+        let a = means.iter().find(|m| m.scheduler == "A").unwrap();
+        assert_eq!(a.makespan_ratio, 1.5); // (1 + 2) / 2
+        assert_eq!(a.instances, 2);
+        assert_eq!(a.runtime_ratio, 1.0);
+    }
+
+    #[test]
+    fn makespan_ratio_at_least_one_for_best() {
+        let res = BenchmarkResults::new(vec![
+            rec("A", "d", 0, 5.0, 10),
+            rec("B", "d", 0, 5.0, 10),
+        ]);
+        for r in res.ratios() {
+            assert!(r.makespan_ratio >= 1.0);
+            assert!(r.runtime_ratio >= 1.0);
+        }
+    }
+
+    #[test]
+    fn stats_quartiles() {
+        let s = Stats::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.q25, 2.0);
+        assert_eq!(s.q75, 4.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn overall_means_span_datasets() {
+        let res = BenchmarkResults::new(vec![
+            rec("A", "d1", 0, 10.0, 100),
+            rec("B", "d1", 0, 5.0, 100),
+            rec("A", "d2", 0, 5.0, 100),
+            rec("B", "d2", 0, 10.0, 100),
+        ]);
+        let overall = res.overall_mean_ratios();
+        for m in &overall {
+            assert_eq!(m.makespan_ratio, 1.5); // (1+2)/2 both
+            assert_eq!(m.dataset, "ALL");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Benchmark harness: run scheduler sets over datasets, record makespans
+//! and runtimes, and derive the paper's makespan / runtime *ratios*.
+//!
+//! A [`Record`] is one (scheduler, instance) measurement. Ratios are
+//! computed per instance against the *minimum over all evaluated
+//! schedulers* (paper §I-A):
+//!
+//! ```text
+//! makespan_ratio(A, N, G) = m(S_{A,N,G}) / min_B m(S_{B,N,G})
+//! runtime_ratio(A, N, G)  = r_A(N, G)    / min_B r_B(N, G)
+//! ```
+//!
+//! The serial [`Harness`] here and the parallel
+//! [`crate::coordinator::Coordinator`] produce identical `Record`s
+//! (modulo runtime noise); an integration test pins that equivalence.
+
+pub mod extended;
+pub mod metrics;
+
+pub use extended::{extended_metrics, ExtendedMetrics};
+pub use metrics::{MeanRatios, RatioRecord};
+
+use std::time::Instant;
+
+use crate::datasets::DatasetSpec;
+use crate::ranks::RankBackend;
+use crate::scheduler::SchedulerConfig;
+use crate::util::{FromJson, ToJson, Value};
+
+/// One (scheduler, instance) measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub scheduler: String,
+    pub dataset: String,
+    pub instance: usize,
+    pub makespan: f64,
+    /// Wall-clock time to *produce* the schedule, in nanoseconds.
+    pub runtime_ns: u64,
+    pub num_tasks: usize,
+    pub num_nodes: usize,
+}
+
+impl ToJson for Record {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("scheduler", Value::Str(self.scheduler.clone())),
+            ("dataset", Value::Str(self.dataset.clone())),
+            ("instance", Value::Num(self.instance as f64)),
+            ("makespan", Value::Num(self.makespan)),
+            ("runtime_ns", Value::Num(self.runtime_ns as f64)),
+            ("num_tasks", Value::Num(self.num_tasks as f64)),
+            ("num_nodes", Value::Num(self.num_nodes as f64)),
+        ])
+    }
+}
+
+impl FromJson for Record {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        Ok(Record {
+            scheduler: v.req_str("scheduler")?.to_string(),
+            dataset: v.req_str("dataset")?.to_string(),
+            instance: v.req_usize("instance")?,
+            makespan: v.req_f64("makespan")?,
+            runtime_ns: v.req_u64("runtime_ns")?,
+            num_tasks: v.req_usize("num_tasks")?,
+            num_nodes: v.req_usize("num_nodes")?,
+        })
+    }
+}
+
+/// Options controlling a harness run.
+#[derive(Debug, Clone)]
+pub struct HarnessOptions {
+    /// Validate every produced schedule against §I-A (cheap; catches
+    /// scheduler bugs during long sweeps). Panics on violation.
+    pub validate: bool,
+    /// Re-run each (scheduler, instance) this many times and keep the
+    /// *minimum* runtime — the paper itself treats runtime ratios as
+    /// estimates; min-of-k suppresses scheduler-exogenous noise.
+    pub timing_repeats: usize,
+}
+
+impl Default for HarnessOptions {
+    fn default() -> Self {
+        HarnessOptions { validate: true, timing_repeats: 1 }
+    }
+}
+
+/// Serial benchmark executor.
+#[derive(Debug, Clone)]
+pub struct Harness {
+    pub schedulers: Vec<SchedulerConfig>,
+    pub backend: RankBackend,
+    pub options: HarnessOptions,
+}
+
+impl Harness {
+    /// Harness over all 72 parametric schedulers with default options.
+    pub fn all_schedulers() -> Self {
+        Harness {
+            schedulers: SchedulerConfig::all(),
+            backend: RankBackend::Native,
+            options: HarnessOptions::default(),
+        }
+    }
+
+    pub fn with_schedulers(schedulers: Vec<SchedulerConfig>) -> Self {
+        Harness {
+            schedulers,
+            backend: RankBackend::Native,
+            options: HarnessOptions::default(),
+        }
+    }
+
+    /// Run every scheduler on every instance of one dataset.
+    pub fn run_dataset(&self, spec: &DatasetSpec) -> Vec<Record> {
+        let instances = spec.generate();
+        let dataset = spec.name();
+        let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
+        for (i, inst) in instances.iter().enumerate() {
+            for cfg in &self.schedulers {
+                out.push(self.run_one(cfg, &dataset, i, inst));
+            }
+        }
+        out
+    }
+
+    /// Run one scheduler on one instance.
+    pub fn run_one(
+        &self,
+        cfg: &SchedulerConfig,
+        dataset: &str,
+        instance: usize,
+        inst: &crate::instance::ProblemInstance,
+    ) -> Record {
+        let scheduler = cfg.build_with(self.backend.clone());
+        let mut best_ns = u64::MAX;
+        let mut schedule = None;
+        for _ in 0..self.options.timing_repeats.max(1) {
+            let t0 = Instant::now();
+            let s = scheduler.schedule(inst);
+            let ns = t0.elapsed().as_nanos() as u64;
+            best_ns = best_ns.min(ns.max(1)); // never 0: ratios divide by it
+            schedule = Some(s);
+        }
+        let schedule = schedule.unwrap();
+        if self.options.validate {
+            schedule
+                .validate(inst)
+                .unwrap_or_else(|e| panic!("{} on {dataset}/{instance}: {e}", cfg.name()));
+        }
+        Record {
+            scheduler: cfg.name(),
+            dataset: dataset.to_string(),
+            instance,
+            makespan: schedule.makespan(),
+            runtime_ns: best_ns,
+            num_tasks: inst.graph.len(),
+            num_nodes: inst.network.len(),
+        }
+    }
+
+    /// Run all datasets of a list, serially.
+    pub fn run_all(&self, specs: &[DatasetSpec]) -> BenchmarkResults {
+        let mut records = Vec::new();
+        for spec in specs {
+            records.extend(self.run_dataset(spec));
+        }
+        BenchmarkResults { records }
+    }
+}
+
+/// A pile of records plus ratio/aggregation machinery (see [`metrics`]).
+#[derive(Debug, Clone, Default)]
+pub struct BenchmarkResults {
+    pub records: Vec<Record>,
+}
+
+impl BenchmarkResults {
+    pub fn new(records: Vec<Record>) -> Self {
+        BenchmarkResults { records }
+    }
+
+    /// Save as JSON (one self-contained document).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let doc = Value::obj(vec![("records", self.records.to_json())]);
+        std::fs::write(path, doc.to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let bad = |e: String| std::io::Error::new(std::io::ErrorKind::InvalidData, e);
+        let doc = crate::util::parse(&text).map_err(bad)?;
+        let records = Vec::<Record>::from_json(doc.req("records").map_err(bad)?)
+            .map_err(bad)?;
+        Ok(BenchmarkResults { records })
+    }
+
+    /// Dataset names present, sorted.
+    pub fn datasets(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.records.iter().map(|r| r.dataset.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Scheduler names present, sorted.
+    pub fn schedulers(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.records.iter().map(|r| r.scheduler.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Structure;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec { count: 3, ..DatasetSpec::new(Structure::Chains, 1.0) }
+    }
+
+    #[test]
+    fn run_dataset_produces_all_records() {
+        let h = Harness::with_schedulers(vec![
+            SchedulerConfig::heft(),
+            SchedulerConfig::mct(),
+        ]);
+        let records = h.run_dataset(&tiny_spec());
+        assert_eq!(records.len(), 3 * 2);
+        for r in &records {
+            assert!(r.makespan > 0.0);
+            assert!(r.runtime_ns >= 1);
+            assert_eq!(r.dataset, "chains_ccr_1");
+        }
+    }
+
+    #[test]
+    fn records_deterministic_makespans() {
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let a = h.run_dataset(&tiny_spec());
+        let b = h.run_dataset(&tiny_spec());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.makespan, y.makespan);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let res = h.run_all(&[tiny_spec()]);
+        let dir = std::env::temp_dir().join("ptgs_test_results.json");
+        res.save(&dir).unwrap();
+        let back = BenchmarkResults::load(&dir).unwrap();
+        assert_eq!(res.records, back.records);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn datasets_and_schedulers_listed() {
+        let h = Harness::with_schedulers(vec![
+            SchedulerConfig::heft(),
+            SchedulerConfig::met(),
+        ]);
+        let res = h.run_all(&[tiny_spec()]);
+        assert_eq!(res.datasets(), vec!["chains_ccr_1".to_string()]);
+        assert_eq!(res.schedulers(), vec!["HEFT".to_string(), "MET".to_string()]);
+    }
+}

@@ -1,0 +1,263 @@
+//! Parallel benchmark coordinator: a leader/worker thread pool that
+//! shards the (dataset × instance) space, runs every scheduler on each
+//! shard, and streams results back through a **bounded** channel
+//! (backpressure: workers stall rather than buffering unboundedly).
+//!
+//! Determinism: instance generation uses per-instance RNG streams
+//! ([`DatasetSpec::instance_rng`]), and scheduling itself is
+//! deterministic, so the *makespans* produced by the parallel
+//! coordinator are identical to the serial [`Harness`]'s — an
+//! integration test pins this. Runtimes are measured per (scheduler,
+//! instance) inside the worker, exactly as the serial path does.
+//!
+//! Implementation note: this environment vendors no async runtime, so
+//! the pool is built directly on `std::thread` + `mpsc::sync_channel`
+//! (the bounded std channel). The leader owns the job queue; workers
+//! pull shards from a shared lock-protected deque (cheap — one lock per
+//! *shard*, not per instance) and push result batches through the
+//! bounded channel that the aggregating leader drains.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+
+use crate::benchmark::{BenchmarkResults, Harness, HarnessOptions, Record};
+use crate::datasets::DatasetSpec;
+use crate::ranks::RankBackend;
+use crate::scheduler::SchedulerConfig;
+
+/// One unit of work: a contiguous instance range of one dataset.
+#[derive(Debug, Clone)]
+struct Job {
+    spec: DatasetSpec,
+    start: usize,
+    end: usize,
+}
+
+/// Live progress counters (shared with the caller for monitoring).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_total: AtomicUsize,
+    pub jobs_done: AtomicUsize,
+    pub records: AtomicUsize,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    /// Worker threads (defaults to available parallelism).
+    pub workers: usize,
+    /// Instances per job shard.
+    pub chunk_size: usize,
+    /// Bounded depth of the result channel (backpressure).
+    pub channel_depth: usize,
+    /// Harness options applied inside each worker.
+    pub harness: HarnessOptions,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            chunk_size: 10,
+            channel_depth: 64,
+            harness: HarnessOptions::default(),
+        }
+    }
+}
+
+/// The leader: owns the scheduler set and fans work out to workers.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    pub schedulers: Vec<SchedulerConfig>,
+    pub backend: RankBackend,
+    pub options: CoordinatorOptions,
+}
+
+impl Coordinator {
+    /// Coordinator over all 72 schedulers with default options.
+    pub fn all_schedulers() -> Self {
+        Coordinator {
+            schedulers: SchedulerConfig::all(),
+            backend: RankBackend::Native,
+            options: CoordinatorOptions::default(),
+        }
+    }
+
+    pub fn with_schedulers(schedulers: Vec<SchedulerConfig>) -> Self {
+        Coordinator {
+            schedulers,
+            backend: RankBackend::Native,
+            options: CoordinatorOptions::default(),
+        }
+    }
+
+    /// Run the full sweep over `specs` on the worker pool. Returns all
+    /// records (sorted canonically for determinism) plus the metrics.
+    pub fn run(&self, specs: &[DatasetSpec]) -> (BenchmarkResults, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::default());
+
+        // Shard the instance space.
+        let mut jobs: Vec<Job> = Vec::new();
+        for spec in specs {
+            let mut start = 0;
+            while start < spec.count {
+                let end = (start + self.options.chunk_size).min(spec.count);
+                jobs.push(Job { spec: *spec, start, end });
+                start = end;
+            }
+        }
+        metrics.jobs_total.store(jobs.len(), Ordering::Relaxed);
+        let queue = Arc::new(Mutex::new(jobs));
+
+        let (tx, rx) = sync_channel::<Vec<Record>>(self.options.channel_depth);
+        let workers = self.options.workers.max(1);
+        let mut records = Vec::new();
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let metrics = Arc::clone(&metrics);
+                let harness = Harness {
+                    schedulers: self.schedulers.clone(),
+                    backend: self.backend.clone(),
+                    options: self.options.harness.clone(),
+                };
+                scope.spawn(move || loop {
+                    let job = { queue.lock().unwrap().pop() };
+                    let Some(job) = job else { break };
+                    let batch = run_job(&harness, &job);
+                    metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                    metrics.records.fetch_add(batch.len(), Ordering::Relaxed);
+                    // Bounded send: blocks (backpressure) when the
+                    // aggregator lags behind.
+                    if tx.send(batch).is_err() {
+                        break; // aggregator gone; shut down
+                    }
+                });
+            }
+            drop(tx); // leader's clone: aggregator ends when workers hang up
+
+            // Leader doubles as the aggregator.
+            while let Ok(batch) = rx.recv() {
+                records.extend(batch);
+            }
+        });
+
+        // Canonical order: (dataset, instance, scheduler).
+        records.sort_by(|a, b| {
+            (a.dataset.as_str(), a.instance, a.scheduler.as_str()).cmp(&(
+                b.dataset.as_str(),
+                b.instance,
+                b.scheduler.as_str(),
+            ))
+        });
+        (BenchmarkResults::new(records), metrics)
+    }
+
+    /// Run and return only the results.
+    pub fn run_blocking(&self, specs: &[DatasetSpec]) -> BenchmarkResults {
+        self.run(specs).0
+    }
+}
+
+/// Execute one shard: generate its instances (via their deterministic
+/// per-instance streams) and run every scheduler on each.
+fn run_job(harness: &Harness, job: &Job) -> Vec<Record> {
+    let dataset = job.spec.name();
+    let mut out = Vec::with_capacity((job.end - job.start) * harness.schedulers.len());
+    for i in job.start..job.end {
+        let mut rng = job.spec.instance_rng(i);
+        let mut inst = job.spec.generate_one(&mut rng);
+        inst.name = format!("{dataset}/inst_{i:03}");
+        for cfg in &harness.schedulers {
+            out.push(harness.run_one(cfg, &dataset, i, &inst));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Structure;
+
+    fn tiny_specs() -> Vec<DatasetSpec> {
+        vec![
+            DatasetSpec { count: 7, ..DatasetSpec::new(Structure::Chains, 1.0) },
+            DatasetSpec { count: 5, ..DatasetSpec::new(Structure::InTrees, 0.2) },
+        ]
+    }
+
+    #[test]
+    fn parallel_equals_serial_makespans() {
+        let schedulers = vec![SchedulerConfig::heft(), SchedulerConfig::mct()];
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 4, chunk_size: 2, ..Default::default() },
+            ..Coordinator::with_schedulers(schedulers.clone())
+        };
+        let (par, metrics) = coord.run(&tiny_specs());
+
+        let serial = Harness::with_schedulers(schedulers).run_all(&tiny_specs());
+        let mut serial_records = serial.records;
+        serial_records.sort_by(|a, b| {
+            (a.dataset.as_str(), a.instance, a.scheduler.as_str()).cmp(&(
+                b.dataset.as_str(),
+                b.instance,
+                b.scheduler.as_str(),
+            ))
+        });
+
+        assert_eq!(par.records.len(), serial_records.len());
+        for (p, s) in par.records.iter().zip(&serial_records) {
+            assert_eq!(p.dataset, s.dataset);
+            assert_eq!(p.instance, s.instance);
+            assert_eq!(p.scheduler, s.scheduler);
+            assert_eq!(p.makespan, s.makespan, "{}/{}", p.dataset, p.instance);
+        }
+        assert_eq!(
+            metrics.jobs_done.load(Ordering::Relaxed),
+            metrics.jobs_total.load(Ordering::Relaxed)
+        );
+        assert_eq!(metrics.records.load(Ordering::Relaxed), par.records.len());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 1, chunk_size: 100, ..Default::default() },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
+        };
+        let (res, _) = coord.run(&tiny_specs());
+        assert_eq!(res.records.len(), 12);
+    }
+
+    #[test]
+    fn tight_channel_backpressure_still_completes() {
+        // channel_depth 1 forces workers to block on send constantly.
+        let coord = Coordinator {
+            options: CoordinatorOptions {
+                workers: 4,
+                chunk_size: 1,
+                channel_depth: 1,
+                ..Default::default()
+            },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::met()])
+        };
+        let (res, _) = coord.run(&tiny_specs());
+        assert_eq!(res.records.len(), 12);
+    }
+
+    #[test]
+    fn run_blocking_wrapper() {
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 2, chunk_size: 3, ..Default::default() },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::met()])
+        };
+        let res = coord.run_blocking(&tiny_specs());
+        assert_eq!(res.records.len(), 12);
+    }
+}

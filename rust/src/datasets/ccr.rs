@@ -1,0 +1,87 @@
+//! CCR normalization: rescale a network's link strengths so that the
+//! instance's communication-to-computation ratio hits a target exactly
+//! (the last step of every dataset generator, paper §III).
+
+use crate::instance::ProblemInstance;
+
+/// Scale `inst.network`'s link strengths so `inst.ccr() == target`.
+///
+/// Mean communication time is inversely proportional to link strength,
+/// so scaling all links by `current_ccr / target` is exact in one step.
+/// No-ops for edgeless graphs or `target <= 0`.
+pub fn scale_to_ccr(inst: &mut ProblemInstance, target: f64) {
+    if target <= 0.0 {
+        return;
+    }
+    let current = inst.ccr();
+    if current <= 0.0 {
+        return; // no edges or no compute: CCR undefined
+    }
+    inst.network.scale_links(current / target);
+    debug_assert!(
+        (inst.ccr() - target).abs() <= 1e-9 * target.max(1.0),
+        "CCR scaling must be exact: got {} want {target}",
+        inst.ccr()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::rng::Rng;
+    use crate::datasets::{chains, random_network};
+    use crate::instance::ProblemInstance;
+
+    fn any_instance(seed: u64) -> ProblemInstance {
+        let mut rng = Rng::seeded(seed);
+        let g = chains::gen_chains(&mut rng);
+        let n = random_network(&mut rng);
+        ProblemInstance::new("x", g, n)
+    }
+
+    #[test]
+    fn hits_target_exactly() {
+        for &target in &[0.2, 0.5, 1.0, 2.0, 5.0] {
+            let mut inst = any_instance(1);
+            scale_to_ccr(&mut inst, target);
+            assert!((inst.ccr() - target).abs() < 1e-9 * target);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut inst = any_instance(2);
+        scale_to_ccr(&mut inst, 2.0);
+        let net_before = inst.network.clone();
+        scale_to_ccr(&mut inst, 2.0);
+        // Links unchanged up to fp noise.
+        for v in 0..net_before.len() {
+            for w in 0..net_before.len() {
+                assert!((inst.network.link(v, w) - net_before.link(v, w)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_speeds_and_graph() {
+        let mut inst = any_instance(3);
+        let speeds = inst.network.speeds().to_vec();
+        let graph = inst.graph.clone();
+        scale_to_ccr(&mut inst, 5.0);
+        assert_eq!(inst.network.speeds(), &speeds[..]);
+        assert_eq!(inst.graph, graph);
+    }
+
+    #[test]
+    fn edgeless_noop() {
+        let mut g = crate::graph::TaskGraph::new();
+        g.add_task("a", 1.0);
+        let mut inst = ProblemInstance::new(
+            "e",
+            g,
+            crate::network::Network::homogeneous(3, 1.0),
+        );
+        scale_to_ccr(&mut inst, 2.0);
+        assert_eq!(inst.ccr(), 0.0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Parallel-chains task graphs (paper §III).
+//!
+//! 2–5 parallel chains (uniform) of length 2–5 (uniform), node and edge
+//! weights from the paper's clipped Gaussian. The chains are mutually
+//! independent — the defining feature of the family is that inter-task
+//! parallelism is exactly the number of chains while each chain is
+//! strictly sequential.
+
+use super::{paper_weight, rng::Rng};
+use crate::graph::TaskGraph;
+
+/// Generate a random parallel-chains graph per the paper's recipe.
+pub fn gen_chains(rng: &mut Rng) -> TaskGraph {
+    let num_chains = rng.uniform_int(2, 5) as usize;
+    let length = rng.uniform_int(2, 5) as usize;
+    gen_chains_with(rng, num_chains, length)
+}
+
+/// Deterministic-shape variant (exposed for tests and ablations).
+pub fn gen_chains_with(rng: &mut Rng, num_chains: usize, length: usize) -> TaskGraph {
+    assert!(num_chains >= 1 && length >= 1);
+    let mut g = TaskGraph::new();
+    for c in 0..num_chains {
+        let mut prev = g.add_task(format!("c{c}_t0"), paper_weight(rng));
+        for i in 1..length {
+            let cur = g.add_task(format!("c{c}_t{i}"), paper_weight(rng));
+            g.add_edge(prev, cur, paper_weight(rng));
+            prev = cur;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::longest_path_len;
+
+    #[test]
+    fn shape() {
+        let mut rng = Rng::seeded(1);
+        let g = gen_chains_with(&mut rng, 3, 4);
+        assert_eq!(g.len(), 12);
+        assert_eq!(g.num_edges(), 9);
+        assert_eq!(g.sources().len(), 3);
+        assert_eq!(g.sinks().len(), 3);
+        assert_eq!(longest_path_len(&g), 3);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn random_sizes_within_paper_bounds() {
+        let mut rng = Rng::seeded(9);
+        for _ in 0..100 {
+            let g = gen_chains(&mut rng);
+            assert!((4..=25).contains(&g.len()), "{}", g.len());
+            assert!(g.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn chains_are_independent() {
+        let mut rng = Rng::seeded(2);
+        let g = gen_chains_with(&mut rng, 2, 3);
+        // No edges between chain 0 (tasks 0..3) and chain 1 (tasks 3..6).
+        for (s, d, _) in g.edges() {
+            assert_eq!(s / 3, d / 3, "edge ({s},{d}) crosses chains");
+        }
+    }
+
+    #[test]
+    fn interior_tasks_have_one_pred_one_succ() {
+        let mut rng = Rng::seeded(4);
+        let g = gen_chains_with(&mut rng, 2, 5);
+        for t in 0..g.len() {
+            assert!(g.predecessors(t).len() <= 1);
+            assert!(g.successors(t).len() <= 1);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Simulated *Cycles* scientific-workflow instances.
+//!
+//! The paper's `cycles` datasets come from WfCommons execution traces of
+//! the Cycles multi-crop, multi-year agro-ecosystem model (pegasus- and
+//! makeflow-instances GitHub repositories). Those traces are not
+//! available offline, so per DESIGN.md §Substitutions we generate
+//! workflows with the same *structure* and cost *skew*:
+//!
+//! ```text
+//!   per (crop, parameter) branch:
+//!       baseline_cycles ──► cycles ──► fertilizer_increase_output
+//!   aggregation:
+//!       all cycles outputs            ──► cycles_output_summary
+//!       all fertilizer outputs        ──► fertilizer_summary
+//!       both summaries                ──► cycles_plots
+//! ```
+//!
+//! Task runtimes are log-normal per stage (heavy-tailed, like the real
+//! traces where simulation tasks dominate and summaries are cheap), and
+//! I/O sizes are log-normal per edge kind. The paper sets *homogeneous*
+//! communication strengths for these datasets and rescales them to the
+//! target CCR; machine speed factors are heterogeneous.
+
+use super::rng::Rng;
+use crate::graph::TaskGraph;
+use crate::network::Network;
+
+/// Log-normal (mu of ln-seconds, sigma) per workflow stage, loosely
+/// matching the published Cycles trace statistics: the `cycles`
+/// simulation dominates, `baseline` is comparable, post-processing and
+/// summaries are 1–2 orders of magnitude cheaper.
+const STAGE_RUNTIME: [(f64, f64); 6] = [
+    (5.0, 0.6), // baseline_cycles  (~150 s median)
+    (5.3, 0.7), // cycles           (~200 s median)
+    (2.3, 0.5), // fertilizer_increase_output (~10 s)
+    (1.6, 0.4), // cycles_output_summary      (~5 s)
+    (1.6, 0.4), // fertilizer_summary         (~5 s)
+    (2.7, 0.5), // cycles_plots               (~15 s)
+];
+
+/// Log-normal I/O sizes (MB-scale arbitrary units): simulation outputs
+/// are large, summary outputs small.
+const EDGE_DATA: [(f64, f64); 4] = [
+    (3.0, 0.8), // baseline → cycles
+    (3.4, 0.8), // cycles → fertilizer / summary
+    (1.5, 0.5), // fertilizer → fertilizer_summary
+    (1.0, 0.4), // summaries → plots
+];
+
+/// Generate a simulated Cycles workflow: 2–6 branches (crop/parameter
+/// combinations, uniform), 3 tasks per branch + 2 summaries + 1 plot.
+pub fn gen_cycles(rng: &mut Rng) -> TaskGraph {
+    let branches = rng.uniform_int(2, 6) as usize;
+    gen_cycles_with(rng, branches)
+}
+
+/// Deterministic-shape variant (exposed for tests and ablations).
+pub fn gen_cycles_with(rng: &mut Rng, branches: usize) -> TaskGraph {
+    assert!(branches >= 1);
+    let mut g = TaskGraph::new();
+    let rt = |rng: &mut Rng, stage: usize| {
+        let (mu, sigma) = STAGE_RUNTIME[stage];
+        rng.lognormal(mu, sigma)
+    };
+    let data = |rng: &mut Rng, kind: usize| {
+        let (mu, sigma) = EDGE_DATA[kind];
+        rng.lognormal(mu, sigma)
+    };
+
+    let mut cycles_tasks = Vec::with_capacity(branches);
+    let mut fert_tasks = Vec::with_capacity(branches);
+    for b in 0..branches {
+        let base = g.add_task(format!("baseline_cycles_{b}"), rt(rng, 0));
+        let cyc = g.add_task(format!("cycles_{b}"), rt(rng, 1));
+        let fert = g.add_task(format!("fertilizer_increase_output_{b}"), rt(rng, 2));
+        g.add_edge(base, cyc, data(rng, 0));
+        g.add_edge(cyc, fert, data(rng, 1));
+        cycles_tasks.push(cyc);
+        fert_tasks.push(fert);
+    }
+    let out_summary = g.add_task("cycles_output_summary", rt(rng, 3));
+    let fert_summary = g.add_task("fertilizer_summary", rt(rng, 4));
+    let plots = g.add_task("cycles_plots", rt(rng, 5));
+    for &cyc in &cycles_tasks {
+        g.add_edge(cyc, out_summary, data(rng, 1));
+    }
+    for &fert in &fert_tasks {
+        g.add_edge(fert, fert_summary, data(rng, 2));
+    }
+    g.add_edge(out_summary, plots, data(rng, 3));
+    g.add_edge(fert_summary, plots, data(rng, 3));
+    g
+}
+
+/// Network for cycles instances: 3–5 machines with heterogeneous speed
+/// factors (log-normal around 1, like the trace "speedup factors") and
+/// *homogeneous* link strengths (the paper's setting), pre-CCR-scaling.
+pub fn gen_network(rng: &mut Rng) -> Network {
+    let n = rng.uniform_int(3, 5) as usize;
+    let speeds: Vec<f64> = (0..n).map(|_| rng.lognormal(0.0, 0.3)).collect();
+    Network::new(speeds, vec![1.0; n * n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape() {
+        let mut rng = Rng::seeded(1);
+        let g = gen_cycles_with(&mut rng, 4);
+        assert_eq!(g.len(), 4 * 3 + 3);
+        assert_eq!(g.num_edges(), 4 * 2 + 4 + 4 + 2);
+        assert!(g.validate().is_ok());
+        // plots is the unique sink; baselines are the sources.
+        assert_eq!(g.sinks().len(), 1);
+        assert_eq!(g.sources().len(), 4);
+    }
+
+    #[test]
+    fn simulation_tasks_dominate_cost() {
+        let mut rng = Rng::seeded(2);
+        let g = gen_cycles_with(&mut rng, 5);
+        let sim_cost: f64 = (0..g.len())
+            .filter(|&t| g.name(t).starts_with("cycles_") || g.name(t).starts_with("baseline"))
+            .map(|t| g.cost(t))
+            .sum();
+        assert!(sim_cost > 0.5 * g.total_cost(), "heavy-tailed stage mix");
+    }
+
+    #[test]
+    fn network_links_homogeneous() {
+        let mut rng = Rng::seeded(3);
+        let net = gen_network(&mut rng);
+        let l01 = net.link(0, 1);
+        for i in 0..net.len() {
+            for j in 0..net.len() {
+                if i != j {
+                    assert_eq!(net.link(i, j), l01);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_sizes_within_bounds() {
+        let mut rng = Rng::seeded(4);
+        for _ in 0..50 {
+            let g = gen_cycles(&mut rng);
+            assert!((9..=21).contains(&g.len()), "{}", g.len());
+        }
+    }
+
+    #[test]
+    fn costs_positive() {
+        let mut rng = Rng::seeded(5);
+        let g = gen_cycles_with(&mut rng, 6);
+        for t in 0..g.len() {
+            assert!(g.cost(t) > 0.0);
+        }
+        for (_, _, d) in g.edges() {
+            assert!(d > 0.0);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Benchmark dataset generators (paper §III).
+//!
+//! Four task-graph families × five communication-to-computation ratios
+//! (CCR ∈ {1/5, 1/2, 1, 2, 5}) = the paper's 20 datasets of 100 problem
+//! instances each:
+//!
+//! * `in_trees` / `out_trees` — random trees, 2–4 levels, branching 2–3,
+//!   clipped-Gaussian weights (mean 1, sd 1/3, clipped to [ε, 2]);
+//! * `chains` — 2–5 independent parallel chains of length 2–5;
+//! * `cycles` — a simulated WfCommons *Cycles* agro-ecosystem workflow
+//!   (see [`cycles`] and DESIGN.md §Substitutions);
+//!
+//! over random complete networks of 3–5 nodes with the same weight
+//! distribution, then link strengths rescaled to hit the target CCR.
+
+pub mod ccr;
+pub mod chains;
+pub mod cycles;
+pub mod rng;
+pub mod trees;
+
+
+use crate::instance::ProblemInstance;
+use crate::network::Network;
+use rng::Rng;
+
+/// The five CCRs the paper evaluates.
+pub const CCRS: [f64; 5] = [0.2, 0.5, 1.0, 2.0, 5.0];
+
+/// Instances per dataset in the paper.
+pub const DEFAULT_COUNT: usize = 100;
+
+/// Minimum weight after clipping for *cost-like* quantities (task
+/// compute costs, edge data sizes). The paper clips its Gaussian at 0;
+/// a tiny ε keeps costs formally in ℝ⁺ without changing anything.
+pub const WEIGHT_EPS: f64 = 1e-6;
+
+/// Minimum weight after clipping for *divisor* quantities (node speeds,
+/// link strengths). Clipping these at ~0 would create nodes that are
+/// millions of times slower than the mean — one such sample blows a
+/// dataset's mean makespan ratio up by 10³–10⁴ (EST/Quickest happily
+/// schedule onto the degenerate node), which the paper's plots (ratios
+/// ≈ 1–3) clearly never contained. 0.05 keeps the heterogeneity range
+/// at a realistic ≤ 40× while preserving the clipped-Gaussian shape
+/// (only ~0.2 % of samples are affected). Documented in DESIGN.md
+/// §Substitutions.
+pub const SPEED_EPS: f64 = 0.05;
+
+/// Task-graph family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Structure {
+    InTrees,
+    OutTrees,
+    Chains,
+    Cycles,
+}
+
+impl Structure {
+    pub const ALL: [Structure; 4] =
+        [Structure::InTrees, Structure::OutTrees, Structure::Chains, Structure::Cycles];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Structure::InTrees => "in_trees",
+            Structure::OutTrees => "out_trees",
+            Structure::Chains => "chains",
+            Structure::Cycles => "cycles",
+        }
+    }
+
+    pub fn from_str_opt(s: &str) -> Option<Structure> {
+        Structure::ALL.iter().copied().find(|x| x.as_str() == s)
+    }
+}
+
+impl std::fmt::Display for Structure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// Specification of one dataset: a structure family at a target CCR.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    pub structure: Structure,
+    pub ccr: f64,
+    pub count: usize,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn new(structure: Structure, ccr: f64) -> Self {
+        DatasetSpec { structure, ccr, count: DEFAULT_COUNT, seed: 0x5A6A_5EED }
+    }
+
+    /// Paper-style dataset name, e.g. `in_trees_ccr_0.2`.
+    pub fn name(&self) -> String {
+        format!("{}_ccr_{}", self.structure.as_str(), self.ccr)
+    }
+
+    /// All 20 paper datasets with the given instance count and base seed.
+    pub fn all(count: usize, seed: u64) -> Vec<DatasetSpec> {
+        let mut out = Vec::with_capacity(20);
+        for structure in Structure::ALL {
+            for ccr in CCRS {
+                out.push(DatasetSpec { structure, ccr, count, seed });
+            }
+        }
+        out
+    }
+
+    /// Generate one instance using the caller's RNG stream.
+    pub fn generate_one(&self, rng: &mut Rng) -> ProblemInstance {
+        let graph = match self.structure {
+            Structure::InTrees => trees::gen_tree(rng, trees::Direction::In),
+            Structure::OutTrees => trees::gen_tree(rng, trees::Direction::Out),
+            Structure::Chains => chains::gen_chains(rng),
+            Structure::Cycles => cycles::gen_cycles(rng),
+        };
+        let network = match self.structure {
+            // The paper sets homogeneous communication strengths for the
+            // trace-derived cycles datasets.
+            Structure::Cycles => cycles::gen_network(rng),
+            _ => random_network(rng),
+        };
+        let mut inst = ProblemInstance::new(String::new(), graph, network);
+        ccr::scale_to_ccr(&mut inst, self.ccr);
+        inst
+    }
+
+    /// Generate the full dataset. Instance `i` uses an RNG stream forked
+    /// deterministically from `(seed, structure, ccr, i)`, so datasets
+    /// are stable regardless of generation order or parallelism.
+    pub fn generate(&self) -> Vec<ProblemInstance> {
+        (0..self.count)
+            .map(|i| {
+                let mut stream = self.instance_rng(i);
+                let mut inst = self.generate_one(&mut stream);
+                inst.name = format!("{}/inst_{i:03}", self.name());
+                inst
+            })
+            .collect()
+    }
+
+    /// Deterministic per-instance RNG stream.
+    pub fn instance_rng(&self, i: usize) -> Rng {
+        let tag = (self.structure as u64) << 32 | (self.ccr * 1000.0) as u64;
+        Rng::seeded(self.seed ^ tag.wrapping_mul(0xA076_1D64_78BD_642F))
+            .fork(i as u64 + 1)
+    }
+}
+
+/// Random complete network per the paper: 3–5 nodes, clipped-Gaussian
+/// speeds and (symmetric) link strengths.
+pub fn random_network(rng: &mut Rng) -> Network {
+    let n = rng.uniform_int(3, 5) as usize;
+    let speeds: Vec<f64> = (0..n)
+        .map(|_| rng.clipped_gauss(1.0, 1.0 / 3.0, SPEED_EPS, 2.0))
+        .collect();
+    let mut links = vec![0.0; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let w = rng.clipped_gauss(1.0, 1.0 / 3.0, SPEED_EPS, 2.0);
+            links[i * n + j] = w;
+            links[j * n + i] = w;
+        }
+        links[i * n + i] = 1.0; // unused (loopback is free)
+    }
+    Network::new(speeds, links)
+}
+
+/// Clipped-Gaussian weight per the paper's recipe.
+pub fn paper_weight(rng: &mut Rng) -> f64 {
+    rng.clipped_gauss(1.0, 1.0 / 3.0, WEIGHT_EPS, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_datasets() {
+        let specs = DatasetSpec::all(100, 0);
+        assert_eq!(specs.len(), 20);
+        let names: std::collections::HashSet<String> =
+            specs.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), 20);
+        assert!(names.contains("in_trees_ccr_0.2"));
+        assert!(names.contains("cycles_ccr_5"));
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let spec = DatasetSpec { count: 5, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_structures_generate_valid_instances() {
+        for structure in Structure::ALL {
+            let spec = DatasetSpec { count: 5, ..DatasetSpec::new(structure, 1.0) };
+            for inst in spec.generate() {
+                assert!(inst.validate().is_ok(), "{}", inst.name);
+                assert!(inst.graph.len() >= 2, "{}", inst.name);
+                assert!((3..=5).contains(&inst.network.len()), "{}", inst.name);
+            }
+        }
+    }
+
+    #[test]
+    fn ccr_hits_target() {
+        for structure in Structure::ALL {
+            for ccr in CCRS {
+                let spec = DatasetSpec { count: 3, ..DatasetSpec::new(structure, ccr) };
+                for inst in spec.generate() {
+                    assert!(
+                        (inst.ccr() - ccr).abs() < 1e-6 * ccr,
+                        "{}: got {} want {ccr}",
+                        inst.name,
+                        inst.ccr()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn network_weights_in_range() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..50 {
+            let net = random_network(&mut rng);
+            for &s in net.speeds() {
+                assert!((SPEED_EPS..=2.0).contains(&s));
+            }
+        }
+    }
+
+    #[test]
+    fn different_instances_differ() {
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let d = spec.generate();
+        assert_ne!(d[0].graph, d[1].graph);
+    }
+}

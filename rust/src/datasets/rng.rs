@@ -1,0 +1,197 @@
+//! Deterministic, dependency-free PRNG: xoshiro256++ seeded via
+//! SplitMix64, plus the samplers the dataset generators need.
+//!
+//! Benchmark reproducibility (same seed ⇒ same datasets ⇒ same ratios)
+//! is a hard requirement, so we implement the generator in-crate rather
+//! than depending on `rand`'s stability policy.
+
+/// xoshiro256++ (Blackman & Vigna) with SplitMix64 seeding.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller output.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64.
+    pub fn seeded(seed: u64) -> Self {
+        // SplitMix64 expansion, the reference seeding procedure.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream (e.g. one per dataset instance) so
+    /// that parallel generation stays order-independent.
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seeded(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive), Lemire-style rejection.
+    pub fn uniform_int(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let range = hi - lo + 1;
+        if range == 0 {
+            return self.next_u64(); // full range
+        }
+        let zone = u64::MAX - (u64::MAX % range);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + v % range;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // u1 ∈ (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// The paper's clipped Gaussian weight distribution: N(mean, sd)
+    /// clipped to `[lo, hi]`. The paper uses mean 1, sd 1/3, [0, 2]; we
+    /// clip the low end to `lo` (callers pass a tiny ε for quantities
+    /// that must stay positive, e.g. node speeds).
+    pub fn clipped_gauss(&mut self, mean: f64, sd: f64, lo: f64, hi: f64) -> f64 {
+        (mean + sd * self.gauss()).clamp(lo, hi)
+    }
+
+    /// Log-normal with the given parameters of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.gauss()).exp()
+    }
+
+    /// Pick one element of a slice uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.uniform_int(0, xs.len() as u64 - 1) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Rng::seeded(42);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn uniform_int_inclusive_coverage() {
+        let mut rng = Rng::seeded(3);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            let v = rng.uniform_int(2, 6);
+            assert!((2..=6).contains(&v));
+            seen[(v - 2) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all values in range hit");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut rng = Rng::seeded(11);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.gauss();
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn clipped_gauss_within_bounds() {
+        let mut rng = Rng::seeded(5);
+        for _ in 0..5000 {
+            let w = rng.clipped_gauss(1.0, 1.0 / 3.0, 0.0, 2.0);
+            assert!((0.0..=2.0).contains(&w));
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Rng::seeded(9);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

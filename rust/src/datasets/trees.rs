@@ -1,0 +1,120 @@
+//! In-tree / out-tree task graphs (paper §III).
+//!
+//! Complete trees with 2–4 levels (uniform) and branching factor 2 or 3
+//! (uniform); node and edge weights from the paper's clipped Gaussian.
+//! An *out-tree* has edges root → leaves (fan-out, e.g. partitioning
+//! workloads); an *in-tree* is its reverse (fan-in, e.g. reductions).
+
+use super::{paper_weight, rng::Rng};
+use crate::graph::TaskGraph;
+
+/// Edge orientation of the generated tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Edges point toward the root (leaves first, reduction-style).
+    In,
+    /// Edges point away from the root (fan-out).
+    Out,
+}
+
+/// Generate a random complete tree per the paper's recipe.
+///
+/// `levels ∈ {2,3,4}` counts node layers (a 2-level binary out-tree is a
+/// root with two children); `branching ∈ {2,3}`.
+pub fn gen_tree(rng: &mut Rng, dir: Direction) -> TaskGraph {
+    let levels = rng.uniform_int(2, 4) as usize;
+    let branching = rng.uniform_int(2, 3) as usize;
+    gen_tree_with(rng, dir, levels, branching)
+}
+
+/// Deterministic-shape variant (exposed for tests and ablations).
+pub fn gen_tree_with(
+    rng: &mut Rng,
+    dir: Direction,
+    levels: usize,
+    branching: usize,
+) -> TaskGraph {
+    assert!(levels >= 1 && branching >= 1);
+    let mut g = TaskGraph::new();
+
+    // Build level by level; `prev` holds the previous level's task ids.
+    let root = g.add_task("n0", paper_weight(rng));
+    let mut prev = vec![root];
+    let mut counter = 1usize;
+    for _ in 1..levels {
+        let mut cur = Vec::with_capacity(prev.len() * branching);
+        for &parent in &prev {
+            for _ in 0..branching {
+                let child = g.add_task(format!("n{counter}"), paper_weight(rng));
+                counter += 1;
+                let w = paper_weight(rng);
+                match dir {
+                    Direction::Out => g.add_edge(parent, child, w),
+                    Direction::In => g.add_edge(child, parent, w),
+                }
+                cur.push(child);
+            }
+        }
+        prev = cur;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topological_order;
+
+    #[test]
+    fn out_tree_shape() {
+        let mut rng = Rng::seeded(1);
+        let g = gen_tree_with(&mut rng, Direction::Out, 3, 2);
+        assert_eq!(g.len(), 1 + 2 + 4);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.sources(), vec![0], "root is the only source");
+        assert_eq!(g.sinks().len(), 4, "leaves are sinks");
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn in_tree_shape() {
+        let mut rng = Rng::seeded(1);
+        let g = gen_tree_with(&mut rng, Direction::In, 3, 3);
+        assert_eq!(g.len(), 1 + 3 + 9);
+        assert_eq!(g.sinks(), vec![0], "root is the only sink");
+        assert_eq!(g.sources().len(), 9, "leaves are sources");
+        assert!(topological_order(&g).is_some());
+    }
+
+    #[test]
+    fn random_sizes_within_paper_bounds() {
+        let mut rng = Rng::seeded(42);
+        for _ in 0..100 {
+            let g = gen_tree(&mut rng, Direction::Out);
+            // smallest: 2 levels × branching 2 → 3; largest: 4 levels × 3 → 40.
+            assert!((3..=40).contains(&g.len()), "{}", g.len());
+            assert!(g.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn weights_in_clipped_range() {
+        let mut rng = Rng::seeded(7);
+        let g = gen_tree_with(&mut rng, Direction::Out, 4, 3);
+        for t in 0..g.len() {
+            assert!((0.0..=2.0).contains(&g.cost(t)));
+        }
+        for (_, _, w) in g.edges() {
+            assert!((0.0..=2.0).contains(&w));
+        }
+    }
+
+    #[test]
+    fn every_nonroot_has_degree_one_toward_root() {
+        let mut rng = Rng::seeded(3);
+        let g = gen_tree_with(&mut rng, Direction::Out, 4, 2);
+        for t in 1..g.len() {
+            assert_eq!(g.predecessors(t).len(), 1);
+        }
+    }
+}

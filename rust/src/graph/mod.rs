@@ -1,0 +1,309 @@
+//! Task-graph model: weighted DAGs of tasks with data-transfer edges.
+//!
+//! A [`TaskGraph`] is the `G = (T, D)` of the paper's §I-A: every task
+//! `t` carries a compute cost `c(t) ∈ ℝ⁺` and every dependency edge
+//! `(t, t')` carries a data size `c(t, t') ∈ ℝ⁺`. Storage is adjacency
+//! lists in both directions (successors and predecessors) plus a dense
+//! edge-cost map, sized for the small-to-medium graphs (≤ a few hundred
+//! tasks) the benchmark suite uses.
+
+pub mod topo;
+
+pub use topo::{is_acyclic, topological_order};
+
+use crate::util::{FromJson, ToJson, Value};
+
+/// Index of a task within its [`TaskGraph`] (dense, 0-based).
+pub type TaskId = usize;
+
+/// A weighted DAG of computational tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskGraph {
+    /// Human-readable task names (same indexing as all other fields).
+    names: Vec<String>,
+    /// Compute cost `c(t)` per task.
+    costs: Vec<f64>,
+    /// Successor adjacency: `succ[t] = [(t', data_size), …]`, sorted by `t'`.
+    succ: Vec<Vec<(TaskId, f64)>>,
+    /// Predecessor adjacency: `pred[t'] = [(t, data_size), …]`, sorted by `t`.
+    pred: Vec<Vec<(TaskId, f64)>>,
+    /// Number of edges.
+    num_edges: usize,
+}
+
+impl TaskGraph {
+    /// Create an empty graph.
+    pub fn new() -> Self {
+        TaskGraph {
+            names: Vec::new(),
+            costs: Vec::new(),
+            succ: Vec::new(),
+            pred: Vec::new(),
+            num_edges: 0,
+        }
+    }
+
+    /// Add a task with the given name and compute cost; returns its id.
+    pub fn add_task(&mut self, name: impl Into<String>, cost: f64) -> TaskId {
+        assert!(cost >= 0.0, "task cost must be non-negative, got {cost}");
+        let id = self.names.len();
+        self.names.push(name.into());
+        self.costs.push(cost);
+        self.succ.push(Vec::new());
+        self.pred.push(Vec::new());
+        id
+    }
+
+    /// Add a dependency edge `src -> dst` carrying `data` units of output.
+    ///
+    /// Panics on out-of-range ids, self-loops, or duplicate edges. Cycle
+    /// detection is deferred to [`TaskGraph::validate`] / [`is_acyclic`]
+    /// (checking per-insert would be quadratic).
+    pub fn add_edge(&mut self, src: TaskId, dst: TaskId, data: f64) {
+        assert!(src < self.len() && dst < self.len(), "edge ({src},{dst}) out of range");
+        assert_ne!(src, dst, "self-loop on task {src}");
+        assert!(data >= 0.0, "edge data size must be non-negative, got {data}");
+        let pos = self.succ[src].binary_search_by(|&(t, _)| t.cmp(&dst));
+        match pos {
+            Ok(_) => panic!("duplicate edge ({src}, {dst})"),
+            Err(i) => self.succ[src].insert(i, (dst, data)),
+        }
+        let pos = self.pred[dst].binary_search_by(|&(t, _)| t.cmp(&src));
+        match pos {
+            Ok(_) => panic!("duplicate edge ({src}, {dst})"),
+            Err(i) => self.pred[dst].insert(i, (src, data)),
+        }
+        self.num_edges += 1;
+    }
+
+    /// Number of tasks `|T|`.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Number of edges `|D|`.
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Task name.
+    pub fn name(&self, t: TaskId) -> &str {
+        &self.names[t]
+    }
+
+    /// Compute cost `c(t)`.
+    pub fn cost(&self, t: TaskId) -> f64 {
+        self.costs[t]
+    }
+
+    /// All compute costs (indexed by task id).
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Successors of `t` with edge data sizes, ascending by task id.
+    pub fn successors(&self, t: TaskId) -> &[(TaskId, f64)] {
+        &self.succ[t]
+    }
+
+    /// Predecessors of `t` with edge data sizes, ascending by task id.
+    pub fn predecessors(&self, t: TaskId) -> &[(TaskId, f64)] {
+        &self.pred[t]
+    }
+
+    /// Data size `c(t, t')` of edge `(src, dst)`, if present.
+    pub fn edge(&self, src: TaskId, dst: TaskId) -> Option<f64> {
+        self.succ[src]
+            .binary_search_by(|&(t, _)| t.cmp(&dst))
+            .ok()
+            .map(|i| self.succ[src][i].1)
+    }
+
+    /// Iterator over all edges as `(src, dst, data)`.
+    pub fn edges(&self) -> impl Iterator<Item = (TaskId, TaskId, f64)> + '_ {
+        self.succ
+            .iter()
+            .enumerate()
+            .flat_map(|(s, adj)| adj.iter().map(move |&(d, c)| (s, d, c)))
+    }
+
+    /// Source tasks (no predecessors).
+    pub fn sources(&self) -> Vec<TaskId> {
+        (0..self.len()).filter(|&t| self.pred[t].is_empty()).collect()
+    }
+
+    /// Sink tasks (no successors).
+    pub fn sinks(&self) -> Vec<TaskId> {
+        (0..self.len()).filter(|&t| self.succ[t].is_empty()).collect()
+    }
+
+    /// Total compute cost `Σ_t c(t)`.
+    pub fn total_cost(&self) -> f64 {
+        self.costs.iter().sum()
+    }
+
+    /// Total data size `Σ_(t,t') c(t,t')`.
+    pub fn total_data(&self) -> f64 {
+        self.edges().map(|(_, _, c)| c).sum()
+    }
+
+    /// Structural validation: acyclicity plus internal-consistency checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if !is_acyclic(self) {
+            return Err("task graph contains a cycle".into());
+        }
+        let back_edges: usize = self.pred.iter().map(Vec::len).sum();
+        let fwd_edges: usize = self.succ.iter().map(Vec::len).sum();
+        if back_edges != fwd_edges || fwd_edges != self.num_edges {
+            return Err(format!(
+                "inconsistent adjacency: fwd={fwd_edges} back={back_edges} count={}",
+                self.num_edges
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for TaskGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ToJson for TaskGraph {
+    /// Wire format: `{"tasks": [{"name", "cost"}...], "edges": [[src, dst, data]...]}`.
+    fn to_json(&self) -> Value {
+        let tasks = Value::Arr(
+            (0..self.len())
+                .map(|t| {
+                    Value::obj(vec![
+                        ("name", Value::Str(self.names[t].clone())),
+                        ("cost", Value::Num(self.costs[t])),
+                    ])
+                })
+                .collect(),
+        );
+        let edges = Value::Arr(
+            self.edges()
+                .map(|(s, d, c)| {
+                    Value::Arr(vec![
+                        Value::Num(s as f64),
+                        Value::Num(d as f64),
+                        Value::Num(c),
+                    ])
+                })
+                .collect(),
+        );
+        Value::obj(vec![("tasks", tasks), ("edges", edges)])
+    }
+}
+
+impl FromJson for TaskGraph {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        let mut g = TaskGraph::new();
+        for t in v.req_arr("tasks")? {
+            g.add_task(t.req_str("name")?, t.req_f64("cost")?);
+        }
+        for e in v.req_arr("edges")? {
+            let e = e.as_arr().ok_or("edge must be an array")?;
+            if e.len() != 3 {
+                return Err("edge must be [src, dst, data]".into());
+            }
+            let src = e[0].as_usize().ok_or("bad edge src")?;
+            let dst = e[1].as_usize().ok_or("bad edge dst")?;
+            let data = e[2].as_f64().ok_or("bad edge data")?;
+            if src >= g.len() || dst >= g.len() || src == dst {
+                return Err(format!("invalid edge ({src}, {dst})"));
+            }
+            g.add_edge(src, dst, data);
+        }
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> TaskGraph {
+        // 0 -> {1, 2} -> 3
+        let mut g = TaskGraph::new();
+        for (name, cost) in [("a", 1.0), ("b", 2.0), ("c", 3.0), ("d", 4.0)] {
+            g.add_task(name, cost);
+        }
+        g.add_edge(0, 1, 0.5);
+        g.add_edge(0, 2, 0.6);
+        g.add_edge(1, 3, 0.7);
+        g.add_edge(2, 3, 0.8);
+        g
+    }
+
+    #[test]
+    fn build_and_query() {
+        let g = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.cost(2), 3.0);
+        assert_eq!(g.edge(0, 1), Some(0.5));
+        assert_eq!(g.edge(1, 0), None);
+        assert_eq!(g.successors(0), &[(1, 0.5), (2, 0.6)]);
+        assert_eq!(g.predecessors(3), &[(1, 0.7), (2, 0.8)]);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+        assert!((g.total_cost() - 10.0).abs() < 1e-12);
+        assert!((g.total_data() - 2.6).abs() < 1e-12);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn edges_iterator_complete() {
+        let g = diamond();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), 4);
+        assert!(edges.contains(&(0, 2, 0.6)));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn duplicate_edge_panics() {
+        let mut g = diamond();
+        g.add_edge(0, 1, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loop_panics() {
+        let mut g = diamond();
+        g.add_edge(1, 1, 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = diamond();
+        let text = g.to_json().to_string();
+        let back = TaskGraph::from_json(&crate::util::parse(&text).unwrap()).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_edges() {
+        let v = crate::util::parse(
+            r#"{"tasks": [{"name": "a", "cost": 1}], "edges": [[0, 5, 1.0]]}"#,
+        )
+        .unwrap();
+        assert!(TaskGraph::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn empty_graph_is_valid() {
+        let g = TaskGraph::new();
+        assert!(g.is_empty());
+        assert!(g.validate().is_ok());
+    }
+}

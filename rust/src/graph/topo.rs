@@ -1,0 +1,110 @@
+//! Topological ordering and acyclicity via Kahn's algorithm.
+
+use super::{TaskGraph, TaskId};
+
+/// Deterministic topological order (Kahn's algorithm with a min-id
+/// frontier). Returns `None` when the graph contains a cycle.
+///
+/// Determinism matters: the `ArbitraryTopological` priority function of
+/// the parametric scheduler is *defined* as this order, and benchmark
+/// results must be reproducible run-to-run.
+pub fn topological_order(g: &TaskGraph) -> Option<Vec<TaskId>> {
+    let n = g.len();
+    let mut indegree: Vec<usize> = (0..n).map(|t| g.predecessors(t).len()).collect();
+    // Binary-heap-free min-id frontier: a sorted insertion into a Vec is
+    // fine at these sizes and keeps ties deterministic.
+    let mut frontier: Vec<TaskId> = (0..n).filter(|&t| indegree[t] == 0).collect();
+    frontier.sort_unstable_by(|a, b| b.cmp(a)); // descending; pop() takes min
+
+    let mut order = Vec::with_capacity(n);
+    while let Some(t) = frontier.pop() {
+        order.push(t);
+        for &(s, _) in g.successors(t) {
+            indegree[s] -= 1;
+            if indegree[s] == 0 {
+                let pos = frontier.binary_search_by(|&x| s.cmp(&x)).unwrap_or_else(|e| e);
+                frontier.insert(pos, s);
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// True iff the graph has no directed cycle.
+pub fn is_acyclic(g: &TaskGraph) -> bool {
+    topological_order(g).is_some()
+}
+
+/// Length (in edges) of the longest directed path; 0 for empty graphs.
+/// Used to bound fixpoint iteration counts in the rank engine.
+pub fn longest_path_len(g: &TaskGraph) -> usize {
+    let Some(order) = topological_order(g) else { return 0 };
+    let mut depth = vec![0usize; g.len()];
+    let mut best = 0;
+    for &t in &order {
+        for &(s, _) in g.successors(t) {
+            if depth[t] + 1 > depth[s] {
+                depth[s] = depth[t] + 1;
+                best = best.max(depth[s]);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+
+    fn chain(n: usize) -> TaskGraph {
+        let mut g = TaskGraph::new();
+        for i in 0..n {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i, 1.0);
+        }
+        g
+    }
+
+    #[test]
+    fn chain_order() {
+        let g = chain(5);
+        assert_eq!(topological_order(&g).unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(longest_path_len(&g), 4);
+    }
+
+    #[test]
+    fn order_respects_edges() {
+        let mut g = TaskGraph::new();
+        for i in 0..6 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        g.add_edge(5, 0, 1.0);
+        g.add_edge(0, 3, 1.0);
+        g.add_edge(3, 1, 1.0);
+        g.add_edge(5, 1, 1.0);
+        let order = topological_order(&g).unwrap();
+        let pos: Vec<usize> = (0..6).map(|t| order.iter().position(|&x| x == t).unwrap()).collect();
+        for (s, d, _) in g.edges() {
+            assert!(pos[s] < pos[d], "edge ({s},{d}) violated in {order:?}");
+        }
+    }
+
+    #[test]
+    fn ties_broken_by_min_id() {
+        let mut g = TaskGraph::new();
+        for i in 0..4 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        // All independent: order must be identity.
+        assert_eq!(topological_order(&g).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(topological_order(&TaskGraph::new()).unwrap(), Vec::<usize>::new());
+        assert_eq!(longest_path_len(&chain(1)), 0);
+    }
+}

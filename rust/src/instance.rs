@@ -1,0 +1,134 @@
+//! A problem instance: a (network, task graph) pair plus the derived
+//! mean-cost quantities that rank computations consume.
+
+use crate::graph::{TaskGraph, TaskId};
+use crate::network::Network;
+use crate::util::{FromJson, ToJson, Value};
+
+/// One scheduling problem instance `(N, G)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProblemInstance {
+    /// Instance name (e.g. `in_trees_ccr_1.0/inst_042`).
+    pub name: String,
+    pub graph: TaskGraph,
+    pub network: Network,
+}
+
+impl ProblemInstance {
+    pub fn new(name: impl Into<String>, graph: TaskGraph, network: Network) -> Self {
+        ProblemInstance { name: name.into(), graph, network }
+    }
+
+    /// Mean execution cost of task `t`: `c(t) · avg_v 1/s(v)` — the
+    /// expected execution time over a uniformly random node. This is the
+    /// `w̄(t)` used by UpwardRank/DownwardRank (HEFT's `w̄ᵢ`).
+    pub fn mean_exec(&self, t: TaskId) -> f64 {
+        self.graph.cost(t) * self.network.avg_inv_speed()
+    }
+
+    /// Mean communication cost of edge `(t, t')`:
+    /// `c(t,t') · avg_{v≠v'} 1/s(v,v')` (HEFT's `c̄ᵢⱼ`).
+    pub fn mean_comm(&self, data: f64) -> f64 {
+        data * self.network.avg_inv_link()
+    }
+
+    /// Communication-to-computation ratio of the instance: mean edge
+    /// transfer time divided by mean task execution time. The dataset
+    /// generators scale link strengths until this hits the target CCR.
+    pub fn ccr(&self) -> f64 {
+        let g = &self.graph;
+        if g.num_edges() == 0 || g.is_empty() {
+            return 0.0;
+        }
+        let mean_comm: f64 =
+            g.edges().map(|(_, _, d)| self.mean_comm(d)).sum::<f64>() / g.num_edges() as f64;
+        let mean_comp: f64 =
+            (0..g.len()).map(|t| self.mean_exec(t)).sum::<f64>() / g.len() as f64;
+        if mean_comp == 0.0 {
+            0.0
+        } else {
+            mean_comm / mean_comp
+        }
+    }
+
+    /// Structural validation of both components.
+    pub fn validate(&self) -> Result<(), String> {
+        self.graph.validate()?;
+        if self.network.is_empty() {
+            return Err("network has no nodes".into());
+        }
+        Ok(())
+    }
+}
+
+impl ToJson for ProblemInstance {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("graph", self.graph.to_json()),
+            ("network", self.network.to_json()),
+        ])
+    }
+}
+
+impl FromJson for ProblemInstance {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        Ok(ProblemInstance {
+            name: v.req_str("name")?.to_string(),
+            graph: TaskGraph::from_json(v.req("graph")?)?,
+            network: Network::from_json(v.req("network")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 2.0);
+        g.add_task("b", 4.0);
+        g.add_edge(0, 1, 3.0);
+        ProblemInstance::new("tiny", g, Network::homogeneous(2, 1.0))
+    }
+
+    #[test]
+    fn mean_costs_homogeneous() {
+        let p = tiny();
+        assert_eq!(p.mean_exec(0), 2.0);
+        assert_eq!(p.mean_exec(1), 4.0);
+        assert_eq!(p.mean_comm(3.0), 3.0);
+    }
+
+    #[test]
+    fn ccr_value() {
+        let p = tiny();
+        // mean comm = 3, mean comp = (2+4)/2 = 3 → CCR 1
+        assert!((p.ccr() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ccr_scales_with_links() {
+        let mut p = tiny();
+        p.network.scale_links(2.0); // faster links → comm time halves
+        assert!((p.ccr() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = tiny();
+        let text = p.to_json().to_string();
+        let back = ProblemInstance::from_json(&crate::util::parse(&text).unwrap()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn edgeless_graph_ccr_zero() {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        let p = ProblemInstance::new("x", g, Network::homogeneous(2, 1.0));
+        assert_eq!(p.ccr(), 0.0);
+        assert!(p.validate().is_ok());
+    }
+}

@@ -1,0 +1,70 @@
+//! # PTGS — Parameterized Task Graph Scheduling
+//!
+//! A production-grade Rust reproduction of Coleman, Agrawal, Hirani &
+//! Krishnamachari, *"Parameterized Task Graph Scheduling Algorithm for
+//! Comparing Algorithmic Components"* (CS.DC 2024), with the dense rank
+//! computation AOT-compiled from JAX/Pallas and executed via PJRT.
+//!
+//! The crate provides:
+//!
+//! * [`graph`] / [`network`] / [`instance`] — the heterogeneous DAG
+//!   scheduling problem model (related-machines; see paper §I-A).
+//! * [`schedule`] — schedules, the makespan objective, and a strict
+//!   validity checker for the four §I-A properties.
+//! * [`ranks`] — UpwardRank / DownwardRank / CPoP rank and critical-path
+//!   extraction, with a pure-Rust engine and an XLA (PJRT) engine running
+//!   the AOT-compiled Pallas tropical-algebra kernels.
+//! * [`scheduler`] — the paper's contribution: the generalized parametric
+//!   list scheduler whose 5 components span 72 algorithms (HEFT, CPoP,
+//!   MCT, MET, Sufferage, … as special cases).
+//! * [`datasets`] — the 4×5 benchmark dataset families of §III
+//!   (in_trees, out_trees, chains, cycles × CCR ∈ {1/5, 1/2, 1, 2, 5}).
+//! * [`benchmark`] — the 72-algorithm sweep harness producing makespan /
+//!   runtime ratios.
+//! * [`coordinator`] — std::thread leader/worker parallel benchmark execution
+//!   with sharding and bounded-channel backpressure.
+//! * [`analysis`] — pareto fronts, per-component effects, pairwise
+//!   interactions, and renderers for every table/figure in the paper.
+//! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ptgs::prelude::*;
+//!
+//! let mut rng = Rng::seeded(42);
+//! let instance = DatasetSpec::new(Structure::InTrees, 1.0).generate_one(&mut rng);
+//! let schedule = SchedulerConfig::heft().build().schedule(&instance);
+//! assert!(schedule.validate(&instance).is_ok());
+//! println!("makespan = {}", schedule.makespan());
+//! ```
+
+pub mod analysis;
+pub mod benchlib;
+pub mod benchmark;
+pub mod coordinator;
+pub mod datasets;
+pub mod graph;
+pub mod instance;
+pub mod network;
+pub mod ranks;
+pub mod runtime;
+pub mod schedule;
+pub mod scheduler;
+pub mod util;
+
+/// Convenient re-exports of the main user-facing types.
+pub mod prelude {
+    pub use crate::benchmark::{
+        extended_metrics, BenchmarkResults, ExtendedMetrics, Harness, HarnessOptions,
+    };
+    pub use crate::datasets::{rng::Rng, DatasetSpec, Structure, CCRS};
+    pub use crate::graph::TaskGraph;
+    pub use crate::instance::ProblemInstance;
+    pub use crate::network::Network;
+    pub use crate::ranks::{RankBackend, Ranks};
+    pub use crate::schedule::{render_gantt, Schedule};
+    pub use crate::scheduler::{
+        CompareFn, LookaheadScheduler, ParametricScheduler, PriorityFn, SchedulerConfig,
+    };
+}

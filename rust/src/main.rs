@@ -1,0 +1,381 @@
+//! `ptgs` — the PTGS command-line interface.
+//!
+//! ```text
+//! ptgs generate  --structure chains --ccr 1 --count 100 --out instances.json
+//! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
+//! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--workers 0] [--repeats 1] [--out results/benchmark.json]
+//! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
+//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--out-dir results]
+//! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
+//! ptgs list      schedulers|datasets|artifacts
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ptgs::analysis::Artifact;
+use ptgs::benchmark::{BenchmarkResults, HarnessOptions};
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::{DatasetSpec, Structure, CCRS};
+use ptgs::instance::ProblemInstance;
+use ptgs::ranks::RankBackend;
+use ptgs::runtime::RankEngine;
+use ptgs::scheduler::SchedulerConfig;
+use ptgs::util::{Args, FromJson, ToJson, Value};
+
+const USAGE: &str = "\
+ptgs — Parameterized Task Graph Scheduling (Coleman et al., CS.DC 2024)
+
+USAGE: ptgs <COMMAND> [flags]
+
+COMMANDS:
+  generate   generate dataset instances as JSON
+  schedule   run one scheduler on one instance, print the schedule
+  benchmark  run a scheduler sweep over datasets (parallel)
+  analyze    derive tables/figures from saved benchmark results
+  reproduce  full paper reproduction (benchmark + all 13 artifacts)
+  rank       compute task ranks (native or XLA backend)
+  list       list schedulers | datasets | artifacts
+
+Run `ptgs <COMMAND> --help`-style flags per the module docs in
+rust/src/main.rs, or see README.md.";
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.positional(0) {
+        Some("generate") => cmd_generate(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("benchmark") => cmd_benchmark(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("rank") => cmd_rank(&args),
+        Some("adversarial") => cmd_adversarial(&args),
+        Some("list") => cmd_list(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let spec = spec_from_args(args, "chains")?;
+    let out = PathBuf::from(args.get_or("out", "instances.json"));
+    let instances = spec.generate();
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, instances.to_json().to_string())?;
+    println!(
+        "wrote {} instances of {} to {}",
+        instances.len(),
+        spec.name(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let name = args.get_or("scheduler", "HEFT");
+    let cfg = SchedulerConfig::from_name(&name)
+        .ok_or_else(|| anyhow!("unknown scheduler {name} (try `ptgs list schedulers`)"))?;
+    let inst = match args.get("instance") {
+        Some(path) => {
+            let index: usize = args.get_parse("index", 0).map_err(|e| anyhow!(e))?;
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let doc: Value = ptgs::util::parse(&text).map_err(|e| anyhow!(e))?;
+            let mut v = Vec::<ProblemInstance>::from_json(&doc).map_err(|e| anyhow!(e))?;
+            if index >= v.len() {
+                bail!("index {index} out of range ({} instances)", v.len());
+            }
+            v.swap_remove(index)
+        }
+        None => {
+            let spec = spec_from_args(args, "chains")?;
+            let mut rng = spec.instance_rng(0);
+            spec.generate_one(&mut rng)
+        }
+    };
+    let backend = backend_from_args(args)?;
+    let lookahead: usize = args.get_parse("lookahead", 0).map_err(|e| anyhow!(e))?;
+    let (s, shown_name) = if lookahead > 0 {
+        let la = ptgs::scheduler::LookaheadScheduler::new(cfg, lookahead)
+            .with_backend(backend);
+        let name = la.name();
+        (la.schedule(&inst), name)
+    } else {
+        (cfg.build_with(backend).schedule(&inst), cfg.name())
+    };
+    s.validate(&inst).map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    println!("scheduler: {shown_name}");
+    println!("tasks: {}  nodes: {}", inst.graph.len(), inst.network.len());
+    println!("makespan: {:.6}", s.makespan());
+    if args.has("metrics") {
+        let m = ptgs::benchmark::extended_metrics(&inst, &s);
+        println!(
+            "speedup: {:.4}  efficiency: {:.4}  slack: {:.4}",
+            m.speedup, m.efficiency, m.slack
+        );
+    }
+    if args.has("gantt") {
+        let width = args.get_parse("width", 72usize).map_err(|e| anyhow!(e))?;
+        print!("{}", ptgs::schedule::render_gantt(&inst, &s, width));
+    }
+    println!("{:>6} {:>6} {:>12} {:>12}  name", "task", "node", "start", "end");
+    let mut rows: Vec<_> = s.assignments().collect();
+    rows.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    for a in rows {
+        println!(
+            "{:>6} {:>6} {:>12.4} {:>12.4}  {}",
+            a.task,
+            a.node,
+            a.start,
+            a.end,
+            inst.graph.name(a.task)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_benchmark(args: &Args) -> Result<()> {
+    let schedulers = parse_schedulers(&args.get_or("schedulers", "all"))?;
+    let count = args.get_parse("count", 100usize).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?;
+    let specs = parse_specs(
+        &args.get_or("structures", "all"),
+        &args.get_or("ccrs", "all"),
+        count,
+        seed,
+    )?;
+    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
+    let repeats = args.get_parse("repeats", 1usize).map_err(|e| anyhow!(e))?;
+    let out = PathBuf::from(args.get_or("out", "results/benchmark.json"));
+
+    let results = run_benchmark(schedulers, &specs, workers, repeats)?;
+    results.save(&out)?;
+    println!(
+        "wrote {} records ({} schedulers × {} datasets) to {}",
+        results.records.len(),
+        results.schedulers().len(),
+        results.datasets().len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.get_or("results", "results/benchmark.json"));
+    let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
+    let results = BenchmarkResults::load(&path)
+        .with_context(|| format!("loading {}", path.display()))?;
+    for a in parse_artifacts(&args.get_or("artifact", "all"))? {
+        println!("{}", a.generate(&results, &out_dir)?);
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let count = args.get_parse("count", 100usize).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?;
+    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
+    let repeats = args.get_parse("repeats", 3usize).map_err(|e| anyhow!(e))?;
+    let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
+
+    let specs = DatasetSpec::all(count, seed);
+    let t0 = std::time::Instant::now();
+    let results = run_benchmark(SchedulerConfig::all(), &specs, workers, repeats)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    results.save(&out_dir.join("benchmark.json"))?;
+    match args.get("artifact") {
+        Some(id) => {
+            for a in parse_artifacts(id)? {
+                println!("{}", a.generate(&results, &out_dir)?);
+            }
+        }
+        None => {
+            let md = ptgs::analysis::write_report(&results, &out_dir, elapsed)?;
+            println!("{md}");
+        }
+    }
+    println!("CSV data + REPORT.md written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_rank(args: &Args) -> Result<()> {
+    let spec = spec_from_args(args, "chains")?;
+    let mut rng = spec.instance_rng(0);
+    let inst = spec.generate_one(&mut rng);
+    let b = backend_from_args(args)?;
+    let ranks = b.compute(&inst);
+    println!("backend: {b:?}  tasks: {}", inst.graph.len());
+    println!("{:>6} {:>12} {:>12} {:>12}  name", "task", "up", "down", "cpop");
+    for t in 0..inst.graph.len() {
+        println!(
+            "{t:>6} {:>12.4} {:>12.4} {:>12.4}  {}",
+            ranks.up[t],
+            ranks.down[t],
+            ranks.cpop(t),
+            inst.graph.name(t)
+        );
+    }
+    println!("critical path: {:?}", ranks.critical_path(&inst, b.rel_tol()));
+    Ok(())
+}
+
+/// `ptgs adversarial --a MET --b HEFT [--structure out_trees --ccr 1]
+/// [--generations 50] [--seed 0]` — search for an instance where A is
+/// maximally worse than B (paper §V future work, ref [14]).
+fn cmd_adversarial(args: &Args) -> Result<()> {
+    let name_a = args.get_or("a", "MET");
+    let name_b = args.get_or("b", "HEFT");
+    let a = SchedulerConfig::from_name(&name_a)
+        .ok_or_else(|| anyhow!("unknown scheduler {name_a}"))?;
+    let b = SchedulerConfig::from_name(&name_b)
+        .ok_or_else(|| anyhow!("unknown scheduler {name_b}"))?;
+    let spec = spec_from_args(args, "out_trees")?;
+    let opts = ptgs::analysis::AdversarialOptions {
+        generations: args.get_parse("generations", 50).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    let rng_seed = args.get_parse("search-seed", 0u64).map_err(|e| anyhow!(e))?;
+    let res = ptgs::analysis::adversarial_search(&a, &b, &spec, rng_seed, &opts);
+    println!(
+        "adversarial search: worst-case m({})/m({}) on {} seeds",
+        a.name(),
+        b.name(),
+        spec.name()
+    );
+    println!("seed instance ratio:     {:.4}", res.seed_ratio);
+    println!("adversarial ratio:       {:.4}  ({} generations)", res.ratio, res.generations);
+    if args.get("out").is_some() {
+        let out = PathBuf::from(args.get_or("out", "adversarial.json"));
+        std::fs::write(&out, vec![res.instance.clone()].to_json().to_string())?;
+        println!("instance written to {}", out.display());
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    match args.positional(1) {
+        Some("schedulers") => {
+            for c in SchedulerConfig::all() {
+                println!("{}", c.name());
+            }
+        }
+        Some("datasets") => {
+            for s in DatasetSpec::all(100, 0) {
+                println!("{}", s.name());
+            }
+        }
+        Some("artifacts") => {
+            for a in Artifact::ALL {
+                println!("{:8} — {}", a.id(), a.description());
+            }
+        }
+        other => bail!("unknown list target {other:?} (schedulers|datasets|artifacts)"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------
+
+fn spec_from_args(args: &Args, default_structure: &str) -> Result<DatasetSpec> {
+    let structure = args.get_or("structure", default_structure);
+    let s = Structure::from_str_opt(&structure).ok_or_else(|| {
+        anyhow!("unknown structure {structure} (in_trees|out_trees|chains|cycles)")
+    })?;
+    Ok(DatasetSpec {
+        structure: s,
+        ccr: args.get_parse("ccr", 1.0f64).map_err(|e| anyhow!(e))?,
+        count: args.get_parse("count", 100usize).map_err(|e| anyhow!(e))?,
+        seed: args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn backend_from_args(args: &Args) -> Result<RankBackend> {
+    match args.get_or("backend", "native").as_str() {
+        "native" => Ok(RankBackend::Native),
+        "xla" => Ok(RankBackend::Xla(Arc::new(
+            RankEngine::load_default().map_err(|e| anyhow!("loading artifacts: {e}"))?,
+        ))),
+        other => bail!("unknown backend {other} (native|xla)"),
+    }
+}
+
+fn parse_schedulers(s: &str) -> Result<Vec<SchedulerConfig>> {
+    if s == "all" {
+        return Ok(SchedulerConfig::all());
+    }
+    s.split(',')
+        .map(|name| {
+            SchedulerConfig::from_name(name.trim())
+                .ok_or_else(|| anyhow!("unknown scheduler {name}"))
+        })
+        .collect()
+}
+
+fn parse_specs(structures: &str, ccrs: &str, count: usize, seed: u64) -> Result<Vec<DatasetSpec>> {
+    let structures: Vec<Structure> = if structures == "all" {
+        Structure::ALL.to_vec()
+    } else {
+        structures
+            .split(',')
+            .map(|s| {
+                Structure::from_str_opt(s.trim()).ok_or_else(|| anyhow!("unknown structure {s}"))
+            })
+            .collect::<Result<_>>()?
+    };
+    let ccrs: Vec<f64> = if ccrs == "all" {
+        CCRS.to_vec()
+    } else {
+        ccrs.split(',')
+            .map(|c| c.trim().parse::<f64>().context("bad CCR"))
+            .collect::<Result<_>>()?
+    };
+    let mut specs = Vec::new();
+    for &structure in &structures {
+        for &ccr in &ccrs {
+            specs.push(DatasetSpec { structure, ccr, count, seed });
+        }
+    }
+    Ok(specs)
+}
+
+fn parse_artifacts(s: &str) -> Result<Vec<Artifact>> {
+    if s == "all" {
+        return Ok(Artifact::ALL.to_vec());
+    }
+    s.split(',')
+        .map(|id| Artifact::from_id(id.trim()).ok_or_else(|| anyhow!("unknown artifact {id}")))
+        .collect()
+}
+
+fn run_benchmark(
+    schedulers: Vec<SchedulerConfig>,
+    specs: &[DatasetSpec],
+    workers: usize,
+    repeats: usize,
+) -> Result<BenchmarkResults> {
+    let mut options = CoordinatorOptions::default();
+    if workers > 0 {
+        options.workers = workers;
+    }
+    options.harness = HarnessOptions { validate: true, timing_repeats: repeats.max(1) };
+    let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
+    let t0 = std::time::Instant::now();
+    let results = coord.run_blocking(specs);
+    eprintln!(
+        "benchmark: {} records in {:.2}s ({} workers)",
+        results.records.len(),
+        t0.elapsed().as_secs_f64(),
+        coord.options.workers,
+    );
+    Ok(results)
+}

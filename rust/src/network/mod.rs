@@ -1,0 +1,237 @@
+//! Compute-network model: a complete, undirected, weighted graph.
+//!
+//! This is the `N = (V, E)` of the paper's §I-A under the *related
+//! machines* model: node `v` has speed `s(v)`, link `(v, v')` has
+//! communication strength `s(v, v')`. Execution time of task `t` on `v`
+//! is `c(t) / s(v)`; transfer time of edge `(t, t')` from `v` to `v'` is
+//! `c(t, t') / s(v, v')`, and 0 when `v = v'` (loopback is instantaneous).
+
+use crate::util::{FromJson, ToJson, Value};
+
+/// Index of a compute node within its [`Network`].
+pub type NodeId = usize;
+
+/// A complete weighted network of heterogeneous compute nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    /// Node compute speeds `s(v) > 0`.
+    speeds: Vec<f64>,
+    /// Dense symmetric link-strength matrix, row-major `n × n`;
+    /// the diagonal is unused (same-node transfers cost 0).
+    links: Vec<f64>,
+}
+
+impl Network {
+    /// Build a network from node speeds and a symmetric link matrix
+    /// given as a flat row-major `n × n` slice.
+    pub fn new(speeds: Vec<f64>, links: Vec<f64>) -> Self {
+        let n = speeds.len();
+        assert_eq!(links.len(), n * n, "link matrix must be n×n");
+        for &s in &speeds {
+            assert!(s > 0.0, "node speeds must be positive, got {s}");
+        }
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (links[i * n + j] - links[j * n + i]).abs() < 1e-12,
+                    "link matrix must be symmetric at ({i},{j})"
+                );
+                if i != j {
+                    assert!(links[i * n + j] > 0.0, "link strengths must be positive");
+                }
+            }
+        }
+        Network { speeds, links }
+    }
+
+    /// Homogeneous network: `n` nodes of speed 1 and link strength `bw`.
+    pub fn homogeneous(n: usize, bw: f64) -> Self {
+        Network::new(vec![1.0; n], vec![bw; n * n])
+    }
+
+    /// Number of nodes `|V|`.
+    pub fn len(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// True when the network has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.speeds.is_empty()
+    }
+
+    /// Compute speed `s(v)`.
+    pub fn speed(&self, v: NodeId) -> f64 {
+        self.speeds[v]
+    }
+
+    /// All node speeds.
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// Link strength `s(v, v')`; meaningless for `v == v'` (transfers on
+    /// the same node take zero time; see [`Network::comm_time`]).
+    pub fn link(&self, v: NodeId, w: NodeId) -> f64 {
+        self.links[v * self.len() + w]
+    }
+
+    /// Scale every link strength by `factor` (used for CCR normalization).
+    pub fn scale_links(&mut self, factor: f64) {
+        assert!(factor > 0.0);
+        for l in &mut self.links {
+            *l *= factor;
+        }
+    }
+
+    /// Execution time of a task of cost `c` on node `v`: `c / s(v)`.
+    pub fn exec_time(&self, cost: f64, v: NodeId) -> f64 {
+        cost / self.speeds[v]
+    }
+
+    /// Transfer time of `data` units from `v` to `w`: `data / s(v, w)`,
+    /// 0 when `v == w`.
+    pub fn comm_time(&self, data: f64, v: NodeId, w: NodeId) -> f64 {
+        if v == w {
+            0.0
+        } else {
+            data / self.link(v, w)
+        }
+    }
+
+    /// The fastest node (max speed; ties → smallest id). This is the node
+    /// onto which critical-path reservation pins the critical path.
+    pub fn fastest_node(&self) -> NodeId {
+        let mut best = 0;
+        for v in 1..self.len() {
+            if self.speeds[v] > self.speeds[best] {
+                best = v;
+            }
+        }
+        best
+    }
+
+    /// Mean of `1 / s(v)` over nodes — the expected execution time of a
+    /// unit-cost task on a uniformly random node. Rank computations use
+    /// `c(t) · avg_inv_speed` as the task's mean execution cost.
+    pub fn avg_inv_speed(&self) -> f64 {
+        self.speeds.iter().map(|s| 1.0 / s).sum::<f64>() / self.len() as f64
+    }
+
+    /// Mean of `1 / s(v, v')` over *distinct* node pairs — the expected
+    /// transfer time of a unit of data over a uniformly random link.
+    /// Single-node networks have no links; returns 0 so that mean
+    /// communication costs vanish (everything is local anyway).
+    pub fn avg_inv_link(&self) -> f64 {
+        let n = self.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for v in 0..n {
+            for w in 0..n {
+                if v != w {
+                    sum += 1.0 / self.link(v, w);
+                }
+            }
+        }
+        sum / (n * (n - 1)) as f64
+    }
+}
+
+impl ToJson for Network {
+    /// Wire format: `{"speeds": [...], "links": [...]}` (row-major n×n).
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("speeds", Value::num_arr(&self.speeds)),
+            ("links", Value::num_arr(&self.links)),
+        ])
+    }
+}
+
+impl FromJson for Network {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        let speeds: Vec<f64> = v
+            .req_arr("speeds")?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| "bad speed".to_string()))
+            .collect::<Result<_, _>>()?;
+        let links: Vec<f64> = v
+            .req_arr("links")?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| "bad link".to_string()))
+            .collect::<Result<_, _>>()?;
+        if links.len() != speeds.len() * speeds.len() {
+            return Err("link matrix must be n×n".into());
+        }
+        Ok(Network::new(speeds, links))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net3() -> Network {
+        // speeds 1, 2, 4; links all 2 except (0,1)=1
+        let mut links = vec![2.0; 9];
+        links[0 * 3 + 1] = 1.0;
+        links[1 * 3 + 0] = 1.0;
+        Network::new(vec![1.0, 2.0, 4.0], links)
+    }
+
+    #[test]
+    fn times() {
+        let n = net3();
+        assert_eq!(n.exec_time(8.0, 0), 8.0);
+        assert_eq!(n.exec_time(8.0, 2), 2.0);
+        assert_eq!(n.comm_time(6.0, 0, 1), 6.0);
+        assert_eq!(n.comm_time(6.0, 0, 2), 3.0);
+        assert_eq!(n.comm_time(6.0, 1, 1), 0.0, "loopback is free");
+    }
+
+    #[test]
+    fn fastest_and_averages() {
+        let n = net3();
+        assert_eq!(n.fastest_node(), 2);
+        let want = (1.0 + 0.5 + 0.25) / 3.0;
+        assert!((n.avg_inv_speed() - want).abs() < 1e-12);
+        // links: (0,1)=1 twice, others 2 (4 directed entries)
+        let want = (2.0 * 1.0 + 4.0 * 0.5) / 6.0;
+        assert!((n.avg_inv_link() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fastest_ties_min_id() {
+        let n = Network::homogeneous(4, 1.0);
+        assert_eq!(n.fastest_node(), 0);
+    }
+
+    #[test]
+    fn scale_links() {
+        let mut n = net3();
+        n.scale_links(0.5);
+        assert_eq!(n.comm_time(6.0, 0, 2), 6.0);
+    }
+
+    #[test]
+    fn single_node_avg_inv_link_zero() {
+        let n = Network::homogeneous(1, 1.0);
+        assert_eq!(n.avg_inv_link(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn asymmetric_links_panic() {
+        let mut links = vec![1.0; 4];
+        links[1] = 2.0;
+        Network::new(vec![1.0, 1.0], links);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let n = net3();
+        let text = n.to_json().to_string();
+        let back = Network::from_json(&crate::util::parse(&text).unwrap()).unwrap();
+        assert_eq!(n, back);
+    }
+}

@@ -1,0 +1,184 @@
+//! Task ranks: UpwardRank (HEFT), DownwardRank, CPoP rank, and
+//! critical-path extraction.
+//!
+//! Two engines compute the same quantities:
+//!
+//! * [`native`] — exact f64 dynamic programming over a topological order
+//!   (works for any graph size; the correctness oracle), and
+//! * [`crate::runtime::RankEngine`] — the AOT-compiled JAX/Pallas
+//!   tropical-algebra kernels executed via PJRT (f32, padded sizes
+//!   16/32/64, batched). [`RankBackend`] selects between them and the
+//!   XLA path transparently falls back to native for oversized graphs.
+
+pub mod native;
+
+use std::sync::Arc;
+
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+
+/// Upward and downward ranks for every task of one instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ranks {
+    /// UpwardRank: `rank_u(t) = w̄(t) + max_{t'∈succ(t)} (c̄(t,t') + rank_u(t'))`.
+    pub up: Vec<f64>,
+    /// DownwardRank: `rank_d(t) = max_{t'∈pred(t)} (rank_d(t') + w̄(t') + c̄(t',t))`.
+    pub down: Vec<f64>,
+}
+
+impl Ranks {
+    /// CPoP priority of task `t`: `rank_u(t) + rank_d(t)` — the length of
+    /// the longest path through `t`.
+    pub fn cpop(&self, t: TaskId) -> f64 {
+        self.up[t] + self.down[t]
+    }
+
+    /// Critical-path value: `max_t cpop(t)`.
+    pub fn cp_value(&self) -> f64 {
+        (0..self.up.len()).map(|t| self.cpop(t)).fold(0.0, f64::max)
+    }
+
+    /// Extract *the* critical path as a source→sink chain: start from the
+    /// source with maximal CPoP rank and greedily follow the successor
+    /// with maximal CPoP rank (the CPoP paper's SET_CP). `rel_tol` absorbs
+    /// f32 noise from the XLA engine.
+    pub fn critical_path(&self, inst: &ProblemInstance, rel_tol: f64) -> Vec<TaskId> {
+        let g = &inst.graph;
+        if g.is_empty() {
+            return Vec::new();
+        }
+        let cp = self.cp_value();
+        let tol = rel_tol * cp.max(1.0);
+        let on_cp = |t: TaskId| self.cpop(t) >= cp - tol;
+
+        // Start: the on-CP source (there is at least one: the maximizing
+        // path starts at some source). Ties → smallest id.
+        let Some(mut cur) = g.sources().into_iter().find(|&t| on_cp(t)) else {
+            // Degenerate (tolerance too tight); fall back to argmax task.
+            let best = (0..g.len())
+                .max_by(|&a, &b| self.cpop(a).partial_cmp(&self.cpop(b)).unwrap())
+                .unwrap();
+            return vec![best];
+        };
+        let mut path = vec![cur];
+        loop {
+            let next = g
+                .successors(cur)
+                .iter()
+                .map(|&(s, _)| s)
+                .filter(|&s| on_cp(s))
+                .max_by(|&a, &b| self.cpop(a).partial_cmp(&self.cpop(b)).unwrap());
+            match next {
+                Some(s) => {
+                    path.push(s);
+                    cur = s;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+}
+
+/// Which engine computes ranks.
+#[derive(Clone, Default)]
+pub enum RankBackend {
+    /// Exact f64 DP over a topological order (default).
+    #[default]
+    Native,
+    /// AOT-compiled JAX/Pallas tropical kernels via PJRT. Falls back to
+    /// native for graphs larger than the biggest compiled padding.
+    Xla(Arc<crate::runtime::RankEngine>),
+}
+
+impl std::fmt::Debug for RankBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RankBackend::Native => write!(f, "Native"),
+            RankBackend::Xla(_) => write!(f, "Xla"),
+        }
+    }
+}
+
+impl RankBackend {
+    /// Compute ranks for one instance.
+    pub fn compute(&self, inst: &ProblemInstance) -> Ranks {
+        match self {
+            RankBackend::Native => native::ranks(inst),
+            RankBackend::Xla(engine) => engine
+                .ranks_one(inst)
+                .unwrap_or_else(|| native::ranks(inst)),
+        }
+    }
+
+    /// Compute only the upward rank (downward ranks zeroed) — the hot
+    /// path for HEFT-style configs that never touch `down`/CPoP. The
+    /// native engine skips the second DP pass entirely; the XLA artifact
+    /// computes both in one fused executable anyway, so it just
+    /// delegates (EXPERIMENTS.md §Perf).
+    pub fn compute_upward_only(&self, inst: &ProblemInstance) -> Ranks {
+        match self {
+            RankBackend::Native => Ranks {
+                up: native::upward_rank(inst),
+                down: vec![0.0; inst.graph.len()],
+            },
+            RankBackend::Xla(_) => self.compute(inst),
+        }
+    }
+
+    /// Relative tolerance appropriate for this backend's arithmetic:
+    /// the XLA path runs in f32.
+    pub fn rel_tol(&self) -> f64 {
+        match self {
+            RankBackend::Native => 1e-9,
+            RankBackend::Xla(_) => 1e-4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+
+    fn diamond() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        g.add_task("b", 5.0);
+        g.add_task("c", 1.0);
+        g.add_task("d", 1.0);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 1.0);
+        g.add_edge(1, 3, 1.0);
+        g.add_edge(2, 3, 1.0);
+        ProblemInstance::new("diamond", g, Network::homogeneous(2, 1.0))
+    }
+
+    #[test]
+    fn critical_path_through_heavy_branch() {
+        let inst = diamond();
+        let r = native::ranks(&inst);
+        assert_eq!(r.critical_path(&inst, 1e-9), vec![0, 1, 3]);
+        assert!((r.cp_value() - 9.0).abs() < 1e-9); // 1+1+5+1+1
+    }
+
+    #[test]
+    fn cpop_constant_on_cp() {
+        let inst = diamond();
+        let r = native::ranks(&inst);
+        let cp = r.cp_value();
+        for &t in &[0usize, 1, 3] {
+            assert!((r.cpop(t) - cp).abs() < 1e-9);
+        }
+        assert!(r.cpop(2) < cp - 1e-9);
+    }
+
+    #[test]
+    fn backend_default_native() {
+        let b = RankBackend::default();
+        assert!(matches!(b, RankBackend::Native));
+        let r = b.compute(&diamond());
+        assert_eq!(r.up.len(), 4);
+    }
+}

@@ -1,0 +1,130 @@
+//! Native (pure-Rust, exact f64) rank engine: single reverse/forward
+//! pass over a topological order. This is the correctness oracle the
+//! XLA engine is cross-checked against, and the fallback for graphs
+//! exceeding the AOT-compiled padded sizes.
+
+use super::Ranks;
+use crate::graph::topological_order;
+use crate::instance::ProblemInstance;
+
+/// UpwardRank of every task:
+/// `rank_u(t) = w̄(t) + max(0, max_{t'∈succ(t)} c̄(t,t') + rank_u(t'))`.
+pub fn upward_rank(inst: &ProblemInstance) -> Vec<f64> {
+    let g = &inst.graph;
+    let order = topological_order(g).expect("task graph must be acyclic");
+    // Hoist the network averages: `mean_exec`/`mean_comm` recompute
+    // O(V) / O(V²) sums per call, which dominated the rank DP before
+    // (EXPERIMENTS.md §Perf).
+    let inv_speed = inst.network.avg_inv_speed();
+    let inv_link = inst.network.avg_inv_link();
+    let mut up = vec![0.0; g.len()];
+    for &t in order.iter().rev() {
+        let mut best = 0.0f64;
+        for &(s, data) in g.successors(t) {
+            best = best.max(data * inv_link + up[s]);
+        }
+        up[t] = g.cost(t) * inv_speed + best;
+    }
+    up
+}
+
+/// DownwardRank of every task:
+/// `rank_d(t) = max(0, max_{t'∈pred(t)} rank_d(t') + w̄(t') + c̄(t',t))`.
+pub fn downward_rank(inst: &ProblemInstance) -> Vec<f64> {
+    let g = &inst.graph;
+    let order = topological_order(g).expect("task graph must be acyclic");
+    let inv_speed = inst.network.avg_inv_speed();
+    let inv_link = inst.network.avg_inv_link();
+    let mut down = vec![0.0; g.len()];
+    for &t in order.iter() {
+        let mut best = 0.0f64;
+        for &(p, data) in g.predecessors(t) {
+            best = best.max(down[p] + g.cost(p) * inv_speed + data * inv_link);
+        }
+        down[t] = best;
+    }
+    down
+}
+
+/// Both ranks in one call.
+pub fn ranks(inst: &ProblemInstance) -> Ranks {
+    Ranks { up: upward_rank(inst), down: downward_rank(inst) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+
+    /// Chain a→b→c, unit costs, comm 0.5 (homogeneous speed-1 net).
+    fn chain() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        g.add_task("b", 1.0);
+        g.add_task("c", 1.0);
+        g.add_edge(0, 1, 0.5);
+        g.add_edge(1, 2, 0.5);
+        ProblemInstance::new("chain", g, Network::homogeneous(2, 1.0))
+    }
+
+    #[test]
+    fn chain_ranks() {
+        let inst = chain();
+        let up = upward_rank(&inst);
+        let down = downward_rank(&inst);
+        assert_eq!(up, vec![4.0, 2.5, 1.0]);
+        assert_eq!(down, vec![0.0, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn upward_rank_topologically_decreasing() {
+        // For every edge (t, t'): rank_u(t) > rank_u(t') when costs > 0.
+        let inst = chain();
+        let up = upward_rank(&inst);
+        for (s, d, _) in inst.graph.edges() {
+            assert!(up[s] > up[d]);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_network_uses_mean_costs() {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 2.0);
+        g.add_task("b", 2.0);
+        g.add_edge(0, 1, 6.0);
+        // speeds 1 and 2 → avg inv speed = 0.75; link 3 → avg inv link = 1/3
+        let net = Network::new(vec![1.0, 2.0], vec![3.0, 3.0, 3.0, 3.0]);
+        let inst = ProblemInstance::new("het", g, net);
+        let up = upward_rank(&inst);
+        // w̄ = 2·0.75 = 1.5 each; c̄ = 6/3 = 2
+        assert!((up[1] - 1.5).abs() < 1e-12);
+        assert!((up[0] - (1.5 + 2.0 + 1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 3.0);
+        g.add_task("b", 7.0);
+        let inst = ProblemInstance::new("disc", g, Network::homogeneous(1, 1.0));
+        let r = ranks(&inst);
+        assert_eq!(r.up, vec![3.0, 7.0]);
+        assert_eq!(r.down, vec![0.0, 0.0]);
+        assert_eq!(r.cp_value(), 7.0);
+    }
+
+    #[test]
+    fn up_down_symmetry_on_reversed_chain() {
+        // down-rank of the chain equals up-rank of the reversed chain
+        // minus own execution cost.
+        let inst = chain();
+        let up = upward_rank(&inst);
+        let down = downward_rank(&inst);
+        for t in 0..3 {
+            let w = inst.mean_exec(t);
+            let rev_t = 2 - t;
+            assert!((down[t] + w - up[rev_t]).abs() < 1e-12);
+        }
+    }
+}

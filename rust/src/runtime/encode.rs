@@ -1,0 +1,69 @@
+//! Tropical encoding of a problem instance for the AOT rank kernels —
+//! the Rust mirror of `python/compile/model.py::encode_dag`.
+//!
+//! Wire format per graph (padded size `n`):
+//! * `m[i * n + j]` = mean communication cost of edge `i → j`
+//!   (`c(i,j) · avg_inv_link`), [`NEG`](super::NEG) where absent
+//!   (including all padding rows/columns);
+//! * `w[i]` = mean execution cost (`c(i) · avg_inv_speed`), 0 for padding.
+
+use super::NEG;
+use crate::instance::ProblemInstance;
+
+/// Encode `inst` into caller-provided buffers (`m`: `n*n`, `w`: `n`).
+/// Buffers may hold stale data from a previous batch slot; they are
+/// fully overwritten.
+pub fn encode_into(inst: &ProblemInstance, n: usize, m: &mut [f32], w: &mut [f32]) {
+    let g = &inst.graph;
+    let k = g.len();
+    assert!(k <= n, "graph with {k} tasks exceeds padding {n}");
+    assert_eq!(m.len(), n * n);
+    assert_eq!(w.len(), n);
+
+    m.fill(NEG);
+    w.fill(0.0);
+    for (src, dst, data) in g.edges() {
+        m[src * n + dst] = inst.mean_comm(data) as f32;
+    }
+    for t in 0..k {
+        w[t] = inst.mean_exec(t) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+
+    fn inst() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 2.0);
+        g.add_task("b", 4.0);
+        g.add_edge(0, 1, 3.0);
+        ProblemInstance::new("t", g, Network::homogeneous(2, 1.0))
+    }
+
+    #[test]
+    fn layout_matches_python() {
+        let p = inst();
+        let n = 4;
+        let mut m = vec![0.0f32; n * n];
+        let mut w = vec![9.0f32; n];
+        encode_into(&p, n, &mut m, &mut w);
+        assert_eq!(m[0 * n + 1], 3.0);
+        assert_eq!(m[1 * n + 0], NEG);
+        assert!(m[2 * n..].iter().all(|&x| x == NEG), "padding rows inert");
+        assert_eq!(&w[..2], &[2.0, 4.0]);
+        assert_eq!(&w[2..], &[0.0, 0.0], "stale data overwritten");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds padding")]
+    fn oversized_graph_panics() {
+        let p = inst();
+        let mut m = vec![0.0f32; 1];
+        let mut w = vec![0.0f32; 1];
+        encode_into(&p, 1, &mut m, &mut w);
+    }
+}

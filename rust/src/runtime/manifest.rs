@@ -1,0 +1,130 @@
+//! `artifacts/manifest.json` — the shape manifest `aot.py` writes next
+//! to the HLO artifacts.
+
+use std::path::Path;
+
+use crate::util::{parse, FromJson, Value};
+
+/// Shape/dtype of one tensor in the artifact's signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl FromJson for TensorSpec {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| "bad shape dim".to_string()))
+            .collect::<Result<_, _>>()?;
+        Ok(TensorSpec {
+            name: v.req_str("name")?.to_string(),
+            shape,
+            dtype: v.req_str("dtype")?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub entry: String,
+    pub batch: usize,
+    pub n: usize,
+    /// Fixpoint iteration bound baked into the artifact: sound only for
+    /// graphs whose longest path has ≤ `iters` edges. Older manifests
+    /// without the field default to `n` (the always-safe bound).
+    pub iters: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl FromJson for ManifestEntry {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        let n = v.req_usize("n")?;
+        Ok(ManifestEntry {
+            file: v.req_str("file")?.to_string(),
+            entry: v.req_str("entry")?.to_string(),
+            batch: v.req_usize("batch")?,
+            n,
+            iters: v.get("iters").and_then(|x| x.as_usize()).unwrap_or(n),
+            inputs: v
+                .get("inputs")
+                .map(Vec::<TensorSpec>::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            outputs: v
+                .get("outputs")
+                .map(Vec::<TensorSpec>::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Tropical "no edge" sentinel used by the kernels.
+    pub neg: f64,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let doc =
+            parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        Ok(Manifest {
+            neg: doc.req_f64("neg")?,
+            entries: Vec::<ManifestEntry>::from_json(doc.req("entries")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "neg": -1e30,
+        "entries": [{
+            "file": "ranks_b8_n16.hlo.txt",
+            "entry": "ranks",
+            "batch": 8,
+            "n": 16,
+            "inputs": [{"name": "m", "shape": [8, 16, 16], "dtype": "f32"}],
+            "outputs": [{"name": "up", "shape": [8, 16], "dtype": "f32"}]
+        }]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let doc = parse(SAMPLE).unwrap();
+        let m = Manifest {
+            neg: doc.req_f64("neg").unwrap(),
+            entries: Vec::<ManifestEntry>::from_json(doc.req("entries").unwrap()).unwrap(),
+        };
+        assert_eq!(m.neg, -1e30);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].n, 16);
+        assert_eq!(m.entries[0].inputs[0].shape, vec![8, 16, 16]);
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse and
+        // agree with the runtime's NEG constant.
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(!m.entries.is_empty());
+            assert_eq!(m.neg as f32, crate::runtime::NEG);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Text Gantt-chart rendering of schedules (the `ptgs schedule --gantt`
+//! view), in the spirit of the paper's Figure 1 schedule diagram.
+
+use super::Schedule;
+use crate::instance::ProblemInstance;
+
+/// Render the schedule as one row of time-proportional bars per node.
+///
+/// `width` = number of character columns the makespan maps onto. Tasks
+/// are labeled with their id where the bar is wide enough; idle time is
+/// dots. Time rulers are printed every quarter of the makespan.
+pub fn render_gantt(inst: &ProblemInstance, sched: &Schedule, width: usize) -> String {
+    let makespan = sched.makespan();
+    let mut out = String::new();
+    if makespan <= 0.0 {
+        out.push_str("(empty schedule)\n");
+        return out;
+    }
+    let width = width.max(20);
+    let scale = width as f64 / makespan;
+
+    for node in 0..inst.network.len() {
+        let mut row = vec![b'.'; width];
+        for a in sched.timeline(node) {
+            let lo = (a.start * scale).floor() as usize;
+            let hi = (((a.end * scale).ceil() as usize).max(lo + 1)).min(width);
+            let label = format!("{}", a.task);
+            for (k, cell) in row[lo..hi].iter_mut().enumerate() {
+                *cell = if k == 0 {
+                    b'['
+                } else if k == hi - lo - 1 {
+                    b']'
+                } else {
+                    b'#'
+                };
+            }
+            // Overlay the task id if it fits inside the bar.
+            if hi - lo >= label.len() + 2 {
+                let mid = lo + (hi - lo - label.len()) / 2;
+                row[mid..mid + label.len()].copy_from_slice(label.as_bytes());
+            }
+        }
+        out.push_str(&format!(
+            "node {node:>2} (s={:>5.2}) |{}|\n",
+            inst.network.speed(node),
+            String::from_utf8(row).unwrap()
+        ));
+    }
+
+    // Time ruler.
+    let prefix_len = "node  0 (s= 1.00) |".len();
+    out.push_str(&" ".repeat(prefix_len));
+    let mut ruler = vec![b' '; width + 1];
+    for q in 0..=4 {
+        let pos = (q * width) / 4;
+        ruler[pos.min(width)] = b'^';
+    }
+    out.push_str(std::str::from_utf8(&ruler).unwrap());
+    out.push('\n');
+    out.push_str(&" ".repeat(prefix_len));
+    for q in 0..=4 {
+        let t = makespan * q as f64 / 4.0;
+        let label = format!("{t:.1}");
+        let pos = (q * width) / 4;
+        let pad = pos.saturating_sub((q > 0) as usize * label.len() / 2);
+        // crude but readable: left-align each quarter mark
+        if q == 0 {
+            out.push_str(&label);
+            out.push_str(&" ".repeat(width / 4 - label.len().min(width / 4)));
+        } else {
+            let _ = pad;
+            out.push_str(&label);
+            if q < 4 {
+                out.push_str(&" ".repeat((width / 4).saturating_sub(label.len())));
+            }
+        }
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::scheduler::SchedulerConfig;
+
+    fn example() -> (ProblemInstance, Schedule) {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 2.0);
+        g.add_task("b", 2.0);
+        g.add_task("c", 2.0);
+        g.add_edge(0, 1, 0.5);
+        g.add_edge(0, 2, 0.5);
+        let inst = ProblemInstance::new("g", g, Network::homogeneous(2, 1.0));
+        let s = SchedulerConfig::heft().build().schedule(&inst);
+        (inst, s)
+    }
+
+    #[test]
+    fn renders_all_nodes_and_rulers() {
+        let (inst, s) = example();
+        let text = render_gantt(&inst, &s, 60);
+        assert_eq!(text.lines().count(), 2 + 2, "2 nodes + ruler + labels");
+        assert!(text.contains("node  0"));
+        assert!(text.contains("node  1"));
+        assert!(text.contains('['));
+        assert!(text.contains('^'));
+        assert!(text.contains("0.0"));
+    }
+
+    #[test]
+    fn bar_lengths_proportional() {
+        let (inst, s) = example();
+        let text = render_gantt(&inst, &s, 80);
+        // Total busy cells across rows ≈ total exec time / makespan · width · nodes-use
+        let busy: usize = text
+            .lines()
+            .take(2)
+            .map(|l| l.chars().filter(|&c| c == '#' || c == '[' || c == ']').count())
+            .sum();
+        let expect = (6.0 / s.makespan() * 80.0) as usize;
+        assert!(
+            busy.abs_diff(expect) <= 8,
+            "busy {busy} vs expected ≈ {expect}"
+        );
+    }
+
+    #[test]
+    fn empty_schedule() {
+        let inst = ProblemInstance::new(
+            "e",
+            TaskGraph::new(),
+            Network::homogeneous(1, 1.0),
+        );
+        let s = Schedule::new(0, 1);
+        assert!(render_gantt(&inst, &s, 40).contains("empty"));
+    }
+}

@@ -1,0 +1,256 @@
+//! Schedules, the makespan objective, and the §I-A validity checker.
+
+pub mod gantt;
+
+pub use gantt::render_gantt;
+
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+use crate::network::NodeId;
+
+/// Numerical slack for validity comparisons (floating-point schedules).
+pub const EPS: f64 = 1e-9;
+
+/// One scheduled task: the `(t, v, r, e)` tuple of the paper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Assignment {
+    pub task: TaskId,
+    pub node: NodeId,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A (possibly partial) schedule: per-task assignments plus per-node
+/// timelines kept sorted by start time for O(log) window queries.
+///
+/// Timelines store `Assignment` values inline (not task-id indirections)
+/// so the insertion-window gap scan — the scheduler's innermost loop —
+/// walks contiguous memory (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    assignments: Vec<Option<Assignment>>,
+    /// Per node: assignments sorted by start time.
+    timelines: Vec<Vec<Assignment>>,
+}
+
+impl Schedule {
+    /// Empty schedule for `num_tasks` tasks over `num_nodes` nodes.
+    pub fn new(num_tasks: usize, num_nodes: usize) -> Self {
+        Schedule {
+            assignments: vec![None; num_tasks],
+            timelines: vec![Vec::new(); num_nodes],
+        }
+    }
+
+    /// Number of tasks scheduled so far.
+    pub fn len(&self) -> usize {
+        self.assignments.iter().filter(|a| a.is_some()).count()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.assignments.iter().all(|a| a.is_none())
+    }
+
+    /// True when every task has an assignment.
+    pub fn is_complete(&self) -> bool {
+        self.assignments.iter().all(|a| a.is_some())
+    }
+
+    /// Insert an assignment. Panics if the task is already scheduled —
+    /// the scheduler must never double-schedule.
+    pub fn insert(&mut self, a: Assignment) {
+        assert!(
+            self.assignments[a.task].is_none(),
+            "task {} scheduled twice",
+            a.task
+        );
+        assert!(a.end >= a.start - EPS, "negative-duration assignment: {a:?}");
+        self.assignments[a.task] = Some(a);
+        let tl = &mut self.timelines[a.node];
+        let pos = tl
+            .binary_search_by(|x| x.start.partial_cmp(&a.start).unwrap())
+            .unwrap_or_else(|e| e);
+        tl.insert(pos, a);
+    }
+
+    /// Assignment of a task, if scheduled.
+    pub fn assignment(&self, t: TaskId) -> Option<&Assignment> {
+        self.assignments[t].as_ref()
+    }
+
+    /// Tasks scheduled on `node`, ascending by start time.
+    pub fn timeline(&self, node: NodeId) -> impl Iterator<Item = &Assignment> + '_ {
+        self.timelines[node].iter()
+    }
+
+    /// Finish time of the last task on `node` (0 when idle).
+    pub fn node_finish_time(&self, node: NodeId) -> f64 {
+        self.timelines[node].last().map(|a| a.end).unwrap_or(0.0)
+    }
+
+    /// All assignments in task-id order (scheduled only).
+    pub fn assignments(&self) -> impl Iterator<Item = &Assignment> + '_ {
+        self.assignments.iter().filter_map(|a| a.as_ref())
+    }
+
+    /// Makespan `m(S) = max e` (0 for the empty schedule).
+    pub fn makespan(&self) -> f64 {
+        self.assignments()
+            .map(|a| a.end)
+            .fold(0.0, f64::max)
+    }
+
+    /// Check all four validity properties of the paper's §I-A against a
+    /// problem instance. Returns the first violation found.
+    pub fn validate(&self, inst: &ProblemInstance) -> Result<(), String> {
+        let g = &inst.graph;
+        let net = &inst.network;
+
+        // 1. Every task scheduled exactly once (exactly-once is enforced
+        //    structurally by `insert`; completeness checked here).
+        if self.assignments.len() != g.len() {
+            return Err(format!(
+                "schedule sized for {} tasks, graph has {}",
+                self.assignments.len(),
+                g.len()
+            ));
+        }
+        for t in 0..g.len() {
+            if self.assignments[t].is_none() {
+                return Err(format!("task {t} ({}) not scheduled", g.name(t)));
+            }
+        }
+
+        // 2. Valid start/end times: e − r = c(t)/s(v).
+        for a in self.assignments() {
+            let want = net.exec_time(g.cost(a.task), a.node);
+            if (a.end - a.start - want).abs() > EPS + 1e-12 * want.abs() {
+                return Err(format!(
+                    "task {} duration {} ≠ c/s = {want}",
+                    a.task,
+                    a.end - a.start
+                ));
+            }
+            if a.start < -EPS {
+                return Err(format!("task {} starts before time 0", a.task));
+            }
+        }
+
+        // 3. No overlap on any node.
+        for node in 0..net.len() {
+            let tl: Vec<&Assignment> = self.timeline(node).collect();
+            for pair in tl.windows(2) {
+                if pair[0].end > pair[1].start + EPS {
+                    return Err(format!(
+                        "tasks {} and {} overlap on node {node}",
+                        pair[0].task, pair[1].task
+                    ));
+                }
+            }
+        }
+
+        // 4. Precedence + communication delays.
+        for (src, dst, data) in g.edges() {
+            let a = self.assignments[src].unwrap();
+            let b = self.assignments[dst].unwrap();
+            let arrival = a.end + net.comm_time(data, a.node, b.node);
+            if arrival > b.start + EPS {
+                return Err(format!(
+                    "edge ({src},{dst}): data arrives at {arrival} after task starts at {}",
+                    b.start
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+
+    fn inst() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        g.add_task("b", 1.0);
+        g.add_edge(0, 1, 2.0);
+        ProblemInstance::new("t", g, Network::homogeneous(2, 1.0))
+    }
+
+    fn asg(task: usize, node: usize, start: f64, end: f64) -> Assignment {
+        Assignment { task, node, start, end }
+    }
+
+    #[test]
+    fn valid_local_schedule() {
+        let p = inst();
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        s.insert(asg(1, 0, 1.0, 2.0)); // same node: no comm delay
+        assert!(s.validate(&p).is_ok());
+        assert_eq!(s.makespan(), 2.0);
+    }
+
+    #[test]
+    fn remote_needs_comm_delay() {
+        let p = inst();
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        s.insert(asg(1, 1, 1.5, 2.5)); // data needs until 1+2/1=3
+        assert!(s.validate(&p).unwrap_err().contains("arrives"));
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        s.insert(asg(1, 1, 3.0, 4.0));
+        assert!(s.validate(&p).is_ok());
+    }
+
+    #[test]
+    fn overlap_detected() {
+        let p = inst();
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        s.insert(asg(1, 0, 0.5, 1.5));
+        assert!(s.validate(&p).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn wrong_duration_detected() {
+        let p = inst();
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 2.0));
+        s.insert(asg(1, 0, 4.0, 5.0));
+        assert!(s.validate(&p).unwrap_err().contains("duration"));
+    }
+
+    #[test]
+    fn incomplete_detected() {
+        let p = inst();
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        assert!(s.validate(&p).unwrap_err().contains("not scheduled"));
+        assert!(!s.is_complete());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled twice")]
+    fn double_schedule_panics() {
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        s.insert(asg(0, 1, 0.0, 1.0));
+    }
+
+    #[test]
+    fn timeline_sorted_by_start() {
+        let mut s = Schedule::new(3, 1);
+        s.insert(asg(0, 0, 4.0, 5.0));
+        s.insert(asg(1, 0, 0.0, 1.0));
+        s.insert(asg(2, 0, 2.0, 3.0));
+        let starts: Vec<f64> = s.timeline(0).map(|a| a.start).collect();
+        assert_eq!(starts, vec![0.0, 2.0, 4.0]);
+        assert_eq!(s.node_finish_time(0), 5.0);
+    }
+}

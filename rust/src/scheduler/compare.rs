@@ -1,0 +1,86 @@
+//! Comparison functions (paper Algorithms 1–3): decide which candidate
+//! placement of a task is better. `eval(a, b) < 0` iff `a` is better.
+
+
+use super::window::Candidate;
+
+/// Greedy node-selection criterion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompareFn {
+    /// Earliest Finish Time (Algorithm 1): `end − end'`.
+    Eft,
+    /// Earliest Start Time (Algorithm 2): `start − start'`.
+    Est,
+    /// Quickest execution (Algorithm 3): `(end−start) − (end'−start')`.
+    Quickest,
+}
+
+impl CompareFn {
+    pub const ALL: [CompareFn; 3] = [CompareFn::Eft, CompareFn::Est, CompareFn::Quickest];
+
+    /// Signed comparison: `< 0` iff `a` is strictly better than `b`.
+    #[inline]
+    pub fn eval(self, a: &Candidate, b: &Candidate) -> f64 {
+        match self {
+            CompareFn::Eft => a.end - b.end,
+            CompareFn::Est => a.start - b.start,
+            CompareFn::Quickest => (a.end - a.start) - (b.end - b.start),
+        }
+    }
+
+    /// Short name used in scheduler names (`EFT`/`EST`/`Quickest`).
+    pub fn short(self) -> &'static str {
+        match self {
+            CompareFn::Eft => "EFT",
+            CompareFn::Est => "EST",
+            CompareFn::Quickest => "Quickest",
+        }
+    }
+}
+
+impl std::fmt::Display for CompareFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.short())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(node: usize, start: f64, end: f64) -> Candidate {
+        Candidate { node, start, end }
+    }
+
+    #[test]
+    fn eft_prefers_earlier_finish() {
+        let a = cand(0, 1.0, 3.0);
+        let b = cand(1, 0.0, 4.0);
+        assert!(CompareFn::Eft.eval(&a, &b) < 0.0);
+        assert!(CompareFn::Eft.eval(&b, &a) > 0.0);
+    }
+
+    #[test]
+    fn est_prefers_earlier_start() {
+        let a = cand(0, 1.0, 3.0);
+        let b = cand(1, 0.0, 4.0);
+        assert!(CompareFn::Est.eval(&a, &b) > 0.0, "b starts earlier");
+    }
+
+    #[test]
+    fn quickest_prefers_shorter_duration() {
+        let a = cand(0, 5.0, 6.0); // dur 1
+        let b = cand(1, 0.0, 4.0); // dur 4
+        assert!(CompareFn::Quickest.eval(&a, &b) < 0.0);
+    }
+
+    #[test]
+    fn antisymmetric() {
+        let a = cand(0, 1.0, 3.0);
+        let b = cand(1, 0.5, 3.5);
+        for f in CompareFn::ALL {
+            assert!((f.eval(&a, &b) + f.eval(&b, &a)).abs() < 1e-12);
+            assert_eq!(f.eval(&a, &a), 0.0);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! The generalized parametric list scheduler (paper §III, Algorithm 6).
+//!
+//! A [`SchedulerConfig`] picks one value for each of the five algorithmic
+//! components; the full cross product yields the paper's **72 unique
+//! algorithms**:
+//!
+//! | component          | values                                            |
+//! |--------------------|---------------------------------------------------|
+//! | `priority`         | UpwardRanking · CPoPRanking · ArbitraryTopological |
+//! | `compare`          | EFT · EST · Quickest                               |
+//! | `append_only`      | false (insertion-based) · true                     |
+//! | `critical_path`    | false · true (reserve CP onto the fastest node)    |
+//! | `sufferage`        | false · true (top-2 sufferage selection)           |
+//!
+//! Classic algorithms fall out as corners of the cube (paper Table I):
+//! **HEFT** [5], **MCT** [9], **MET** [9], **Sufferage** [11].
+
+mod compare;
+pub mod lookahead;
+mod parametric;
+mod priority;
+mod window;
+
+pub use compare::CompareFn;
+pub use lookahead::LookaheadScheduler;
+pub use parametric::ParametricScheduler;
+pub use priority::{priorities, PriorityFn};
+pub use window::{data_available_time, window_append_only, window_insertion, Candidate};
+
+
+use crate::ranks::RankBackend;
+
+/// Full configuration of the parametric scheduler — one point in the
+/// 3 × 3 × 2 × 2 × 2 = 72-algorithm component space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SchedulerConfig {
+    pub priority: PriorityFn,
+    pub compare: CompareFn,
+    /// `true` → append-only window finding (Algorithm 4);
+    /// `false` → insertion-based (Algorithm 5).
+    pub append_only: bool,
+    /// `true` → commit every critical-path task to the fastest node.
+    pub critical_path: bool,
+    /// `true` → sufferage top-2 selection in each iteration.
+    pub sufferage: bool,
+}
+
+impl SchedulerConfig {
+    /// All 72 configurations, in a deterministic order (priority-major).
+    pub fn all() -> Vec<SchedulerConfig> {
+        let mut out = Vec::with_capacity(72);
+        for priority in PriorityFn::ALL {
+            for compare in CompareFn::ALL {
+                for append_only in [false, true] {
+                    for critical_path in [false, true] {
+                        for sufferage in [false, true] {
+                            out.push(SchedulerConfig {
+                                priority,
+                                compare,
+                                append_only,
+                                critical_path,
+                                sufferage,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// HEFT [5]: UpwardRanking + insertion + EFT.
+    pub fn heft() -> Self {
+        SchedulerConfig {
+            priority: PriorityFn::UpwardRanking,
+            compare: CompareFn::Eft,
+            append_only: false,
+            critical_path: false,
+            sufferage: false,
+        }
+    }
+
+    /// CPoP-style scheduler: CPoPRanking + insertion + EFT + CP reservation.
+    pub fn cpop() -> Self {
+        SchedulerConfig {
+            priority: PriorityFn::CPoPRanking,
+            compare: CompareFn::Eft,
+            append_only: false,
+            critical_path: true,
+            sufferage: false,
+        }
+    }
+
+    /// MCT (Minimum Completion Time) [9]: arbitrary order + append + EFT.
+    pub fn mct() -> Self {
+        SchedulerConfig {
+            priority: PriorityFn::ArbitraryTopological,
+            compare: CompareFn::Eft,
+            append_only: true,
+            critical_path: false,
+            sufferage: false,
+        }
+    }
+
+    /// MET (Minimum Execution Time) [9]: arbitrary order + append + Quickest.
+    pub fn met() -> Self {
+        SchedulerConfig {
+            priority: PriorityFn::ArbitraryTopological,
+            compare: CompareFn::Quickest,
+            append_only: true,
+            critical_path: false,
+            sufferage: false,
+        }
+    }
+
+    /// Classic Sufferage [11]: arbitrary order + append + EFT + sufferage.
+    pub fn sufferage_classic() -> Self {
+        SchedulerConfig {
+            priority: PriorityFn::ArbitraryTopological,
+            compare: CompareFn::Eft,
+            append_only: true,
+            critical_path: false,
+            sufferage: true,
+        }
+    }
+
+    /// The paper's systematic name, with Table-I aliases for the classics
+    /// (`HEFT`, `MCT`, `MET`, `Sufferage`). Format:
+    /// `{EFT|EST|Quickest}_{Ins|App}[_CP]_{UR|AT|CR}[_Suf]`.
+    pub fn name(&self) -> String {
+        if *self == Self::heft() {
+            return "HEFT".into();
+        }
+        if *self == Self::mct() {
+            return "MCT".into();
+        }
+        if *self == Self::met() {
+            return "MET".into();
+        }
+        if *self == Self::sufferage_classic() {
+            return "Sufferage".into();
+        }
+        let mut s = format!(
+            "{}_{}",
+            self.compare.short(),
+            if self.append_only { "App" } else { "Ins" }
+        );
+        if self.critical_path {
+            s.push_str("_CP");
+        }
+        s.push('_');
+        s.push_str(self.priority.short());
+        if self.sufferage {
+            s.push_str("_Suf");
+        }
+        s
+    }
+
+    /// Parse a systematic name or alias back into a config.
+    pub fn from_name(name: &str) -> Option<SchedulerConfig> {
+        Self::all().into_iter().find(|c| c.name() == name)
+    }
+
+    /// Build a scheduler with the default (native) rank backend.
+    pub fn build(self) -> ParametricScheduler {
+        ParametricScheduler::new(self, RankBackend::Native)
+    }
+
+    /// Build a scheduler with an explicit rank backend.
+    pub fn build_with(self, backend: RankBackend) -> ParametricScheduler {
+        ParametricScheduler::new(self, backend)
+    }
+}
+
+impl std::fmt::Display for SchedulerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_72_unique() {
+        let all = SchedulerConfig::all();
+        assert_eq!(all.len(), 72);
+        let mut names: Vec<String> = all.iter().map(|c| c.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 72, "names must be unique");
+    }
+
+    #[test]
+    fn classic_aliases() {
+        assert_eq!(SchedulerConfig::heft().name(), "HEFT");
+        assert_eq!(SchedulerConfig::mct().name(), "MCT");
+        assert_eq!(SchedulerConfig::met().name(), "MET");
+        assert_eq!(SchedulerConfig::sufferage_classic().name(), "Sufferage");
+    }
+
+    #[test]
+    fn systematic_names_match_table1_format() {
+        let c = SchedulerConfig {
+            priority: PriorityFn::ArbitraryTopological,
+            compare: CompareFn::Est,
+            append_only: false,
+            critical_path: true,
+            sufferage: false,
+        };
+        assert_eq!(c.name(), "EST_Ins_CP_AT");
+        let c = SchedulerConfig {
+            priority: PriorityFn::CPoPRanking,
+            compare: CompareFn::Eft,
+            append_only: true,
+            critical_path: false,
+            sufferage: true,
+        };
+        assert_eq!(c.name(), "EFT_App_CR_Suf");
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for c in SchedulerConfig::all() {
+            assert_eq!(SchedulerConfig::from_name(&c.name()), Some(c));
+        }
+        assert_eq!(SchedulerConfig::from_name("HEFT"), Some(SchedulerConfig::heft()));
+        assert_eq!(SchedulerConfig::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,396 @@
+//! The generalized parametric scheduling loop (paper Algorithm 6).
+//!
+//! In each iteration the scheduler takes the highest-priority *ready*
+//! task (all predecessors scheduled), evaluates its candidate window on
+//! every node with the configured window-finding scheme, and places it
+//! on the node the comparison function prefers. With `sufferage` on, the
+//! top **two** ready tasks are evaluated and the one whose second-best
+//! node is most detrimental wins the slot (the other returns to the
+//! queue). With `critical_path` on, every task on the critical path is
+//! pinned to the fastest node.
+//!
+//! Readiness restriction: the paper requires priority functions under
+//! which "every task has a higher priority than its dependents".
+//! UpwardRanking guarantees this strictly; CPoPRanking is only
+//! *non-strict* along the critical path (equal ranks), so like SAGA we
+//! restrict the argmax to ready tasks, which preserves the intended
+//! order for conforming priority functions and keeps the loop total for
+//! all of them.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::window::{window_append_only, window_insertion, Candidate};
+use super::SchedulerConfig;
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+use crate::network::NodeId;
+use crate::ranks::RankBackend;
+use crate::schedule::{Assignment, Schedule};
+
+/// A configured, ready-to-run scheduler. Cheap to clone; thread-safe
+/// (`schedule` takes `&self`).
+#[derive(Debug, Clone)]
+pub struct ParametricScheduler {
+    cfg: SchedulerConfig,
+    backend: RankBackend,
+}
+
+/// Priority-queue entry: max-heap by (priority, Reverse(task id)) so that
+/// ties break toward the smaller task id, deterministically.
+#[derive(PartialEq)]
+struct Entry(f64, Reverse<TaskId>);
+
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .expect("priorities must not be NaN")
+            .then_with(|| self.1.cmp(&other.1))
+    }
+}
+
+/// Best and (optional) second-best candidate for one task.
+struct Choice {
+    best: Candidate,
+    second: Option<Candidate>,
+}
+
+impl ParametricScheduler {
+    pub fn new(cfg: SchedulerConfig, backend: RankBackend) -> Self {
+        ParametricScheduler { cfg, backend }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    pub fn name(&self) -> String {
+        self.cfg.name()
+    }
+
+    /// Evaluate task `t`'s candidate window on every allowed node,
+    /// returning the best and second-best per the comparison function
+    /// (Algorithm 6, lines 12–19).
+    fn choose(
+        &self,
+        inst: &ProblemInstance,
+        sched: &Schedule,
+        t: TaskId,
+        pinned: Option<NodeId>,
+    ) -> Choice {
+        let window = |u: NodeId| -> Candidate {
+            if self.cfg.append_only {
+                window_append_only(inst, sched, t, u)
+            } else {
+                window_insertion(inst, sched, t, u)
+            }
+        };
+
+        if let Some(u) = pinned {
+            // Critical-path reservation: single candidate, no sufferage.
+            return Choice { best: window(u), second: None };
+        }
+
+        let mut best = window(0);
+        let mut second: Option<Candidate> = None;
+        for u in 1..inst.network.len() {
+            let c = window(u);
+            if self.cfg.compare.eval(&c, &best) < 0.0 {
+                second = Some(best);
+                best = c;
+            } else if second
+                .as_ref()
+                .map_or(true, |s| self.cfg.compare.eval(&c, s) < 0.0)
+            {
+                second = Some(c);
+            }
+        }
+        Choice { best, second }
+    }
+
+    /// Sufferage value of a choice: how much worse the second-best node
+    /// is (`Compare(second, best) ≥ 0`); 0 when there is no alternative.
+    fn sufferage_value(&self, choice: &Choice) -> f64 {
+        choice
+            .second
+            .as_ref()
+            .map(|s| self.cfg.compare.eval(s, &choice.best))
+            .unwrap_or(0.0)
+    }
+
+    /// Run Algorithm 6 on an instance, producing a complete schedule.
+    pub fn schedule(&self, inst: &ProblemInstance) -> Schedule {
+        let g = &inst.graph;
+        let net = &inst.network;
+        let n = g.len();
+        let mut sched = Schedule::new(n, net.len());
+        if n == 0 {
+            return sched;
+        }
+
+        // Ranks are needed by UR/CR priorities and by CP reservation;
+        // ArbitraryTopological without CP skips the computation entirely,
+        // and UR without CP needs only the upward pass (§Perf).
+        let needs_down = self.cfg.critical_path
+            || matches!(self.cfg.priority, super::PriorityFn::CPoPRanking);
+        let needs_up =
+            needs_down || matches!(self.cfg.priority, super::PriorityFn::UpwardRanking);
+        let ranks = if needs_down {
+            self.backend.compute(inst)
+        } else if needs_up {
+            self.backend.compute_upward_only(inst)
+        } else {
+            crate::ranks::Ranks { up: vec![0.0; n], down: vec![0.0; n] }
+        };
+        let prio = super::priorities(self.cfg.priority, inst, &ranks);
+
+        // Critical-path reservation: pin CP tasks to the fastest node.
+        let mut pinned: Vec<Option<NodeId>> = vec![None; n];
+        if self.cfg.critical_path {
+            let fastest = net.fastest_node();
+            for t in ranks.critical_path(inst, self.backend.rel_tol()) {
+                pinned[t] = Some(fastest);
+            }
+        }
+
+        // Ready queue: tasks whose predecessors are all scheduled.
+        let mut missing: Vec<usize> = (0..n).map(|t| g.predecessors(t).len()).collect();
+        let mut ready: BinaryHeap<Entry> = (0..n)
+            .filter(|&t| missing[t] == 0)
+            .map(|t| Entry(prio[t], Reverse(t)))
+            .collect();
+
+        let mut scheduled = 0usize;
+        while let Some(Entry(_, Reverse(t))) = ready.pop() {
+            let choice_t = self.choose(inst, &sched, t, pinned[t]);
+
+            // Sufferage selection over the top-2 ready tasks
+            // (Algorithm 6, lines 20–36).
+            let (task, cand) = if self.cfg.sufferage {
+                match ready.pop() {
+                    Some(Entry(p2, Reverse(t2))) => {
+                        let choice_t2 = self.choose(inst, &sched, t2, pinned[t2]);
+                        if self.sufferage_value(&choice_t2) > self.sufferage_value(&choice_t) {
+                            // t2 suffers more: schedule it, return t.
+                            ready.push(Entry(prio[t], Reverse(t)));
+                            (t2, choice_t2.best)
+                        } else {
+                            ready.push(Entry(p2, Reverse(t2)));
+                            (t, choice_t.best)
+                        }
+                    }
+                    None => (t, choice_t.best),
+                }
+            } else {
+                (t, choice_t.best)
+            };
+
+            sched.insert(Assignment {
+                task,
+                node: cand.node,
+                start: cand.start,
+                end: cand.end,
+            });
+            scheduled += 1;
+
+            for &(s, _) in g.successors(task) {
+                missing[s] -= 1;
+                if missing[s] == 0 {
+                    ready.push(Entry(prio[s], Reverse(s)));
+                }
+            }
+        }
+        debug_assert_eq!(scheduled, n, "list scheduling must place every task");
+        sched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::scheduler::{CompareFn, PriorityFn};
+
+    fn fork_join() -> ProblemInstance {
+        // 0 -> {1,2,3} -> 4, unit costs, comm 1.
+        let mut g = TaskGraph::new();
+        for i in 0..5 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        for m in 1..=3 {
+            g.add_edge(0, m, 1.0);
+            g.add_edge(m, 4, 1.0);
+        }
+        ProblemInstance::new("fj", g, Network::homogeneous(3, 1.0))
+    }
+
+    #[test]
+    fn all_72_valid_on_fork_join() {
+        let inst = fork_join();
+        for cfg in SchedulerConfig::all() {
+            let s = cfg.build().schedule(&inst);
+            assert!(
+                s.validate(&inst).is_ok(),
+                "{} produced invalid schedule: {:?}",
+                cfg.name(),
+                s.validate(&inst)
+            );
+        }
+    }
+
+    #[test]
+    fn heft_fork_join_makespan() {
+        // HEFT on fork-join with 3 homogeneous nodes: 0 at [0,1]; one
+        // branch local (start 1), two remote (start 2 after comm);
+        // join needs remote data: makespan 1+1+1+1+1 = 5.
+        let inst = fork_join();
+        let s = SchedulerConfig::heft().build().schedule(&inst);
+        assert!(s.validate(&inst).is_ok());
+        assert!((s.makespan() - 5.0).abs() < 1e-9, "makespan {}", s.makespan());
+    }
+
+    #[test]
+    fn single_node_serializes_everything() {
+        let mut inst = fork_join();
+        inst.network = Network::homogeneous(1, 1.0);
+        for cfg in SchedulerConfig::all() {
+            let s = cfg.build().schedule(&inst);
+            assert!(s.validate(&inst).is_ok(), "{}", cfg.name());
+            // 5 unit tasks on one unit-speed node: makespan exactly 5.
+            assert!((s.makespan() - 5.0).abs() < 1e-9, "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn insertion_no_worse_than_append_for_heft() {
+        let inst = fork_join();
+        let ins = SchedulerConfig::heft().build().schedule(&inst);
+        let app = SchedulerConfig {
+            append_only: true,
+            ..SchedulerConfig::heft()
+        }
+        .build()
+        .schedule(&inst);
+        assert!(ins.makespan() <= app.makespan() + 1e-9);
+    }
+
+    #[test]
+    fn critical_path_tasks_on_fastest_node() {
+        let mut inst = fork_join();
+        inst.network = Network::new(
+            vec![1.0, 4.0],
+            vec![1.0, 1.0, 1.0, 1.0],
+        );
+        let cfg = SchedulerConfig::cpop();
+        let s = cfg.build().schedule(&inst);
+        assert!(s.validate(&inst).is_ok());
+        // Source and sink are always on the CP; node 1 is fastest.
+        assert_eq!(s.assignment(0).unwrap().node, 1);
+        assert_eq!(s.assignment(4).unwrap().node, 1);
+    }
+
+    #[test]
+    fn quickest_picks_fastest_node_regardless_of_congestion() {
+        // Two independent tasks, node 1 much faster: Quickest+append
+        // queues both on node 1.
+        let mut g = TaskGraph::new();
+        g.add_task("a", 4.0);
+        g.add_task("b", 4.0);
+        let inst = ProblemInstance::new(
+            "q",
+            g,
+            Network::new(vec![1.0, 4.0], vec![1.0, 1.0, 1.0, 1.0]),
+        );
+        let s = SchedulerConfig::met().build().schedule(&inst);
+        assert!(s.validate(&inst).is_ok());
+        assert_eq!(s.assignment(0).unwrap().node, 1);
+        assert_eq!(s.assignment(1).unwrap().node, 1);
+        assert!((s.makespan() - 2.0).abs() < 1e-9);
+        // EFT (MCT) would have spread them: makespan 4 on node 0 vs 2;
+        // actually MCT puts first on node 1 ([0,1]), second on node 1 too
+        // (finish 2 < 4 on node 0) — same here. Use a case where they
+        // differ: three tasks.
+    }
+
+    #[test]
+    fn sufferage_prefers_high_detriment_task() {
+        // Node speeds (4, 1): task a tiny, task b huge. b's sufferage is
+        // larger, so with sufferage=on b grabs the fast node first.
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        g.add_task("b", 8.0);
+        let net = Network::new(vec![4.0, 1.0], vec![1.0, 1.0, 1.0, 1.0]);
+        let inst = ProblemInstance::new("s", g, net);
+        // AT priority: task 0 (a) has the higher priority (topo min-id),
+        // so without sufferage a gets node 0 first.
+        let plain = SchedulerConfig::mct().build().schedule(&inst);
+        assert_eq!(plain.assignment(0).unwrap().node, 0);
+        let suf = SchedulerConfig::sufferage_classic().build().schedule(&inst);
+        assert!(suf.validate(&inst).is_ok());
+        assert_eq!(
+            suf.assignment(1).unwrap().node,
+            0,
+            "b (sufferage 8/4 vs 8/1 = 6) should beat a (1/4 vs 1/1 = .75)"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let inst = fork_join();
+        for cfg in [
+            SchedulerConfig::heft(),
+            SchedulerConfig::cpop(),
+            SchedulerConfig::sufferage_classic(),
+        ] {
+            let a = cfg.build().schedule(&inst);
+            let b = cfg.build().schedule(&inst);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn empty_graph_empty_schedule() {
+        let inst = ProblemInstance::new(
+            "e",
+            TaskGraph::new(),
+            Network::homogeneous(2, 1.0),
+        );
+        let s = SchedulerConfig::heft().build().schedule(&inst);
+        assert!(s.is_empty());
+        assert_eq!(s.makespan(), 0.0);
+    }
+
+    #[test]
+    fn est_vs_eft_differ_when_intended() {
+        // Both nodes idle: every node offers start 0, so EST sees a tie
+        // and keeps the first candidate (node 0, the slow one), while
+        // EFT strictly prefers the faster finish on node 1. This is the
+        // canonical behavioural split between the two comparators.
+        let mut g = TaskGraph::new();
+        g.add_task("x", 8.0);
+        let net = Network::new(vec![1.0, 2.0], vec![1.0, 1.0, 1.0, 1.0]);
+        let inst = ProblemInstance::new("ee", g, net);
+        let est = SchedulerConfig {
+            compare: CompareFn::Est,
+            priority: PriorityFn::ArbitraryTopological,
+            append_only: true,
+            critical_path: false,
+            sufferage: false,
+        };
+        let eft = SchedulerConfig { compare: CompareFn::Eft, ..est };
+        let s_est = est.build().schedule(&inst);
+        let s_eft = eft.build().schedule(&inst);
+        assert_eq!(s_est.assignment(0).unwrap().node, 0, "EST tie → first node");
+        assert_eq!(s_eft.assignment(0).unwrap().node, 1, "EFT → faster finish");
+        assert_eq!(s_est.makespan(), 8.0);
+        assert_eq!(s_eft.makespan(), 4.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Initial-priority functions: the order in which the list scheduler
+//! considers tasks.
+
+
+use crate::graph::topological_order;
+use crate::instance::ProblemInstance;
+use crate::ranks::Ranks;
+
+/// Task prioritization scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PriorityFn {
+    /// HEFT's upward rank [5]: longest mean path from the task to a sink.
+    UpwardRanking,
+    /// CPoP's rank [5]: upward + downward rank (longest path *through*
+    /// the task).
+    CPoPRanking,
+    /// A deterministic topological order (Kahn, min-id tie-break):
+    /// position-based priorities with no cost information.
+    ArbitraryTopological,
+}
+
+impl PriorityFn {
+    pub const ALL: [PriorityFn; 3] = [
+        PriorityFn::UpwardRanking,
+        PriorityFn::CPoPRanking,
+        PriorityFn::ArbitraryTopological,
+    ];
+
+    /// Short name used in scheduler names (`UR`/`CR`/`AT`).
+    pub fn short(self) -> &'static str {
+        match self {
+            PriorityFn::UpwardRanking => "UR",
+            PriorityFn::CPoPRanking => "CR",
+            PriorityFn::ArbitraryTopological => "AT",
+        }
+    }
+}
+
+impl std::fmt::Display for PriorityFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.short())
+    }
+}
+
+/// Compute per-task priorities (higher = scheduled earlier).
+///
+/// `ranks` must be the instance's ranks when the scheme needs them
+/// (UpwardRanking / CPoPRanking); ArbitraryTopological ignores them.
+///
+/// The scheduling loop additionally restricts choice to *ready* tasks,
+/// so priority orders that are not strictly topological (CPoP ranks are
+/// constant along the critical path) still produce precedence-valid
+/// schedules.
+pub fn priorities(f: PriorityFn, inst: &ProblemInstance, ranks: &Ranks) -> Vec<f64> {
+    match f {
+        PriorityFn::UpwardRanking => ranks.up.clone(),
+        PriorityFn::CPoPRanking => {
+            (0..inst.graph.len()).map(|t| ranks.cpop(t)).collect()
+        }
+        PriorityFn::ArbitraryTopological => {
+            let order = topological_order(&inst.graph).expect("acyclic");
+            let n = inst.graph.len();
+            let mut prio = vec![0.0; n];
+            for (pos, &t) in order.iter().enumerate() {
+                prio[t] = (n - pos) as f64;
+            }
+            prio
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::ranks::native;
+
+    fn inst() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        g.add_task("b", 2.0);
+        g.add_task("c", 3.0);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 1.0);
+        ProblemInstance::new("p", g, Network::homogeneous(2, 1.0))
+    }
+
+    #[test]
+    fn upward_ranking_is_up_rank() {
+        let p = inst();
+        let r = native::ranks(&p);
+        assert_eq!(priorities(PriorityFn::UpwardRanking, &p, &r), r.up);
+    }
+
+    #[test]
+    fn cpop_ranking_is_sum() {
+        let p = inst();
+        let r = native::ranks(&p);
+        let prio = priorities(PriorityFn::CPoPRanking, &p, &r);
+        for t in 0..3 {
+            assert_eq!(prio[t], r.up[t] + r.down[t]);
+        }
+    }
+
+    #[test]
+    fn arbitrary_topological_respects_precedence() {
+        let p = inst();
+        let r = native::ranks(&p);
+        let prio = priorities(PriorityFn::ArbitraryTopological, &p, &r);
+        for (s, d, _) in p.graph.edges() {
+            assert!(prio[s] > prio[d]);
+        }
+    }
+
+    #[test]
+    fn upward_ranking_respects_precedence() {
+        let p = inst();
+        let r = native::ranks(&p);
+        let prio = priorities(PriorityFn::UpwardRanking, &p, &r);
+        for (s, d, _) in p.graph.edges() {
+            assert!(prio[s] > prio[d], "positive costs ⇒ strict decrease");
+        }
+    }
+}

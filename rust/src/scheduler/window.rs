@@ -1,0 +1,187 @@
+//! Open-window finding (paper Algorithms 4–5): given a partial schedule,
+//! where could task `t` run on node `u`?
+//!
+//! Both variants first compute the **data-available time** (DAT): the
+//! earliest moment all dependency outputs can have arrived at `u`,
+//! accounting for link speeds (zero-cost when the predecessor ran on `u`
+//! itself).
+//!
+//! * **Append-only** (Algorithm 4): the task may only start after the
+//!   last task currently scheduled on `u` finishes.
+//! * **Insertion-based** (Algorithm 5): the task may fill any idle gap
+//!   large enough to hold it, *including the gap before the first
+//!   scheduled task* — the original HEFT insertion policy. (The paper's
+//!   pseudocode starts scanning at the first task's finish time; we
+//!   follow HEFT/SAGA and consider the `[0, first.start)` gap too.)
+
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+use crate::network::NodeId;
+use crate::schedule::{Schedule, EPS};
+
+/// A candidate placement of a task on a node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub node: NodeId,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Earliest time all of `t`'s dependency data can be present on `u`.
+/// Panics if a predecessor is not yet scheduled (the list-scheduling
+/// loop guarantees readiness).
+pub fn data_available_time(
+    inst: &ProblemInstance,
+    sched: &Schedule,
+    t: TaskId,
+    u: NodeId,
+) -> f64 {
+    let mut dat = 0.0f64;
+    for &(p, data) in inst.graph.predecessors(t) {
+        let pa = sched
+            .assignment(p)
+            .unwrap_or_else(|| panic!("predecessor {p} of task {t} not scheduled"));
+        dat = dat.max(pa.end + inst.network.comm_time(data, pa.node, u));
+    }
+    dat
+}
+
+/// Algorithm 4: earliest window after the last task on `u`.
+pub fn window_append_only(
+    inst: &ProblemInstance,
+    sched: &Schedule,
+    t: TaskId,
+    u: NodeId,
+) -> Candidate {
+    let est = sched.node_finish_time(u);
+    let dat = data_available_time(inst, sched, t, u);
+    let start = est.max(dat);
+    let end = start + inst.network.exec_time(inst.graph.cost(t), u);
+    Candidate { node: u, start, end }
+}
+
+/// Algorithm 5: earliest sufficiently large idle gap on `u` (insertion).
+pub fn window_insertion(
+    inst: &ProblemInstance,
+    sched: &Schedule,
+    t: TaskId,
+    u: NodeId,
+) -> Candidate {
+    let dat = data_available_time(inst, sched, t, u);
+    let dur = inst.network.exec_time(inst.graph.cost(t), u);
+
+    // Scan gaps: (gap_start = previous end, gap_end = next start).
+    let mut gap_start = 0.0f64;
+    for a in sched.timeline(u) {
+        let start = gap_start.max(dat);
+        if start + dur <= a.start + EPS {
+            return Candidate { node: u, start, end: start + dur };
+        }
+        gap_start = gap_start.max(a.end);
+    }
+    // Unbounded gap after the last task.
+    let start = gap_start.max(dat);
+    Candidate { node: u, start, end: start + dur }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::schedule::Assignment;
+
+    /// Three independent unit tasks plus one dependent task 3 (pred 0).
+    fn inst() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        for i in 0..4 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        g.add_edge(0, 3, 4.0);
+        ProblemInstance::new("w", g, Network::homogeneous(2, 2.0))
+    }
+
+    #[test]
+    fn dat_zero_for_sources() {
+        let p = inst();
+        let s = Schedule::new(4, 2);
+        assert_eq!(data_available_time(&p, &s, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn dat_accounts_for_link_and_locality() {
+        let p = inst();
+        let mut s = Schedule::new(4, 2);
+        s.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+        // Remote: 1 + 4/2 = 3. Local: 1 + 0.
+        assert_eq!(data_available_time(&p, &s, 3, 1), 3.0);
+        assert_eq!(data_available_time(&p, &s, 3, 0), 1.0);
+    }
+
+    #[test]
+    fn append_only_waits_for_node() {
+        let p = inst();
+        let mut s = Schedule::new(4, 2);
+        s.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+        s.insert(Assignment { task: 1, node: 0, start: 5.0, end: 6.0 });
+        let c = window_append_only(&p, &s, 2, 0);
+        assert_eq!((c.start, c.end), (6.0, 7.0));
+    }
+
+    #[test]
+    fn insertion_fills_gap() {
+        let p = inst();
+        let mut s = Schedule::new(4, 2);
+        s.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+        s.insert(Assignment { task: 1, node: 0, start: 5.0, end: 6.0 });
+        let c = window_insertion(&p, &s, 2, 0);
+        assert_eq!((c.start, c.end), (1.0, 2.0), "fits in [1,5) gap");
+    }
+
+    #[test]
+    fn insertion_considers_leading_gap() {
+        let p = inst();
+        let mut s = Schedule::new(4, 2);
+        s.insert(Assignment { task: 0, node: 0, start: 2.0, end: 3.0 });
+        let c = window_insertion(&p, &s, 1, 0);
+        assert_eq!((c.start, c.end), (0.0, 1.0), "uses the [0,2) gap");
+    }
+
+    #[test]
+    fn insertion_respects_dat_within_gap() {
+        let p = inst();
+        let mut s = Schedule::new(4, 2);
+        s.insert(Assignment { task: 0, node: 1, start: 0.0, end: 1.0 });
+        s.insert(Assignment { task: 1, node: 0, start: 0.0, end: 1.0 });
+        s.insert(Assignment { task: 2, node: 0, start: 8.0, end: 9.0 });
+        // task 3 on node 0: dat = 1 + 4/2 = 3; gap [1,8) fits at start=3
+        // (duration 1 at unit speed).
+        let c = window_insertion(&p, &s, 3, 0);
+        assert_eq!((c.start, c.end), (3.0, 4.0));
+    }
+
+    #[test]
+    fn insertion_gap_too_small_skipped() {
+        let mut g = TaskGraph::new();
+        g.add_task("big", 4.0);
+        g.add_task("x", 1.0);
+        g.add_task("y", 1.0);
+        let p = ProblemInstance::new("w", g, Network::homogeneous(1, 1.0));
+        let mut s = Schedule::new(3, 1);
+        s.insert(Assignment { task: 1, node: 0, start: 0.0, end: 1.0 });
+        s.insert(Assignment { task: 2, node: 0, start: 3.0, end: 4.0 });
+        // dur 4 does not fit in [1,3); must go after 4.
+        let c = window_insertion(&p, &s, 0, 0);
+        assert_eq!((c.start, c.end), (4.0, 8.0));
+    }
+
+    #[test]
+    fn empty_timeline_equals_append_only() {
+        let p = inst();
+        let s = Schedule::new(4, 2);
+        let a = window_append_only(&p, &s, 1, 1);
+        let b = window_insertion(&p, &s, 1, 1);
+        assert_eq!(a, b);
+        assert_eq!((a.start, a.end), (0.0, 1.0));
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny command-line flag parser (`--key value`, `--switch`, positional
+//! args) — the vendored crate set has no `clap` (DESIGN.md
+//! §Substitutions).
+
+use std::collections::HashMap;
+use std::str::FromStr;
+
+/// Parsed command line: positionals in order plus `--key [value]` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without the program name).
+    ///
+    /// A token starting with `--` becomes a flag; if the next token does
+    /// not itself start with `--`, it becomes that flag's value (switches
+    /// like `--quick` therefore carry no value). `--key=value` also works.
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags: HashMap<String, Option<String>> = HashMap::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), Some(v.to_string()));
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    flags.insert(name.to_string(), it.next());
+                } else {
+                    flags.insert(name.to_string(), None);
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    pub fn num_positional(&self) -> usize {
+        self.positional.len()
+    }
+
+    /// Value of `--key`, if given with a value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.as_deref())
+    }
+
+    /// `--key` given at all (with or without a value)?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Value of `--key`, or `default`.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parsed value of `--key`, or `default`; errors on a malformed value.
+    pub fn get_parse<T: FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(text) => text
+                .parse()
+                .map_err(|e| format!("invalid value for --{key}: {e}")),
+        }
+    }
+
+    /// All flag names seen (for unknown-flag diagnostics).
+    pub fn flag_names(&self) -> impl Iterator<Item = &str> {
+        self.flags.keys().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("benchmark --count 5 --quick --out results.json");
+        assert_eq!(a.positional(0), Some("benchmark"));
+        assert_eq!(a.get("count"), Some("5"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get("quick"), None);
+        assert_eq!(a.get("out"), Some("results.json"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--ccr=2.5 --name=x=y");
+        assert_eq!(a.get("ccr"), Some("2.5"));
+        assert_eq!(a.get("name"), Some("x=y"));
+    }
+
+    #[test]
+    fn get_parse_types() {
+        let a = parse("--count 5 --ccr 0.5");
+        assert_eq!(a.get_parse("count", 0usize).unwrap(), 5);
+        assert_eq!(a.get_parse("ccr", 1.0f64).unwrap(), 0.5);
+        assert_eq!(a.get_parse("missing", 7u64).unwrap(), 7);
+        assert!(a.get_parse("ccr", 0usize).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--validate --workers 3");
+        assert!(a.has("validate"));
+        assert_eq!(a.get("validate"), None);
+        assert_eq!(a.get_parse("workers", 0usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert_eq!(a.num_positional(), 0);
+        assert_eq!(a.positional(0), None);
+    }
+}

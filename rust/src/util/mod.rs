@@ -1,0 +1,34 @@
+//! In-crate utility substrates (this environment vendors almost no
+//! third-party crates; see DESIGN.md §Substitutions).
+
+pub mod args;
+pub mod json;
+
+pub use args::Args;
+pub use json::{parse, Value};
+
+/// Types that render themselves as a [`json::Value`].
+pub trait ToJson {
+    fn to_json(&self) -> Value;
+}
+
+/// Types that reconstruct themselves from a [`json::Value`].
+pub trait FromJson: Sized {
+    fn from_json(v: &Value) -> Result<Self, String>;
+}
+
+impl<T: ToJson> ToJson for Vec<T> {
+    fn to_json(&self) -> Value {
+        Value::Arr(self.iter().map(ToJson::to_json).collect())
+    }
+}
+
+impl<T: FromJson> FromJson for Vec<T> {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        v.as_arr()
+            .ok_or("expected array")?
+            .iter()
+            .map(T::from_json)
+            .collect()
+    }
+}

@@ -1,0 +1,164 @@
+//! End-to-end CLI tests: drive the actual `ptgs` binary
+//! (`CARGO_BIN_EXE_ptgs`) through generate → schedule → benchmark →
+//! analyze and check outputs land on disk well-formed.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn ptgs() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ptgs"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = ptgs().output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn list_schedulers_has_72() {
+    let out = ptgs().args(["list", "schedulers"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(text.lines().count(), 72);
+    assert!(text.lines().any(|l| l == "HEFT"));
+}
+
+#[test]
+fn generate_then_schedule_roundtrip() {
+    let dir = tmpdir("ptgs_cli_roundtrip");
+    let file = dir.join("inst.json");
+    let out = ptgs()
+        .args([
+            "generate",
+            "--structure",
+            "out_trees",
+            "--ccr",
+            "2",
+            "--count",
+            "3",
+            "--out",
+        ])
+        .arg(&file)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(file.exists());
+
+    let out = ptgs()
+        .args(["schedule", "--scheduler", "Sufferage", "--index", "2", "--instance"])
+        .arg(&file)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("makespan:"));
+    assert!(text.contains("Sufferage"));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn schedule_unknown_scheduler_fails_cleanly() {
+    let out = ptgs()
+        .args(["schedule", "--scheduler", "NOPE"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown scheduler"));
+}
+
+#[test]
+fn benchmark_then_analyze() {
+    let dir = tmpdir("ptgs_cli_bench");
+    let results = dir.join("bench.json");
+    let out = ptgs()
+        .args([
+            "benchmark",
+            "--schedulers",
+            "HEFT,MCT,MET",
+            "--structures",
+            "chains,cycles",
+            "--ccrs",
+            "1,5",
+            "--count",
+            "4",
+            "--out",
+        ])
+        .arg(&results)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(results.exists());
+
+    let out = ptgs()
+        .args(["analyze", "--artifact", "fig5,table1", "--results"])
+        .arg(&results)
+        .arg("--out-dir")
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("fig5.csv").exists());
+    assert!(dir.join("table1.csv").exists());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Quickest"), "fig5 rows rendered");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn schedule_with_gantt_metrics_lookahead() {
+    let out = ptgs()
+        .args([
+            "schedule",
+            "--scheduler",
+            "HEFT",
+            "--structure",
+            "in_trees",
+            "--ccr",
+            "0.5",
+            "--lookahead",
+            "1",
+            "--gantt",
+            "--metrics",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("HEFT_LA1"));
+    assert!(text.contains("speedup:"));
+    assert!(text.contains("node  0"));
+}
+
+#[test]
+fn rank_native_prints_critical_path() {
+    let out = ptgs()
+        .args(["rank", "--structure", "cycles", "--ccr", "1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("critical path:"));
+    assert!(text.contains("cpop"));
+}
+
+#[test]
+fn rank_xla_backend_if_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let out = ptgs()
+        .args(["rank", "--structure", "chains", "--backend", "xla"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("backend: Xla"));
+}

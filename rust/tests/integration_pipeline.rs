@@ -1,0 +1,91 @@
+//! Full-pipeline integration: coordinator sweep → save/load → ratios →
+//! pareto → every paper artifact, on a miniature version of the paper's
+//! experiment grid. This is the test-sized twin of
+//! `examples/reproduce_paper.rs`.
+
+use ptgs::analysis::{parse_dataset_name, Artifact, Component, ParetoAnalysis};
+use ptgs::benchmark::{BenchmarkResults, HarnessOptions};
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::DatasetSpec;
+use ptgs::scheduler::SchedulerConfig;
+
+fn mini_grid() -> Vec<DatasetSpec> {
+    // All 20 datasets, 3 instances each: enough for every analysis path.
+    DatasetSpec::all(3, 0x7E57)
+}
+
+fn run_mini() -> BenchmarkResults {
+    let coord = Coordinator {
+        options: CoordinatorOptions {
+            chunk_size: 1,
+            harness: HarnessOptions { validate: true, timing_repeats: 1 },
+            ..Default::default()
+        },
+        ..Coordinator::all_schedulers()
+    };
+    coord.run_blocking(&mini_grid())
+}
+
+#[test]
+fn full_pipeline_end_to_end() {
+    let results = run_mini();
+    assert_eq!(results.records.len(), 72 * 20 * 3);
+    assert_eq!(results.schedulers().len(), 72);
+    assert_eq!(results.datasets().len(), 20);
+
+    // Save / load round-trip.
+    let tmp = std::env::temp_dir().join("ptgs_pipeline_test.json");
+    results.save(&tmp).unwrap();
+    let loaded = BenchmarkResults::load(&tmp).unwrap();
+    assert_eq!(results.records, loaded.records);
+    let _ = std::fs::remove_file(&tmp);
+
+    // Ratios well-formed across the whole pile.
+    let ratios = results.ratios();
+    assert!(ratios.iter().all(|r| r.makespan_ratio >= 1.0 && r.runtime_ratio >= 1.0));
+
+    // Pareto analysis: every dataset has ≥1 pareto point; pareto-anywhere
+    // is a strict subset of the 72 (some schedulers always dominated).
+    let pa = ParetoAnalysis::from_means(&results.mean_ratios());
+    assert_eq!(pa.per_dataset.len(), 20);
+    for (dataset, points) in &pa.per_dataset {
+        assert!(points.iter().any(|p| p.pareto), "{dataset} has an empty front");
+        assert!(parse_dataset_name(dataset).is_some());
+    }
+    let anywhere = pa.pareto_anywhere();
+    assert!(!anywhere.is_empty());
+    assert!(anywhere.len() < 72, "some schedulers must be dominated everywhere");
+
+    // Every artifact generates against the full grid.
+    let dir = std::env::temp_dir().join("ptgs_pipeline_artifacts");
+    for artifact in Artifact::ALL {
+        let text = artifact.generate(&results, &dir).unwrap();
+        assert!(!text.is_empty(), "{}", artifact.id());
+        let csv = dir.join(format!("{}.csv", artifact.id()));
+        let body = std::fs::read_to_string(&csv).unwrap();
+        assert!(body.lines().count() >= 2, "{} CSV has no data rows", artifact.id());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn effects_partition_and_cover() {
+    let results = run_mini();
+    let total = results.records.len();
+    for comp in Component::ALL {
+        let rows = ptgs::analysis::effect(&results, comp, None);
+        let n: usize = rows.iter().map(|r| r.makespan.n).sum();
+        assert_eq!(n, total, "{comp}");
+        // Each value covers 72/|values| of the scheduler cube.
+        for row in &rows {
+            assert_eq!(row.makespan.n % (20 * 3), 0);
+        }
+    }
+}
+
+#[test]
+fn fig9_dataset_exists_in_grid() {
+    // The Fig-9 artifact depends on the exact dataset name string.
+    let names: Vec<String> = mini_grid().iter().map(|s| s.name()).collect();
+    assert!(names.contains(&"cycles_ccr_5".to_string()), "{names:?}");
+}

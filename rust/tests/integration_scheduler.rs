@@ -1,0 +1,206 @@
+//! Integration tests: the full parametric scheduler cube over realistic
+//! dataset instances, classic-algorithm semantics, and cross-module
+//! behaviour (datasets → scheduler → schedule validity → metrics).
+
+use ptgs::datasets::{DatasetSpec, Structure, CCRS};
+use ptgs::graph::TaskGraph;
+use ptgs::instance::ProblemInstance;
+use ptgs::network::Network;
+use ptgs::ranks::native;
+use ptgs::scheduler::{CompareFn, PriorityFn, SchedulerConfig};
+
+/// Every one of the 72 schedulers must produce a valid schedule on
+/// instances of every structure family and CCR extreme.
+#[test]
+fn all_72_schedulers_valid_on_all_structures() {
+    for structure in Structure::ALL {
+        for &ccr in &[0.2, 5.0] {
+            let spec = DatasetSpec { count: 3, ..DatasetSpec::new(structure, ccr) };
+            for inst in spec.generate() {
+                for cfg in SchedulerConfig::all() {
+                    let s = cfg.build().schedule(&inst);
+                    assert!(
+                        s.validate(&inst).is_ok(),
+                        "{} invalid on {}: {:?}",
+                        cfg.name(),
+                        inst.name,
+                        s.validate(&inst)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The paper's example-style sanity check: HEFT on a hand-built
+/// heterogeneous instance produces the known-optimal placement.
+#[test]
+fn heft_hand_checked_instance() {
+    // Two tasks in a chain; node 1 is 3× faster but far (slow link).
+    // c(a)=3, c(b)=3, edge data 6; speeds (1, 3); link 0.5.
+    let mut g = TaskGraph::new();
+    g.add_task("a", 3.0);
+    g.add_task("b", 3.0);
+    g.add_edge(0, 1, 6.0);
+    let net = Network::new(vec![1.0, 3.0], vec![1.0, 0.5, 0.5, 1.0]);
+    let inst = ProblemInstance::new("hand", g, net);
+
+    let s = SchedulerConfig::heft().build().schedule(&inst);
+    s.validate(&inst).unwrap();
+    // Options for a: node0 finish 3, node1 finish 1. HEFT picks node 1.
+    // Then b: on node1 finish 1+1=2; on node0: comm 6/0.5=12 → finish 16.
+    let a = s.assignment(0).unwrap();
+    let b = s.assignment(1).unwrap();
+    assert_eq!(a.node, 1);
+    assert_eq!(b.node, 1);
+    assert!((s.makespan() - 2.0).abs() < 1e-9);
+}
+
+/// MET ignores availability: it always picks the fastest node, queueing
+/// everything there; MCT (EFT-based) spreads instead. On independent
+/// equal tasks over a very heterogeneous network their makespans differ
+/// in the documented direction.
+#[test]
+fn met_vs_mct_congestion_semantics() {
+    let mut g = TaskGraph::new();
+    for i in 0..6 {
+        g.add_task(format!("t{i}"), 6.0);
+    }
+    let net = Network::new(vec![1.0, 2.0], vec![1.0; 4]);
+    let inst = ProblemInstance::new("cong", g, net);
+
+    let met = SchedulerConfig::met().build().schedule(&inst);
+    let mct = SchedulerConfig::mct().build().schedule(&inst);
+    met.validate(&inst).unwrap();
+    mct.validate(&inst).unwrap();
+    // MET: all 6 tasks on node 1 (exec 3 each) → makespan 18.
+    assert!((met.makespan() - 18.0).abs() < 1e-9, "met {}", met.makespan());
+    for t in 0..6 {
+        assert_eq!(met.assignment(t).unwrap().node, 1);
+    }
+    // MCT balances: node1 gets 4 (12s), node0 gets 2 (12s) → 12.
+    assert!(mct.makespan() < met.makespan());
+}
+
+/// Critical-path reservation pins every CP task to the fastest node on
+/// every dataset family.
+#[test]
+fn cp_reservation_pins_cp_tasks() {
+    for structure in Structure::ALL {
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(structure, 1.0) };
+        for inst in spec.generate() {
+            let cfg = SchedulerConfig {
+                critical_path: true,
+                ..SchedulerConfig::heft()
+            };
+            let s = cfg.build().schedule(&inst);
+            s.validate(&inst).unwrap();
+            let fastest = inst.network.fastest_node();
+            let ranks = native::ranks(&inst);
+            for t in ranks.critical_path(&inst, 1e-9) {
+                assert_eq!(
+                    s.assignment(t).unwrap().node,
+                    fastest,
+                    "CP task {t} off the fastest node ({})",
+                    inst.name
+                );
+            }
+        }
+    }
+}
+
+/// Makespans are scale-equivariant: scaling every cost and data size by
+/// k scales every makespan by k (homogeneous-degree-1 objective).
+#[test]
+fn makespan_scale_equivariance() {
+    let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Cycles, 1.0) };
+    for inst in spec.generate() {
+        let k = 3.5;
+        let mut scaled_g = TaskGraph::new();
+        for t in 0..inst.graph.len() {
+            scaled_g.add_task(inst.graph.name(t), inst.graph.cost(t) * k);
+        }
+        for (s, d, w) in inst.graph.edges() {
+            scaled_g.add_edge(s, d, w * k);
+        }
+        let scaled = ProblemInstance::new("scaled", scaled_g, inst.network.clone());
+        for cfg in [SchedulerConfig::heft(), SchedulerConfig::sufferage_classic()] {
+            let m1 = cfg.build().schedule(&inst).makespan();
+            let m2 = cfg.build().schedule(&scaled).makespan();
+            assert!(
+                (m2 - k * m1).abs() < 1e-6 * m2.max(1.0),
+                "{}: {m2} != {k}·{m1}",
+                cfg.name()
+            );
+        }
+    }
+}
+
+/// Lower bound: no schedule can beat the best-case execution of the
+/// bottleneck task, nor the critical path executed at max speed with
+/// free communication.
+#[test]
+fn makespan_lower_bounds_hold() {
+    let spec = DatasetSpec { count: 5, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+    for inst in spec.generate() {
+        let max_speed = (0..inst.network.len())
+            .map(|v| inst.network.speed(v))
+            .fold(0.0, f64::max);
+        // Longest chain of compute costs (comm-free, fastest node).
+        let order = ptgs::graph::topological_order(&inst.graph).unwrap();
+        let mut chain = vec![0.0; inst.graph.len()];
+        let mut bound: f64 = 0.0;
+        for &t in order.iter().rev() {
+            let best_succ = inst
+                .graph
+                .successors(t)
+                .iter()
+                .map(|&(s, _)| chain[s])
+                .fold(0.0, f64::max);
+            chain[t] = inst.graph.cost(t) / max_speed + best_succ;
+            bound = bound.max(chain[t]);
+        }
+        for cfg in SchedulerConfig::all().into_iter().step_by(7) {
+            let m = cfg.build().schedule(&inst).makespan();
+            assert!(
+                m >= bound - 1e-9,
+                "{} beat the CP lower bound: {m} < {bound}",
+                cfg.name()
+            );
+        }
+    }
+}
+
+/// All 20 paper dataset specs generate, and the CCR knob is honored.
+#[test]
+fn paper_dataset_grid_generates() {
+    let specs = DatasetSpec::all(2, 42);
+    assert_eq!(specs.len(), 20);
+    for spec in &specs {
+        for inst in spec.generate() {
+            assert!(inst.validate().is_ok());
+            assert!((inst.ccr() - spec.ccr).abs() < 1e-6 * spec.ccr);
+        }
+    }
+    let _ = CCRS; // the grid is exactly the paper's CCR list
+}
+
+/// Sufferage never deadlocks or double-schedules on graphs with a single
+/// ready task at a time (chains).
+#[test]
+fn sufferage_on_chains() {
+    let spec = DatasetSpec { count: 5, ..DatasetSpec::new(Structure::Chains, 2.0) };
+    for inst in spec.generate() {
+        for priority in PriorityFn::ALL {
+            let cfg = SchedulerConfig {
+                priority,
+                compare: CompareFn::Eft,
+                append_only: true,
+                critical_path: false,
+                sufferage: true,
+            };
+            let s = cfg.build().schedule(&inst);
+            assert!(s.validate(&inst).is_ok(), "{}", cfg.name());
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration tests for the PJRT runtime path: the AOT-compiled
+//! JAX/Pallas tropical kernels must agree with the native f64 engine on
+//! every dataset family, batched and unbatched, and must drive the
+//! scheduler to the *same decisions*.
+//!
+//! All tests no-op (with a note) when `artifacts/manifest.json` is
+//! missing — run `make artifacts` first.
+
+use std::sync::Arc;
+
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::ranks::{native, RankBackend};
+use ptgs::runtime::RankEngine;
+use ptgs::scheduler::SchedulerConfig;
+
+fn engine() -> Option<Arc<RankEngine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts` to exercise the XLA path");
+        return None;
+    }
+    Some(Arc::new(RankEngine::load("artifacts").expect("load artifacts")))
+}
+
+fn assert_ranks_close(inst: &ProblemInstance, got: &ptgs::ranks::Ranks) {
+    let want = native::ranks(inst);
+    for t in 0..inst.graph.len() {
+        let tol = 1e-4 * want.up[t].abs().max(1.0);
+        assert!(
+            (got.up[t] - want.up[t]).abs() < tol,
+            "{}: up[{t}] xla={} native={}",
+            inst.name,
+            got.up[t],
+            want.up[t]
+        );
+        let tol = 1e-4 * want.down[t].abs().max(1.0);
+        assert!(
+            (got.down[t] - want.down[t]).abs() < tol,
+            "{}: down[{t}] xla={} native={}",
+            inst.name,
+            got.down[t],
+            want.down[t]
+        );
+    }
+}
+
+#[test]
+fn xla_matches_native_on_all_structures() {
+    let Some(engine) = engine() else { return };
+    for structure in Structure::ALL {
+        for &ccr in &[0.2, 1.0, 5.0] {
+            let spec = DatasetSpec { count: 4, ..DatasetSpec::new(structure, ccr) };
+            for inst in spec.generate() {
+                if inst.graph.len() > engine.max_tasks() {
+                    continue;
+                }
+                let ranks = engine.ranks_one(&inst).expect("fits padding");
+                assert_ranks_close(&inst, &ranks);
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_batched_matches_unbatched() {
+    let Some(engine) = engine() else { return };
+    let spec = DatasetSpec { count: 13, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+    let instances: Vec<ProblemInstance> = spec
+        .generate()
+        .into_iter()
+        .filter(|i| i.graph.len() <= engine.max_tasks())
+        .collect();
+    let batched = engine.ranks_batch(&instances).expect("batch fits");
+    assert_eq!(batched.len(), instances.len());
+    for (inst, ranks) in instances.iter().zip(&batched) {
+        let single = engine.ranks_one(inst).unwrap();
+        assert_eq!(ranks.up, single.up, "{}", inst.name);
+        assert_eq!(ranks.down, single.down, "{}", inst.name);
+    }
+}
+
+#[test]
+fn xla_backend_drives_scheduler_to_same_schedule() {
+    let Some(engine) = engine() else { return };
+    // Rank-order decisions are robust to f32 noise on these instances,
+    // so the XLA-backed scheduler must make identical placements.
+    let spec = DatasetSpec { count: 6, ..DatasetSpec::new(Structure::OutTrees, 1.0) };
+    for inst in spec.generate() {
+        if inst.graph.len() > engine.max_tasks() {
+            continue;
+        }
+        for cfg in [SchedulerConfig::heft(), SchedulerConfig::cpop()] {
+            let native_s = cfg.build().schedule(&inst);
+            let xla_s = cfg
+                .build_with(RankBackend::Xla(Arc::clone(&engine)))
+                .schedule(&inst);
+            xla_s.validate(&inst).unwrap();
+            // Makespans agree to f32-induced tolerance (placements may
+            // only differ on exact rank ties, which the tie-break hides).
+            assert!(
+                (native_s.makespan() - xla_s.makespan()).abs()
+                    < 1e-3 * native_s.makespan().max(1.0),
+                "{} on {}: native {} vs xla {}",
+                cfg.name(),
+                inst.name,
+                native_s.makespan(),
+                xla_s.makespan()
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_graph_falls_back_to_native() {
+    let Some(engine) = engine() else { return };
+    // Build a chain longer than the largest padding.
+    let n = engine.max_tasks() + 10;
+    let mut g = ptgs::graph::TaskGraph::new();
+    for i in 0..n {
+        g.add_task(format!("t{i}"), 1.0);
+    }
+    for i in 1..n {
+        g.add_edge(i - 1, i, 1.0);
+    }
+    let inst = ProblemInstance::new(
+        "long_chain",
+        g,
+        ptgs::network::Network::homogeneous(3, 1.0),
+    );
+    assert!(engine.ranks_one(&inst).is_none(), "must refuse oversized graphs");
+    // The backend transparently falls back.
+    let backend = RankBackend::Xla(engine);
+    let ranks = backend.compute(&inst);
+    assert_eq!(ranks.up.len(), n);
+    let s = SchedulerConfig::heft().build_with(backend).schedule(&inst);
+    assert!(s.validate(&inst).is_ok());
+}
+
+#[test]
+fn engine_reports_max_tasks() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.max_tasks() >= 64, "aot.py compiles up to n=64");
+}
