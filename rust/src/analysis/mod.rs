@@ -7,10 +7,14 @@ pub mod interactions;
 pub mod pareto;
 pub mod render;
 pub mod report;
+pub mod robustness;
 
 pub use adversarial::{adversarial_search, AdversarialOptions, AdversarialResult};
 pub use effects::{effect, Component, EffectRow};
 pub use report::write_report;
+pub use robustness::{
+    robustness_rows, robustness_table, write_robustness_csv, RobustnessRow,
+};
 pub use interactions::{
     component_interaction, dataset_interaction, parse_dataset_name, DatasetFactor,
 };

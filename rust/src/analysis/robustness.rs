@@ -1,0 +1,183 @@
+//! Robustness-ratio analysis: aggregate the execution simulator's
+//! [`SimRecord`]s into a per-(scheduler, dataset) table — the dynamic
+//! counterpart of the paper's static makespan-ratio tables.
+//!
+//! The *robustness ratio* of one (scheduler, instance) is the mean
+//! realized makespan over noise trials divided by the planned makespan;
+//! this module reports its mean and worst case per scheduler and
+//! dataset, so a reader can see which algorithmic components buy plans
+//! that survive contact with a noisy network.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::render::{ascii_table, fmt_f, write_csv};
+use crate::benchmark::SimRecord;
+
+/// Aggregated robustness of one scheduler on one dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustnessRow {
+    pub scheduler: String,
+    pub dataset: String,
+    /// Mean robustness ratio over instances (1.0 = plans hold exactly).
+    pub mean_robustness: f64,
+    /// Worst per-instance worst-trial ratio (realized / planned).
+    pub worst_robustness: f64,
+    /// Mean planned (static) makespan, for context.
+    pub mean_static_makespan: f64,
+    pub instances: usize,
+    /// Total replans across all instances and trials.
+    pub replans: usize,
+}
+
+/// Aggregate simulator records per (dataset, scheduler), sorted by
+/// dataset then ascending mean robustness (most robust first).
+pub fn robustness_rows(records: &[SimRecord]) -> Vec<RobustnessRow> {
+    let mut acc: BTreeMap<(String, String), (f64, f64, f64, usize, usize)> = BTreeMap::new();
+    for r in records {
+        let e = acc
+            .entry((r.dataset.clone(), r.scheduler.clone()))
+            .or_insert((0.0, 0.0, 0.0, 0, 0));
+        e.0 += r.robustness;
+        let worst_ratio = if r.static_makespan > 0.0 {
+            r.worst_sim_makespan / r.static_makespan
+        } else {
+            1.0
+        };
+        e.1 = e.1.max(worst_ratio);
+        e.2 += r.static_makespan;
+        e.3 += 1;
+        e.4 += r.replans;
+    }
+    let mut rows: Vec<RobustnessRow> = acc
+        .into_iter()
+        .map(|((dataset, scheduler), (sum, worst, static_sum, n, replans))| RobustnessRow {
+            scheduler,
+            dataset,
+            mean_robustness: sum / n as f64,
+            worst_robustness: worst,
+            mean_static_makespan: static_sum / n as f64,
+            instances: n,
+            replans,
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        a.dataset
+            .cmp(&b.dataset)
+            .then(a.mean_robustness.partial_cmp(&b.mean_robustness).unwrap())
+            .then(a.scheduler.cmp(&b.scheduler))
+    });
+    rows
+}
+
+const HEADERS: [&str; 7] = [
+    "dataset",
+    "scheduler",
+    "mean_robustness",
+    "worst_robustness",
+    "mean_static_makespan",
+    "instances",
+    "replans",
+];
+
+fn row_cells(rows: &[RobustnessRow]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.scheduler.clone(),
+                fmt_f(r.mean_robustness, 4),
+                fmt_f(r.worst_robustness, 4),
+                fmt_f(r.mean_static_makespan, 4),
+                r.instances.to_string(),
+                r.replans.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// Render the robustness table as ASCII (one row per dataset ×
+/// scheduler, most robust scheduler first within each dataset).
+pub fn robustness_table(records: &[SimRecord]) -> String {
+    let rows = robustness_rows(records);
+    format!(
+        "Robustness — realized / planned makespan under perturbation\n{}",
+        ascii_table(&HEADERS, &row_cells(&rows))
+    )
+}
+
+/// Write the robustness table as CSV.
+pub fn write_robustness_csv(path: &Path, records: &[SimRecord]) -> std::io::Result<()> {
+    let rows = robustness_rows(records);
+    write_csv(path, &HEADERS, &row_cells(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmark::{Harness, SimSweep};
+    use crate::datasets::{DatasetSpec, Structure};
+    use crate::scheduler::SchedulerConfig;
+    use crate::sim::Perturbation;
+
+    fn records() -> Vec<SimRecord> {
+        let h = Harness::with_schedulers(vec![
+            SchedulerConfig::heft(),
+            SchedulerConfig::met(),
+        ]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let sweep = SimSweep { trials: 3, ..SimSweep::default() };
+        h.run_dataset_sim(&spec, &sweep)
+    }
+
+    #[test]
+    fn rows_aggregate_per_scheduler() {
+        let rows = robustness_rows(&records());
+        assert_eq!(rows.len(), 2, "two schedulers, one dataset");
+        for r in &rows {
+            assert_eq!(r.dataset, "chains_ccr_1");
+            assert_eq!(r.instances, 2);
+            assert!(r.mean_robustness > 0.0);
+            assert!(r.worst_robustness >= r.mean_robustness * 0.5);
+        }
+    }
+
+    #[test]
+    fn rows_sorted_most_robust_first() {
+        let rows = robustness_rows(&records());
+        for pair in rows.windows(2) {
+            if pair[0].dataset == pair[1].dataset {
+                assert!(pair[0].mean_robustness <= pair[1].mean_robustness);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_noise_table_is_all_ones() {
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+        let sweep = SimSweep {
+            perturb: Perturbation::none(),
+            trials: 2,
+            ..SimSweep::default()
+        };
+        let rows = robustness_rows(&h.run_dataset_sim(&spec, &sweep));
+        for r in rows {
+            assert_eq!(r.mean_robustness, 1.0);
+            assert_eq!(r.worst_robustness, 1.0);
+        }
+    }
+
+    #[test]
+    fn table_and_csv_render() {
+        let recs = records();
+        let text = robustness_table(&recs);
+        assert!(text.contains("mean_robustness"));
+        assert!(text.contains("HEFT"));
+        let path = std::env::temp_dir().join("ptgs_robustness_test.csv");
+        write_robustness_csv(&path, &recs).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.lines().count() >= 3, "{body}");
+        let _ = std::fs::remove_file(path);
+    }
+}

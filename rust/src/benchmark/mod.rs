@@ -16,9 +16,11 @@
 
 pub mod extended;
 pub mod metrics;
+pub mod robust;
 
 pub use extended::{extended_metrics, ExtendedMetrics};
 pub use metrics::{MeanRatios, RatioRecord};
+pub use robust::{SimRecord, SimSweep};
 
 use std::time::Instant;
 

@@ -1,0 +1,284 @@
+//! Robustness benchmarking: run schedulers through the execution
+//! simulator ([`crate::sim`]) over repeated noise trials and aggregate
+//! realized-vs-planned makespan ratios per (scheduler, instance).
+//!
+//! Noise traces are a function of `(instance, model, base seed, trial)`
+//! only — never of the scheduler — so every scheduler on an instance is
+//! measured against the identical set of realized worlds and the
+//! robustness ratios are directly comparable across the 72 configs.
+
+use super::Harness;
+use crate::datasets::DatasetSpec;
+use crate::instance::ProblemInstance;
+use crate::scheduler::SchedulerConfig;
+use crate::sim::{Perturbation, ReplayPolicy};
+use crate::util::{FromJson, ToJson, Value};
+
+/// A simulation sweep: noise model, replay policy, trials per instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimSweep {
+    pub perturb: Perturbation,
+    pub policy: ReplayPolicy,
+    /// Noise trials per (scheduler, instance).
+    pub trials: usize,
+    /// Base seed; trial `k` on instance `i` derives its trace seed from
+    /// `(seed, dataset instance index, k)`.
+    pub seed: u64,
+}
+
+impl Default for SimSweep {
+    fn default() -> Self {
+        SimSweep {
+            perturb: Perturbation::lognormal(0.2),
+            policy: ReplayPolicy::Static,
+            trials: 10,
+            seed: 0x0B5E_55ED,
+        }
+    }
+}
+
+impl SimSweep {
+    /// Deterministic per-(instance, trial) trace seed, shared by every
+    /// scheduler so comparisons are paired.
+    pub fn trial_seed(&self, instance: usize, trial: usize) -> u64 {
+        self.seed
+            .wrapping_add((instance as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((trial as u64).wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+}
+
+/// One (scheduler, instance) robustness measurement over all trials.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimRecord {
+    pub scheduler: String,
+    pub dataset: String,
+    pub instance: usize,
+    /// The plan's own (static) makespan.
+    pub static_makespan: f64,
+    /// Mean realized makespan over the trials.
+    pub mean_sim_makespan: f64,
+    /// Worst realized makespan over the trials.
+    pub worst_sim_makespan: f64,
+    /// Mean robustness ratio (realized / planned) over the trials.
+    pub robustness: f64,
+    pub trials: usize,
+    /// Total replans across trials (0 under the static policy).
+    pub replans: usize,
+}
+
+impl ToJson for SimRecord {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("scheduler", Value::Str(self.scheduler.clone())),
+            ("dataset", Value::Str(self.dataset.clone())),
+            ("instance", Value::Num(self.instance as f64)),
+            ("static_makespan", Value::Num(self.static_makespan)),
+            ("mean_sim_makespan", Value::Num(self.mean_sim_makespan)),
+            ("worst_sim_makespan", Value::Num(self.worst_sim_makespan)),
+            ("robustness", Value::Num(self.robustness)),
+            ("trials", Value::Num(self.trials as f64)),
+            ("replans", Value::Num(self.replans as f64)),
+        ])
+    }
+}
+
+impl FromJson for SimRecord {
+    fn from_json(v: &Value) -> Result<Self, String> {
+        Ok(SimRecord {
+            scheduler: v.req_str("scheduler")?.to_string(),
+            dataset: v.req_str("dataset")?.to_string(),
+            instance: v.req_usize("instance")?,
+            static_makespan: v.req_f64("static_makespan")?,
+            mean_sim_makespan: v.req_f64("mean_sim_makespan")?,
+            worst_sim_makespan: v.req_f64("worst_sim_makespan")?,
+            robustness: v.req_f64("robustness")?,
+            trials: v.req_usize("trials")?,
+            replans: v.req_usize("replans")?,
+        })
+    }
+}
+
+/// Per-scheduler accumulator for one instance's trials.
+#[derive(Clone, Copy, Default)]
+struct TrialAgg {
+    sum: f64,
+    worst: f64,
+    ratio_sum: f64,
+    replans: usize,
+}
+
+impl Harness {
+    /// Simulate every configured scheduler on one instance over all
+    /// sweep trials. Each trial's noise trace and effective instance
+    /// are realized **once** and shared by every scheduler — both for
+    /// fairness (paired comparisons) and to avoid rebuilding the same
+    /// perturbed world once per scheduler.
+    pub fn run_instance_sim(
+        &self,
+        dataset: &str,
+        instance: usize,
+        inst: &ProblemInstance,
+        sweep: &SimSweep,
+    ) -> Vec<SimRecord> {
+        let plans: Vec<crate::schedule::Schedule> = self
+            .schedulers
+            .iter()
+            .map(|cfg| {
+                let plan = cfg.build_with(self.backend.clone()).schedule(inst);
+                if self.options.validate {
+                    plan.validate(inst).unwrap_or_else(|e| {
+                        panic!("{} on {dataset}/{instance}: {e}", cfg.name())
+                    });
+                }
+                plan
+            })
+            .collect();
+
+        let trials = sweep.trials.max(1);
+        let mut aggs = vec![TrialAgg::default(); self.schedulers.len()];
+        for k in 0..trials {
+            let trace =
+                crate::sim::NoiseTrace::sample(inst, &sweep.perturb, sweep.trial_seed(instance, k));
+            let eff = crate::sim::perturbed_instance(inst, &trace);
+            for ((cfg, plan), agg) in
+                self.schedulers.iter().zip(&plans).zip(&mut aggs)
+            {
+                let out = crate::sim::simulate_against(inst, &eff, plan, cfg, sweep.policy);
+                agg.sum += out.makespan;
+                agg.worst = agg.worst.max(out.makespan);
+                agg.ratio_sum += out.robustness_ratio();
+                agg.replans += out.replans;
+            }
+        }
+
+        self.schedulers
+            .iter()
+            .zip(&plans)
+            .zip(&aggs)
+            .map(|((cfg, plan), agg)| SimRecord {
+                scheduler: cfg.name(),
+                dataset: dataset.to_string(),
+                instance,
+                static_makespan: plan.makespan(),
+                mean_sim_makespan: agg.sum / trials as f64,
+                worst_sim_makespan: agg.worst,
+                robustness: agg.ratio_sum / trials as f64,
+                trials,
+                replans: agg.replans,
+            })
+            .collect()
+    }
+
+    /// Simulate one scheduler on one instance over all sweep trials
+    /// (convenience wrapper over [`Harness::run_instance_sim`]).
+    pub fn run_one_sim(
+        &self,
+        cfg: &SchedulerConfig,
+        dataset: &str,
+        instance: usize,
+        inst: &ProblemInstance,
+        sweep: &SimSweep,
+    ) -> SimRecord {
+        let single = Harness {
+            schedulers: vec![*cfg],
+            backend: self.backend.clone(),
+            options: self.options.clone(),
+        };
+        single
+            .run_instance_sim(dataset, instance, inst, sweep)
+            .pop()
+            .expect("one scheduler yields one record")
+    }
+
+    /// Simulate every scheduler over every instance of one dataset.
+    pub fn run_dataset_sim(&self, spec: &DatasetSpec, sweep: &SimSweep) -> Vec<SimRecord> {
+        let instances = spec.generate();
+        let dataset = spec.name();
+        let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
+        for (i, inst) in instances.iter().enumerate() {
+            out.extend(self.run_instance_sim(&dataset, i, inst, sweep));
+        }
+        out
+    }
+
+    /// Simulate all datasets of a list, serially.
+    pub fn run_all_sim(&self, specs: &[DatasetSpec], sweep: &SimSweep) -> Vec<SimRecord> {
+        let mut records = Vec::new();
+        for spec in specs {
+            records.extend(self.run_dataset_sim(spec, sweep));
+        }
+        records
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Structure;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) }
+    }
+
+    fn tiny_harness() -> Harness {
+        Harness::with_schedulers(vec![SchedulerConfig::heft(), SchedulerConfig::mct()])
+    }
+
+    #[test]
+    fn sweep_produces_all_records() {
+        let sweep = SimSweep { trials: 3, ..SimSweep::default() };
+        let records = tiny_harness().run_dataset_sim(&tiny_spec(), &sweep);
+        assert_eq!(records.len(), 2 * 2);
+        for r in &records {
+            assert_eq!(r.trials, 3);
+            assert!(r.static_makespan > 0.0);
+            assert!(r.mean_sim_makespan > 0.0);
+            assert!(r.worst_sim_makespan >= r.mean_sim_makespan - 1e-12);
+            assert!(r.robustness > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_noise_robustness_is_exactly_one() {
+        let sweep = SimSweep {
+            perturb: Perturbation::none(),
+            trials: 2,
+            ..SimSweep::default()
+        };
+        for r in tiny_harness().run_dataset_sim(&tiny_spec(), &sweep) {
+            assert_eq!(r.robustness, 1.0, "{}/{}", r.scheduler, r.instance);
+            assert_eq!(r.mean_sim_makespan, r.static_makespan);
+            assert_eq!(r.worst_sim_makespan, r.static_makespan);
+            assert_eq!(r.replans, 0);
+        }
+    }
+
+    #[test]
+    fn sweep_deterministic() {
+        let sweep = SimSweep { trials: 4, ..SimSweep::default() };
+        let a = tiny_harness().run_dataset_sim(&tiny_spec(), &sweep);
+        let b = tiny_harness().run_dataset_sim(&tiny_spec(), &sweep);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trial_seeds_pairwise_distinct() {
+        let sweep = SimSweep::default();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..20 {
+            for k in 0..20 {
+                assert!(seen.insert(sweep.trial_seed(i, k)), "seed collision at ({i},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let sweep = SimSweep { trials: 2, ..SimSweep::default() };
+        let records = tiny_harness().run_dataset_sim(&tiny_spec(), &sweep);
+        let text = records.to_json().to_string();
+        let back =
+            Vec::<SimRecord>::from_json(&crate::util::parse(&text).unwrap()).unwrap();
+        assert_eq!(records, back);
+    }
+}

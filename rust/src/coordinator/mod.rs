@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 
-use crate::benchmark::{BenchmarkResults, Harness, HarnessOptions, Record};
+use crate::benchmark::{BenchmarkResults, Harness, HarnessOptions, Record, SimRecord, SimSweep};
 use crate::datasets::DatasetSpec;
 use crate::ranks::RankBackend;
 use crate::scheduler::SchedulerConfig;
@@ -32,6 +32,30 @@ struct Job {
     spec: DatasetSpec,
     start: usize,
     end: usize,
+}
+
+/// Records that carry the canonical (dataset, instance, scheduler)
+/// identity — the sort key shared by the parallel and serial paths.
+pub trait CanonicalOrder {
+    fn canonical_key(&self) -> (&str, usize, &str);
+}
+
+impl CanonicalOrder for Record {
+    fn canonical_key(&self) -> (&str, usize, &str) {
+        (self.dataset.as_str(), self.instance, self.scheduler.as_str())
+    }
+}
+
+impl CanonicalOrder for SimRecord {
+    fn canonical_key(&self) -> (&str, usize, &str) {
+        (self.dataset.as_str(), self.instance, self.scheduler.as_str())
+    }
+}
+
+/// Sort records into the canonical (dataset, instance, scheduler)
+/// order every coordinator result is reported in.
+pub fn sort_canonical<T: CanonicalOrder>(records: &mut [T]) {
+    records.sort_by(|a, b| a.canonical_key().cmp(&b.canonical_key()));
 }
 
 /// Live progress counters (shared with the caller for monitoring).
@@ -94,9 +118,15 @@ impl Coordinator {
         }
     }
 
-    /// Run the full sweep over `specs` on the worker pool. Returns all
-    /// records (sorted canonically for determinism) plus the metrics.
-    pub fn run(&self, specs: &[DatasetSpec]) -> (BenchmarkResults, Arc<Metrics>) {
+    /// Shared leader/worker scaffolding: shard the instance space, fan
+    /// shards out to `workers` threads that each run `per_job`, and
+    /// aggregate the result batches through a bounded channel
+    /// (backpressure: workers stall rather than buffering unboundedly).
+    fn run_with<R, F>(&self, specs: &[DatasetSpec], per_job: F) -> (Vec<R>, Arc<Metrics>)
+    where
+        R: Send,
+        F: Fn(&Harness, &Job) -> Vec<R> + Sync,
+    {
         let metrics = Arc::new(Metrics::default());
 
         // Shard the instance space.
@@ -112,9 +142,10 @@ impl Coordinator {
         metrics.jobs_total.store(jobs.len(), Ordering::Relaxed);
         let queue = Arc::new(Mutex::new(jobs));
 
-        let (tx, rx) = sync_channel::<Vec<Record>>(self.options.channel_depth);
+        let (tx, rx) = sync_channel::<Vec<R>>(self.options.channel_depth);
         let workers = self.options.workers.max(1);
         let mut records = Vec::new();
+        let per_job = &per_job;
 
         std::thread::scope(|scope| {
             for _ in 0..workers {
@@ -129,7 +160,7 @@ impl Coordinator {
                 scope.spawn(move || loop {
                     let job = { queue.lock().unwrap().pop() };
                     let Some(job) = job else { break };
-                    let batch = run_job(&harness, &job);
+                    let batch = per_job(&harness, &job);
                     metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
                     metrics.records.fetch_add(batch.len(), Ordering::Relaxed);
                     // Bounded send: blocks (backpressure) when the
@@ -147,20 +178,43 @@ impl Coordinator {
             }
         });
 
-        // Canonical order: (dataset, instance, scheduler).
-        records.sort_by(|a, b| {
-            (a.dataset.as_str(), a.instance, a.scheduler.as_str()).cmp(&(
-                b.dataset.as_str(),
-                b.instance,
-                b.scheduler.as_str(),
-            ))
-        });
+        (records, metrics)
+    }
+
+    /// Run the full sweep over `specs` on the worker pool. Returns all
+    /// records (sorted canonically for determinism) plus the metrics.
+    pub fn run(&self, specs: &[DatasetSpec]) -> (BenchmarkResults, Arc<Metrics>) {
+        let (mut records, metrics) = self.run_with(specs, run_job);
+        sort_canonical(&mut records);
         (BenchmarkResults::new(records), metrics)
     }
 
     /// Run and return only the results.
     pub fn run_blocking(&self, specs: &[DatasetSpec]) -> BenchmarkResults {
         self.run(specs).0
+    }
+
+    /// Fan a simulation sweep out across the worker pool: every
+    /// (dataset, instance) shard runs every scheduler through the
+    /// execution simulator ([`crate::sim`]) for `sweep.trials` noise
+    /// trials. Trace seeds derive from the instance index and trial
+    /// only, so the parallel sweep produces byte-identical records to
+    /// the serial [`Harness::run_all_sim`] (an integration test pins
+    /// this), sorted canonically by (dataset, instance, scheduler).
+    pub fn run_sim(
+        &self,
+        specs: &[DatasetSpec],
+        sweep: &SimSweep,
+    ) -> (Vec<SimRecord>, Arc<Metrics>) {
+        let (mut records, metrics) =
+            self.run_with(specs, |harness, job| run_job_sim(harness, job, sweep));
+        sort_canonical(&mut records);
+        (records, metrics)
+    }
+
+    /// Run the simulation sweep and return only the records.
+    pub fn run_sim_blocking(&self, specs: &[DatasetSpec], sweep: &SimSweep) -> Vec<SimRecord> {
+        self.run_sim(specs, sweep).0
     }
 }
 
@@ -176,6 +230,20 @@ fn run_job(harness: &Harness, job: &Job) -> Vec<Record> {
         for cfg in &harness.schedulers {
             out.push(harness.run_one(cfg, &dataset, i, &inst));
         }
+    }
+    out
+}
+
+/// Execute one simulation shard: generate its instances and run every
+/// scheduler through the simulator on each.
+fn run_job_sim(harness: &Harness, job: &Job, sweep: &SimSweep) -> Vec<SimRecord> {
+    let dataset = job.spec.name();
+    let mut out = Vec::with_capacity((job.end - job.start) * harness.schedulers.len());
+    for i in job.start..job.end {
+        let mut rng = job.spec.instance_rng(i);
+        let mut inst = job.spec.generate_one(&mut rng);
+        inst.name = format!("{dataset}/inst_{i:03}");
+        out.extend(harness.run_instance_sim(&dataset, i, &inst, sweep));
     }
     out
 }
@@ -203,13 +271,7 @@ mod tests {
 
         let serial = Harness::with_schedulers(schedulers).run_all(&tiny_specs());
         let mut serial_records = serial.records;
-        serial_records.sort_by(|a, b| {
-            (a.dataset.as_str(), a.instance, a.scheduler.as_str()).cmp(&(
-                b.dataset.as_str(),
-                b.instance,
-                b.scheduler.as_str(),
-            ))
-        });
+        sort_canonical(&mut serial_records);
 
         assert_eq!(par.records.len(), serial_records.len());
         for (p, s) in par.records.iter().zip(&serial_records) {
@@ -249,6 +311,21 @@ mod tests {
         };
         let (res, _) = coord.run(&tiny_specs());
         assert_eq!(res.records.len(), 12);
+    }
+
+    #[test]
+    fn parallel_sim_sweep_equals_serial() {
+        let schedulers = vec![SchedulerConfig::heft(), SchedulerConfig::met()];
+        let sweep = SimSweep { trials: 2, ..SimSweep::default() };
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 4, chunk_size: 2, ..Default::default() },
+            ..Coordinator::with_schedulers(schedulers.clone())
+        };
+        let par = coord.run_sim_blocking(&tiny_specs(), &sweep);
+
+        let mut serial = Harness::with_schedulers(schedulers).run_all_sim(&tiny_specs(), &sweep);
+        sort_canonical(&mut serial);
+        assert_eq!(par, serial, "parallel sim sweep must match serial byte-for-byte");
     }
 
     #[test]

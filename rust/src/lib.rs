@@ -23,9 +23,18 @@
 //!   runtime ratios.
 //! * [`coordinator`] — std::thread leader/worker parallel benchmark execution
 //!   with sharding and bounded-channel backpressure.
+//! * [`sim`] — the event-driven schedule execution simulator: replay a
+//!   plan under multiplicative lognormal noise and node slowdowns
+//!   (statically, or with online rescheduling) and measure how far the
+//!   realized makespan drifts from the plan. Zero noise reproduces the
+//!   static makespan bit-exactly; robustness ratios surface through
+//!   [`benchmark::Harness`] / [`coordinator`] sweeps and the
+//!   [`analysis::robustness_table`].
 //! * [`analysis`] — pareto fronts, per-component effects, pairwise
-//!   interactions, and renderers for every table/figure in the paper.
-//! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`.
+//!   interactions, the robustness table, and renderers for every
+//!   table/figure in the paper.
+//! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`
+//!   (execution requires the off-by-default `xla` cargo feature).
 //!
 //! ## Quickstart
 //!
@@ -51,6 +60,7 @@ pub mod ranks;
 pub mod runtime;
 pub mod schedule;
 pub mod scheduler;
+pub mod sim;
 pub mod util;
 
 /// Convenient re-exports of the main user-facing types.
@@ -66,5 +76,10 @@ pub mod prelude {
     pub use crate::schedule::{render_gantt, Schedule};
     pub use crate::scheduler::{
         CompareFn, LookaheadScheduler, ParametricScheduler, PriorityFn, SchedulerConfig,
+    };
+    pub use crate::benchmark::{SimRecord, SimSweep};
+    pub use crate::sim::{
+        perturbed_instance, simulate, simulate_against, NoiseTrace, Perturbation,
+        ReplayPolicy, SimOptions, SimOutcome,
     };
 }

@@ -4,13 +4,15 @@
 //! ptgs generate  --structure chains --ccr 1 --count 100 --out instances.json
 //! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
 //! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--workers 0] [--repeats 1] [--out results/benchmark.json]
+//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--out results/robustness.csv]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
 //! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
 //! ptgs list      schedulers|datasets|artifacts
 //! ```
 
-use anyhow::{anyhow, bail, Context, Result};
+use ptgs::util::error::{Context, Result};
+use ptgs::{anyhow, bail};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -33,6 +35,7 @@ COMMANDS:
   generate   generate dataset instances as JSON
   schedule   run one scheduler on one instance, print the schedule
   benchmark  run a scheduler sweep over datasets (parallel)
+  simulate   replay schedules under perturbation; robustness table
   analyze    derive tables/figures from saved benchmark results
   reproduce  full paper reproduction (benchmark + all 13 artifacts)
   rank       compute task ranks (native or XLA backend)
@@ -47,6 +50,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("benchmark") => cmd_benchmark(&args),
+        Some("simulate") => cmd_simulate(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("rank") => cmd_rank(&args),
@@ -165,6 +169,74 @@ fn cmd_benchmark(args: &Args) -> Result<()> {
         results.datasets().len(),
         out.display()
     );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use ptgs::benchmark::SimSweep;
+    use ptgs::sim::{Perturbation, ReplayPolicy};
+
+    let schedulers = parse_schedulers(&args.get_or("schedulers", "all"))?;
+    let count = args.get_parse("count", 20usize).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?;
+    let specs = parse_specs(
+        &args.get_or("structures", "all"),
+        &args.get_or("ccrs", "all"),
+        count,
+        seed,
+    )?;
+
+    let sigma = args.get_parse("sigma", 0.2f64).map_err(|e| anyhow!(e))?;
+    let slowdown_prob = args.get_parse("slowdown-prob", 0.0f64).map_err(|e| anyhow!(e))?;
+    let slowdown_factor =
+        args.get_parse("slowdown-factor", 2.0f64).map_err(|e| anyhow!(e))?;
+    if sigma < 0.0 {
+        bail!("--sigma must be >= 0, got {sigma}");
+    }
+    if !(0.0..=1.0).contains(&slowdown_prob) {
+        bail!("--slowdown-prob must be in [0, 1], got {slowdown_prob}");
+    }
+    if slowdown_factor < 1.0 {
+        bail!("--slowdown-factor must be >= 1, got {slowdown_factor}");
+    }
+    let mut perturb = Perturbation::lognormal(sigma);
+    if slowdown_prob > 0.0 {
+        perturb = perturb.with_slowdown(slowdown_prob, slowdown_factor);
+    }
+    let slack = args.get_parse("slack", 0.1f64).map_err(|e| anyhow!(e))?;
+    let policy = match args.get_or("policy", "static").as_str() {
+        "static" => ReplayPolicy::Static,
+        "reschedule" => ReplayPolicy::Reschedule { slack },
+        other => bail!("unknown policy {other} (static|reschedule)"),
+    };
+    let trials = args.get_parse("trials", 10usize).map_err(|e| anyhow!(e))?;
+    let sweep = SimSweep {
+        perturb,
+        policy,
+        trials,
+        seed: args.get_parse("sim-seed", 0x0B5E_55EDu64).map_err(|e| anyhow!(e))?,
+    };
+
+    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
+    let mut options = CoordinatorOptions::default();
+    if workers > 0 {
+        options.workers = workers;
+    }
+    let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
+    let t0 = std::time::Instant::now();
+    let records = coord.run_sim_blocking(&specs, &sweep);
+    eprintln!(
+        "simulate: {} records ({} trials each) in {:.2}s",
+        records.len(),
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", ptgs::analysis::robustness_table(&records));
+    if let Some(out) = args.get("out") {
+        let out = PathBuf::from(out);
+        ptgs::analysis::write_robustness_csv(&out, &records)?;
+        println!("robustness CSV written to {}", out.display());
+    }
     Ok(())
 }
 

@@ -6,84 +6,73 @@
 //! it on the PJRT CPU client, and feed it padded tropical adjacency
 //! matrices (see `python/compile/model.py` for the wire format, mirrored
 //! by [`encode`]).
+//!
+//! The PJRT execution path lives in [`pjrt`] behind the off-by-default
+//! `xla` cargo feature (the external `xla` crate is not vendored in this
+//! environment). Without the feature, [`RankEngine`] is a stub that
+//! still *validates* artifact directories (manifest parse + file
+//! existence, so failure-injection behavior is identical) but reports
+//! execution as unavailable; [`crate::ranks::RankBackend::Xla`] then
+//! transparently falls back to the native engine.
 
 pub mod encode;
 pub mod manifest;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
 pub use manifest::{Manifest, ManifestEntry};
+#[cfg(feature = "xla")]
+pub use pjrt::RankEngine;
 
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(not(feature = "xla"))]
+use std::path::Path;
 
+#[cfg(not(feature = "xla"))]
 use crate::instance::ProblemInstance;
+#[cfg(not(feature = "xla"))]
 use crate::ranks::Ranks;
 
 /// The tropical "no edge" sentinel; must match `compile.kernels.ref.NEG`.
 pub const NEG: f32 = -1.0e30;
 
-/// One compiled rank executable (fixed batch × padded size × iteration
-/// bound).
-struct Variant {
-    batch: usize,
-    n: usize,
-    /// Longest path (in edges) this artifact's fixpoint provably covers.
-    iters: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Loads and runs the AOT rank artifacts. Thread-safe: executions are
-/// serialized through a mutex (the PJRT CPU client is not Sync-safe for
-/// concurrent executions through the raw C API wrappers).
+/// Stub rank engine used when the crate is built without the `xla`
+/// feature. [`RankEngine::load`] performs the same artifact-directory
+/// validation as the real engine (missing manifests and missing HLO
+/// files produce the same error shapes) and then reports that execution
+/// is unavailable; it can therefore never be constructed, and the
+/// accessor methods exist only so feature-independent code type-checks.
+#[cfg(not(feature = "xla"))]
 pub struct RankEngine {
-    variants: Vec<Variant>, // ascending by n
-    lock: Mutex<()>,
+    _unconstructible: std::convert::Infallible,
 }
 
-// SAFETY: every execution and literal construction touching the PJRT
-// client goes through `self.lock`, so the engine is never used from two
-// threads at once; the PJRT CPU plugin itself is documented thread-safe
-// for compiled-executable execution. The raw pointers inside the `xla`
-// wrappers are what suppress the auto-traits.
-unsafe impl Send for RankEngine {}
-unsafe impl Sync for RankEngine {}
-
+#[cfg(not(feature = "xla"))]
 impl std::fmt::Debug for RankEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let ns: Vec<usize> = self.variants.iter().map(|v| v.n).collect();
-        write!(f, "RankEngine {{ padded sizes: {ns:?} }}")
+        write!(f, "RankEngine {{ unavailable: built without `xla` }}")
     }
 }
 
+#[cfg(not(feature = "xla"))]
 impl RankEngine {
-    /// Load every artifact listed in `<dir>/manifest.json` and compile it
-    /// on a fresh PJRT CPU client.
+    /// Validate the artifact directory, then fail: executing artifacts
+    /// needs the PJRT client, which is only compiled with `--features
+    /// xla`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
         let dir = dir.as_ref();
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT client: {e}"))?;
-        let mut variants = Vec::new();
         for entry in &manifest.entries {
-            let path: PathBuf = dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or("non-UTF8 artifact path")?,
-            )
-            .map_err(|e| format!("parse {}: {e}", entry.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| format!("compile {}: {e}", entry.file))?;
-            variants.push(Variant {
-                batch: entry.batch,
-                n: entry.n,
-                iters: entry.iters,
-                exe,
-            });
+            let path = dir.join(&entry.file);
+            if !path.exists() {
+                return Err(format!("read {}: artifact file missing", entry.file));
+            }
         }
-        if variants.is_empty() {
-            return Err("manifest lists no artifacts".into());
-        }
-        variants.sort_by_key(|v| v.n);
-        Ok(RankEngine { variants, lock: Mutex::new(()) })
+        Err(
+            "PJRT runtime unavailable: ptgs was built without the `xla` feature \
+             (artifacts are present but cannot be executed; rebuild with \
+             `--features xla`)"
+                .into(),
+        )
     }
 
     /// Default artifact location (`artifacts/`, overridable with the
@@ -93,103 +82,18 @@ impl RankEngine {
         Self::load(dir)
     }
 
-    /// Largest padded size available.
+    /// Largest padded size available (the stub has none).
     pub fn max_tasks(&self) -> usize {
-        self.variants.last().map(|v| v.n).unwrap_or(0)
+        0
     }
 
-    /// Smallest variant that fits `num_tasks` tasks AND `depth` longest-
-    /// path edges (the artifact's fixpoint iteration bound).
-    fn variant_for(&self, num_tasks: usize, depth: usize) -> Option<&Variant> {
-        self.variants
-            .iter()
-            .find(|v| v.n >= num_tasks && v.iters >= depth)
+    /// Always `None`: the caller falls back to the native engine.
+    pub fn ranks_one(&self, _inst: &ProblemInstance) -> Option<Ranks> {
+        None
     }
 
-    /// Ranks for a single instance; `None` when the graph exceeds every
-    /// compiled padding or iteration bound (caller falls back to the
-    /// native engine).
-    pub fn ranks_one(&self, inst: &ProblemInstance) -> Option<Ranks> {
-        self.ranks_batch(std::slice::from_ref(inst))
-            .map(|mut v| v.pop().unwrap())
-    }
-
-    /// Ranks for a batch of instances. All instances must fit some
-    /// compiled variant; the engine groups them by the smallest fitting
-    /// variant and pads partial batches with inert zero graphs.
-    pub fn ranks_batch(&self, insts: &[ProblemInstance]) -> Option<Vec<Ranks>> {
-        let depths: Vec<usize> = insts
-            .iter()
-            .map(|i| crate::graph::topo::longest_path_len(&i.graph))
-            .collect();
-        if insts
-            .iter()
-            .zip(&depths)
-            .any(|(i, &d)| self.variant_for(i.graph.len(), d).is_none())
-        {
-            return None;
-        }
-        let mut out: Vec<Option<Ranks>> = vec![None; insts.len()];
-        // Group instance indices by variant padded size.
-        for variant in &self.variants {
-            let idxs: Vec<usize> = (0..insts.len())
-                .filter(|&i| {
-                    let n = insts[i].graph.len();
-                    self.variant_for(n, depths[i]).map(|v| v.n) == Some(variant.n)
-                })
-                .collect();
-            for chunk in idxs.chunks(variant.batch) {
-                let ranks = self.execute_chunk(variant, insts, chunk)?;
-                for (slot, r) in chunk.iter().zip(ranks) {
-                    out[*slot] = Some(r);
-                }
-            }
-        }
-        out.into_iter().collect()
-    }
-
-    /// Execute one padded batch through the compiled executable.
-    fn execute_chunk(
-        &self,
-        variant: &Variant,
-        insts: &[ProblemInstance],
-        idxs: &[usize],
-    ) -> Option<Vec<Ranks>> {
-        let (b, n) = (variant.batch, variant.n);
-        let mut m = vec![NEG; b * n * n];
-        let mut w = vec![0.0f32; b * n];
-        for (slot, &i) in idxs.iter().enumerate() {
-            encode::encode_into(
-                &insts[i],
-                n,
-                &mut m[slot * n * n..(slot + 1) * n * n],
-                &mut w[slot * n..(slot + 1) * n],
-            );
-        }
-
-        let _guard = self.lock.lock().unwrap();
-        let m_lit = xla::Literal::vec1(&m)
-            .reshape(&[b as i64, n as i64, n as i64])
-            .ok()?;
-        let w_lit = xla::Literal::vec1(&w).reshape(&[b as i64, n as i64]).ok()?;
-        let result = variant
-            .exe
-            .execute::<xla::Literal>(&[m_lit, w_lit])
-            .ok()?[0][0]
-            .to_literal_sync()
-            .ok()?;
-        // aot.py lowers with return_tuple=True: a 2-tuple (up, down).
-        let (up_lit, down_lit) = result.to_tuple2().ok()?;
-        let up_all = up_lit.to_vec::<f32>().ok()?;
-        let down_all = down_lit.to_vec::<f32>().ok()?;
-
-        let mut out = Vec::with_capacity(idxs.len());
-        for (slot, &i) in idxs.iter().enumerate() {
-            let k = insts[i].graph.len();
-            let up = up_all[slot * n..slot * n + k].iter().map(|&x| x as f64).collect();
-            let down = down_all[slot * n..slot * n + k].iter().map(|&x| x as f64).collect();
-            out.push(Ranks { up, down });
-        }
-        Some(out)
+    /// Always `None`: the caller falls back to the native engine.
+    pub fn ranks_batch(&self, _insts: &[ProblemInstance]) -> Option<Vec<Ranks>> {
+        None
     }
 }

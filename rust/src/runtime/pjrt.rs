@@ -1,0 +1,184 @@
+//! The real PJRT-backed rank engine (requires the external `xla` crate;
+//! compiled only with `--features xla`). See the module docs in
+//! [`super`] for the wire format and threading contract.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::manifest::Manifest;
+use super::NEG;
+use crate::instance::ProblemInstance;
+use crate::ranks::Ranks;
+
+/// One compiled rank executable (fixed batch × padded size × iteration
+/// bound).
+struct Variant {
+    batch: usize,
+    n: usize,
+    /// Longest path (in edges) this artifact's fixpoint provably covers.
+    iters: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Loads and runs the AOT rank artifacts. Thread-safe: executions are
+/// serialized through a mutex (the PJRT CPU client is not Sync-safe for
+/// concurrent executions through the raw C API wrappers).
+pub struct RankEngine {
+    variants: Vec<Variant>, // ascending by n
+    lock: Mutex<()>,
+}
+
+// SAFETY: every execution and literal construction touching the PJRT
+// client goes through `self.lock`, so the engine is never used from two
+// threads at once; the PJRT CPU plugin itself is documented thread-safe
+// for compiled-executable execution. The raw pointers inside the `xla`
+// wrappers are what suppress the auto-traits.
+unsafe impl Send for RankEngine {}
+unsafe impl Sync for RankEngine {}
+
+impl std::fmt::Debug for RankEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ns: Vec<usize> = self.variants.iter().map(|v| v.n).collect();
+        write!(f, "RankEngine {{ padded sizes: {ns:?} }}")
+    }
+}
+
+impl RankEngine {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on a fresh PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT client: {e}"))?;
+        let mut variants = Vec::new();
+        for entry in &manifest.entries {
+            let path: PathBuf = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or("non-UTF8 artifact path")?,
+            )
+            .map_err(|e| format!("parse {}: {e}", entry.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format!("compile {}: {e}", entry.file))?;
+            variants.push(Variant {
+                batch: entry.batch,
+                n: entry.n,
+                iters: entry.iters,
+                exe,
+            });
+        }
+        if variants.is_empty() {
+            return Err("manifest lists no artifacts".into());
+        }
+        variants.sort_by_key(|v| v.n);
+        Ok(RankEngine { variants, lock: Mutex::new(()) })
+    }
+
+    /// Default artifact location (`artifacts/`, overridable with the
+    /// `PTGS_ARTIFACTS` environment variable).
+    pub fn load_default() -> Result<Self, String> {
+        let dir = std::env::var("PTGS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    /// Largest padded size available.
+    pub fn max_tasks(&self) -> usize {
+        self.variants.last().map(|v| v.n).unwrap_or(0)
+    }
+
+    /// Smallest variant that fits `num_tasks` tasks AND `depth` longest-
+    /// path edges (the artifact's fixpoint iteration bound).
+    fn variant_for(&self, num_tasks: usize, depth: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.n >= num_tasks && v.iters >= depth)
+    }
+
+    /// Ranks for a single instance; `None` when the graph exceeds every
+    /// compiled padding or iteration bound (caller falls back to the
+    /// native engine).
+    pub fn ranks_one(&self, inst: &ProblemInstance) -> Option<Ranks> {
+        self.ranks_batch(std::slice::from_ref(inst))
+            .map(|mut v| v.pop().unwrap())
+    }
+
+    /// Ranks for a batch of instances. All instances must fit some
+    /// compiled variant; the engine groups them by the smallest fitting
+    /// variant and pads partial batches with inert zero graphs.
+    pub fn ranks_batch(&self, insts: &[ProblemInstance]) -> Option<Vec<Ranks>> {
+        let depths: Vec<usize> = insts
+            .iter()
+            .map(|i| crate::graph::topo::longest_path_len(&i.graph))
+            .collect();
+        if insts
+            .iter()
+            .zip(&depths)
+            .any(|(i, &d)| self.variant_for(i.graph.len(), d).is_none())
+        {
+            return None;
+        }
+        let mut out: Vec<Option<Ranks>> = vec![None; insts.len()];
+        // Group instance indices by variant padded size.
+        for variant in &self.variants {
+            let idxs: Vec<usize> = (0..insts.len())
+                .filter(|&i| {
+                    let n = insts[i].graph.len();
+                    self.variant_for(n, depths[i]).map(|v| v.n) == Some(variant.n)
+                })
+                .collect();
+            for chunk in idxs.chunks(variant.batch) {
+                let ranks = self.execute_chunk(variant, insts, chunk)?;
+                for (slot, r) in chunk.iter().zip(ranks) {
+                    out[*slot] = Some(r);
+                }
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// Execute one padded batch through the compiled executable.
+    fn execute_chunk(
+        &self,
+        variant: &Variant,
+        insts: &[ProblemInstance],
+        idxs: &[usize],
+    ) -> Option<Vec<Ranks>> {
+        let (b, n) = (variant.batch, variant.n);
+        let mut m = vec![NEG; b * n * n];
+        let mut w = vec![0.0f32; b * n];
+        for (slot, &i) in idxs.iter().enumerate() {
+            super::encode::encode_into(
+                &insts[i],
+                n,
+                &mut m[slot * n * n..(slot + 1) * n * n],
+                &mut w[slot * n..(slot + 1) * n],
+            );
+        }
+
+        let _guard = self.lock.lock().unwrap();
+        let m_lit = xla::Literal::vec1(&m)
+            .reshape(&[b as i64, n as i64, n as i64])
+            .ok()?;
+        let w_lit = xla::Literal::vec1(&w).reshape(&[b as i64, n as i64]).ok()?;
+        let result = variant
+            .exe
+            .execute::<xla::Literal>(&[m_lit, w_lit])
+            .ok()?[0][0]
+            .to_literal_sync()
+            .ok()?;
+        // aot.py lowers with return_tuple=True: a 2-tuple (up, down).
+        let (up_lit, down_lit) = result.to_tuple2().ok()?;
+        let up_all = up_lit.to_vec::<f32>().ok()?;
+        let down_all = down_lit.to_vec::<f32>().ok()?;
+
+        let mut out = Vec::with_capacity(idxs.len());
+        for (slot, &i) in idxs.iter().enumerate() {
+            let k = insts[i].graph.len();
+            let up = up_all[slot * n..slot * n + k].iter().map(|&x| x as f64).collect();
+            let down = down_all[slot * n..slot * n + k].iter().map(|&x| x as f64).collect();
+            out.push(Ranks { up, down });
+        }
+        Some(out)
+    }
+}

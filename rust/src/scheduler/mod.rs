@@ -23,6 +23,7 @@ mod window;
 
 pub use compare::CompareFn;
 pub use lookahead::LookaheadScheduler;
+pub(crate) use parametric::Entry as ReadyEntry;
 pub use parametric::ParametricScheduler;
 pub use priority::{priorities, PriorityFn};
 pub use window::{data_available_time, window_append_only, window_insertion, Candidate};

@@ -37,9 +37,11 @@ pub struct ParametricScheduler {
 }
 
 /// Priority-queue entry: max-heap by (priority, Reverse(task id)) so that
-/// ties break toward the smaller task id, deterministically.
+/// ties break toward the smaller task id, deterministically. Shared with
+/// the execution simulator's online replanner ([`crate::sim::replay`]),
+/// which must reproduce exactly this tie-break.
 #[derive(PartialEq)]
-struct Entry(f64, Reverse<TaskId>);
+pub(crate) struct Entry(pub(crate) f64, pub(crate) Reverse<TaskId>);
 
 impl Eq for Entry {}
 impl PartialOrd for Entry {

@@ -1,0 +1,130 @@
+//! Deterministic discrete-event queue.
+//!
+//! Events are ordered by `(time, event-id)`: time first (via
+//! [`f64::total_cmp`], so the order is total even under exotic float
+//! values), then by the monotonically increasing id assigned at push
+//! time. Two events at the same timestamp therefore pop in push order,
+//! which makes every simulation replayable bit-for-bit — the property
+//! all the simulator invariant tests lean on.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::TaskId;
+use crate::network::NodeId;
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A task's execution completed on its node.
+    TaskFinished { task: TaskId },
+    /// One dependency transfer arrived at the destination task's node.
+    TransferArrived { src: TaskId, dst: TaskId, at: NodeId },
+}
+
+/// One scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    /// Tie-break sequence number (assigned by [`EventQueue::push`]).
+    pub id: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+/// Min-queue of events keyed by `(time, event-id)`.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    next_id: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_id: 0 }
+    }
+
+    /// Schedule `kind` at `time`; returns the assigned event id.
+    pub fn push(&mut self, time: f64, kind: EventKind) -> u64 {
+        debug_assert!(time.is_finite(), "event time must be finite, got {time}");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.heap.push(Reverse(Event { time, id, kind }));
+        id
+    }
+
+    /// Pop the earliest event (ties in push order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::TaskFinished { task: 0 });
+        q.push(1.0, EventKind::TaskFinished { task: 1 });
+        q.push(2.0, EventKind::TaskFinished { task: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for t in 0..5 {
+            q.push(1.0, EventKind::TaskFinished { task: t });
+        }
+        let tasks: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::TaskFinished { task } => task,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tasks, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(0.5, EventKind::TransferArrived { src: 0, dst: 1, at: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+}

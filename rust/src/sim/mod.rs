@@ -1,0 +1,271 @@
+//! Event-driven schedule execution simulator (robustness evaluation).
+//!
+//! The paper scores its 72 parametric schedulers by *static* makespan —
+//! the plan's own cost model. Real heterogeneous networks deviate from
+//! cost estimates, and simulation studies (DSLab; PISA's adversarial
+//! instances) show that static makespan alone can misrank schedulers
+//! under perturbation. This module replays a planned [`Schedule`]
+//! against a *realized* world and reports what actually happens:
+//!
+//! * [`Perturbation`] / [`NoiseTrace`] — multiplicative lognormal noise
+//!   on compute and communication plus whole-run node slowdowns, sampled
+//!   deterministically (per instance and seed, never per scheduler) via
+//!   [`crate::datasets::rng::Rng`];
+//! * [`perturbed_instance`] — folds a trace into an *effective*
+//!   [`ProblemInstance`], the world the schedule executes in;
+//! * [`replay_static`] — event-driven replay (queue keyed by
+//!   `(time, event-id)`, see [`event`]) that keeps the planned
+//!   assignment and per-node order while times shift;
+//! * [`replay_reschedule`] — online replanning: when realized starts
+//!   drift past the slack budget, the not-yet-started frontier is
+//!   re-scheduled with the same parametric policy;
+//! * [`simulate`] — the policy-level entry point used by
+//!   [`crate::benchmark::Harness`] and the robustness analysis.
+//!
+//! Two invariants anchor the whole module (enforced in
+//! `rust/tests/proptest_invariants.rs`):
+//!
+//! 1. **Zero noise is exact**: with [`Perturbation::none`] the simulator
+//!    reproduces the planned schedule — every start, end, and the
+//!    makespan — bit-for-bit, for all 72 configs.
+//! 2. **Simulated schedules are real schedules**: the replayed schedule
+//!    always satisfies [`Schedule::validate`] against the effective
+//!    instance, and the whole pipeline is deterministic per seed.
+//!
+//! The [`ReplayPolicy::Reschedule`] policy is evaluated against the
+//! static replay of the *same* noise trace and the better realized
+//! schedule is kept — it models a replanning controller that can fall
+//! back to the incumbent plan, so rescheduling never degrades the
+//! realized makespan.
+
+pub mod event;
+pub mod perturb;
+pub mod replay;
+
+pub use perturb::{perturbed_instance, NoiseTrace, Perturbation};
+pub use replay::{replay_reschedule, replay_static};
+
+use crate::instance::ProblemInstance;
+use crate::schedule::Schedule;
+use crate::scheduler::SchedulerConfig;
+
+/// What the executor does when reality drifts from the plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplayPolicy {
+    /// Keep the planned assignment and order; only times shift.
+    Static,
+    /// Re-run the configured parametric policy on the not-yet-started
+    /// frontier whenever a task's realized start drifts more than
+    /// `slack × planned makespan` past its planned start. Falls back to
+    /// the static replay when replanning does not pay off.
+    Reschedule {
+        /// Drift budget as a fraction of the planned makespan.
+        slack: f64,
+    },
+}
+
+/// One simulation request: a noise model, a seed, and a replay policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimOptions {
+    pub perturb: Perturbation,
+    pub seed: u64,
+    pub policy: ReplayPolicy,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            perturb: Perturbation::none(),
+            seed: 0x51D_E5EED,
+            policy: ReplayPolicy::Static,
+        }
+    }
+}
+
+/// The realized execution of one plan under one noise trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimOutcome {
+    /// The realized schedule (valid against the effective instance).
+    pub schedule: Schedule,
+    /// Realized makespan (`schedule.makespan()`).
+    pub makespan: f64,
+    /// The plan's own (static) makespan, for robustness ratios.
+    pub planned_makespan: f64,
+    /// Replans performed (0 under [`ReplayPolicy::Static`]).
+    pub replans: usize,
+    /// True when rescheduling was requested but the static replay won.
+    pub fell_back: bool,
+}
+
+impl SimOutcome {
+    /// Robustness ratio: realized over planned makespan (1.0 = the plan
+    /// held exactly; > 1 = the schedule stretched under noise).
+    pub fn robustness_ratio(&self) -> f64 {
+        if self.planned_makespan > 0.0 {
+            self.makespan / self.planned_makespan
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Simulate the execution of `plan` (produced by `cfg` on `inst`) under
+/// the given noise model and replay policy.
+///
+/// The noise trace depends only on `(inst, opts.perturb, opts.seed)` —
+/// every scheduler evaluated on the same instance and seed faces the
+/// identical realized world, which is what makes robustness ratios
+/// comparable across the 72 configs.
+pub fn simulate(
+    inst: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    opts: &SimOptions,
+) -> SimOutcome {
+    let trace = NoiseTrace::sample(inst, &opts.perturb, opts.seed);
+    let eff = perturbed_instance(inst, &trace);
+    simulate_against(inst, &eff, plan, cfg, opts.policy)
+}
+
+/// The policy core of [`simulate`], against a pre-built effective
+/// instance. Sweeps use this to realize each noisy world **once** and
+/// replay every scheduler's plan against it, instead of re-sampling the
+/// (scheduler-independent) trace per scheduler.
+pub fn simulate_against(
+    inst: &ProblemInstance,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    policy: ReplayPolicy,
+) -> SimOutcome {
+    let planned_makespan = plan.makespan();
+    let static_sched = replay_static(eff, plan);
+    let (schedule, replans, fell_back) = match policy {
+        ReplayPolicy::Static => (static_sched, 0, false),
+        ReplayPolicy::Reschedule { slack } => {
+            let (resched, replans) = replay_reschedule(inst, eff, plan, cfg, slack);
+            if resched.makespan() <= static_sched.makespan() {
+                (resched, replans, false)
+            } else {
+                (static_sched, replans, true)
+            }
+        }
+    };
+    let makespan = schedule.makespan();
+    SimOutcome { schedule, makespan, planned_makespan, replans, fell_back }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{DatasetSpec, Structure};
+
+    fn inst() -> ProblemInstance {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::OutTrees, 1.0) };
+        spec.generate().pop().unwrap()
+    }
+
+    #[test]
+    fn zero_noise_outcome_is_exact() {
+        let inst = inst();
+        for cfg in [SchedulerConfig::heft(), SchedulerConfig::sufferage_classic()] {
+            let plan = cfg.build().schedule(&inst);
+            let out = simulate(&inst, &plan, &cfg, &SimOptions::default());
+            assert_eq!(out.makespan, plan.makespan());
+            assert_eq!(out.schedule, plan);
+            assert_eq!(out.robustness_ratio(), 1.0);
+            assert_eq!(out.replans, 0);
+        }
+    }
+
+    #[test]
+    fn noisy_outcome_validates_and_is_deterministic() {
+        let inst = inst();
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let opts = SimOptions {
+            perturb: Perturbation::lognormal(0.3).with_slowdown(0.2, 2.0),
+            seed: 42,
+            policy: ReplayPolicy::Static,
+        };
+        let a = simulate(&inst, &plan, &cfg, &opts);
+        let b = simulate(&inst, &plan, &cfg, &opts);
+        assert_eq!(a, b, "same seed must replay identically");
+        let trace = NoiseTrace::sample(&inst, &opts.perturb, opts.seed);
+        let eff = perturbed_instance(&inst, &trace);
+        a.schedule.validate(&eff).unwrap();
+        assert!(a.makespan > 0.0);
+    }
+
+    #[test]
+    fn reschedule_never_worse_than_static() {
+        let inst = inst();
+        for cfg in [SchedulerConfig::heft(), SchedulerConfig::mct()] {
+            let plan = cfg.build().schedule(&inst);
+            for seed in 0..8 {
+                let perturb = Perturbation::lognormal(0.5);
+                let st = simulate(
+                    &inst,
+                    &plan,
+                    &cfg,
+                    &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
+                );
+                let re = simulate(
+                    &inst,
+                    &plan,
+                    &cfg,
+                    &SimOptions {
+                        perturb,
+                        seed,
+                        policy: ReplayPolicy::Reschedule { slack: 0.05 },
+                    },
+                );
+                assert!(
+                    re.makespan <= st.makespan,
+                    "{} seed {seed}: reschedule {} > static {}",
+                    cfg.name(),
+                    re.makespan,
+                    st.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_realize_different_worlds() {
+        let inst = inst();
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let perturb = Perturbation::lognormal(0.4);
+        let makespans: Vec<f64> = (0..6)
+            .map(|seed| {
+                simulate(
+                    &inst,
+                    &plan,
+                    &cfg,
+                    &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
+                )
+                .makespan
+            })
+            .collect();
+        let distinct = makespans
+            .iter()
+            .filter(|&&m| (m - makespans[0]).abs() > 1e-12)
+            .count();
+        assert!(distinct > 0, "noise must actually move the makespan: {makespans:?}");
+    }
+
+    #[test]
+    fn empty_instance_simulates_trivially() {
+        let empty = ProblemInstance::new(
+            "e",
+            crate::graph::TaskGraph::new(),
+            crate::network::Network::homogeneous(2, 1.0),
+        );
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&empty);
+        let out = simulate(&empty, &plan, &cfg, &SimOptions::default());
+        assert_eq!(out.makespan, 0.0);
+        assert_eq!(out.robustness_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Perturbation models: how a realized execution deviates from the cost
+//! estimates the scheduler planned with.
+//!
+//! A [`Perturbation`] describes the noise *distribution*; a
+//! [`NoiseTrace`] is one concrete sample of it for one instance —
+//! multiplicative factors on every task cost, every edge data size, and
+//! every node speed. Traces are drawn from the crate's deterministic
+//! [`Rng`], so a `(instance, model, seed)` triple always yields the same
+//! trace; crucially the trace depends only on the *instance*, never on
+//! the scheduler, so every scheduler is evaluated against the identical
+//! realized world.
+//!
+//! [`perturbed_instance`] folds a trace back into a regular
+//! [`ProblemInstance`] (costs ×= task factor, edge data ×= edge factor,
+//! speeds ÷= node slowdown). The simulator replays schedules against
+//! that *effective* instance, which buys two structural guarantees:
+//!
+//! * a zero-noise trace is all exact `1.0`s, so the effective instance
+//!   is bit-identical to the original and replay reproduces the planned
+//!   schedule exactly, and
+//! * the simulated schedule always satisfies [`crate::schedule::Schedule::validate`]
+//!   against the effective instance, because realized durations and
+//!   transfer times *are* that instance's cost model.
+
+use crate::datasets::rng::Rng;
+use crate::graph::TaskGraph;
+use crate::instance::ProblemInstance;
+use crate::network::Network;
+
+/// A multiplicative noise model over compute costs, communication
+/// volumes, and node speeds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Perturbation {
+    /// Sigma of the mean-one lognormal factor on every task's compute
+    /// cost (0 = exact).
+    pub compute_sigma: f64,
+    /// Sigma of the mean-one lognormal factor on every edge's data size
+    /// (0 = exact).
+    pub comm_sigma: f64,
+    /// Probability that a node is degraded for the whole run.
+    pub slowdown_prob: f64,
+    /// Speed divisor applied to degraded nodes (≥ 1; 2.0 = half speed).
+    pub slowdown_factor: f64,
+}
+
+impl Perturbation {
+    /// No noise at all: the realized execution equals the plan.
+    pub fn none() -> Self {
+        Perturbation {
+            compute_sigma: 0.0,
+            comm_sigma: 0.0,
+            slowdown_prob: 0.0,
+            slowdown_factor: 1.0,
+        }
+    }
+
+    /// Lognormal noise of the same sigma on compute and communication,
+    /// no node slowdowns.
+    pub fn lognormal(sigma: f64) -> Self {
+        Perturbation { compute_sigma: sigma, comm_sigma: sigma, ..Perturbation::none() }
+    }
+
+    /// Add node-slowdown faults to a model.
+    pub fn with_slowdown(mut self, prob: f64, factor: f64) -> Self {
+        assert!((0.0..=1.0).contains(&prob), "slowdown_prob must be in [0,1]");
+        assert!(factor >= 1.0, "slowdown_factor must be >= 1");
+        self.slowdown_prob = prob;
+        self.slowdown_factor = factor;
+        self
+    }
+
+    /// True when the model can only produce unit traces.
+    pub fn is_none(&self) -> bool {
+        self.compute_sigma == 0.0 && self.comm_sigma == 0.0 && self.slowdown_prob == 0.0
+    }
+}
+
+/// One realized sample of a [`Perturbation`] for one instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NoiseTrace {
+    /// Per-task compute-cost multiplier.
+    pub task_factor: Vec<f64>,
+    /// Per-edge data-size multiplier, aligned with
+    /// [`TaskGraph::edges`] iteration order.
+    pub edge_factor: Vec<f64>,
+    /// Per-node slowdown divisor on speed (≥ 1).
+    pub node_factor: Vec<f64>,
+}
+
+impl NoiseTrace {
+    /// Sample a trace for `inst` from `model`, deterministically in
+    /// `seed`. Zero-sigma components yield factors of exactly `1.0`
+    /// (no floating-point residue), which is what makes the zero-noise
+    /// replay invariant bit-exact.
+    pub fn sample(inst: &ProblemInstance, model: &Perturbation, seed: u64) -> NoiseTrace {
+        assert!(model.compute_sigma >= 0.0 && model.comm_sigma >= 0.0);
+        let mut rng = Rng::seeded(seed ^ 0x51AB_1E5E_ED00_D1CE);
+        // Mean-one lognormal: E[exp(N(-s²/2, s))] = 1, so noise does not
+        // systematically inflate or deflate the workload.
+        let factor = |sigma: f64, rng: &mut Rng| -> f64 {
+            if sigma == 0.0 {
+                1.0
+            } else {
+                rng.lognormal(-sigma * sigma / 2.0, sigma)
+            }
+        };
+        let g = &inst.graph;
+        let task_factor: Vec<f64> =
+            (0..g.len()).map(|_| factor(model.compute_sigma, &mut rng)).collect();
+        let edge_factor: Vec<f64> =
+            (0..g.num_edges()).map(|_| factor(model.comm_sigma, &mut rng)).collect();
+        let node_factor: Vec<f64> = (0..inst.network.len())
+            .map(|_| {
+                if model.slowdown_prob > 0.0 && rng.uniform() < model.slowdown_prob {
+                    model.slowdown_factor
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        NoiseTrace { task_factor, edge_factor, node_factor }
+    }
+
+    /// A trace of exact `1.0`s (what [`Perturbation::none`] samples).
+    pub fn unit(inst: &ProblemInstance) -> NoiseTrace {
+        NoiseTrace {
+            task_factor: vec![1.0; inst.graph.len()],
+            edge_factor: vec![1.0; inst.graph.num_edges()],
+            node_factor: vec![1.0; inst.network.len()],
+        }
+    }
+
+    /// True when every factor is exactly `1.0`.
+    pub fn is_unit(&self) -> bool {
+        self.task_factor.iter().all(|&f| f == 1.0)
+            && self.edge_factor.iter().all(|&f| f == 1.0)
+            && self.node_factor.iter().all(|&f| f == 1.0)
+    }
+}
+
+/// Fold a noise trace into an *effective* problem instance: the world
+/// the schedule actually runs in. Task costs and edge data sizes are
+/// multiplied by their factors; node speeds are divided by the slowdown
+/// factor. Topology, names, and link strengths are unchanged.
+pub fn perturbed_instance(inst: &ProblemInstance, trace: &NoiseTrace) -> ProblemInstance {
+    let g = &inst.graph;
+    assert_eq!(trace.task_factor.len(), g.len(), "trace/task arity mismatch");
+    assert_eq!(trace.edge_factor.len(), g.num_edges(), "trace/edge arity mismatch");
+    assert_eq!(
+        trace.node_factor.len(),
+        inst.network.len(),
+        "trace/node arity mismatch"
+    );
+
+    let mut ng = TaskGraph::new();
+    for t in 0..g.len() {
+        ng.add_task(g.name(t), g.cost(t) * trace.task_factor[t]);
+    }
+    for (k, (s, d, data)) in g.edges().enumerate() {
+        ng.add_edge(s, d, data * trace.edge_factor[k]);
+    }
+
+    let n = inst.network.len();
+    let speeds: Vec<f64> = (0..n)
+        .map(|v| inst.network.speed(v) / trace.node_factor[v])
+        .collect();
+    let mut links = vec![0.0; n * n];
+    for v in 0..n {
+        for w in 0..n {
+            links[v * n + w] = inst.network.link(v, w);
+        }
+    }
+    ProblemInstance::new(
+        format!("{}~sim", inst.name),
+        ng,
+        Network::new(speeds, links),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{DatasetSpec, Structure};
+
+    fn inst() -> ProblemInstance {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+        spec.generate().pop().unwrap()
+    }
+
+    #[test]
+    fn zero_noise_trace_is_unit() {
+        let inst = inst();
+        let trace = NoiseTrace::sample(&inst, &Perturbation::none(), 99);
+        assert!(trace.is_unit());
+        assert_eq!(trace, NoiseTrace::unit(&inst));
+    }
+
+    #[test]
+    fn unit_trace_effective_instance_is_bit_identical() {
+        let inst = inst();
+        let eff = perturbed_instance(&inst, &NoiseTrace::unit(&inst));
+        assert_eq!(eff.graph, inst.graph);
+        assert_eq!(eff.network, inst.network);
+    }
+
+    #[test]
+    fn sampling_deterministic_in_seed() {
+        let inst = inst();
+        let model = Perturbation::lognormal(0.4).with_slowdown(0.3, 2.0);
+        let a = NoiseTrace::sample(&inst, &model, 7);
+        let b = NoiseTrace::sample(&inst, &model, 7);
+        assert_eq!(a, b);
+        let c = NoiseTrace::sample(&inst, &model, 8);
+        assert_ne!(a, c, "different seed ⇒ different trace");
+    }
+
+    #[test]
+    fn factors_positive_and_slowdowns_bounded() {
+        let inst = inst();
+        let model = Perturbation::lognormal(0.5).with_slowdown(0.5, 3.0);
+        for seed in 0..20 {
+            let t = NoiseTrace::sample(&inst, &model, seed);
+            assert!(t.task_factor.iter().all(|&f| f > 0.0));
+            assert!(t.edge_factor.iter().all(|&f| f > 0.0));
+            assert!(t.node_factor.iter().all(|&f| f == 1.0 || f == 3.0));
+        }
+    }
+
+    #[test]
+    fn mean_one_noise_is_roughly_unbiased() {
+        let inst = inst();
+        let model = Perturbation::lognormal(0.3);
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for seed in 0..300 {
+            let t = NoiseTrace::sample(&inst, &model, seed);
+            sum += t.task_factor.iter().sum::<f64>();
+            count += t.task_factor.len();
+        }
+        let mean = sum / count as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean factor {mean}");
+    }
+
+    #[test]
+    fn perturbed_instance_scales_costs() {
+        let inst = inst();
+        let model = Perturbation::lognormal(0.4);
+        let trace = NoiseTrace::sample(&inst, &model, 5);
+        let eff = perturbed_instance(&inst, &trace);
+        for t in 0..inst.graph.len() {
+            let want = inst.graph.cost(t) * trace.task_factor[t];
+            assert_eq!(eff.graph.cost(t), want);
+        }
+        for (k, ((s, d, w), (es, ed, ew))) in
+            inst.graph.edges().zip(eff.graph.edges()).enumerate()
+        {
+            assert_eq!((s, d), (es, ed));
+            assert_eq!(ew, w * trace.edge_factor[k]);
+        }
+    }
+
+    #[test]
+    fn slowdown_divides_speed() {
+        let inst = inst();
+        let mut trace = NoiseTrace::unit(&inst);
+        trace.node_factor[0] = 2.0;
+        let eff = perturbed_instance(&inst, &trace);
+        assert_eq!(eff.network.speed(0), inst.network.speed(0) / 2.0);
+        for v in 1..inst.network.len() {
+            assert_eq!(eff.network.speed(v), inst.network.speed(v));
+        }
+    }
+}

@@ -1,0 +1,504 @@
+//! Schedule replay engines: execute a planned [`Schedule`] against an
+//! *effective* (possibly perturbed) instance, event by event.
+//!
+//! [`replay_static`] keeps the planned assignment and per-node order and
+//! lets times shift; [`replay_reschedule`] additionally re-runs the
+//! configured parametric policy on the not-yet-started frontier whenever
+//! realized starts fall behind plan by more than the slack budget.
+//!
+//! ## Exactness contract
+//!
+//! For every schedule produced by the crate's list schedulers, a task's
+//! planned start equals `max(end of the previous task on its node,
+//! data-available time)` — append-only windows by definition, and
+//! insertion-based windows by the gap-scan construction (the immediate
+//! timeline predecessor always carries the maximal end among earlier
+//! tasks on the node, and a task only starts later than that end when
+//! its data-available time binds). [`replay_static`] recomputes exactly
+//! that expression with the same `f64` operations, so replaying a plan
+//! against the *unperturbed* instance reproduces every start, end, and
+//! the makespan bit-for-bit. The proptest suite pins this for all 72
+//! configs. (Known caveat: the insertion window's `EPS` allowance lets
+//! a gap fill end up to 1e-9 *past* the next task's planned start, in
+//! which case strict replay would shift that task by ≤ EPS. For
+//! continuous random costs this is a measure-zero coincidence and the
+//! fixed-seed test instances do not hit it.)
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::event::{EventKind, EventQueue};
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+use crate::network::NodeId;
+use crate::ranks::native;
+use crate::schedule::{Assignment, Schedule};
+use crate::scheduler::{data_available_time, priorities, Candidate, ReadyEntry, SchedulerConfig};
+
+/// Event-driven replay of `plan` on `eff`, keeping the planned
+/// task→node assignment and the planned per-node execution order.
+///
+/// Each task starts as soon as (a) the previous task in its node's
+/// planned order has finished and (b) every dependency transfer has
+/// arrived at its node (transfers leave when the predecessor finishes
+/// and take `eff`'s communication time). Durations and transfer times
+/// come from `eff`, so the result always validates against `eff`.
+///
+/// Panics if `plan` is not a complete schedule for `eff`'s task set, or
+/// if the plan's node orders contradict the DAG (which would deadlock a
+/// real executor).
+pub fn replay_static(eff: &ProblemInstance, plan: &Schedule) -> Schedule {
+    replay_with_release(eff, plan, None)
+}
+
+/// [`replay_static`] with optional per-task release times: task `t` may
+/// not start before `release[t]` even if its node and data are ready.
+/// The reschedule controller uses this to pin every replanned task to
+/// the wall-clock moment its replan happened — without it, replay would
+/// let "online" decisions start work before the controller could have
+/// known to move it (hindsight bias).
+fn replay_with_release(
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    release: Option<&[f64]>,
+) -> Schedule {
+    let g = &eff.graph;
+    let net = &eff.network;
+    let n = g.len();
+    let mut out = Schedule::new(n, net.len());
+    if n == 0 {
+        return out;
+    }
+
+    let node_of: Vec<NodeId> = (0..n)
+        .map(|t| {
+            plan.assignment(t)
+                .unwrap_or_else(|| panic!("replay needs a complete plan; task {t} unscheduled"))
+                .node
+        })
+        .collect();
+
+    // Planned execution order per node (timelines are start-sorted).
+    let queue: Vec<Vec<TaskId>> = (0..net.len())
+        .map(|v| plan.timeline(v).map(|a| a.task).collect())
+        .collect();
+    let mut qpos = vec![0usize; net.len()];
+    let mut node_free = vec![0.0f64; net.len()];
+    let mut pending: Vec<usize> = (0..n).map(|t| g.predecessors(t).len()).collect();
+    let mut started = vec![false; n];
+    let mut finished = 0usize;
+    let mut events = EventQueue::new();
+    // Seed data-ready with the release floor (0 everywhere for plain
+    // static replay — `max` with 0 leaves every start bit-identical).
+    let mut data_ready: Vec<f64> = match release {
+        Some(r) => {
+            assert_eq!(r.len(), n, "release/task arity mismatch");
+            r.to_vec()
+        }
+        None => vec![0.0f64; n],
+    };
+
+    // Start every startable task at the head of node `v`'s queue, in
+    // planned order. A task is startable once its node slot is free
+    // (previous task finished ⇒ `node_free` is its end) and all its
+    // transfers have arrived.
+    #[allow(clippy::too_many_arguments)]
+    fn advance_node(
+        v: NodeId,
+        eff: &ProblemInstance,
+        queue: &[Vec<TaskId>],
+        qpos: &mut [usize],
+        node_free: &mut [f64],
+        started: &mut [bool],
+        pending: &[usize],
+        data_ready: &[f64],
+        out: &mut Schedule,
+        events: &mut EventQueue,
+    ) {
+        while let Some(&t) = queue[v].get(qpos[v]) {
+            if started[t] || pending[t] != 0 {
+                break;
+            }
+            let start = node_free[v].max(data_ready[t]);
+            let end = start + eff.network.exec_time(eff.graph.cost(t), v);
+            out.insert(Assignment { task: t, node: v, start, end });
+            started[t] = true;
+            qpos[v] += 1;
+            node_free[v] = end;
+            events.push(end, EventKind::TaskFinished { task: t });
+        }
+    }
+
+    for v in 0..net.len() {
+        advance_node(
+            v,
+            eff,
+            &queue,
+            &mut qpos,
+            &mut node_free,
+            &mut started,
+            &pending,
+            &data_ready,
+            &mut out,
+            &mut events,
+        );
+    }
+
+    while let Some(ev) = events.pop() {
+        match ev.kind {
+            EventKind::TaskFinished { task } => {
+                finished += 1;
+                let end = out.assignment(task).unwrap().end;
+                for &(s, data) in g.successors(task) {
+                    let arrival = end + net.comm_time(data, node_of[task], node_of[s]);
+                    events.push(
+                        arrival,
+                        EventKind::TransferArrived { src: task, dst: s, at: node_of[s] },
+                    );
+                }
+            }
+            EventKind::TransferArrived { src: _, dst, at } => {
+                pending[dst] -= 1;
+                data_ready[dst] = data_ready[dst].max(ev.time);
+                debug_assert_eq!(at, node_of[dst]);
+                advance_node(
+                    at,
+                    eff,
+                    &queue,
+                    &mut qpos,
+                    &mut node_free,
+                    &mut started,
+                    &pending,
+                    &data_ready,
+                    &mut out,
+                    &mut events,
+                );
+            }
+        }
+    }
+
+    assert_eq!(
+        finished, n,
+        "replay deadlocked: plan node order contradicts task precedence"
+    );
+    out
+}
+
+/// Re-plan the uncommitted frontier at wall-clock `now`.
+///
+/// Committed tasks keep their *realized* times (taken from `actual`);
+/// the remaining tasks are list-scheduled with the configured priority
+/// and comparison function over append-only candidate windows clamped
+/// to `now` (an online controller cannot place work in the past). The
+/// replan estimates with *nominal* costs — it does not see future
+/// noise. Sufferage selection is not replayed online (the greedy core
+/// of the policy is); critical-path pinning is honored.
+fn replan(
+    inst: &ProblemInstance,
+    committed: &[bool],
+    actual: &Schedule,
+    now: f64,
+    cfg: &SchedulerConfig,
+    prio: &[f64],
+    pinned: &[Option<NodeId>],
+) -> Schedule {
+    let g = &inst.graph;
+    let net = &inst.network;
+    let n = g.len();
+    let mut plan = Schedule::new(n, net.len());
+    for t in 0..n {
+        if committed[t] {
+            plan.insert(*actual.assignment(t).unwrap());
+        }
+    }
+
+    let mut missing: Vec<usize> = (0..n)
+        .map(|t| {
+            if committed[t] {
+                0
+            } else {
+                g.predecessors(t).iter().filter(|&&(p, _)| !committed[p]).count()
+            }
+        })
+        .collect();
+    let mut ready: BinaryHeap<ReadyEntry> = (0..n)
+        .filter(|&t| !committed[t] && missing[t] == 0)
+        .map(|t| ReadyEntry(prio[t], Reverse(t)))
+        .collect();
+
+    while let Some(ReadyEntry(_, Reverse(t))) = ready.pop() {
+        let candidate = |u: NodeId| -> Candidate {
+            let dat = data_available_time(inst, &plan, t, u);
+            let start = dat.max(plan.node_finish_time(u)).max(now);
+            Candidate { node: u, start, end: start + net.exec_time(g.cost(t), u) }
+        };
+        let best = match pinned[t] {
+            Some(u) => candidate(u),
+            None => {
+                let mut best = candidate(0);
+                for u in 1..net.len() {
+                    let c = candidate(u);
+                    if cfg.compare.eval(&c, &best) < 0.0 {
+                        best = c;
+                    }
+                }
+                best
+            }
+        };
+        plan.insert(Assignment { task: t, node: best.node, start: best.start, end: best.end });
+        for &(s, _) in g.successors(t) {
+            if committed[s] {
+                continue;
+            }
+            missing[s] -= 1;
+            if missing[s] == 0 {
+                ready.push(ReadyEntry(prio[s], Reverse(s)));
+            }
+        }
+    }
+    debug_assert!(plan.is_complete(), "replan must place every task");
+    plan
+}
+
+/// Replay with online rescheduling: monitor the static replay of the
+/// current plan, and when a not-yet-started task's realized start drifts
+/// more than `slack × planned makespan` past its planned start, commit
+/// everything already running, re-plan the frontier with the configured
+/// policy, and continue. Returns the realized schedule and the number of
+/// replans performed. Replans are capped at the task count, which bounds
+/// the loop even under adversarial noise.
+pub fn replay_reschedule(
+    inst: &ProblemInstance,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    slack: f64,
+) -> (Schedule, usize) {
+    let n = inst.graph.len();
+    if n == 0 {
+        return (replay_static(eff, plan), 0);
+    }
+    let slack_abs = slack.max(0.0) * plan.makespan();
+
+    // Policy inputs (nominal ranks, priorities, CP pins) are computed
+    // lazily on the first violation — trials that never drift past the
+    // slack budget (every zero/low-noise trial) skip the rank DP
+    // entirely, which is the expensive per-instance computation on the
+    // sweep hot path.
+    let mut policy_ctx: Option<(Vec<f64>, Vec<Option<NodeId>>)> = None;
+
+    let mut current = plan.clone();
+    let mut committed = vec![false; n];
+    // Release floor: a replanned task may not start before the moment
+    // of the replan that (re)placed it — the controller cannot place
+    // work in the past it only now decided to move.
+    let mut release = vec![0.0f64; n];
+    let mut frontier = 0.0f64;
+    let mut replans = 0usize;
+    loop {
+        let actual = replay_with_release(eff, &current, Some(&release));
+        if replans >= n {
+            return (actual, replans);
+        }
+        // Earliest uncommitted task that fell behind plan (at or after
+        // the last replan point); ties break on task id.
+        let mut viol: Option<(f64, TaskId)> = None;
+        for t in 0..n {
+            if committed[t] {
+                continue;
+            }
+            let a = actual.assignment(t).unwrap();
+            let p = current.assignment(t).unwrap();
+            if a.start > p.start + slack_abs && a.start >= frontier {
+                let key = (a.start, t);
+                if viol.map_or(true, |best| key < best) {
+                    viol = Some(key);
+                }
+            }
+        }
+        let Some((now, _)) = viol else {
+            return (actual, replans);
+        };
+        // Everything that started before the violation moment is
+        // committed: it is running or done and keeps its realized times.
+        for t in 0..n {
+            if actual.assignment(t).unwrap().start < now {
+                committed[t] = true;
+            }
+        }
+        let (prio, pinned) = policy_ctx.get_or_insert_with(|| {
+            let ranks = native::ranks(inst);
+            let prio = priorities(cfg.priority, inst, &ranks);
+            let mut pinned: Vec<Option<NodeId>> = vec![None; n];
+            if cfg.critical_path {
+                let fastest = inst.network.fastest_node();
+                for t in ranks.critical_path(inst, 1e-9) {
+                    pinned[t] = Some(fastest);
+                }
+            }
+            (prio, pinned)
+        });
+        current = replan(inst, &committed, &actual, now, cfg, prio, pinned);
+        for t in 0..n {
+            if !committed[t] {
+                release[t] = release[t].max(now);
+            }
+        }
+        frontier = now;
+        replans += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::sim::perturb::{perturbed_instance, NoiseTrace};
+
+    fn fork_join() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        for i in 0..5 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        for m in 1..=3 {
+            g.add_edge(0, m, 1.0);
+            g.add_edge(m, 4, 1.0);
+        }
+        ProblemInstance::new("fj", g, Network::homogeneous(3, 1.0))
+    }
+
+    #[test]
+    fn zero_noise_replay_reproduces_plan_exactly() {
+        let inst = fork_join();
+        for cfg in SchedulerConfig::all() {
+            let plan = cfg.build().schedule(&inst);
+            let sim = replay_static(&inst, &plan);
+            assert_eq!(sim, plan, "{} drifted under zero noise", cfg.name());
+        }
+    }
+
+    #[test]
+    fn slowdown_stretches_the_schedule() {
+        let inst = fork_join();
+        let plan = SchedulerConfig::heft().build().schedule(&inst);
+        let mut trace = NoiseTrace::unit(&inst);
+        for f in &mut trace.node_factor {
+            *f = 2.0; // every node at half speed
+        }
+        let eff = perturbed_instance(&inst, &trace);
+        let sim = replay_static(&eff, &plan);
+        assert!(sim.validate(&eff).is_ok());
+        // Everything (compute) doubles; comm unchanged — makespan grows
+        // but by at most 2×.
+        assert!(sim.makespan() > plan.makespan());
+        assert!(sim.makespan() <= 2.0 * plan.makespan() + 1e-9);
+    }
+
+    #[test]
+    fn replayed_schedule_validates_against_effective_instance() {
+        let inst = fork_join();
+        let plan = SchedulerConfig::cpop().build().schedule(&inst);
+        let mut trace = NoiseTrace::unit(&inst);
+        trace.task_factor[1] = 3.0; // one branch runs 3× long
+        trace.edge_factor[0] = 2.0; // one transfer doubles
+        let eff = perturbed_instance(&inst, &trace);
+        let sim = replay_static(&eff, &plan);
+        sim.validate(&eff).unwrap();
+        assert!(sim.makespan() >= plan.makespan());
+    }
+
+    #[test]
+    fn preserves_node_assignment_and_order() {
+        let inst = fork_join();
+        let plan = SchedulerConfig::mct().build().schedule(&inst);
+        let mut trace = NoiseTrace::unit(&inst);
+        trace.task_factor[0] = 2.5;
+        let eff = perturbed_instance(&inst, &trace);
+        let sim = replay_static(&eff, &plan);
+        for t in 0..inst.graph.len() {
+            assert_eq!(
+                sim.assignment(t).unwrap().node,
+                plan.assignment(t).unwrap().node
+            );
+        }
+        for v in 0..inst.network.len() {
+            let planned: Vec<usize> = plan.timeline(v).map(|a| a.task).collect();
+            let simmed: Vec<usize> = sim.timeline(v).map(|a| a.task).collect();
+            assert_eq!(planned, simmed, "node {v} order changed");
+        }
+    }
+
+    #[test]
+    fn reschedule_zero_noise_is_a_noop() {
+        let inst = fork_join();
+        for cfg in [SchedulerConfig::heft(), SchedulerConfig::mct()] {
+            let plan = cfg.build().schedule(&inst);
+            let (sim, replans) = replay_reschedule(&inst, &inst, &plan, &cfg, 0.1);
+            assert_eq!(replans, 0, "no drift ⇒ no replan");
+            assert_eq!(sim, plan);
+        }
+    }
+
+    #[test]
+    fn reschedule_beats_static_replay_on_a_stalled_queue() {
+        // Six independent unit tasks planned back-to-back on node 0 of a
+        // 2-node homogeneous network; task 0 stalls 10×. Static replay
+        // keeps the serial queue: t0 [0,10], then t1..t5 → makespan 15.
+        // The controller detects t1's drift at t=10, commits t0, and
+        // replans t1..t5 across both nodes from t=10 → makespan 13.
+        // (This pins replay_reschedule itself — not the policy-level
+        // min-with-static fallback in `simulate`.)
+        let mut g = TaskGraph::new();
+        for i in 0..6 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        let inst = ProblemInstance::new("queue", g, Network::homogeneous(2, 1.0));
+        let mut plan = Schedule::new(6, 2);
+        for t in 0..6 {
+            plan.insert(Assignment { task: t, node: 0, start: t as f64, end: t as f64 + 1.0 });
+        }
+        let mut trace = NoiseTrace::unit(&inst);
+        trace.task_factor[0] = 10.0;
+        let eff = perturbed_instance(&inst, &trace);
+
+        let static_sim = replay_static(&eff, &plan);
+        assert!((static_sim.makespan() - 15.0).abs() < 1e-9, "{}", static_sim.makespan());
+
+        let cfg = SchedulerConfig::heft();
+        let (resched, replans) = replay_reschedule(&inst, &eff, &plan, &cfg, 0.1);
+        resched.validate(&eff).unwrap();
+        assert_eq!(replans, 1, "one drift ⇒ one replan");
+        assert!(
+            (resched.makespan() - 13.0).abs() < 1e-9,
+            "replanner should spread the queue: got {}",
+            resched.makespan()
+        );
+        // No replanned task starts before the replan moment (t = 10):
+        // the controller cannot place work in the past.
+        for t in 1..6 {
+            assert!(resched.assignment(t).unwrap().start >= 10.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn reschedule_moves_work_off_a_stalled_node() {
+        // Plan puts everything behind a task that stalls 10×; with a
+        // tight slack the controller replans the successors elsewhere.
+        let inst = fork_join();
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let mut trace = NoiseTrace::unit(&inst);
+        // Stall one of the fork branches hard.
+        trace.task_factor[1] = 10.0;
+        let eff = perturbed_instance(&inst, &trace);
+        let (sim, _replans) = replay_reschedule(&inst, &eff, &plan, &cfg, 0.05);
+        sim.validate(&eff).unwrap();
+        let static_sim = replay_static(&eff, &plan);
+        // The rescheduled run is a valid execution; it may or may not
+        // beat static replay (the policy layer takes the min), but it
+        // must never corrupt the schedule.
+        assert!(sim.makespan() > 0.0);
+        assert!(static_sim.makespan() > 0.0);
+    }
+}

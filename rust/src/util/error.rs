@@ -1,0 +1,131 @@
+//! Minimal error substrate for the CLI — the vendored crate set has no
+//! `anyhow` (DESIGN.md §Substitutions), so the binary uses this string-
+//! backed error type plus the [`crate::anyhow!`] / [`crate::bail!`]
+//! macros and the [`Context`] extension trait.
+
+use std::fmt;
+
+/// A boxed-string error: cheap to construct, renders its message for
+/// both `Display` and `Debug` (so `{e}` and `{e:#}` read naturally).
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(e: String) -> Error {
+        Error(e)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(e: &str) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// CLI-facing result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, `anyhow`-style: the context line is
+/// prepended to the underlying error message.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $args:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($fmt $(, $args)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`crate::anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let x = 3;
+        let e = crate::anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = crate::anyhow!(String::from("plain"));
+        assert_eq!(format!("{e:?}"), "plain");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 2: inner");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                crate::bail!("nope {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -2,6 +2,7 @@
 //! third-party crates; see DESIGN.md §Substitutions).
 
 pub mod args;
+pub mod error;
 pub mod json;
 
 pub use args::Args;

@@ -1,0 +1,163 @@
+//! Integration tests for the execution simulator: perturbed replay and
+//! online rescheduling over real dataset instances, plus the robustness
+//! sweep surfaces (harness + coordinator).
+
+use ptgs::analysis::{robustness_rows, robustness_table};
+use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::scheduler::SchedulerConfig;
+use ptgs::sim::{
+    perturbed_instance, simulate, NoiseTrace, Perturbation, ReplayPolicy, SimOptions,
+};
+
+fn specs() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec { count: 3, ..DatasetSpec::new(Structure::OutTrees, 1.0) },
+        DatasetSpec { count: 3, ..DatasetSpec::new(Structure::Chains, 2.0) },
+    ]
+}
+
+/// Perturbed replay on dataset instances: valid against the effective
+/// instance, and the noise actually moves realized makespans somewhere
+/// in the grid.
+#[test]
+fn perturbed_replay_on_dataset_instances() {
+    let perturb = Perturbation::lognormal(0.35).with_slowdown(0.2, 2.0);
+    let mut moved = 0usize;
+    for spec in specs() {
+        for (i, inst) in spec.generate().iter().enumerate() {
+            for cfg in [SchedulerConfig::heft(), SchedulerConfig::sufferage_classic()] {
+                let plan = cfg.build().schedule(inst);
+                let seed = 100 + i as u64;
+                let out = simulate(
+                    inst,
+                    &plan,
+                    &cfg,
+                    &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
+                );
+                let trace = NoiseTrace::sample(inst, &perturb, seed);
+                let eff = perturbed_instance(inst, &trace);
+                out.schedule.validate(&eff).unwrap_or_else(|e| {
+                    panic!("{} on {}: {e}", cfg.name(), inst.name)
+                });
+                if (out.makespan - plan.makespan()).abs() > 1e-9 {
+                    moved += 1;
+                }
+            }
+        }
+    }
+    assert!(moved > 0, "perturbation never changed a realized makespan");
+}
+
+/// Online rescheduling never increases the simulated makespan relative
+/// to static replay on the same noise trace (the policy keeps the
+/// incumbent plan when replanning does not pay off), and it actually
+/// replans somewhere in the grid.
+#[test]
+fn reschedule_never_increases_makespan_vs_static_replay() {
+    let perturb = Perturbation::lognormal(0.5).with_slowdown(0.25, 3.0);
+    let mut replanned = 0usize;
+    for spec in specs() {
+        for (i, inst) in spec.generate().iter().enumerate() {
+            for cfg in [SchedulerConfig::heft(), SchedulerConfig::mct()] {
+                let plan = cfg.build().schedule(inst);
+                for seed in 0..4u64 {
+                    let seed = seed * 1000 + i as u64;
+                    let st = simulate(
+                        inst,
+                        &plan,
+                        &cfg,
+                        &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
+                    );
+                    let re = simulate(
+                        inst,
+                        &plan,
+                        &cfg,
+                        &SimOptions {
+                            perturb,
+                            seed,
+                            policy: ReplayPolicy::Reschedule { slack: 0.05 },
+                        },
+                    );
+                    assert!(
+                        re.makespan <= st.makespan,
+                        "{} on {} seed {seed}: reschedule {} > static {}",
+                        cfg.name(),
+                        inst.name,
+                        re.makespan,
+                        st.makespan
+                    );
+                    replanned += re.replans;
+                    // The realized reschedule outcome is a valid
+                    // schedule for the same effective world.
+                    let trace = NoiseTrace::sample(inst, &perturb, seed);
+                    let eff = perturbed_instance(inst, &trace);
+                    re.schedule.validate(&eff).unwrap();
+                }
+            }
+        }
+    }
+    assert!(replanned > 0, "the reschedule policy never triggered a replan");
+}
+
+/// The robustness metric surfaces per config through the harness: zero
+/// noise pins ratio 1.0 exactly; real noise produces finite positive
+/// ratios and a renderable table.
+#[test]
+fn harness_robustness_sweep_end_to_end() {
+    let harness = Harness::with_schedulers(vec![
+        SchedulerConfig::heft(),
+        SchedulerConfig::met(),
+        SchedulerConfig::cpop(),
+    ]);
+    let spec = DatasetSpec { count: 3, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+
+    let exact = SimSweep { perturb: Perturbation::none(), trials: 2, ..SimSweep::default() };
+    for r in harness.run_dataset_sim(&spec, &exact) {
+        assert_eq!(r.robustness, 1.0, "{}/{}", r.scheduler, r.instance);
+    }
+
+    let noisy = SimSweep {
+        perturb: Perturbation::lognormal(0.3),
+        trials: 5,
+        ..SimSweep::default()
+    };
+    let records = harness.run_dataset_sim(&spec, &noisy);
+    assert_eq!(records.len(), 3 * 3);
+    let rows = robustness_rows(&records);
+    assert_eq!(rows.len(), 3, "one row per scheduler");
+    for row in &rows {
+        assert!(row.mean_robustness.is_finite() && row.mean_robustness > 0.0);
+        assert!(row.worst_robustness >= row.mean_robustness - 1e-9 || row.instances > 1);
+    }
+    let table = robustness_table(&records);
+    assert!(table.contains("HEFT"));
+    assert!(table.contains("mean_robustness"));
+}
+
+/// Coordinator fan-out of the simulation sweep matches the serial
+/// harness byte-for-byte and under both replay policies.
+#[test]
+fn coordinator_sim_fanout_matches_serial() {
+    let schedulers = vec![SchedulerConfig::heft(), SchedulerConfig::sufferage_classic()];
+    for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.1 }] {
+        let sweep = SimSweep {
+            perturb: Perturbation::lognormal(0.4),
+            policy,
+            trials: 3,
+            seed: 0xFEED,
+        };
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 4, chunk_size: 1, ..Default::default() },
+            ..Coordinator::with_schedulers(schedulers.clone())
+        };
+        let par = coord.run_sim_blocking(&specs(), &sweep);
+        assert_eq!(par.len(), 2 * 6);
+
+        let mut serial =
+            Harness::with_schedulers(schedulers.clone()).run_all_sim(&specs(), &sweep);
+        ptgs::coordinator::sort_canonical(&mut serial);
+        assert_eq!(par, serial, "policy {policy:?}");
+    }
+}

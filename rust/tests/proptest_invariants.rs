@@ -11,6 +11,9 @@ use ptgs::network::Network;
 use ptgs::ranks::native;
 use ptgs::schedule::EPS;
 use ptgs::scheduler::{window_append_only, window_insertion, SchedulerConfig};
+use ptgs::sim::{
+    perturbed_instance, simulate, NoiseTrace, Perturbation, ReplayPolicy, SimOptions,
+};
 
 /// Arbitrary DAG: vertex order doubles as topological order; edge (i, j)
 /// for i < j with probability `edge_p`.
@@ -178,6 +181,117 @@ fn prop_makespan_ratio_floor() {
             "seed {case}: someone must be the winner"
         );
     }
+}
+
+/// **Keystone simulator invariant**: replaying any plan under zero
+/// noise reproduces the planned schedule — every start, end, node, and
+/// the makespan — *bit-exactly*, for every one of the 72 configs. This
+/// is what licenses reading simulated makespans as comparable to the
+/// paper's static ones.
+#[test]
+fn prop_zero_noise_simulation_reproduces_static_makespan() {
+    let configs = SchedulerConfig::all();
+    for case in 0..8u64 {
+        let mut rng = Rng::seeded(0x51A7_1C + case);
+        let inst = arbitrary_instance(&mut rng);
+        for cfg in &configs {
+            let plan = cfg.build().schedule(&inst);
+            for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.1 }] {
+                let out = simulate(
+                    &inst,
+                    &plan,
+                    cfg,
+                    &SimOptions { perturb: Perturbation::none(), seed: case, policy },
+                );
+                assert_eq!(
+                    out.makespan,
+                    plan.makespan(),
+                    "seed {case}: {} drifted under zero noise ({policy:?})",
+                    cfg.name()
+                );
+                for t in 0..inst.graph.len() {
+                    assert_eq!(
+                        out.schedule.assignment(t),
+                        plan.assignment(t),
+                        "seed {case}: {} task {t} moved under zero noise",
+                        cfg.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Simulated schedules are real schedules: under any noise trace, the
+/// replayed schedule passes the §I-A validity checker against the
+/// *effective* (perturbed) instance, for both replay policies.
+#[test]
+fn prop_simulated_schedules_always_validate() {
+    let configs = SchedulerConfig::all();
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(0x51D_0C + case);
+        let inst = arbitrary_instance(&mut rng);
+        let perturb = Perturbation::lognormal(0.4).with_slowdown(0.3, 2.5);
+        let trace = NoiseTrace::sample(&inst, &perturb, case);
+        let eff = perturbed_instance(&inst, &trace);
+        for (k, cfg) in configs.iter().enumerate() {
+            if (k as u64 + case) % 12 != 0 {
+                continue; // 6 configs per case, rotating through all 72
+            }
+            let plan = cfg.build().schedule(&inst);
+            for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.05 }] {
+                let out = simulate(&inst, &plan, cfg, &SimOptions { perturb, seed: case, policy });
+                if let Err(e) = out.schedule.validate(&eff) {
+                    panic!(
+                        "seed {case}: {} simulated schedule invalid ({policy:?}): {e}",
+                        cfg.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Simulation is a pure function of (instance, plan, model, seed):
+/// identical seeds replay identically; across seeds the realized
+/// makespans actually move.
+#[test]
+fn prop_simulation_deterministic_per_seed() {
+    let mut distinct_worlds = 0usize;
+    for case in 0..12u64 {
+        let mut rng = Rng::seeded(0xDE7E_12 + case);
+        let inst = arbitrary_instance(&mut rng);
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let perturb = Perturbation::lognormal(0.5);
+        for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.1 }] {
+            let opts = SimOptions { perturb, seed: 1000 + case, policy };
+            let a = simulate(&inst, &plan, &cfg, &opts);
+            let b = simulate(&inst, &plan, &cfg, &opts);
+            assert_eq!(a, b, "seed {case}: simulation not deterministic ({policy:?})");
+        }
+        let m1 = simulate(
+            &inst,
+            &plan,
+            &cfg,
+            &SimOptions { perturb, seed: 1, policy: ReplayPolicy::Static },
+        )
+        .makespan;
+        let m2 = simulate(
+            &inst,
+            &plan,
+            &cfg,
+            &SimOptions { perturb, seed: 2, policy: ReplayPolicy::Static },
+        )
+        .makespan;
+        if (m1 - m2).abs() > 1e-12 {
+            distinct_worlds += 1;
+        }
+    }
+    assert!(
+        distinct_worlds > 0,
+        "different seeds never changed any realized makespan"
+    );
 }
 
 /// Rank computation agrees between the two *native* orders:
