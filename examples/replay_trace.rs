@@ -1,0 +1,71 @@
+//! Replay a real workflow trace through the scheduler stack: load a
+//! vendored WfCommons-shaped instance, sweep it across the paper's five
+//! CCRs, schedule it with a spread of configs, and replay the plans
+//! under perturbation to see which survive contact with a noisy
+//! network.
+//!
+//! ```bash
+//! cargo run --release --example replay_trace
+//! ```
+
+use std::path::PathBuf;
+
+use ptgs::analysis::robustness_table;
+use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::prelude::*;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/traces");
+    let trace = dir.join("montage_like.json");
+
+    // One trace, five CCRs: the montage-like workflow is cheap to
+    // re-load, so each CCR variant is its own instance (and its own row
+    // in every table, keyed by the trace's name).
+    let mut instances = Vec::new();
+    for ccr in CCRS {
+        let opts = TraceOptions { ccr: Some(ccr), ..TraceOptions::default() };
+        let mut inst = load_trace(&trace, &opts).expect("vendored trace must load");
+        inst.name = format!("{}@ccr{ccr}", inst.name);
+        instances.push(inst);
+    }
+    println!(
+        "loaded {} ({} tasks, {} edges, {} machines) at {} CCRs\n",
+        trace.display(),
+        instances[0].graph.len(),
+        instances[0].graph.num_edges(),
+        instances[0].network.len(),
+        instances.len()
+    );
+
+    let schedulers = vec![
+        SchedulerConfig::heft(),
+        SchedulerConfig::cpop(),
+        SchedulerConfig::mct(),
+        SchedulerConfig::met(),
+        SchedulerConfig::sufferage_classic(),
+    ];
+    let harness = Harness::with_schedulers(schedulers.clone());
+
+    // Static view: planned makespans per CCR.
+    println!("planned makespans (trace × scheduler):");
+    for inst in &instances {
+        print!("  {:24}", inst.name);
+        for cfg in &schedulers {
+            let plan = cfg.build().schedule(inst);
+            print!("  {}={:.2}", cfg.name(), plan.makespan());
+        }
+        println!();
+    }
+    println!();
+
+    // Dynamic view: replay every plan under lognormal noise + node
+    // slowdowns; zero noise would reproduce the plans bit-exactly.
+    let sweep = SimSweep {
+        perturb: Perturbation::lognormal(0.3).with_slowdown(0.15, 2.0),
+        policy: ReplayPolicy::Static,
+        trials: 20,
+        seed: 0xD15EA5E,
+    };
+    let records = harness.run_instances_sim(&instances, &sweep);
+    println!("{}", robustness_table(&records));
+}

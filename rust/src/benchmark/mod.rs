@@ -162,6 +162,19 @@ impl Harness {
         }
     }
 
+    /// Run every scheduler on every instance of an externally-supplied
+    /// set (e.g. loaded workflow traces). Each instance's own name is
+    /// its dataset key, so results report per-trace rows.
+    pub fn run_instances(&self, instances: &[crate::instance::ProblemInstance]) -> Vec<Record> {
+        let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
+        for (i, inst) in instances.iter().enumerate() {
+            for cfg in &self.schedulers {
+                out.push(self.run_one(cfg, &inst.name, i, inst));
+            }
+        }
+        out
+    }
+
     /// Run all datasets of a list, serially.
     pub fn run_all(&self, specs: &[DatasetSpec]) -> BenchmarkResults {
         let mut records = Vec::new();

@@ -190,6 +190,21 @@ impl Harness {
             .expect("one scheduler yields one record")
     }
 
+    /// Simulate every scheduler over an externally-supplied instance
+    /// set (e.g. loaded workflow traces). Each instance's own name is
+    /// its dataset key, so the robustness table reports per-trace rows.
+    pub fn run_instances_sim(
+        &self,
+        instances: &[ProblemInstance],
+        sweep: &SimSweep,
+    ) -> Vec<SimRecord> {
+        let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
+        for (i, inst) in instances.iter().enumerate() {
+            out.extend(self.run_instance_sim(&inst.name, i, inst, sweep));
+        }
+        out
+    }
+
     /// Simulate every scheduler over every instance of one dataset.
     pub fn run_dataset_sim(&self, spec: &DatasetSpec, sweep: &SimSweep) -> Vec<SimRecord> {
         let instances = spec.generate();

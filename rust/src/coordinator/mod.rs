@@ -118,17 +118,12 @@ impl Coordinator {
         }
     }
 
-    /// Shared leader/worker scaffolding: shard the instance space, fan
-    /// shards out to `workers` threads that each run `per_job`, and
-    /// aggregate the result batches through a bounded channel
-    /// (backpressure: workers stall rather than buffering unboundedly).
+    /// Shared leader/worker scaffolding over dataset-spec shards.
     fn run_with<R, F>(&self, specs: &[DatasetSpec], per_job: F) -> (Vec<R>, Arc<Metrics>)
     where
         R: Send,
         F: Fn(&Harness, &Job) -> Vec<R> + Sync,
     {
-        let metrics = Arc::new(Metrics::default());
-
         // Shard the instance space.
         let mut jobs: Vec<Job> = Vec::new();
         for spec in specs {
@@ -139,6 +134,33 @@ impl Coordinator {
                 start = end;
             }
         }
+        self.run_jobs(jobs, per_job)
+    }
+
+    /// Contiguous index-range shards over an externally-supplied
+    /// instance set (the trace counterpart of the spec sharding).
+    fn range_jobs(&self, total: usize) -> Vec<(usize, usize)> {
+        let mut jobs = Vec::new();
+        let mut start = 0;
+        while start < total {
+            let end = (start + self.options.chunk_size).min(total);
+            jobs.push((start, end));
+            start = end;
+        }
+        jobs
+    }
+
+    /// Generic leader/worker scaffolding: fan `jobs` out to `workers`
+    /// threads that each run `per_job`, and aggregate the result
+    /// batches through a bounded channel (backpressure: workers stall
+    /// rather than buffering unboundedly).
+    fn run_jobs<J, R, F>(&self, jobs: Vec<J>, per_job: F) -> (Vec<R>, Arc<Metrics>)
+    where
+        J: Send,
+        R: Send,
+        F: Fn(&Harness, &J) -> Vec<R> + Sync,
+    {
+        let metrics = Arc::new(Metrics::default());
         metrics.jobs_total.store(jobs.len(), Ordering::Relaxed);
         let queue = Arc::new(Mutex::new(jobs));
 
@@ -215,6 +237,71 @@ impl Coordinator {
     /// Run the simulation sweep and return only the records.
     pub fn run_sim_blocking(&self, specs: &[DatasetSpec], sweep: &SimSweep) -> Vec<SimRecord> {
         self.run_sim(specs, sweep).0
+    }
+
+    /// Fan every scheduler out over an externally-supplied instance set
+    /// (e.g. loaded workflow traces). Each instance's own name is its
+    /// dataset key; records come back in canonical order and match the
+    /// serial [`Harness::run_instances`] exactly.
+    pub fn run_traces(
+        &self,
+        instances: &[crate::instance::ProblemInstance],
+    ) -> (BenchmarkResults, Arc<Metrics>) {
+        let jobs = self.range_jobs(instances.len());
+        let (mut records, metrics) = self.run_jobs(jobs, |harness, &(start, end)| {
+            let mut out = Vec::with_capacity((end - start) * harness.schedulers.len());
+            for i in start..end {
+                let inst = &instances[i];
+                for cfg in &harness.schedulers {
+                    out.push(harness.run_one(cfg, &inst.name, i, inst));
+                }
+            }
+            out
+        });
+        sort_canonical(&mut records);
+        (BenchmarkResults::new(records), metrics)
+    }
+
+    /// Run the trace benchmark and return only the results.
+    pub fn run_traces_blocking(
+        &self,
+        instances: &[crate::instance::ProblemInstance],
+    ) -> BenchmarkResults {
+        self.run_traces(instances).0
+    }
+
+    /// Fan a simulation sweep out over an externally-supplied instance
+    /// set. Byte-identical to the serial [`Harness::run_instances_sim`]
+    /// (trace seeds depend on the instance index and trial only).
+    pub fn run_traces_sim(
+        &self,
+        instances: &[crate::instance::ProblemInstance],
+        sweep: &SimSweep,
+    ) -> (Vec<SimRecord>, Arc<Metrics>) {
+        let jobs = self.range_jobs(instances.len());
+        let (mut records, metrics) = self.run_jobs(jobs, |harness, &(start, end)| {
+            let mut out = Vec::with_capacity((end - start) * harness.schedulers.len());
+            for i in start..end {
+                out.extend(harness.run_instance_sim(
+                    &instances[i].name,
+                    i,
+                    &instances[i],
+                    sweep,
+                ));
+            }
+            out
+        });
+        sort_canonical(&mut records);
+        (records, metrics)
+    }
+
+    /// Run the trace simulation sweep and return only the records.
+    pub fn run_traces_sim_blocking(
+        &self,
+        instances: &[crate::instance::ProblemInstance],
+        sweep: &SimSweep,
+    ) -> Vec<SimRecord> {
+        self.run_traces_sim(instances, sweep).0
     }
 }
 
@@ -326,6 +413,36 @@ mod tests {
         let mut serial = Harness::with_schedulers(schedulers).run_all_sim(&tiny_specs(), &sweep);
         sort_canonical(&mut serial);
         assert_eq!(par, serial, "parallel sim sweep must match serial byte-for-byte");
+    }
+
+    #[test]
+    fn parallel_traces_equal_serial() {
+        let instances: Vec<_> = tiny_specs().iter().flat_map(|s| s.generate()).collect();
+        let schedulers = vec![SchedulerConfig::heft(), SchedulerConfig::met()];
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 4, chunk_size: 2, ..Default::default() },
+            ..Coordinator::with_schedulers(schedulers.clone())
+        };
+        let par = coord.run_traces_blocking(&instances);
+        let mut serial = Harness::with_schedulers(schedulers.clone()).run_instances(&instances);
+        sort_canonical(&mut serial);
+        assert_eq!(par.records.len(), serial.len());
+        for (p, s) in par.records.iter().zip(&serial) {
+            assert_eq!(p.dataset, s.dataset);
+            assert_eq!(p.instance, s.instance);
+            assert_eq!(p.scheduler, s.scheduler);
+            assert_eq!(p.makespan, s.makespan, "{}/{}", p.dataset, p.instance);
+        }
+        // Dataset keys are the per-trace instance names, not spec names.
+        assert!(par.records.iter().all(|r| r.dataset.contains("/inst_")));
+
+        let sweep = SimSweep { trials: 2, ..SimSweep::default() };
+        let par_sim = coord.run_traces_sim_blocking(&instances, &sweep);
+        let mut serial_sim =
+            Harness::with_schedulers(vec![SchedulerConfig::heft(), SchedulerConfig::met()])
+                .run_instances_sim(&instances, &sweep);
+        sort_canonical(&mut serial_sim);
+        assert_eq!(par_sim, serial_sim, "trace sim sweep must match serial byte-for-byte");
     }
 
     #[test]

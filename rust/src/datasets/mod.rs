@@ -17,6 +17,7 @@ pub mod ccr;
 pub mod chains;
 pub mod cycles;
 pub mod rng;
+pub mod traces;
 pub mod trees;
 
 
@@ -150,23 +151,31 @@ impl DatasetSpec {
     }
 }
 
-/// Random complete network per the paper: 3–5 nodes, clipped-Gaussian
-/// speeds and (symmetric) link strengths.
-pub fn random_network(rng: &mut Rng) -> Network {
-    let n = rng.uniform_int(3, 5) as usize;
-    let speeds: Vec<f64> = (0..n)
-        .map(|_| rng.clipped_gauss(1.0, 1.0 / 3.0, SPEED_EPS, 2.0))
-        .collect();
+/// The paper's clipped-Gaussian network recipe, shared by
+/// [`random_network`] and the trace fallback synthesis
+/// ([`traces::NetworkSynthesis`]): `n` nodes whose speeds and symmetric
+/// link strengths are N(1, sd) clipped to `[SPEED_EPS, 2]`. Draw order
+/// (speeds first, then links row by row) is part of the determinism
+/// contract — changing it would shift every seeded dataset.
+pub fn gauss_network(rng: &mut Rng, n: usize, sd: f64) -> Network {
+    let speeds: Vec<f64> = (0..n).map(|_| rng.clipped_gauss(1.0, sd, SPEED_EPS, 2.0)).collect();
     let mut links = vec![0.0; n * n];
     for i in 0..n {
         for j in (i + 1)..n {
-            let w = rng.clipped_gauss(1.0, 1.0 / 3.0, SPEED_EPS, 2.0);
+            let w = rng.clipped_gauss(1.0, sd, SPEED_EPS, 2.0);
             links[i * n + j] = w;
             links[j * n + i] = w;
         }
         links[i * n + i] = 1.0; // unused (loopback is free)
     }
     Network::new(speeds, links)
+}
+
+/// Random complete network per the paper: 3–5 nodes, clipped-Gaussian
+/// speeds and (symmetric) link strengths.
+pub fn random_network(rng: &mut Rng) -> Network {
+    let n = rng.uniform_int(3, 5) as usize;
+    gauss_network(rng, n, 1.0 / 3.0)
 }
 
 /// Clipped-Gaussian weight per the paper's recipe.

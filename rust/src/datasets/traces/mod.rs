@@ -1,0 +1,540 @@
+//! Real workflow-trace ingestion: external workflow descriptions →
+//! [`ProblemInstance`]s the whole 72-scheduler stack can consume.
+//!
+//! Two on-disk formats are detected from the document shape:
+//!
+//! * **WfCommons workflow-instance JSON** ([`wfcommons`]) — tasks with
+//!   runtimes, files with sizes, optional explicit `parents`, optional
+//!   machine specs. Detected by the top-level `workflow` key.
+//! * **Simple DSLab-DAG-style descriptions** ([`simple`]) — tasks with
+//!   `flops`/`inputs`/`outputs` plus declared workflow inputs, in JSON
+//!   or the YAML subset of [`yaml`]. Detected by a top-level `tasks`
+//!   key (`.yaml`/`.yml` files are converted to the same value model
+//!   first).
+//!
+//! File-size → edge-data-size derivation follows data flow: an edge
+//! `(p, t)` carries the total size of the files `p` produces and `t`
+//! consumes. Networks come from, in priority order: an embedded
+//! `network` object (this crate's own wire format — what
+//! [`to_trace_json`] writes, so loader round-trips are exact), the
+//! trace's machine specs (speeds normalized to mean 1, homogeneous
+//! links), or the configurable synthetic-heterogeneous fallback
+//! [`NetworkSynthesis`]. A loaded trace can then be swept across the
+//! paper's five CCRs via [`crate::datasets::ccr`] rescaling
+//! ([`TraceOptions::ccr`]).
+//!
+//! Loading is total: malformed documents (cycles, dangling file refs,
+//! missing runtimes, duplicate names, bad sizes) produce descriptive
+//! `Err`s, never panics — enforced by `rust/tests/integration_traces.rs`.
+
+pub mod simple;
+pub mod wfcommons;
+pub mod yaml;
+
+use std::path::{Path, PathBuf};
+
+use super::ccr;
+use super::rng::Rng;
+use crate::graph::TaskGraph;
+use crate::instance::ProblemInstance;
+use crate::network::Network;
+use crate::util::{ToJson, Value};
+
+/// Detected on-disk trace format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// WfCommons workflow-instance JSON (top-level `workflow` key).
+    WfCommons,
+    /// Simple DSLab-DAG-style description (top-level `tasks` key).
+    SimpleDag,
+}
+
+impl TraceFormat {
+    /// Detect the format from a parsed document.
+    pub fn detect(doc: &Value) -> Option<TraceFormat> {
+        if doc.get("workflow").is_some() {
+            Some(TraceFormat::WfCommons)
+        } else if doc.get("tasks").is_some() {
+            Some(TraceFormat::SimpleDag)
+        } else {
+            None
+        }
+    }
+}
+
+/// Synthetic-heterogeneous-network fallback for traces without machine
+/// data: `nodes` machines with clipped-Gaussian speeds and symmetric
+/// link strengths (mean 1, sd `heterogeneity`, clipped to
+/// `[SPEED_EPS, 2]` — the dataset generators' recipe). Deterministic
+/// per `(seed, trace name)`, so re-loading a trace reproduces its
+/// network exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkSynthesis {
+    pub nodes: usize,
+    pub heterogeneity: f64,
+    pub seed: u64,
+}
+
+impl Default for NetworkSynthesis {
+    fn default() -> Self {
+        NetworkSynthesis { nodes: 4, heterogeneity: 1.0 / 3.0, seed: 0x7ACE_5EED }
+    }
+}
+
+impl NetworkSynthesis {
+    /// Build the fallback network for the trace named `key`.
+    pub fn synthesize(&self, key: &str) -> Network {
+        // FNV-1a over the trace name keeps distinct traces on distinct
+        // (but per-trace stable) networks under one base seed.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut rng = Rng::seeded(self.seed ^ h);
+        super::gauss_network(&mut rng, self.nodes.max(1), self.heterogeneity)
+    }
+}
+
+/// Options controlling trace ingestion.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TraceOptions {
+    /// Rescale the loaded instance's links to hit this CCR exactly
+    /// (`None` keeps the trace's native ratio).
+    pub ccr: Option<f64>,
+    /// Network synthesis knobs used when the trace carries no machine
+    /// data (and no embedded `network`).
+    pub fallback: NetworkSynthesis,
+}
+
+/// Load one trace file (`.json`, `.yaml`, `.yml`) into a validated
+/// [`ProblemInstance`].
+pub fn load_trace(path: &Path, opts: &TraceOptions) -> Result<ProblemInstance, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    parse_trace(&text, is_yaml(path), stem, opts)
+}
+
+fn is_yaml(path: &Path) -> bool {
+    matches!(path.extension().and_then(|e| e.to_str()), Some("yaml") | Some("yml"))
+}
+
+/// Parse trace text (JSON, or the YAML subset when `yaml` is set) into
+/// a validated [`ProblemInstance`]. `fallback_name` names the instance
+/// when the document carries no `name` field.
+pub fn parse_trace(
+    text: &str,
+    yaml: bool,
+    fallback_name: &str,
+    opts: &TraceOptions,
+) -> Result<ProblemInstance, String> {
+    let doc = if yaml { yaml::parse_yaml(text)? } else { crate::util::parse(text)? };
+    trace_from_value(&doc, fallback_name, opts)
+}
+
+/// Build a [`ProblemInstance`] from an already-parsed trace document.
+pub fn trace_from_value(
+    doc: &Value,
+    fallback_name: &str,
+    opts: &TraceOptions,
+) -> Result<ProblemInstance, String> {
+    let name = doc.get("name").and_then(Value::as_str).unwrap_or(fallback_name).to_string();
+    let embedded = match doc.get("network") {
+        Some(v) => Some(network_checked(v).map_err(|e| format!("trace {name}: {e}"))?),
+        None => None,
+    };
+    let (graph, derived) = match TraceFormat::detect(doc) {
+        Some(TraceFormat::WfCommons) => wfcommons::graph_from_value(doc, &name)?,
+        Some(TraceFormat::SimpleDag) => (simple::graph_from_value(doc, &name)?, None),
+        None => {
+            return Err(format!(
+                "trace {name}: unrecognized format (expected a top-level \
+                 `workflow` (WfCommons) or `tasks` (simple DAG) key)"
+            ))
+        }
+    };
+    finish(name, graph, embedded.or(derived), opts)
+}
+
+/// Shared tail of every loader: validate, attach a network, rescale.
+fn finish(
+    name: String,
+    graph: TaskGraph,
+    network: Option<Network>,
+    opts: &TraceOptions,
+) -> Result<ProblemInstance, String> {
+    graph.validate().map_err(|e| format!("trace {name}: {e}"))?;
+    let network = network.unwrap_or_else(|| opts.fallback.synthesize(&name));
+    let mut inst = ProblemInstance::new(name, graph, network);
+    inst.validate().map_err(|e| format!("trace {}: {e}", inst.name))?;
+    if let Some(target) = opts.ccr {
+        if !(target.is_finite() && target > 0.0) {
+            return Err(format!("trace {}: target CCR must be > 0, got {target}", inst.name));
+        }
+        ccr::scale_to_ccr(&mut inst, target);
+    }
+    Ok(inst)
+}
+
+/// Parse a [`Network`] wire object with *checked* invariants — the
+/// loader must report malformed link matrices as `Err`s where
+/// [`Network::new`] would panic.
+fn network_checked(v: &Value) -> Result<Network, String> {
+    let nums = |key: &str| -> Result<Vec<f64>, String> {
+        v.req_arr(key)?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| format!("network `{key}`: not a number")))
+            .collect()
+    };
+    let speeds = nums("speeds")?;
+    let links = nums("links")?;
+    let n = speeds.len();
+    if n == 0 {
+        return Err("network has no nodes".into());
+    }
+    if links.len() != n * n {
+        return Err(format!("network link matrix must be {n}×{n}, got {}", links.len()));
+    }
+    for &s in &speeds {
+        if !s.is_finite() || s <= 0.0 {
+            return Err(format!("network speed {s} must be positive"));
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            let l = links[i * n + j];
+            if !l.is_finite() || (i != j && l <= 0.0) {
+                return Err(format!("network link ({i},{j}) = {l} must be positive"));
+            }
+            // `>=` mirrors Network::new's `< 1e-12` accept exactly; a
+            // deviation of exactly 1e-12 must Err here, not panic there.
+            if (l - links[j * n + i]).abs() >= 1e-12 {
+                return Err(format!("network link matrix asymmetric at ({i},{j})"));
+            }
+        }
+    }
+    Ok(Network::new(speeds, links))
+}
+
+/// Serialize an instance in the loader's canonical WfCommons-shaped
+/// wire format, with the exact network embedded. Loading the result
+/// back (CCR rescaling off) reproduces the instance exactly —
+/// `load(to_trace_json(inst)) == inst` — which is what makes trace
+/// archives lossless and is pinned by the round-trip property tests.
+///
+/// Requires unique task names (all dataset generators and both loaders
+/// guarantee this).
+pub fn to_trace_json(inst: &ProblemInstance) -> Value {
+    let g = &inst.graph;
+    let file_name = |s: usize, d: usize| format!("f_{s}_{d}");
+    let tasks: Vec<Value> = (0..g.len())
+        .map(|t| {
+            let mut files = Vec::new();
+            for &(p, data) in g.predecessors(t) {
+                files.push(Value::obj(vec![
+                    ("link", Value::Str("input".into())),
+                    ("name", Value::Str(file_name(p, t))),
+                    ("size", Value::Num(data)),
+                ]));
+            }
+            for &(d, data) in g.successors(t) {
+                files.push(Value::obj(vec![
+                    ("link", Value::Str("output".into())),
+                    ("name", Value::Str(file_name(t, d))),
+                    ("size", Value::Num(data)),
+                ]));
+            }
+            Value::obj(vec![
+                ("name", Value::Str(g.name(t).to_string())),
+                ("runtime", Value::Num(g.cost(t))),
+                ("files", Value::Arr(files)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("name", Value::Str(inst.name.clone())),
+        ("workflow", Value::obj(vec![("tasks", Value::Arr(tasks))])),
+        ("network", inst.network.to_json()),
+    ])
+}
+
+/// A set of trace instances — the external-workload counterpart of the
+/// synthetic [`super::DatasetSpec`] families. Each trace keeps its own
+/// name as its dataset key, so benchmark and robustness tables report
+/// per-trace rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSet {
+    pub name: String,
+    pub instances: Vec<ProblemInstance>,
+}
+
+impl TraceSet {
+    pub fn new(name: impl Into<String>, instances: Vec<ProblemInstance>) -> Self {
+        TraceSet { name: name.into(), instances }
+    }
+
+    /// Load every trace under the given paths (files, or directories
+    /// scanned non-recursively for `.json`/`.yaml`/`.yml`), sorted by
+    /// path for determinism.
+    pub fn load_paths(paths: &[PathBuf], opts: &TraceOptions) -> Result<TraceSet, String> {
+        let mut files: Vec<PathBuf> = Vec::new();
+        for p in paths {
+            if p.is_dir() {
+                let entries = std::fs::read_dir(p)
+                    .map_err(|e| format!("reading directory {}: {e}", p.display()))?;
+                for entry in entries {
+                    let path = entry.map_err(|e| e.to_string())?.path();
+                    let ext = path.extension().and_then(|e| e.to_str());
+                    if matches!(ext, Some("json") | Some("yaml") | Some("yml")) {
+                        files.push(path);
+                    }
+                }
+            } else {
+                files.push(p.clone());
+            }
+        }
+        files.sort();
+        files.dedup();
+        if files.is_empty() {
+            return Err("no trace files found (expected .json/.yaml/.yml)".into());
+        }
+        let instances =
+            files.iter().map(|f| load_trace(f, opts)).collect::<Result<Vec<_>, _>>()?;
+        // Per-trace reports key on the instance name; a repeated name
+        // would silently merge two workflows into one row.
+        let mut seen = std::collections::BTreeSet::new();
+        for inst in &instances {
+            if !seen.insert(inst.name.as_str()) {
+                return Err(format!(
+                    "duplicate trace name `{}` across inputs (give the documents \
+                     distinct `name` fields)",
+                    inst.name
+                ));
+            }
+        }
+        Ok(TraceSet::new("traces", instances))
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SPEED_EPS;
+
+    const WF: &str = r#"{
+        "name": "wf",
+        "workflow": {
+            "tasks": [
+                {"name": "a", "runtime": 2.0, "files": [
+                    {"link": "output", "name": "a.out", "size": 3.0}]},
+                {"name": "b", "runtime": 4.0, "files": [
+                    {"link": "input", "name": "a.out", "size": 3.0},
+                    {"link": "input", "name": "raw.in", "size": 9.0}]}
+            ],
+            "machines": [
+                {"nodeName": "m0", "cpu": {"speed": 2000}},
+                {"nodeName": "m1", "cpu": {"speed": 1000}}
+            ]
+        }
+    }"#;
+
+    #[test]
+    fn wfcommons_loads_with_machine_network() {
+        let inst = parse_trace(WF, false, "x", &TraceOptions::default()).unwrap();
+        assert_eq!(inst.name, "wf");
+        assert_eq!(inst.graph.len(), 2);
+        assert_eq!(inst.graph.num_edges(), 1);
+        assert_eq!(inst.graph.edge(0, 1), Some(3.0));
+        // speeds 2000/1000 normalized to mean 1 → 4/3, 2/3.
+        assert_eq!(inst.network.len(), 2);
+        assert!((inst.network.speed(0) - 4.0 / 3.0).abs() < 1e-12);
+        assert!((inst.network.speed(1) - 2.0 / 3.0).abs() < 1e-12);
+        assert!(inst.validate().is_ok());
+    }
+
+    #[test]
+    fn ccr_rescaling_hits_target() {
+        for target in [0.2, 1.0, 5.0] {
+            let opts = TraceOptions { ccr: Some(target), ..TraceOptions::default() };
+            let inst = parse_trace(WF, false, "x", &opts).unwrap();
+            assert!(
+                (inst.ccr() - target).abs() < 1e-6 * target,
+                "got {} want {target}",
+                inst.ccr()
+            );
+        }
+    }
+
+    #[test]
+    fn bad_ccr_is_an_error() {
+        for bad in [0.0, -1.0, f64::NAN] {
+            let opts = TraceOptions { ccr: Some(bad), ..TraceOptions::default() };
+            assert!(parse_trace(WF, false, "x", &opts).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fallback_network_is_deterministic_per_name() {
+        let syn = NetworkSynthesis::default();
+        assert_eq!(syn.synthesize("montage"), syn.synthesize("montage"));
+        assert_ne!(syn.synthesize("montage"), syn.synthesize("epigenomics"));
+        let net = syn.synthesize("montage");
+        assert_eq!(net.len(), 4);
+        for &s in net.speeds() {
+            assert!((SPEED_EPS..=2.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn simple_dag_loads_with_fallback_network() {
+        let text = r#"{
+            "name": "mini",
+            "inputs": [{"name": "seed", "size": 5}],
+            "tasks": [
+                {"name": "t0", "flops": 1.0, "inputs": ["seed"],
+                 "outputs": [{"name": "o0", "size": 2.0}]},
+                {"name": "t1", "flops": 2.0, "inputs": ["o0"], "outputs": []}
+            ]
+        }"#;
+        let inst = parse_trace(text, false, "x", &TraceOptions::default()).unwrap();
+        assert_eq!(inst.name, "mini");
+        assert_eq!(inst.graph.num_edges(), 1);
+        assert_eq!(inst.graph.edge(0, 1), Some(2.0));
+        assert_eq!(inst.network.len(), NetworkSynthesis::default().nodes);
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let inst = parse_trace(WF, false, "x", &TraceOptions::default()).unwrap();
+        let doc = to_trace_json(&inst);
+        let back = trace_from_value(
+            &crate::util::parse(&doc.to_string()).unwrap(),
+            "x",
+            &TraceOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(inst, back);
+    }
+
+    #[test]
+    fn malformed_documents_err_not_panic() {
+        let cases: &[(&str, &str)] = &[
+            // cycle via parents
+            (
+                r#"{"workflow": {"tasks": [
+                    {"name": "a", "runtime": 1, "parents": ["b"]},
+                    {"name": "b", "runtime": 1, "parents": ["a"]}]}}"#,
+                "cycle",
+            ),
+            // missing runtime
+            (
+                r#"{"workflow": {"tasks": [{"name": "a"}]}}"#,
+                "missing runtime",
+            ),
+            // unknown parent
+            (
+                r#"{"workflow": {"tasks": [{"name": "a", "runtime": 1, "parents": ["zz"]}]}}"#,
+                "unknown parent",
+            ),
+            // duplicate task names
+            (
+                r#"{"workflow": {"tasks": [
+                    {"name": "a", "runtime": 1}, {"name": "a", "runtime": 2}]}}"#,
+                "duplicate task name",
+            ),
+            // self-consumption
+            (
+                r#"{"workflow": {"tasks": [{"name": "a", "runtime": 1, "files": [
+                    {"link": "output", "name": "f", "size": 1},
+                    {"link": "input", "name": "f", "size": 1}]}]}}"#,
+                "its own output",
+            ),
+            // dangling file ref in the simple format
+            (
+                r#"{"tasks": [{"name": "a", "flops": 1, "inputs": ["ghost"]}]}"#,
+                "dangling file reference",
+            ),
+            // negative size
+            (
+                r#"{"workflow": {"tasks": [{"name": "a", "runtime": 1, "files": [
+                    {"link": "output", "name": "f", "size": -3}]}]}}"#,
+                "bad size",
+            ),
+            // corrupt consumer-side size (edge size comes from the
+            // producer, but the bad entry must still Err)
+            (
+                r#"{"workflow": {"tasks": [
+                    {"name": "a", "runtime": 1, "files": [
+                        {"link": "output", "name": "f", "size": 2}]},
+                    {"name": "b", "runtime": 1, "files": [
+                        {"link": "input", "name": "f", "size": -9}]}]}}"#,
+                "bad size",
+            ),
+            // duplicate input entry (would double-count the edge size)
+            (
+                r#"{"workflow": {"tasks": [
+                    {"name": "a", "runtime": 1, "files": [
+                        {"link": "output", "name": "f", "size": 2}]},
+                    {"name": "b", "runtime": 1, "files": [
+                        {"link": "input", "name": "f", "size": 2},
+                        {"link": "input", "name": "f", "size": 2}]}]}}"#,
+                "more than once",
+            ),
+            // duplicate input entry, simple format
+            (
+                r#"{"inputs": [{"name": "x", "size": 1}],
+                    "tasks": [{"name": "a", "flops": 1, "inputs": ["x", "x"]}]}"#,
+                "more than once",
+            ),
+            // bad embedded network (asymmetric links)
+            (
+                r#"{"network": {"speeds": [1, 1], "links": [1, 2, 1, 1]},
+                    "tasks": [{"name": "a", "flops": 1}]}"#,
+                "asymmetric",
+            ),
+            // unrecognized shape
+            (r#"{"foo": 1}"#, "unrecognized format"),
+        ];
+        for (text, want) in cases {
+            let got = parse_trace(text, false, "x", &TraceOptions::default());
+            let err = got.expect_err(&format!("should fail: {text}"));
+            assert!(err.contains(want), "error `{err}` should mention `{want}`");
+        }
+    }
+
+    #[test]
+    fn yaml_simple_dag_loads() {
+        let text = "\
+name: ydag
+inputs:
+  - name: seed
+    size: 1
+tasks:
+  - name: a
+    flops: 3
+    inputs:
+      - seed
+    outputs:
+      - name: a-out
+        size: 2
+  - name: b
+    flops: 5
+    inputs:
+      - a-out
+    outputs: []
+";
+        let inst = parse_trace(text, true, "x", &TraceOptions::default()).unwrap();
+        assert_eq!(inst.name, "ydag");
+        assert_eq!(inst.graph.len(), 2);
+        assert_eq!(inst.graph.edge(0, 1), Some(2.0));
+    }
+}

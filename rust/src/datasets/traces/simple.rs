@@ -1,0 +1,146 @@
+//! Simple DSLab-DAG-style description → task graph.
+//!
+//! The shape (JSON or the YAML subset of [`super::yaml`]):
+//!
+//! ```yaml
+//! name: diamond
+//! inputs:                 # workflow-level input files (optional)
+//!   - name: A-input
+//!     size: 500
+//! tasks:
+//!   - name: A
+//!     flops: 100          # task compute cost (`cost` also accepted)
+//!     inputs: [A-input]   # file names this task consumes
+//!     outputs:            # files this task produces
+//!       - name: A-out
+//!         size: 150
+//! ```
+//!
+//! Unlike WfCommons (where an unproduced input is a workflow-level
+//! input by convention), this format declares workflow inputs
+//! explicitly, so a task input that is neither declared nor produced by
+//! any task is a *dangling file reference* and loads as a descriptive
+//! `Err` — as do duplicate task/file names, missing `flops`, and
+//! self-consumption. Cycles are caught by graph validation in the
+//! caller.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::graph::TaskGraph;
+use crate::util::Value;
+
+pub(super) fn graph_from_value(doc: &Value, name: &str) -> Result<TaskGraph, String> {
+    let tasks = doc
+        .get("tasks")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("trace {name}: missing `tasks` array"))?;
+    if tasks.is_empty() {
+        return Err(format!("trace {name}: workflow has no tasks"));
+    }
+
+    // Declared workflow-level inputs (legal edge-free sources of data).
+    let mut external: BTreeMap<&str, f64> = BTreeMap::new();
+    if let Some(inputs) = doc.get("inputs").and_then(Value::as_arr) {
+        for f in inputs {
+            let fname = f
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("trace {name}: workflow input without a `name`"))?;
+            let size = f.get("size").and_then(Value::as_f64).unwrap_or(0.0);
+            if !size.is_finite() || size < 0.0 {
+                return Err(format!("trace {name}: workflow input `{fname}`: bad size {size}"));
+            }
+            if external.insert(fname, size).is_some() {
+                return Err(format!("trace {name}: duplicate workflow input `{fname}`"));
+            }
+        }
+    }
+
+    let mut g = TaskGraph::new();
+    let mut ids: BTreeMap<&str, usize> = BTreeMap::new();
+    for t in tasks {
+        let tname = t
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("trace {name}: task without a `name`"))?;
+        let flops = t
+            .get("flops")
+            .or_else(|| t.get("cost"))
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("trace {name}: task `{tname}`: missing flops/cost"))?;
+        if !flops.is_finite() || flops < 0.0 {
+            return Err(format!("trace {name}: task `{tname}`: bad flops {flops}"));
+        }
+        if ids.contains_key(tname) {
+            return Err(format!("trace {name}: duplicate task name `{tname}`"));
+        }
+        let id = g.add_task(tname, flops);
+        ids.insert(tname, id);
+    }
+
+    // Output file → (producer task, size). Clashes with other producers
+    // or with declared workflow inputs are errors.
+    let mut producer: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        let Some(outputs) = t.get("outputs").and_then(Value::as_arr) else { continue };
+        for f in outputs {
+            let fname = f
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("trace {name}: output file without a `name`"))?;
+            let size = f
+                .get("size")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("trace {name}: output file `{fname}`: missing size"))?;
+            if !size.is_finite() || size < 0.0 {
+                return Err(format!("trace {name}: output file `{fname}`: bad size {size}"));
+            }
+            if external.contains_key(fname) {
+                return Err(format!(
+                    "trace {name}: file `{fname}` is both a workflow input and a task output"
+                ));
+            }
+            if producer.insert(fname, (i, size)).is_some() {
+                return Err(format!(
+                    "trace {name}: file `{fname}` is produced by more than one task"
+                ));
+            }
+        }
+    }
+
+    let mut edges: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        let Some(inputs) = t.get("inputs").and_then(Value::as_arr) else { continue };
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        for f in inputs {
+            let fname = f.as_str().ok_or_else(|| {
+                format!("trace {name}: task `{}`: non-string input file", g.name(i))
+            })?;
+            if !seen.insert(fname) {
+                return Err(format!(
+                    "trace {name}: task `{}` lists input file `{fname}` more than once",
+                    g.name(i)
+                ));
+            }
+            if let Some(&(p, size)) = producer.get(fname) {
+                if p == i {
+                    return Err(format!(
+                        "trace {name}: task `{}` consumes its own output `{fname}`",
+                        g.name(i)
+                    ));
+                }
+                *edges.entry((p, i)).or_insert(0.0) += size;
+            } else if !external.contains_key(fname) {
+                return Err(format!(
+                    "trace {name}: task `{}`: dangling file reference `{fname}` \
+                     (neither a workflow input nor any task's output)",
+                    g.name(i)
+                ));
+            }
+        }
+    }
+    for (&(s, d), &data) in &edges {
+        g.add_edge(s, d, data);
+    }
+    Ok(g)
+}

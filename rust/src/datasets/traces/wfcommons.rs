@@ -1,0 +1,208 @@
+//! WfCommons workflow-instance JSON → task graph (+ machine network).
+//!
+//! Supports the fields the published instances actually vary on, across
+//! both the v1.2 (`jobs`) and v1.3+ (`tasks`) spellings:
+//!
+//! ```text
+//! { "name": "...",
+//!   "workflow": {
+//!     "tasks" | "jobs": [
+//!       { "name": "...",
+//!         "runtime" | "runtimeInSeconds": f64,
+//!         "files": [ { "link": "input"|"output", "name": "...",
+//!                      "size" | "sizeInBytes": f64 } ],
+//!         "parents": ["..."]          // optional explicit edges
+//!       } ],
+//!     "machines": [ { "nodeName": "...", "cpu": { "speed": f64 } } ]
+//!   } }
+//! ```
+//!
+//! Dependency edges are derived from data flow: an edge `(p, t)` with
+//! data size Σ sizes of the files `p` outputs and `t` inputs. Input
+//! files no task produces are workflow-level inputs (no edge). Explicit
+//! `parents` entries add zero-data edges when no file connects the pair.
+//! Machine specs become a related-machines [`Network`]: speeds
+//! normalized to mean 1, homogeneous links (rescale with
+//! [`crate::datasets::ccr`] to hit a target CCR). All malformed inputs
+//! (cycles, duplicate producers, missing runtimes, self-consumption,
+//! unknown parents) surface as descriptive `Err`s, never panics.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::graph::TaskGraph;
+use crate::network::Network;
+use crate::util::Value;
+
+/// Extract the task array across spec versions.
+fn task_array<'v>(wf: &'v Value, name: &str) -> Result<&'v [Value], String> {
+    wf.get("tasks")
+        .or_else(|| wf.get("jobs"))
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("trace {name}: workflow has no `tasks`/`jobs` array"))
+}
+
+fn file_field<'v>(v: &'v Value, a: &str, b: &str) -> Option<&'v Value> {
+    v.get(a).or_else(|| v.get(b))
+}
+
+/// Non-negative finite size under either spelling.
+fn file_size(f: &Value, name: &str, fname: &str) -> Result<f64, String> {
+    let size = file_field(f, "size", "sizeInBytes")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| format!("trace {name}: file `{fname}`: missing size"))?;
+    if !size.is_finite() || size < 0.0 {
+        return Err(format!("trace {name}: file `{fname}`: bad size {size}"));
+    }
+    Ok(size)
+}
+
+/// Build the task graph (and the machine-derived network, when the
+/// instance carries usable machine specs) from a WfCommons document.
+pub(super) fn graph_from_value(
+    doc: &Value,
+    name: &str,
+) -> Result<(TaskGraph, Option<Network>), String> {
+    let wf = doc
+        .get("workflow")
+        .ok_or_else(|| format!("trace {name}: missing `workflow` object"))?;
+    let tasks = task_array(wf, name)?;
+    if tasks.is_empty() {
+        return Err(format!("trace {name}: workflow has no tasks"));
+    }
+
+    let mut g = TaskGraph::new();
+    let mut ids: BTreeMap<&str, usize> = BTreeMap::new();
+    for t in tasks {
+        let tname = t
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("trace {name}: task without a `name`"))?;
+        let runtime = file_field(t, "runtime", "runtimeInSeconds")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("trace {name}: task `{tname}`: missing runtime"))?;
+        if !runtime.is_finite() || runtime < 0.0 {
+            return Err(format!("trace {name}: task `{tname}`: bad runtime {runtime}"));
+        }
+        if ids.contains_key(tname) {
+            return Err(format!("trace {name}: duplicate task name `{tname}`"));
+        }
+        let id = g.add_task(tname, runtime);
+        ids.insert(tname, id);
+    }
+
+    // File name → (producer task, size).
+    let mut producer: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        let Some(files) = t.get("files").and_then(Value::as_arr) else { continue };
+        for f in files {
+            let link = f
+                .get("link")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("trace {name}: file entry without a `link`"))?;
+            if link != "output" {
+                continue;
+            }
+            let fname = f
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("trace {name}: file entry without a `name`"))?;
+            let size = file_size(f, name, fname)?;
+            if producer.insert(fname, (i, size)).is_some() {
+                return Err(format!(
+                    "trace {name}: file `{fname}` is produced by more than one task"
+                ));
+            }
+        }
+    }
+
+    // Data-flow edges, deduplicated and summed per (src, dst) pair.
+    let mut edges: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        let mut seen_inputs: BTreeSet<&str> = BTreeSet::new();
+        if let Some(files) = t.get("files").and_then(Value::as_arr) {
+            for f in files {
+                if f.get("link").and_then(Value::as_str) != Some("input") {
+                    continue;
+                }
+                let fname = f
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("trace {name}: file entry without a `name`"))?;
+                if !seen_inputs.insert(fname) {
+                    return Err(format!(
+                        "trace {name}: task `{}` lists input file `{fname}` more than once",
+                        g.name(i)
+                    ));
+                }
+                // Edge sizes come from the producer entry, but a corrupt
+                // consumer-side size must still Err (totality contract).
+                file_size(f, name, fname)?;
+                if let Some(&(p, size)) = producer.get(fname) {
+                    if p == i {
+                        return Err(format!(
+                            "trace {name}: task `{}` consumes its own output `{fname}`",
+                            g.name(i)
+                        ));
+                    }
+                    *edges.entry((p, i)).or_insert(0.0) += size;
+                }
+                // Otherwise: a workflow-level input; no dependency edge.
+            }
+        }
+        if let Some(parents) = t.get("parents").and_then(Value::as_arr) {
+            for pv in parents {
+                let pname = pv.as_str().ok_or_else(|| {
+                    format!("trace {name}: task `{}`: non-string parent", g.name(i))
+                })?;
+                let Some(&p) = ids.get(pname) else {
+                    return Err(format!(
+                        "trace {name}: task `{}`: unknown parent `{pname}`",
+                        g.name(i)
+                    ));
+                };
+                if p == i {
+                    return Err(format!(
+                        "trace {name}: task `{}` lists itself as a parent",
+                        g.name(i)
+                    ));
+                }
+                // Keeps the file-derived size when one exists.
+                edges.entry((p, i)).or_insert(0.0);
+            }
+        }
+    }
+    for (&(s, d), &data) in &edges {
+        g.add_edge(s, d, data);
+    }
+
+    let network = machines_network(wf, name)?;
+    Ok((g, network))
+}
+
+/// Machine specs → related-machines network: speeds normalized to mean
+/// 1 (preserving relative heterogeneity), links homogeneous at 1.
+/// Returns `Ok(None)` when fewer than two machines carry a usable cpu
+/// speed — the caller then synthesizes a network instead.
+fn machines_network(wf: &Value, name: &str) -> Result<Option<Network>, String> {
+    let Some(machines) = wf.get("machines").and_then(Value::as_arr) else {
+        return Ok(None);
+    };
+    let mut speeds = Vec::new();
+    for m in machines {
+        let Some(cpu) = m.get("cpu") else { continue };
+        let Some(s) = file_field(cpu, "speed", "speedInMHz").and_then(Value::as_f64) else {
+            continue;
+        };
+        if !s.is_finite() || s <= 0.0 {
+            return Err(format!("trace {name}: machine with non-positive cpu speed {s}"));
+        }
+        speeds.push(s);
+    }
+    if speeds.len() < 2 {
+        return Ok(None);
+    }
+    let mean = speeds.iter().sum::<f64>() / speeds.len() as f64;
+    let speeds: Vec<f64> = speeds.iter().map(|s| s / mean).collect();
+    let n = speeds.len();
+    Ok(Some(Network::new(speeds, vec![1.0; n * n])))
+}

@@ -1,0 +1,270 @@
+//! Minimal YAML-subset reader for DSLab-style DAG descriptions.
+//!
+//! The vendored crate set has no `serde_yaml` (DESIGN.md
+//! §Substitutions), so this module parses exactly the subset those DAG
+//! files use into the crate's own [`Value`] model, and the trace loader
+//! then treats the result identically to parsed JSON:
+//!
+//! * block mappings (`key: value`, `key:` + indented block);
+//! * block sequences (`- item`, `- key: value` with the item's further
+//!   keys aligned two columns past the dash);
+//! * scalars: null/`~`, booleans, finite numbers, quoted and plain
+//!   strings, and empty/inline flow sequences of scalars (`[a, b]`);
+//! * `#` comments (full-line, or preceded by a space).
+//!
+//! Out of scope (rejected or mis-read, documented in README): anchors,
+//! multi-line strings, tabs in indentation, flow mappings, and colons
+//! inside unquoted scalars.
+
+use crate::util::Value;
+
+/// `(indent, content, 1-based line number)`.
+type Line = (usize, String, usize);
+
+/// Parse a YAML-subset document into a [`Value`].
+pub fn parse_yaml(text: &str) -> Result<Value, String> {
+    let mut lines: Vec<Line> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let stripped = strip_comment(raw);
+        if stripped.trim().is_empty() {
+            continue;
+        }
+        let indent = stripped.chars().take_while(|&c| c == ' ').count();
+        if stripped[indent..].starts_with('\t') {
+            return Err(format!("yaml line {}: tabs in indentation are not supported", i + 1));
+        }
+        lines.push((indent, stripped.trim().to_string(), i + 1));
+    }
+    if lines.is_empty() {
+        return Err("empty YAML document".into());
+    }
+    let first_indent = lines[0].0;
+    let mut pos = 0;
+    let v = parse_node(&mut lines, &mut pos, first_indent)?;
+    if pos != lines.len() {
+        return Err(format!(
+            "yaml line {}: content outside the document structure (bad indentation?)",
+            lines[pos].2
+        ));
+    }
+    Ok(v)
+}
+
+/// Drop full-line comments and ` #`-introduced trailing comments. The
+/// subset does not support `#` inside quoted scalars.
+fn strip_comment(raw: &str) -> &str {
+    if raw.trim_start().starts_with('#') {
+        return "";
+    }
+    match raw.find(" #") {
+        Some(i) => &raw[..i],
+        None => raw,
+    }
+}
+
+fn is_seq_item(content: &str) -> bool {
+    content == "-" || content.starts_with("- ")
+}
+
+fn parse_node(lines: &mut Vec<Line>, pos: &mut usize, indent: usize) -> Result<Value, String> {
+    if *pos >= lines.len() {
+        return Ok(Value::Null);
+    }
+    if is_seq_item(&lines[*pos].1) {
+        parse_seq(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_seq(lines: &mut Vec<Line>, pos: &mut usize, indent: usize) -> Result<Value, String> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let (i, c, ln) = lines[*pos].clone();
+        if i != indent || !is_seq_item(&c) {
+            break;
+        }
+        if c == "-" {
+            // Item body is the indented block on the following lines.
+            *pos += 1;
+            if *pos < lines.len() && lines[*pos].0 > indent {
+                let child = lines[*pos].0;
+                items.push(parse_node(lines, pos, child)?);
+            } else {
+                items.push(Value::Null);
+            }
+        } else {
+            let rest = c[2..].trim().to_string();
+            if rest.contains(": ") || rest.ends_with(':') {
+                // `- key: value` starts a mapping whose further keys sit
+                // two columns past the dash; rewrite the line as that
+                // first entry and parse the mapping in place.
+                lines[*pos] = (indent + 2, rest, ln);
+                items.push(parse_node(lines, pos, indent + 2)?);
+            } else {
+                *pos += 1;
+                items.push(scalar(&rest, ln)?);
+            }
+        }
+    }
+    Ok(Value::Arr(items))
+}
+
+fn parse_map(lines: &mut Vec<Line>, pos: &mut usize, indent: usize) -> Result<Value, String> {
+    let mut fields: Vec<(String, Value)> = Vec::new();
+    while *pos < lines.len() {
+        let (i, c, ln) = lines[*pos].clone();
+        if i != indent || is_seq_item(&c) {
+            break;
+        }
+        let (key, rest) = split_key(&c, ln)?;
+        if rest.is_empty() {
+            *pos += 1;
+            let nested = if *pos < lines.len() && lines[*pos].0 > indent {
+                let child = lines[*pos].0;
+                parse_node(lines, pos, child)?
+            } else if *pos < lines.len() && lines[*pos].0 == indent && is_seq_item(&lines[*pos].1) {
+                // YAML allows a block sequence at the key's own indent.
+                parse_node(lines, pos, indent)?
+            } else {
+                Value::Null
+            };
+            fields.push((key, nested));
+        } else {
+            *pos += 1;
+            fields.push((key, scalar(&rest, ln)?));
+        }
+    }
+    Ok(Value::Obj(fields))
+}
+
+fn split_key(content: &str, ln: usize) -> Result<(String, String), String> {
+    if let Some((k, v)) = content.split_once(": ") {
+        return Ok((unquote(k.trim()), v.trim().to_string()));
+    }
+    if let Some(k) = content.strip_suffix(':') {
+        return Ok((unquote(k.trim()), String::new()));
+    }
+    Err(format!("yaml line {ln}: expected `key: value` or `key:`, got `{content}`"))
+}
+
+fn unquote(s: &str) -> String {
+    let b = s.as_bytes();
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"') || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn scalar(s: &str, ln: usize) -> Result<Value, String> {
+    match s {
+        "null" | "~" => return Ok(Value::Null),
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return Ok(Value::Str(unquote(s)));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        return inner
+            .split(',')
+            .map(|item| scalar(item.trim(), ln))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::Arr);
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        if n.is_finite() {
+            return Ok(Value::Num(n));
+        }
+        return Err(format!("yaml line {ln}: non-finite number `{s}`"));
+    }
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diamond_shape_parses() {
+        let text = "\
+# a comment
+name: diamond
+inputs:
+  - name: A-input
+    size: 500
+tasks:
+  - name: A
+    flops: 100
+    inputs:
+      - A-input
+    outputs:
+      - name: A-out
+        size: 150
+  - name: B
+    flops: 200
+    inputs:
+      - A-out
+    outputs: []
+";
+        let v = parse_yaml(text).unwrap();
+        assert_eq!(v.req_str("name").unwrap(), "diamond");
+        let tasks = v.req_arr("tasks").unwrap();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].req_str("name").unwrap(), "A");
+        assert_eq!(tasks[0].req_f64("flops").unwrap(), 100.0);
+        let ins = tasks[0].req_arr("inputs").unwrap();
+        assert_eq!(ins[0].as_str(), Some("A-input"));
+        let outs = tasks[0].req_arr("outputs").unwrap();
+        assert_eq!(outs[0].req_f64("size").unwrap(), 150.0);
+        assert_eq!(tasks[1].req_arr("outputs").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn scalars_and_flow_seq() {
+        let v = parse_yaml("a: true\nb: ~\nc: -2.5e1\nd: [1, x, 'q']\ne: \"hi there\"\n")
+            .unwrap();
+        assert!(v.req_bool("a").unwrap());
+        assert_eq!(v.get("b"), Some(&Value::Null));
+        assert_eq!(v.req_f64("c").unwrap(), -25.0);
+        let d = v.req_arr("d").unwrap();
+        assert_eq!(d[0].as_f64(), Some(1.0));
+        assert_eq!(d[1].as_str(), Some("x"));
+        assert_eq!(d[2].as_str(), Some("q"));
+        assert_eq!(v.req_str("e").unwrap(), "hi there");
+    }
+
+    #[test]
+    fn trailing_comments_stripped() {
+        let v = parse_yaml("a: 1 # one\nb: 2\n").unwrap();
+        assert_eq!(v.req_f64("a").unwrap(), 1.0);
+        assert_eq!(v.req_f64("b").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn seq_at_key_indent() {
+        let v = parse_yaml("xs:\n- 1\n- 2\n").unwrap();
+        assert_eq!(v.req_arr("xs").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_tabs_and_garbage() {
+        assert!(parse_yaml("a:\n\tb: 1\n").is_err());
+        assert!(parse_yaml("   ").is_err());
+        assert!(parse_yaml("just a bare scalar line").is_err());
+    }
+
+    #[test]
+    fn bad_indent_reports_line() {
+        let e = parse_yaml("a: 1\n      b: 2\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+}

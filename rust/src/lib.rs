@@ -18,7 +18,10 @@
 //!   list scheduler whose 5 components span 72 algorithms (HEFT, CPoP,
 //!   MCT, MET, Sufferage, … as special cases).
 //! * [`datasets`] — the 4×5 benchmark dataset families of §III
-//!   (in_trees, out_trees, chains, cycles × CCR ∈ {1/5, 1/2, 1, 2, 5}).
+//!   (in_trees, out_trees, chains, cycles × CCR ∈ {1/5, 1/2, 1, 2, 5}),
+//!   plus [`datasets::traces`]: real workflow-trace ingestion (WfCommons
+//!   JSON and simple DSLab-style DAG descriptions → [`instance`]s, with
+//!   machine-spec or synthetic network attachment and CCR rescaling).
 //! * [`benchmark`] — the 72-algorithm sweep harness producing makespan /
 //!   runtime ratios.
 //! * [`coordinator`] — std::thread leader/worker parallel benchmark execution
@@ -67,6 +70,10 @@ pub mod util;
 pub mod prelude {
     pub use crate::benchmark::{
         extended_metrics, BenchmarkResults, ExtendedMetrics, Harness, HarnessOptions,
+    };
+    pub use crate::datasets::traces::{
+        load_trace, parse_trace, to_trace_json, trace_from_value, NetworkSynthesis,
+        TraceFormat, TraceOptions, TraceSet,
     };
     pub use crate::datasets::{rng::Rng, DatasetSpec, Structure, CCRS};
     pub use crate::graph::TaskGraph;

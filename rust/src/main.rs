@@ -5,6 +5,7 @@
 //! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
 //! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--workers 0] [--repeats 1] [--out results/benchmark.json]
 //! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--out results/robustness.csv]
+//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--simulate (+ the simulate flags)] [--workers 0] [--out <csv>]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
 //! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
@@ -36,6 +37,8 @@ COMMANDS:
   schedule   run one scheduler on one instance, print the schedule
   benchmark  run a scheduler sweep over datasets (parallel)
   simulate   replay schedules under perturbation; robustness table
+  trace      load real workflow traces (WfCommons/simple DAG), schedule,
+             optionally replay under perturbation; per-trace CSV
   analyze    derive tables/figures from saved benchmark results
   reproduce  full paper reproduction (benchmark + all 13 artifacts)
   rank       compute task ranks (native or XLA backend)
@@ -51,6 +54,7 @@ fn main() {
         Some("schedule") => cmd_schedule(&args),
         Some("benchmark") => cmd_benchmark(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("trace") => cmd_trace(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("rank") => cmd_rank(&args),
@@ -172,19 +176,12 @@ fn cmd_benchmark(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> Result<()> {
+/// Parse the shared perturbation-sweep flags (`--sigma`,
+/// `--slowdown-prob`, `--slowdown-factor`, `--policy`, `--slack`,
+/// `--trials`, `--sim-seed`) used by `simulate` and `trace`.
+fn sweep_from_args(args: &Args) -> Result<ptgs::benchmark::SimSweep> {
     use ptgs::benchmark::SimSweep;
     use ptgs::sim::{Perturbation, ReplayPolicy};
-
-    let schedulers = parse_schedulers(&args.get_or("schedulers", "all"))?;
-    let count = args.get_parse("count", 20usize).map_err(|e| anyhow!(e))?;
-    let seed = args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?;
-    let specs = parse_specs(
-        &args.get_or("structures", "all"),
-        &args.get_or("ccrs", "all"),
-        count,
-        seed,
-    )?;
 
     let sigma = args.get_parse("sigma", 0.2f64).map_err(|e| anyhow!(e))?;
     let slowdown_prob = args.get_parse("slowdown-prob", 0.0f64).map_err(|e| anyhow!(e))?;
@@ -210,12 +207,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         other => bail!("unknown policy {other} (static|reschedule)"),
     };
     let trials = args.get_parse("trials", 10usize).map_err(|e| anyhow!(e))?;
-    let sweep = SimSweep {
+    Ok(SimSweep {
         perturb,
         policy,
         trials,
         seed: args.get_parse("sim-seed", 0x0B5E_55EDu64).map_err(|e| anyhow!(e))?,
-    };
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let schedulers = parse_schedulers(&args.get_or("schedulers", "all"))?;
+    let count = args.get_parse("count", 20usize).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?;
+    let specs = parse_specs(
+        &args.get_or("structures", "all"),
+        &args.get_or("ccrs", "all"),
+        count,
+        seed,
+    )?;
+    let sweep = sweep_from_args(args)?;
 
     let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
     let mut options = CoordinatorOptions::default();
@@ -228,7 +238,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     eprintln!(
         "simulate: {} records ({} trials each) in {:.2}s",
         records.len(),
-        trials,
+        sweep.trials,
         t0.elapsed().as_secs_f64()
     );
     println!("{}", ptgs::analysis::robustness_table(&records));
@@ -236,6 +246,147 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let out = PathBuf::from(out);
         ptgs::analysis::write_robustness_csv(&out, &records)?;
         println!("robustness CSV written to {}", out.display());
+    }
+    Ok(())
+}
+
+/// `ptgs trace` — load real workflow traces, validate them, run every
+/// configured scheduler, verify zero-noise replay exactness, and
+/// (optionally) replay under perturbation into a robustness CSV.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use ptgs::datasets::traces::{NetworkSynthesis, TraceOptions, TraceSet};
+    use ptgs::sim::{Perturbation, ReplayPolicy, SimOptions};
+
+    let input = args
+        .get("input")
+        .ok_or_else(|| anyhow!("--input <file|dir[,...]> is required"))?;
+    let paths: Vec<PathBuf> = input.split(',').map(|s| PathBuf::from(s.trim())).collect();
+    let ccr = match args.get("ccr") {
+        Some(text) => {
+            let c: f64 = text.parse().map_err(|e| anyhow!("invalid --ccr: {e}"))?;
+            if !(c.is_finite() && c > 0.0) {
+                bail!("--ccr must be > 0, got {c}");
+            }
+            Some(c)
+        }
+        None => None,
+    };
+    let fallback = NetworkSynthesis {
+        nodes: args.get_parse("nodes", 4usize).map_err(|e| anyhow!(e))?,
+        heterogeneity: args.get_parse("heterogeneity", 1.0f64 / 3.0).map_err(|e| anyhow!(e))?,
+        seed: args
+            .get_parse("net-seed", NetworkSynthesis::default().seed)
+            .map_err(|e| anyhow!(e))?,
+    };
+    if fallback.nodes < 2 {
+        bail!("--nodes must be >= 2, got {}", fallback.nodes);
+    }
+    if fallback.heterogeneity < 0.0 {
+        bail!("--heterogeneity must be >= 0, got {}", fallback.heterogeneity);
+    }
+    let opts = TraceOptions { ccr, fallback };
+    // Every instance was already validated by the loader.
+    let set = TraceSet::load_paths(&paths, &opts).map_err(|e| anyhow!(e))?;
+    for inst in &set.instances {
+        println!(
+            "loaded {}: {} tasks, {} edges, {} nodes, ccr {:.4}",
+            inst.name,
+            inst.graph.len(),
+            inst.graph.num_edges(),
+            inst.network.len(),
+            inst.ccr()
+        );
+    }
+
+    let schedulers = parse_schedulers(&args.get_or("schedulers", "all"))?;
+
+    // Every plan must replay bit-exactly under zero noise — the
+    // simulator-consistency contract for external workloads. This
+    // schedules each (config, trace) pair once, serially, on top of the
+    // sweep below; `--no-verify` skips it for large corpora.
+    if !args.has("no-verify") {
+        for inst in &set.instances {
+            for cfg in &schedulers {
+                let plan = cfg.build().schedule(inst);
+                plan.validate(inst).map_err(|e| {
+                    anyhow!("{} on {}: invalid schedule: {e}", cfg.name(), inst.name)
+                })?;
+                let out = ptgs::sim::simulate(
+                    inst,
+                    &plan,
+                    cfg,
+                    &SimOptions {
+                        perturb: Perturbation::none(),
+                        seed: 0,
+                        policy: ReplayPolicy::Static,
+                    },
+                );
+                if out.makespan != plan.makespan() {
+                    bail!(
+                        "zero-noise replay drifted for {} on {}: planned {} realized {}",
+                        cfg.name(),
+                        inst.name,
+                        plan.makespan(),
+                        out.makespan
+                    );
+                }
+            }
+        }
+        println!(
+            "zero-noise replay: exact for {} config(s) on {} trace(s)",
+            schedulers.len(),
+            set.instances.len()
+        );
+    }
+
+    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
+    let mut options = CoordinatorOptions::default();
+    if workers > 0 {
+        options.workers = workers;
+    }
+    options.chunk_size = 1; // traces are few and heterogeneous in size
+    let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
+
+    if args.has("simulate") {
+        let sweep = sweep_from_args(args)?;
+        let t0 = std::time::Instant::now();
+        let records = coord.run_traces_sim_blocking(&set.instances, &sweep);
+        eprintln!(
+            "trace: {} sim records ({} trials each) in {:.2}s",
+            records.len(),
+            sweep.trials,
+            t0.elapsed().as_secs_f64()
+        );
+        println!("{}", ptgs::analysis::robustness_table(&records));
+        let out = PathBuf::from(args.get_or("out", "results/trace_robustness.csv"));
+        ptgs::analysis::write_robustness_csv(&out, &records)?;
+        println!("robustness CSV written to {}", out.display());
+    } else {
+        let results = coord.run_traces_blocking(&set.instances);
+        for ds in results.datasets() {
+            let recs: Vec<_> = results.records.iter().filter(|r| r.dataset == ds).collect();
+            let best = recs
+                .iter()
+                .min_by(|a, b| a.makespan.partial_cmp(&b.makespan).unwrap())
+                .expect("non-empty dataset");
+            let worst = recs
+                .iter()
+                .max_by(|a, b| a.makespan.partial_cmp(&b.makespan).unwrap())
+                .expect("non-empty dataset");
+            println!(
+                "{ds}: best {} ({:.4}), worst {} ({:.4}) over {} schedulers",
+                best.scheduler,
+                best.makespan,
+                worst.scheduler,
+                worst.makespan,
+                recs.len()
+            );
+        }
+        if let Some(out) = args.get("out") {
+            let out = PathBuf::from(out);
+            results.save(&out)?;
+            println!("benchmark records written to {}", out.display());
+        }
     }
     Ok(())
 }

@@ -1,0 +1,311 @@
+//! End-to-end tests for the workflow-trace ingestion subsystem: every
+//! vendored fixture and generated instance must load to a valid
+//! [`ProblemInstance`], round-trip exactly through the loader's
+//! serializer, hit requested CCRs after rescaling, replay bit-exactly
+//! under zero noise for all 72 configs, and flow through the serial
+//! harness, the parallel coordinator, the robustness table, and the
+//! `ptgs trace` CLI.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use ptgs::analysis::robustness_rows;
+use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::coordinator::{sort_canonical, Coordinator, CoordinatorOptions};
+use ptgs::datasets::traces::{
+    load_trace, to_trace_json, trace_from_value, TraceOptions, TraceSet,
+};
+use ptgs::datasets::{DatasetSpec, Structure, CCRS};
+use ptgs::instance::ProblemInstance;
+use ptgs::scheduler::SchedulerConfig;
+use ptgs::sim::{simulate, Perturbation, ReplayPolicy, SimOptions};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/traces")
+}
+
+fn fixture(name: &str) -> PathBuf {
+    fixture_dir().join(name)
+}
+
+const FIXTURES: [&str; 4] = [
+    "diamond.yaml",
+    "epigenomics_like.json",
+    "montage_like.json",
+    "seismology_like.json",
+];
+
+fn load_fixture(name: &str, opts: &TraceOptions) -> ProblemInstance {
+    load_trace(&fixture(name), opts).unwrap_or_else(|e| panic!("loading {name}: {e}"))
+}
+
+#[test]
+fn vendored_fixtures_load_and_validate() {
+    for name in FIXTURES {
+        let inst = load_fixture(name, &TraceOptions::default());
+        inst.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(inst.graph.len() >= 4, "{name}: {} tasks", inst.graph.len());
+        assert!(inst.graph.num_edges() >= 3, "{name}");
+        assert!(inst.network.len() >= 2, "{name}");
+        assert!(!inst.name.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn fixture_shapes_match_their_workflows() {
+    let montage = load_fixture("montage_like.json", &TraceOptions::default());
+    assert_eq!(montage.graph.len(), 17);
+    assert_eq!(montage.graph.num_edges(), 29);
+    // Machine specs → 4 nodes, speeds normalized to mean 1.
+    assert_eq!(montage.network.len(), 4);
+    let mean: f64 = montage.network.speeds().iter().sum::<f64>() / montage.network.len() as f64;
+    assert!((mean - 1.0).abs() < 1e-12);
+
+    let epi = load_fixture("epigenomics_like.json", &TraceOptions::default());
+    assert_eq!(epi.graph.len(), 16);
+    // No machines → synthetic fallback with the default node count.
+    assert_eq!(epi.network.len(), TraceOptions::default().fallback.nodes);
+    assert_eq!(epi.graph.sources().len(), 1, "fastqSplit is the only source");
+
+    let seis = load_fixture("seismology_like.json", &TraceOptions::default());
+    assert_eq!(seis.graph.len(), 7);
+    // 5 file-derived edges + 1 parents-only (zero-data) edge.
+    assert_eq!(seis.graph.num_edges(), 6);
+    let pre = (0..seis.graph.len()).find(|&t| seis.graph.name(t) == "sPreFilter").unwrap();
+    let wrapper = (0..seis.graph.len())
+        .find(|&t| seis.graph.name(t) == "wrapper_siftSTFByMisfit")
+        .unwrap();
+    assert_eq!(seis.graph.edge(pre, wrapper), Some(0.0), "parents-only edge is zero-data");
+
+    let diamond = load_fixture("diamond.yaml", &TraceOptions::default());
+    assert_eq!(diamond.graph.len(), 4);
+    assert_eq!(diamond.graph.num_edges(), 4);
+    assert_eq!(diamond.graph.sources().len(), 1);
+    assert_eq!(diamond.graph.sinks().len(), 1);
+}
+
+#[test]
+fn fixtures_round_trip_through_serializer() {
+    for name in FIXTURES {
+        let inst = load_fixture(name, &TraceOptions::default());
+        let doc = to_trace_json(&inst);
+        let reparsed = ptgs::util::parse(&doc.to_string()).unwrap();
+        let back = trace_from_value(&reparsed, "fallback", &TraceOptions::default())
+            .unwrap_or_else(|e| panic!("{name} round-trip: {e}"));
+        assert_eq!(inst, back, "{name}: round-trip must be exact");
+    }
+}
+
+#[test]
+fn fixtures_hit_every_requested_ccr() {
+    for name in FIXTURES {
+        for ccr in CCRS {
+            let opts = TraceOptions { ccr: Some(ccr), ..TraceOptions::default() };
+            let inst = load_fixture(name, &opts);
+            assert!(
+                (inst.ccr() - ccr).abs() < 1e-6 * ccr,
+                "{name}: got {} want {ccr}",
+                inst.ccr()
+            );
+        }
+    }
+}
+
+/// Generated instances (all four synthetic families) survive the
+/// serialize → load round-trip exactly and rescale to every CCR — the
+/// "generated trace" half of the loader property.
+#[test]
+fn generated_traces_round_trip_and_rescale() {
+    for structure in Structure::ALL {
+        let spec = DatasetSpec { count: 3, ..DatasetSpec::new(structure, 1.0) };
+        for inst in spec.generate() {
+            let doc = to_trace_json(&inst);
+            let reparsed = ptgs::util::parse(&doc.to_string()).unwrap();
+            let back = trace_from_value(&reparsed, "fallback", &TraceOptions::default()).unwrap();
+            assert_eq!(inst, back, "{}", inst.name);
+
+            for ccr in [0.2, 2.0] {
+                let opts = TraceOptions { ccr: Some(ccr), ..TraceOptions::default() };
+                let rescaled = trace_from_value(&reparsed, "fallback", &opts).unwrap();
+                assert!(
+                    (rescaled.ccr() - ccr).abs() < 1e-6 * ccr,
+                    "{}: got {} want {ccr}",
+                    inst.name,
+                    rescaled.ccr()
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance contract: zero-noise simulator replay reproduces the
+/// planned makespan bit-exactly for every one of the 72 configs on a
+/// vendored trace.
+#[test]
+fn zero_noise_replay_exact_for_all_72_configs() {
+    let opts = TraceOptions { ccr: Some(1.0), ..TraceOptions::default() };
+    let inst = load_fixture("diamond.yaml", &opts);
+    let configs = SchedulerConfig::all();
+    assert_eq!(configs.len(), 72);
+    for cfg in configs {
+        let plan = cfg.build().schedule(&inst);
+        plan.validate(&inst)
+            .unwrap_or_else(|e| panic!("{} invalid on diamond: {e}", cfg.name()));
+        let out = simulate(
+            &inst,
+            &plan,
+            &cfg,
+            &SimOptions {
+                perturb: Perturbation::none(),
+                seed: 0,
+                policy: ReplayPolicy::Static,
+            },
+        );
+        assert_eq!(
+            out.makespan,
+            plan.makespan(),
+            "{}: zero-noise replay drifted",
+            cfg.name()
+        );
+        assert_eq!(out.schedule, plan, "{}", cfg.name());
+    }
+}
+
+#[test]
+fn trace_set_loads_directory_sorted() {
+    let set = TraceSet::load_paths(&[fixture_dir()], &TraceOptions::default()).unwrap();
+    assert_eq!(set.len(), FIXTURES.len());
+    let names: Vec<&str> = set.instances.iter().map(|i| i.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec!["diamond", "epigenomics_like", "montage_like", "seismology_like"]
+    );
+    assert!(TraceSet::load_paths(&[fixture("nope.json")], &TraceOptions::default()).is_err());
+}
+
+#[test]
+fn trace_set_rejects_duplicate_names() {
+    let dir = tmpdir("ptgs_trace_dup");
+    let doc = r#"{"name": "same", "tasks": [{"name": "a", "flops": 1}]}"#;
+    std::fs::write(dir.join("one.json"), doc).unwrap();
+    std::fs::write(dir.join("two.json"), doc).unwrap();
+    let err = TraceSet::load_paths(&[dir.clone()], &TraceOptions::default()).unwrap_err();
+    assert!(err.contains("duplicate trace name"), "{err}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn robustness_table_keyed_by_trace_name() {
+    let set = TraceSet::load_paths(&[fixture_dir()], &TraceOptions::default()).unwrap();
+    let harness = Harness::with_schedulers(vec![SchedulerConfig::heft(), SchedulerConfig::mct()]);
+    let sweep = SimSweep { trials: 2, ..SimSweep::default() };
+    let records = harness.run_instances_sim(&set.instances, &sweep);
+    assert_eq!(records.len(), set.len() * 2);
+    let rows = robustness_rows(&records);
+    assert_eq!(rows.len(), set.len() * 2, "one row per (trace, scheduler)");
+    for name in ["diamond", "montage_like", "epigenomics_like", "seismology_like"] {
+        assert!(
+            rows.iter().any(|r| r.dataset == name),
+            "robustness rows must be keyed by trace name {name}"
+        );
+    }
+}
+
+#[test]
+fn parallel_trace_sweep_matches_serial() {
+    let set = TraceSet::load_paths(&[fixture_dir()], &TraceOptions::default()).unwrap();
+    let schedulers = vec![SchedulerConfig::heft(), SchedulerConfig::met()];
+    let sweep = SimSweep { trials: 2, ..SimSweep::default() };
+    let coord = Coordinator {
+        options: CoordinatorOptions { workers: 4, chunk_size: 1, ..Default::default() },
+        ..Coordinator::with_schedulers(schedulers.clone())
+    };
+    let par = coord.run_traces_sim_blocking(&set.instances, &sweep);
+    let mut serial = Harness::with_schedulers(schedulers).run_instances_sim(&set.instances, &sweep);
+    sort_canonical(&mut serial);
+    assert_eq!(par, serial, "parallel trace sweep must match serial byte-for-byte");
+}
+
+// ---------------------------------------------------------------------
+// CLI
+// ---------------------------------------------------------------------
+
+fn ptgs() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ptgs"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn cli_trace_simulate_all_72_writes_csv() {
+    let dir = tmpdir("ptgs_cli_trace");
+    let csv = dir.join("robustness.csv");
+    let out = ptgs()
+        .args(["trace", "--ccr", "1.0", "--simulate", "--trials", "2", "--input"])
+        .arg(fixture("diamond.yaml"))
+        .arg("--out")
+        .arg(&csv)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("loaded diamond"), "{text}");
+    assert!(text.contains("zero-noise replay: exact for 72 config(s)"), "{text}");
+    assert!(text.contains("mean_robustness"), "{text}");
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(body.lines().count(), 1 + 72, "header + one row per scheduler: {body}");
+    assert!(body.lines().skip(1).all(|l| l.starts_with("diamond,")), "{body}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn cli_trace_static_summary_over_directory() {
+    let out = ptgs()
+        .args(["trace", "--schedulers", "HEFT,MCT,MET", "--input"])
+        .arg(fixture_dir())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("zero-noise replay: exact for 3 config(s) on 4 trace(s)"), "{text}");
+    assert!(text.contains("montage_like: best"), "{text}");
+}
+
+#[test]
+fn cli_trace_no_verify_skips_pre_pass() {
+    let out = ptgs()
+        .args(["trace", "--no-verify", "--schedulers", "HEFT", "--input"])
+        .arg(fixture("diamond.yaml"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(!text.contains("zero-noise replay"), "{text}");
+    assert!(text.contains("diamond: best"), "{text}");
+}
+
+#[test]
+fn cli_trace_rejects_bad_flags() {
+    let out = ptgs().args(["trace"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--input"));
+
+    let out = ptgs()
+        .args(["trace", "--ccr", "-2", "--input"])
+        .arg(fixture("diamond.yaml"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--ccr"));
+
+    let out = ptgs()
+        .args(["trace", "--input", "/definitely/not/here.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

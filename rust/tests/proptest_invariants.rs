@@ -322,3 +322,33 @@ fn prop_rank_reversal_duality() {
         }
     }
 }
+
+/// Arbitrary instances survive the trace serializer round-trip exactly
+/// (load(to_trace_json(inst)) == inst), and rescale to any requested
+/// CCR within 1e-6 whenever the instance has a defined CCR at all.
+#[test]
+fn prop_trace_round_trip_and_ccr() {
+    use ptgs::datasets::traces::{to_trace_json, trace_from_value, TraceOptions};
+
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(0x7ACE + case);
+        let inst = arbitrary_instance(&mut rng);
+        let doc = ptgs::util::parse(&to_trace_json(&inst).to_string()).unwrap();
+        let back = trace_from_value(&doc, "fallback", &TraceOptions::default())
+            .unwrap_or_else(|e| panic!("seed {case}: {e}"));
+        assert_eq!(inst, back, "seed {case}: trace round-trip drifted");
+        back.validate().unwrap_or_else(|e| panic!("seed {case}: {e}"));
+
+        if inst.ccr() > 0.0 {
+            for target in [0.5, 2.0] {
+                let opts = TraceOptions { ccr: Some(target), ..TraceOptions::default() };
+                let rescaled = trace_from_value(&doc, "fallback", &opts).unwrap();
+                assert!(
+                    (rescaled.ccr() - target).abs() < 1e-6 * target,
+                    "seed {case}: got {} want {target}",
+                    rescaled.ccr()
+                );
+            }
+        }
+    }
+}
