@@ -5,6 +5,11 @@
 //! * **coordinator chunk size**: sharding granularity vs queue/channel
 //!   overhead;
 //! * **timing repeats**: the min-of-k runtime estimator's cost.
+//!
+//! The coordinator/harness paths benched here share one
+//! `SchedulingContext` per instance since the zero-recompute refactor,
+//! so these numbers include that amortization. `PTGS_BENCH_FAST=1`
+//! shrinks budgets for CI smoke runs (see `ptgs::benchlib`).
 
 use std::hint::black_box;
 

@@ -20,13 +20,17 @@ fn specs(count: usize) -> Vec<DatasetSpec> {
 }
 
 fn main() {
-    // These are heavy end-to-end runs: fewer, longer samples.
+    // These are heavy end-to-end runs: fewer, longer samples. (Under
+    // PTGS_BENCH_FAST=1 `with_config` keeps the smoke budgets instead,
+    // and the instance count shrinks.) Both the serial harness and the
+    // coordinator workers share one SchedulingContext per instance —
+    // the sweep-level speedup itself is tracked by bench_sweep.rs.
     let mut b = Bencher::from_env().with_config(Config {
         measure_time: Duration::from_millis(300),
         samples: 5,
         warmup: Duration::from_millis(200),
     });
-    let count = 5;
+    let count = if ptgs::benchlib::fast_mode() { 1 } else { 5 };
 
     let h = Harness::all_schedulers();
     b.bench("sweep72/serial", || {

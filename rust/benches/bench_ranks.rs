@@ -35,6 +35,20 @@ fn main() {
                 black_box(native::ranks(black_box(inst)));
             }
         });
+        // Context-served ranks: first call computes, the remaining 71
+        // sweep configs hit the OnceLock — the amortization the
+        // zero-recompute core buys per instance.
+        b.bench(&format!("ranks_ctx/amortized72_tasks_{n}"), || {
+            for inst in &insts {
+                let ctx = ptgs::scheduler::SchedulingContext::new(
+                    black_box(inst),
+                    ptgs::ranks::RankBackend::Native,
+                );
+                for _ in 0..72 {
+                    black_box(ctx.ranks());
+                }
+            }
+        });
     }
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {

@@ -41,6 +41,24 @@ fn main() {
         });
     }
 
+    // --- zero-recompute core vs the pre-refactor reference ------------
+    // Both sides pay per-call rank computation (schedule() builds a
+    // private context; note it materializes the full up+down ranks
+    // where the reference runs upward-only for HEFT), so this pair
+    // approximates the incremental-DAT + gap-index + exec-matrix win;
+    // the sweep-level rank-sharing win is measured by bench_sweep.rs.
+    let heft = SchedulerConfig::heft().build();
+    b.bench("core/heft_fast_path", || {
+        for inst in &instances {
+            black_box(heft.schedule(black_box(inst)));
+        }
+    });
+    b.bench("core/heft_reference", || {
+        for inst in &instances {
+            black_box(heft.schedule_reference(black_box(inst)));
+        }
+    });
+
     // --- one component flipped at a time off HEFT ----------------------
     let base = SchedulerConfig::heft();
     for (name, cfg) in [

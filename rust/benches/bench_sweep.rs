@@ -1,0 +1,110 @@
+//! End-to-end 72-config sweep benchmark: the zero-recompute shared-
+//! context core ([`SchedulingContext`] + incremental DAT + gap-indexed
+//! timelines) against the pre-refactor per-call reference
+//! (`schedule_reference`), plus the full harness record path.
+//!
+//! Before timing anything the two cores are asserted bit-identical on
+//! every (instance, config) pair — the speedup below is only meaningful
+//! because the outputs are exactly equal.
+//!
+//! Emits machine-readable `BENCH_sweep.json` (override the path with
+//! `PTGS_BENCH_OUT`) including the measured `speedup_vs_reference`, so
+//! CI can record the repo's perf trajectory on every run
+//! (`PTGS_BENCH_FAST=1 cargo bench --bench bench_sweep`).
+
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ptgs::benchlib::{self, Bencher, Config};
+use ptgs::benchmark::Harness;
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::ranks::RankBackend;
+use ptgs::scheduler::{SchedulerConfig, SchedulingContext};
+use ptgs::util::Value;
+
+fn sweep_instances(count: usize) -> Vec<ProblemInstance> {
+    [Structure::Chains, Structure::InTrees, Structure::OutTrees]
+        .iter()
+        .flat_map(|&s| DatasetSpec { count, ..DatasetSpec::new(s, 1.0) }.generate())
+        .collect()
+}
+
+fn main() {
+    let count = if benchlib::fast_mode() { 1 } else { 4 };
+    let mut b = Bencher::from_env().with_config(Config {
+        measure_time: Duration::from_millis(200),
+        samples: 10,
+        warmup: Duration::from_millis(100),
+    });
+    let instances = sweep_instances(count);
+    let configs = SchedulerConfig::all();
+
+    // Bit-exactness gate: never publish a speedup over a baseline that
+    // computes something different.
+    for inst in &instances {
+        let ctx = SchedulingContext::new(inst, RankBackend::Native);
+        for cfg in &configs {
+            let s = cfg.build();
+            assert_eq!(
+                s.schedule_with(&ctx),
+                s.schedule_reference(inst),
+                "{} drifted from the reference core on {}",
+                cfg.name(),
+                inst.name
+            );
+        }
+    }
+
+    // The pre-refactor core: ranks, priorities, pins, DATs and timeline
+    // scans re-derived inside every one of the 72 configs.
+    b.bench("sweep72/reference_per_call", || {
+        for inst in &instances {
+            for cfg in &configs {
+                black_box(cfg.build().schedule_reference(black_box(inst)));
+            }
+        }
+    });
+
+    // The shared-context core: one SchedulingContext per instance.
+    b.bench("sweep72/shared_ctx", || {
+        for inst in &instances {
+            let ctx = SchedulingContext::new(inst, RankBackend::Native);
+            for cfg in &configs {
+                black_box(cfg.build().schedule_with(black_box(&ctx)));
+            }
+        }
+    });
+
+    // The full harness path (validation + timing + records) end to end.
+    let h = Harness::all_schedulers();
+    b.bench("sweep72/harness_records", || {
+        for (i, inst) in instances.iter().enumerate() {
+            black_box(h.run_instance(&inst.name, i, inst));
+        }
+    });
+
+    // Record the sweep speedup (min over samples — the stable
+    // estimator) in BENCH_sweep.json for the perf trajectory. Only
+    // write when both cores were actually measured, so a filtered run
+    // (`cargo bench -- harness`) never clobbers a real measurement
+    // file with a partial document.
+    let find = |name: &str| b.results.iter().find(|m| m.name == name);
+    let (Some(reference), Some(shared)) =
+        (find("sweep72/reference_per_call"), find("sweep72/shared_ctx"))
+    else {
+        return;
+    };
+    let speedup = reference.min.as_secs_f64() / shared.min.as_secs_f64();
+    println!("sweep72: shared-ctx speedup vs reference core: {speedup:.2}x");
+    let mut doc = benchlib::measurements_json(&b.results);
+    if let Value::Obj(fields) = &mut doc {
+        fields.push(("speedup_vs_reference".to_string(), Value::Num(speedup)));
+    }
+    let out = std::env::var("PTGS_BENCH_OUT")
+        .unwrap_or_else(|_| "results/BENCH_sweep.json".to_string());
+    let path = PathBuf::from(out);
+    benchlib::write_json(&path, &doc).expect("writing BENCH_sweep.json");
+    println!("wrote {}", path.display());
+}

@@ -8,7 +8,9 @@ use ptgs::graph::TaskGraph;
 use ptgs::instance::ProblemInstance;
 use ptgs::network::Network;
 use ptgs::schedule::{Assignment, Schedule};
-use ptgs::scheduler::{data_available_time, window_append_only, window_insertion};
+use ptgs::scheduler::{
+    data_available_time, window_append_only, window_insertion, window_insertion_indexed,
+};
 
 /// A node timeline with `k` busy slots and small gaps between them, plus
 /// one unscheduled probe task with `preds` scheduled predecessors.
@@ -42,6 +44,13 @@ fn main() {
         let (inst, sched, probe) = setup(k, 3);
         b.bench(&format!("window/insertion_{k}"), || {
             black_box(window_insertion(&inst, &sched, probe, 0));
+        });
+        // The gap-indexed scan the hot path uses: binary search to the
+        // first admissible gap instead of rescanning from time 0.
+        let dat = data_available_time(&inst, &sched, probe, 0);
+        let dur = inst.network.exec_time(inst.graph.cost(probe), 0);
+        b.bench(&format!("window/insertion_indexed_{k}"), || {
+            black_box(window_insertion_indexed(&sched, 0, black_box(dat), dur));
         });
         b.bench(&format!("window/append_only_{k}"), || {
             black_box(window_append_only(&inst, &sched, probe, 0));

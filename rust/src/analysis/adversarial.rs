@@ -16,7 +16,8 @@ use crate::datasets::DatasetSpec;
 use crate::graph::TaskGraph;
 use crate::instance::ProblemInstance;
 use crate::network::Network;
-use crate::scheduler::SchedulerConfig;
+use crate::ranks::RankBackend;
+use crate::scheduler::{SchedulerConfig, SchedulingContext};
 
 /// Result of an adversarial search.
 #[derive(Debug, Clone)]
@@ -52,8 +53,11 @@ impl Default for AdversarialOptions {
 }
 
 fn ratio(a: &SchedulerConfig, b: &SchedulerConfig, inst: &ProblemInstance) -> f64 {
-    let ma = a.build().schedule(inst).makespan();
-    let mb = b.build().schedule(inst).makespan();
+    // Both contenders schedule the same instance: share one context so
+    // the search's inner loop computes ranks/priorities once per mutant.
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    let ma = a.build().schedule_with(&ctx).makespan();
+    let mb = b.build().schedule_with(&ctx).makespan();
     if mb <= 0.0 {
         1.0
     } else {

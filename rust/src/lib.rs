@@ -16,7 +16,11 @@
 //!   the AOT-compiled Pallas tropical-algebra kernels.
 //! * [`scheduler`] — the paper's contribution: the generalized parametric
 //!   list scheduler whose 5 components span 72 algorithms (HEFT, CPoP,
-//!   MCT, MET, Sufferage, … as special cases).
+//!   MCT, MET, Sufferage, … as special cases). Sweeps share one
+//!   [`scheduler::SchedulingContext`] per instance (ranks, priorities,
+//!   pins, exec matrix computed once, never per config) and run the
+//!   zero-recompute core `schedule_with`; the pre-refactor loop remains
+//!   as `schedule_reference`, the bit-exactness oracle.
 //! * [`datasets`] — the 4×5 benchmark dataset families of §III
 //!   (in_trees, out_trees, chains, cycles × CCR ∈ {1/5, 1/2, 1, 2, 5}),
 //!   plus [`datasets::traces`]: real workflow-trace ingestion (WfCommons
@@ -83,6 +87,7 @@ pub mod prelude {
     pub use crate::schedule::{render_gantt, Schedule};
     pub use crate::scheduler::{
         CompareFn, LookaheadScheduler, ParametricScheduler, PriorityFn, SchedulerConfig,
+        SchedulingContext,
     };
     pub use crate::benchmark::{SimRecord, SimSweep};
     pub use crate::sim::{

@@ -303,11 +303,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
     // Every plan must replay bit-exactly under zero noise — the
     // simulator-consistency contract for external workloads. This
     // schedules each (config, trace) pair once, serially, on top of the
-    // sweep below; `--no-verify` skips it for large corpora.
+    // sweep below; `--no-verify` skips it for large corpora. One shared
+    // SchedulingContext per trace keeps the serial pre-pass cheap:
+    // ranks/priorities/pins are computed once per trace, not per config.
     if !args.has("no-verify") {
         for inst in &set.instances {
+            let ctx = ptgs::scheduler::SchedulingContext::new(inst, RankBackend::Native);
             for cfg in &schedulers {
-                let plan = cfg.build().schedule(inst);
+                let plan = cfg.build().schedule_with(&ctx);
                 plan.validate(inst).map_err(|e| {
                     anyhow!("{} on {}: invalid schedule: {e}", cfg.name(), inst.name)
                 })?;

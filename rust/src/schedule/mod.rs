@@ -26,11 +26,31 @@ pub struct Assignment {
 /// Timelines store `Assignment` values inline (not task-id indirections)
 /// so the insertion-window gap scan — the scheduler's innermost loop —
 /// walks contiguous memory (EXPERIMENTS.md §Perf).
+///
+/// ## Gap index
+///
+/// Alongside each timeline the schedule maintains a *gap index*: the
+/// running prefix maximum of assignment end times in start order
+/// (`prefix_max_end[node][i] = max(0, end of timeline[node][0..=i])`).
+/// The idle gap in front of timeline slot `i` therefore spans
+/// `[prefix_max_end[i-1], timeline[i].start)`, and because starts are
+/// sorted, [`Schedule::gap_index`] can binary-search straight to the
+/// first gap a given data-available time could ever use — the entry
+/// point of the insertion-window scan ([`crate::scheduler`]'s innermost
+/// loop) — instead of rescanning the whole timeline. Both structures
+/// are pure functions of the timeline contents, so insertion order
+/// never affects equality comparisons.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
     assignments: Vec<Option<Assignment>>,
     /// Per node: assignments sorted by start time.
     timelines: Vec<Vec<Assignment>>,
+    /// Per node: prefix max of `end` over the start-sorted timeline,
+    /// floored at 0 (the gap index; see the type docs).
+    prefix_max_end: Vec<Vec<f64>>,
+    /// Running count of scheduled tasks (`len()` must be O(1): the
+    /// validity checker and progress accounting call it in loops).
+    scheduled: usize,
 }
 
 impl Schedule {
@@ -39,22 +59,24 @@ impl Schedule {
         Schedule {
             assignments: vec![None; num_tasks],
             timelines: vec![Vec::new(); num_nodes],
+            prefix_max_end: vec![Vec::new(); num_nodes],
+            scheduled: 0,
         }
     }
 
-    /// Number of tasks scheduled so far.
+    /// Number of tasks scheduled so far (O(1): maintained by `insert`).
     pub fn len(&self) -> usize {
-        self.assignments.iter().filter(|a| a.is_some()).count()
+        self.scheduled
     }
 
     /// True when nothing is scheduled.
     pub fn is_empty(&self) -> bool {
-        self.assignments.iter().all(|a| a.is_none())
+        self.scheduled == 0
     }
 
     /// True when every task has an assignment.
     pub fn is_complete(&self) -> bool {
-        self.assignments.iter().all(|a| a.is_some())
+        self.scheduled == self.assignments.len()
     }
 
     /// Insert an assignment. Panics if the task is already scheduled —
@@ -67,11 +89,22 @@ impl Schedule {
         );
         assert!(a.end >= a.start - EPS, "negative-duration assignment: {a:?}");
         self.assignments[a.task] = Some(a);
+        self.scheduled += 1;
         let tl = &mut self.timelines[a.node];
         let pos = tl
             .binary_search_by(|x| x.start.partial_cmp(&a.start).unwrap())
             .unwrap_or_else(|e| e);
         tl.insert(pos, a);
+        // Re-extend the gap index from the insertion point: entries
+        // before `pos` cover an unchanged prefix. Vec::insert already
+        // shifts the tail, so this adds no asymptotic cost.
+        let pm = &mut self.prefix_max_end[a.node];
+        pm.insert(pos, 0.0);
+        let mut run = if pos == 0 { 0.0 } else { pm[pos - 1] };
+        for i in pos..tl.len() {
+            run = run.max(tl[i].end);
+            pm[i] = run;
+        }
     }
 
     /// Assignment of a task, if scheduled.
@@ -82,6 +115,34 @@ impl Schedule {
     /// Tasks scheduled on `node`, ascending by start time.
     pub fn timeline(&self, node: NodeId) -> impl Iterator<Item = &Assignment> + '_ {
         self.timelines[node].iter()
+    }
+
+    /// Tasks scheduled on `node` as a slice, ascending by start time.
+    pub fn timeline_slice(&self, node: NodeId) -> &[Assignment] {
+        &self.timelines[node]
+    }
+
+    /// Entry point of the gap-indexed insertion scan: the index of the
+    /// first timeline slot on `node` whose leading gap could admit a
+    /// task with data-available time `dat`, and the gap-start (prefix
+    /// max of earlier end times, floored at 0) in front of that slot.
+    ///
+    /// Gaps ending more than [`EPS`] before `dat` can never hold the
+    /// task (its start is clamped to `dat` and durations are
+    /// non-negative), so the scan may begin at the first assignment
+    /// with `start >= dat - EPS` — found by binary search, since
+    /// timelines are start-sorted. The returned gap-start equals the
+    /// value a full linear scan would carry to that point, making the
+    /// indexed scan bit-identical to it.
+    pub fn gap_index(&self, node: NodeId, dat: f64) -> (usize, f64) {
+        let tl = &self.timelines[node];
+        let idx = tl.partition_point(|a| a.start < dat - EPS);
+        let gap_start = if idx == 0 {
+            0.0
+        } else {
+            self.prefix_max_end[node][idx - 1]
+        };
+        (idx, gap_start)
     }
 
     /// Finish time of the last task on `node` (0 when idle).
@@ -252,5 +313,52 @@ mod tests {
         let starts: Vec<f64> = s.timeline(0).map(|a| a.start).collect();
         assert_eq!(starts, vec![0.0, 2.0, 4.0]);
         assert_eq!(s.node_finish_time(0), 5.0);
+    }
+
+    #[test]
+    fn len_is_maintained_incrementally() {
+        let mut s = Schedule::new(3, 2);
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty());
+        s.insert(asg(1, 0, 0.0, 1.0));
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty() && !s.is_complete());
+        s.insert(asg(0, 1, 0.0, 1.0));
+        s.insert(asg(2, 0, 1.0, 2.0));
+        assert_eq!(s.len(), 3);
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn gap_index_matches_linear_prefix() {
+        // Out-of-order inserts; the gap index must reflect the final
+        // start-sorted timeline regardless of insertion order.
+        let mut s = Schedule::new(4, 1);
+        s.insert(asg(0, 0, 6.0, 7.0));
+        s.insert(asg(1, 0, 0.0, 1.0));
+        s.insert(asg(2, 0, 2.0, 3.0));
+        s.insert(asg(3, 0, 4.0, 5.0));
+        // dat before everything → scan starts at slot 0, gap-start 0.
+        assert_eq!(s.gap_index(0, 0.0), (0, 0.0));
+        // dat = 3.5 → first slot with start >= 3.5 - EPS is index 2
+        // (start 4.0); the prefix max of ends before it is 3.0.
+        assert_eq!(s.gap_index(0, 3.5), (2, 3.0));
+        // dat past the last start → index past the end, prefix max 7.
+        assert_eq!(s.gap_index(0, 100.0), (4, 7.0));
+    }
+
+    #[test]
+    fn gap_index_equal_to_linear_scan_position() {
+        // The returned gap-start equals what a 0-seeded linear fold of
+        // `max(end)` over the skipped prefix would produce.
+        let mut s = Schedule::new(3, 1);
+        s.insert(asg(0, 0, 0.0, 2.0));
+        s.insert(asg(1, 0, 1.9, 2.1)); // overlapping ends keep max honest
+        s.insert(asg(2, 0, 5.0, 5.5));
+        let (idx, gap_start) = s.gap_index(0, 4.0);
+        assert_eq!(idx, 2);
+        let tl = s.timeline_slice(0);
+        let linear: f64 = tl[..idx].iter().fold(0.0, |acc, a| acc.max(a.end));
+        assert_eq!(gap_start, linear);
     }
 }

@@ -14,19 +14,39 @@
 //!
 //! Classic algorithms fall out as corners of the cube (paper Table I):
 //! **HEFT** [5], **MCT** [9], **MET** [9], **Sufferage** [11].
+//!
+//! ## Zero-recompute core
+//!
+//! Everything the scheduling loop needs before its first iteration —
+//! ranks, priority vectors, the critical-path pin set, the topological
+//! order, and the dense execution-time matrix — depends only on the
+//! `(instance, rank backend)` pair, so sweeps build one immutable
+//! [`SchedulingContext`] per instance ([`ctx`]) and run every
+//! configuration through
+//! [`ParametricScheduler::schedule_with`]. Inside the loop, per-task
+//! data-available times are maintained incrementally and the
+//! insertion-window scan enters each timeline through the
+//! [`crate::schedule::Schedule::gap_index`]. The pre-refactor per-call
+//! loop survives as [`ParametricScheduler::schedule_reference`] — the
+//! bit-exactness oracle and benchmark baseline.
 
 mod compare;
+pub mod ctx;
 pub mod lookahead;
 mod parametric;
 mod priority;
 mod window;
 
 pub use compare::CompareFn;
+pub use ctx::SchedulingContext;
 pub use lookahead::LookaheadScheduler;
 pub(crate) use parametric::Entry as ReadyEntry;
 pub use parametric::ParametricScheduler;
 pub use priority::{priorities, PriorityFn};
-pub use window::{data_available_time, window_append_only, window_insertion, Candidate};
+pub use window::{
+    data_available_time, window_append_only, window_append_only_at, window_insertion,
+    window_insertion_indexed, Candidate,
+};
 
 
 use crate::ranks::RankBackend;

@@ -61,6 +61,10 @@ pub fn window_append_only(
 }
 
 /// Algorithm 5: earliest sufficiently large idle gap on `u` (insertion).
+///
+/// This is the reference linear scan (every gap from time 0 onward);
+/// the scheduling hot path uses the bit-identical gap-indexed variant
+/// [`window_insertion_indexed`] instead.
 pub fn window_insertion(
     inst: &ProblemInstance,
     sched: &Schedule,
@@ -81,6 +85,35 @@ pub fn window_insertion(
     }
     // Unbounded gap after the last task.
     let start = gap_start.max(dat);
+    Candidate { node: u, start, end: start + dur }
+}
+
+/// Gap-indexed Algorithm 5 with a precomputed data-available time and
+/// duration: binary-search ([`Schedule::gap_index`]) to the first gap
+/// that ends at or after `dat` — earlier gaps can never hold the task,
+/// since its start is clamped to `dat` and `dur >= 0` — then scan
+/// locally. Bit-identical to [`window_insertion`]: the skipped prefix
+/// provably never satisfies the fit test, and the resumed scan carries
+/// the exact `gap_start` value (prefix max of skipped end times) the
+/// linear scan would have at that point.
+pub fn window_insertion_indexed(sched: &Schedule, u: NodeId, dat: f64, dur: f64) -> Candidate {
+    let (idx, mut gap_start) = sched.gap_index(u, dat);
+    for a in &sched.timeline_slice(u)[idx..] {
+        let start = gap_start.max(dat);
+        if start + dur <= a.start + EPS {
+            return Candidate { node: u, start, end: start + dur };
+        }
+        gap_start = gap_start.max(a.end);
+    }
+    let start = gap_start.max(dat);
+    Candidate { node: u, start, end: start + dur }
+}
+
+/// Algorithm 4 with a precomputed data-available time and duration —
+/// the hot-path form of [`window_append_only`] (same arithmetic, same
+/// result, no per-call predecessor walk).
+pub fn window_append_only_at(sched: &Schedule, u: NodeId, dat: f64, dur: f64) -> Candidate {
+    let start = sched.node_finish_time(u).max(dat);
     Candidate { node: u, start, end: start + dur }
 }
 
@@ -183,5 +216,60 @@ mod tests {
         let b = window_insertion(&p, &s, 1, 1);
         assert_eq!(a, b);
         assert_eq!((a.start, a.end), (0.0, 1.0));
+    }
+
+    /// The gap-indexed scan equals the reference linear scan for every
+    /// (dat, dur) probe over a timeline with assorted gaps, including
+    /// probes landing exactly on gap boundaries.
+    #[test]
+    fn indexed_equals_linear_scan() {
+        let mut s = Schedule::new(6, 1);
+        s.insert(Assignment { task: 0, node: 0, start: 1.0, end: 2.0 });
+        s.insert(Assignment { task: 1, node: 0, start: 3.0, end: 4.5 });
+        s.insert(Assignment { task: 2, node: 0, start: 5.0, end: 6.0 });
+        s.insert(Assignment { task: 3, node: 0, start: 9.0, end: 10.0 });
+        let linear = |dat: f64, dur: f64| -> Candidate {
+            let mut gap_start = 0.0f64;
+            for a in s.timeline(0) {
+                let start = gap_start.max(dat);
+                if start + dur <= a.start + EPS {
+                    return Candidate { node: 0, start, end: start + dur };
+                }
+                gap_start = gap_start.max(a.end);
+            }
+            let start = gap_start.max(dat);
+            Candidate { node: 0, start, end: start + dur }
+        };
+        for dat in [0.0, 0.5, 1.0, 2.0, 2.5, 3.0, 4.5, 4.75, 6.0, 8.0, 9.5, 42.0] {
+            for dur in [0.25, 0.5, 1.0, 2.0, 3.5] {
+                assert_eq!(
+                    window_insertion_indexed(&s, 0, dat, dur),
+                    linear(dat, dur),
+                    "dat {dat} dur {dur}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn precomputed_forms_match_legacy_windows() {
+        let p = inst();
+        let mut s = Schedule::new(4, 2);
+        s.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+        s.insert(Assignment { task: 1, node: 0, start: 5.0, end: 6.0 });
+        for t in [2usize, 3] {
+            for u in 0..2 {
+                let dat = data_available_time(&p, &s, t, u);
+                let dur = p.network.exec_time(p.graph.cost(t), u);
+                assert_eq!(
+                    window_insertion_indexed(&s, u, dat, dur),
+                    window_insertion(&p, &s, t, u)
+                );
+                assert_eq!(
+                    window_append_only_at(&s, u, dat, dur),
+                    window_append_only(&p, &s, t, u)
+                );
+            }
+        }
     }
 }

@@ -43,11 +43,12 @@ pub mod perturb;
 pub mod replay;
 
 pub use perturb::{perturbed_instance, NoiseTrace, Perturbation};
-pub use replay::{replay_reschedule, replay_static};
+pub use replay::{replay_reschedule, replay_reschedule_with, replay_static};
 
 use crate::instance::ProblemInstance;
+use crate::ranks::RankBackend;
 use crate::schedule::Schedule;
-use crate::scheduler::SchedulerConfig;
+use crate::scheduler::{SchedulerConfig, SchedulingContext};
 
 /// What the executor does when reality drifts from the plan.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -130,9 +131,36 @@ pub fn simulate(
 /// The policy core of [`simulate`], against a pre-built effective
 /// instance. Sweeps use this to realize each noisy world **once** and
 /// replay every scheduler's plan against it, instead of re-sampling the
-/// (scheduler-independent) trace per scheduler.
+/// (scheduler-independent) trace per scheduler. Builds a private (lazy)
+/// [`SchedulingContext`] over the nominal instance for the online
+/// replanner; sweeps should use [`simulate_against_ctx`] and share one
+/// context per instance.
 pub fn simulate_against(
     inst: &ProblemInstance,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    policy: ReplayPolicy,
+) -> SimOutcome {
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    simulate_against_ctx(&ctx, eff, plan, cfg, policy)
+}
+
+/// [`simulate_against`] over a shared per-instance
+/// [`SchedulingContext`]: the reschedule policy's replanner reuses the
+/// context's nominal priorities and critical-path pins instead of
+/// recomputing ranks per (scheduler, trial). The context stays lazy —
+/// trials that never drift past the slack budget (every zero/low-noise
+/// trial) still skip the rank DP entirely.
+///
+/// The context's backend governs the replanner's nominal ranks. Under
+/// the default Native backend this is identical to the pre-context
+/// behavior (which hardcoded native ranks); under the feature-gated
+/// XLA backend the replanner now deliberately sees the same rank
+/// arithmetic as the planner, instead of silently switching engines
+/// mid-simulation.
+pub fn simulate_against_ctx(
+    ctx: &SchedulingContext<'_>,
     eff: &ProblemInstance,
     plan: &Schedule,
     cfg: &SchedulerConfig,
@@ -143,7 +171,7 @@ pub fn simulate_against(
     let (schedule, replans, fell_back) = match policy {
         ReplayPolicy::Static => (static_sched, 0, false),
         ReplayPolicy::Reschedule { slack } => {
-            let (resched, replans) = replay_reschedule(inst, eff, plan, cfg, slack);
+            let (resched, replans) = replay::replay_reschedule_with(ctx, eff, plan, cfg, slack);
             if resched.makespan() <= static_sched.makespan() {
                 (resched, replans, false)
             } else {

@@ -31,9 +31,11 @@ use super::event::{EventKind, EventQueue};
 use crate::graph::TaskId;
 use crate::instance::ProblemInstance;
 use crate::network::NodeId;
-use crate::ranks::native;
+use crate::ranks::RankBackend;
 use crate::schedule::{Assignment, Schedule};
-use crate::scheduler::{data_available_time, priorities, Candidate, ReadyEntry, SchedulerConfig};
+use crate::scheduler::{
+    data_available_time, Candidate, ReadyEntry, SchedulerConfig, SchedulingContext,
+};
 
 /// Event-driven replay of `plan` on `eff`, keeping the planned
 /// task→node assignment and the planned per-node execution order.
@@ -274,18 +276,37 @@ pub fn replay_reschedule(
     cfg: &SchedulerConfig,
     slack: f64,
 ) -> (Schedule, usize) {
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    replay_reschedule_with(&ctx, eff, plan, cfg, slack)
+}
+
+/// [`replay_reschedule`] against a shared per-instance
+/// [`SchedulingContext`]: the replanner's nominal priorities and
+/// critical-path pins come from the context, so a sweep's online
+/// policies reuse the same once-per-instance rank computation as its
+/// planners. The context stays untouched until the first slack
+/// violation — zero/low-noise trials never trigger the rank DP, exactly
+/// like the lazy per-call path this replaces.
+pub fn replay_reschedule_with(
+    ctx: &SchedulingContext<'_>,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    slack: f64,
+) -> (Schedule, usize) {
+    let inst = ctx.instance();
     let n = inst.graph.len();
     if n == 0 {
         return (replay_static(eff, plan), 0);
     }
     let slack_abs = slack.max(0.0) * plan.makespan();
 
-    // Policy inputs (nominal ranks, priorities, CP pins) are computed
+    // Policy inputs (nominal priorities, CP pins) are materialized
     // lazily on the first violation — trials that never drift past the
     // slack budget (every zero/low-noise trial) skip the rank DP
     // entirely, which is the expensive per-instance computation on the
     // sweep hot path.
-    let mut policy_ctx: Option<(Vec<f64>, Vec<Option<NodeId>>)> = None;
+    let mut pins: Option<Vec<Option<NodeId>>> = None;
 
     let mut current = plan.clone();
     let mut committed = vec![false; n];
@@ -326,17 +347,13 @@ pub fn replay_reschedule(
                 committed[t] = true;
             }
         }
-        let (prio, pinned) = policy_ctx.get_or_insert_with(|| {
-            let ranks = native::ranks(inst);
-            let prio = priorities(cfg.priority, inst, &ranks);
-            let mut pinned: Vec<Option<NodeId>> = vec![None; n];
+        let prio = ctx.priorities(cfg.priority);
+        let pinned = pins.get_or_insert_with(|| {
             if cfg.critical_path {
-                let fastest = inst.network.fastest_node();
-                for t in ranks.critical_path(inst, 1e-9) {
-                    pinned[t] = Some(fastest);
-                }
+                ctx.cp_pinned().to_vec()
+            } else {
+                vec![None; n]
             }
-            (prio, pinned)
         });
         current = replan(inst, &committed, &actual, now, cfg, prio, pinned);
         for t in 0..n {

@@ -1,0 +1,161 @@
+//! Trace-level golden regression test: per-fixture makespans for all 72
+//! parametric configs **and** fixed-seed robustness ratios for the four
+//! vendored workflow traces (`rust/tests/data/traces/`), asserted
+//! against a checked-in snapshot (`rust/tests/golden/traces_72.json`).
+//!
+//! The synthetic-grid golden test (`golden_makespans.rs`) cannot see
+//! drift in the trace loader or the network-synthesis path; this one
+//! pins the full load → schedule → zero-noise-exact → perturbed-replay
+//! pipeline for external workloads.
+//!
+//! Snapshot lifecycle mirrors `golden_makespans.rs`: missing file →
+//! bootstrap locally (commit the result; CI uploads it as the
+//! `golden-traces` artifact and fails until it lands);
+//! `PTGS_UPDATE_GOLDEN=1` re-baselines. Makespans are compared exactly
+//! (`==`: they derive from `+`, `*`, `/`, `max` only, which are
+//! bit-reproducible everywhere). Robustness ratios pass through libm
+//! `exp`/`ln`/`sqrt` (the lognormal sampler), whose last ulp may vary
+//! across platforms/libcs, so that column is compared with a 1e-12
+//! relative tolerance — still orders of magnitude tighter than any
+//! real behavioral drift.
+
+use std::path::PathBuf;
+
+use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::datasets::traces::{TraceOptions, TraceSet};
+use ptgs::sim::{Perturbation, ReplayPolicy};
+use ptgs::util::{parse, Value};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/traces")
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/traces_72.json")
+}
+
+/// Fixed-seed perturbation sweep: every run of this test replays the
+/// identical noise worlds, so robustness ratios are exact constants.
+fn fixed_sweep() -> SimSweep {
+    SimSweep {
+        perturb: Perturbation::lognormal(0.2),
+        policy: ReplayPolicy::Static,
+        trials: 3,
+        seed: 0xB007_5EED,
+    }
+}
+
+/// (trace, scheduler) → (makespan, robustness), canonically ordered.
+fn compute_rows() -> Vec<(String, String, f64, f64)> {
+    let set = TraceSet::load_paths(&[fixture_dir()], &TraceOptions::default())
+        .expect("vendored fixtures must load");
+    assert_eq!(set.instances.len(), 4, "expected the four vendored fixtures");
+    let h = Harness::all_schedulers();
+    let records = h.run_instances_sim(&set.instances, &fixed_sweep());
+    let mut rows: Vec<(String, String, f64, f64)> = records
+        .into_iter()
+        .map(|r| (r.dataset, r.scheduler, r.static_makespan, r.robustness))
+        .collect();
+    rows.sort_by(|a, b| (a.0.as_str(), a.1.as_str()).cmp(&(b.0.as_str(), b.1.as_str())));
+    rows
+}
+
+fn to_json(rows: &[(String, String, f64, f64)]) -> String {
+    let records = Value::Arr(
+        rows.iter()
+            .map(|(t, s, m, r)| {
+                Value::obj(vec![
+                    ("trace", Value::Str(t.clone())),
+                    ("scheduler", Value::Str(s.clone())),
+                    ("makespan", Value::Num(*m)),
+                    ("robustness", Value::Num(*r)),
+                ])
+            })
+            .collect(),
+    );
+    Value::obj(vec![("records", records)]).to_string_pretty()
+}
+
+fn from_json(text: &str) -> Vec<(String, String, f64, f64)> {
+    let doc = parse(text).expect("golden trace snapshot must be valid JSON");
+    doc.req_arr("records")
+        .expect("golden trace snapshot must have records")
+        .iter()
+        .map(|r| {
+            (
+                r.req_str("trace").unwrap().to_string(),
+                r.req_str("scheduler").unwrap().to_string(),
+                r.req_f64("makespan").unwrap(),
+                r.req_f64("robustness").unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn trace_makespans_and_robustness_match_golden_snapshot() {
+    let rows = compute_rows();
+    assert_eq!(rows.len(), 4 * 72, "expected full fixture × config coverage");
+    for (t, s, m, r) in &rows {
+        assert!(*m > 0.0, "{t}/{s}: non-positive makespan");
+        // Mean-one lognormal noise can realize faster-than-planned
+        // worlds, so robustness may dip below 1 — but never to 0.
+        assert!(*r > 0.0, "{t}/{s}: non-positive robustness {r}");
+    }
+
+    let path = golden_path();
+    let update = std::env::var("PTGS_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        // On GitHub Actions a missing snapshot means it was never
+        // committed — bootstrapping there would make the test pass
+        // vacuously on every fresh checkout, guarding nothing.
+        assert!(
+            update || std::env::var("GITHUB_ACTIONS").is_err(),
+            "trace golden snapshot missing at {}: run `cargo test golden` locally \
+             (it bootstraps the file) and commit it",
+            path.display()
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, to_json(&rows)).unwrap();
+        eprintln!(
+            "NOTE: {} trace golden snapshot at {} — commit this file",
+            if update { "re-baselined" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+
+    let golden = from_json(&std::fs::read_to_string(&path).unwrap());
+    assert_eq!(
+        golden.len(),
+        rows.len(),
+        "snapshot row count differs — fixtures or schedulers changed; \
+         re-baseline with PTGS_UPDATE_GOLDEN=1 if intentional"
+    );
+    let mut diffs = Vec::new();
+    for (g, r) in golden.iter().zip(&rows) {
+        assert_eq!((&g.0, &g.1), (&r.0, &r.1), "snapshot key order drifted");
+        // Makespans exact; robustness within 1e-12 relative (libm ulps).
+        let robustness_drifted = (g.3 - r.3).abs() > 1e-12 * g.3.abs().max(1.0);
+        if g.2 != r.2 || robustness_drifted {
+            diffs.push(format!(
+                "{}/{}: golden ({}, {}) vs computed ({}, {})",
+                g.0, g.1, g.2, g.3, r.2, r.3
+            ));
+        }
+    }
+    assert!(
+        diffs.is_empty(),
+        "{} trace rows drifted from the golden snapshot (first 10):\n{}",
+        diffs.len(),
+        diffs.iter().take(10).cloned().collect::<Vec<_>>().join("\n")
+    );
+}
+
+/// The trace golden computation is reproducible within a process.
+#[test]
+fn trace_golden_computation_is_deterministic() {
+    let a = compute_rows();
+    let b = compute_rows();
+    assert_eq!(a, b, "trace golden rows must be deterministic");
+}

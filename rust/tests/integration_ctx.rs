@@ -1,0 +1,126 @@
+//! Sweep-level zero-recompute guarantees: a full 72-config sweep
+//! computes ranks **exactly once** per (instance, backend) and each
+//! priority vector exactly once, via the shared
+//! [`SchedulingContext`] — asserted through the context's process-wide
+//! computation counters. Also pins that the convenience single-config
+//! paths produce the same records as the shared-context sweep path.
+//!
+//! The counters are process-global, so every test in this binary that
+//! builds contexts serializes on `COUNTER_GATE` to keep the deltas
+//! attributable.
+
+use std::sync::Mutex;
+
+use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::scheduler::{SchedulerConfig, SchedulingContext};
+use ptgs::sim::{Perturbation, ReplayPolicy};
+
+static COUNTER_GATE: Mutex<()> = Mutex::new(());
+
+fn instances(count: usize) -> Vec<ProblemInstance> {
+    DatasetSpec { count, ..DatasetSpec::new(Structure::Chains, 1.0) }.generate()
+}
+
+/// The acceptance criterion of the zero-recompute refactor: across a
+/// full 72-config sweep, rank computation happens once per instance
+/// (not up to 72 times) and each of the three priority vectors is
+/// materialized once per instance.
+#[test]
+fn full_sweep_computes_ranks_exactly_once_per_instance() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let instances = instances(3);
+    let h = Harness::all_schedulers();
+
+    let ranks_before = SchedulingContext::rank_computations();
+    let prios_before = SchedulingContext::priority_computations();
+    let records = h.run_instances(&instances);
+    assert_eq!(records.len(), 3 * 72, "full sweep must cover the cube");
+
+    assert_eq!(
+        SchedulingContext::rank_computations() - ranks_before,
+        instances.len(),
+        "a 72-config sweep must run the rank DP exactly once per instance"
+    );
+    assert_eq!(
+        SchedulingContext::priority_computations() - prios_before,
+        3 * instances.len(),
+        "each of the 3 priority vectors must be computed exactly once per instance"
+    );
+}
+
+/// A simulation sweep with online rescheduling reuses the same
+/// per-instance context for planning *and* replanning: even across
+/// plans, trials, and replans, the rank DP runs at most once per
+/// instance.
+#[test]
+fn sim_sweep_with_rescheduling_shares_the_context() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let instances = instances(2);
+    let h = Harness::with_schedulers(vec![
+        SchedulerConfig::heft(),
+        SchedulerConfig::cpop(),
+        SchedulerConfig::sufferage_classic(),
+    ]);
+    let sweep = SimSweep {
+        perturb: Perturbation::lognormal(0.5),
+        policy: ReplayPolicy::Reschedule { slack: 0.0 },
+        trials: 3,
+        seed: 7,
+    };
+
+    let ranks_before = SchedulingContext::rank_computations();
+    let records = h.run_instances_sim(&instances, &sweep);
+    assert_eq!(records.len(), 2 * 3);
+    let delta = SchedulingContext::rank_computations() - ranks_before;
+    assert!(
+        delta <= instances.len(),
+        "sim sweep recomputed ranks {delta} times for {} instances",
+        instances.len()
+    );
+}
+
+/// The single-config convenience paths (`run_one`, `schedule()`)
+/// produce the same makespans as the shared-context sweep path.
+#[test]
+fn run_one_matches_shared_context_records() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let inst = instances(1).pop().unwrap();
+    let h = Harness::with_schedulers(vec![
+        SchedulerConfig::heft(),
+        SchedulerConfig::cpop(),
+        SchedulerConfig::met(),
+        SchedulerConfig::sufferage_classic(),
+    ]);
+    let batch = h.run_instance("d", 0, &inst);
+    assert_eq!(batch.len(), h.schedulers.len());
+    for (cfg, rec) in h.schedulers.iter().zip(&batch) {
+        let single = h.run_one(cfg, "d", 0, &inst);
+        assert_eq!(single.scheduler, rec.scheduler);
+        assert_eq!(single.makespan, rec.makespan, "{}", cfg.name());
+        assert_eq!(single.num_tasks, rec.num_tasks);
+        assert_eq!(single.num_nodes, rec.num_nodes);
+    }
+}
+
+/// Re-running the same scheduler against the same context is pure, and
+/// a context can be shared across schedulers in any evaluation order.
+#[test]
+fn context_reuse_is_order_independent() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let inst = instances(1).pop().unwrap();
+    let ctx = SchedulingContext::new(&inst, Default::default());
+    let forward: Vec<f64> = SchedulerConfig::all()
+        .iter()
+        .map(|cfg| cfg.build().schedule_with(&ctx).makespan())
+        .collect();
+    let ctx2 = SchedulingContext::new(&inst, Default::default());
+    let mut reversed: Vec<f64> = SchedulerConfig::all()
+        .iter()
+        .rev()
+        .map(|cfg| cfg.build().schedule_with(&ctx2).makespan())
+        .collect();
+    reversed.reverse();
+    assert_eq!(forward, reversed, "evaluation order must not affect results");
+}

@@ -8,9 +8,12 @@ use ptgs::datasets::rng::Rng;
 use ptgs::graph::TaskGraph;
 use ptgs::instance::ProblemInstance;
 use ptgs::network::Network;
-use ptgs::ranks::native;
+use ptgs::ranks::{native, RankBackend};
 use ptgs::schedule::EPS;
-use ptgs::scheduler::{window_append_only, window_insertion, SchedulerConfig};
+use ptgs::scheduler::{
+    data_available_time, window_append_only, window_insertion, window_insertion_indexed,
+    SchedulerConfig, SchedulingContext,
+};
 use ptgs::sim::{
     perturbed_instance, simulate, NoiseTrace, Perturbation, ReplayPolicy, SimOptions,
 };
@@ -61,6 +64,72 @@ fn prop_all_configs_always_valid() {
             if let Err(e) = s.validate(&inst) {
                 panic!("seed {case}: {} invalid: {e}", cfg.name());
             }
+        }
+    }
+}
+
+/// **Keystone cache invariant**: scheduling against a shared
+/// [`SchedulingContext`] is bit-identical to the pre-refactor per-call
+/// reference path for **all 72 configs** — every assignment, start,
+/// end, and node. This is what licenses the sweep-level context cache:
+/// it can never change results silently. The one-shot `schedule()`
+/// entry point (private context) is pinned to the same output.
+#[test]
+fn prop_ctx_schedule_equals_reference_all_72() {
+    let configs = SchedulerConfig::all();
+    for case in 0..12u64 {
+        let mut rng = Rng::seeded(0xC7C7 + case);
+        let inst = arbitrary_instance(&mut rng);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        for cfg in &configs {
+            let s = cfg.build();
+            let fast = s.schedule_with(&ctx);
+            let reference = s.schedule_reference(&inst);
+            assert_eq!(
+                fast,
+                reference,
+                "seed {case}: {} shared-ctx schedule drifted from the reference",
+                cfg.name()
+            );
+            assert_eq!(
+                s.schedule(&inst),
+                reference,
+                "seed {case}: {} one-shot schedule drifted from the reference",
+                cfg.name()
+            );
+        }
+    }
+}
+
+/// The gap-indexed insertion window equals the reference linear scan on
+/// every (task, node) probe over evolving partial schedules.
+#[test]
+fn prop_indexed_window_equals_linear() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(0x16A0 + case);
+        let inst = arbitrary_instance(&mut rng);
+        let order = ptgs::graph::topological_order(&inst.graph).unwrap();
+        let mut sched = ptgs::schedule::Schedule::new(inst.graph.len(), inst.network.len());
+        for &t in &order {
+            for u in 0..inst.network.len() {
+                let dat = data_available_time(&inst, &sched, t, u);
+                let dur = inst.network.exec_time(inst.graph.cost(t), u);
+                assert_eq!(
+                    window_insertion_indexed(&sched, u, dat, dur),
+                    window_insertion(&inst, &sched, t, u),
+                    "seed {case}: indexed window drifted on task {t} node {u}"
+                );
+            }
+            let best = (0..inst.network.len())
+                .map(|u| window_insertion(&inst, &sched, t, u))
+                .min_by(|a, b| a.end.partial_cmp(&b.end).unwrap())
+                .unwrap();
+            sched.insert(ptgs::schedule::Assignment {
+                task: t,
+                node: best.node,
+                start: best.start,
+                end: best.end,
+            });
         }
     }
 }
