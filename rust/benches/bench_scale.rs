@@ -1,0 +1,216 @@
+//! Large-graph scaling benchmark: the CSR + workspace scheduling core
+//! over layered wide DAGs of n ∈ {1k, 10k, 50k, 100k} tasks
+//! (`datasets::layered`).
+//!
+//! Three things are measured / checked:
+//!
+//! 1. **Bit-exactness gate** — at n = 1k, `schedule_into` (CSR layout,
+//!    reused workspace) is asserted identical to `schedule_reference`
+//!    for all 72 configs before anything is timed.
+//! 2. **Time-vs-n curve** — one config per priority function (HEFT/UR,
+//!    CPoP/CR, MCT/AT) through a shared context and one reused
+//!    workspace per size, plus the per-call reference core on the small
+//!    sizes for `speedup_vs_reference`.
+//! 3. **Layout microbenchmark** — the upward-rank DP over the pre-CSR
+//!    nested `Vec<Vec<(TaskId, f64)>>` adjacency vs the CSR accessors,
+//!    identical arithmetic (outputs asserted equal), reported as
+//!    `layout_speedup_rank_dp`.
+//!
+//! A 100k-task **completion pass** always runs — even under
+//! `PTGS_BENCH_FAST=1` — scheduling and §I-A-validating one plan per
+//! priority function and reporting tasks-scheduled/sec. Emits
+//! machine-readable `BENCH_scale.json` (override the path with
+//! `PTGS_BENCH_SCALE_OUT`) with the working-set proxies
+//! (`benchlib::Workload`) alongside the timings.
+
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ptgs::benchlib::{self, Bencher, Config, Workload};
+use ptgs::datasets::layered::layered_instance;
+use ptgs::graph::TaskId;
+use ptgs::instance::ProblemInstance;
+use ptgs::ranks::RankBackend;
+use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
+use ptgs::util::Value;
+
+const SEED: u64 = 0x5CA1_AB1E;
+const COMPLETION_TASKS: usize = 100_000;
+
+/// One config per priority function: the scale axis must exercise all
+/// three priority pipelines (rank DP, CPoP + pins, topological).
+fn per_priority_configs() -> [SchedulerConfig; 3] {
+    [SchedulerConfig::heft(), SchedulerConfig::cpop(), SchedulerConfig::mct()]
+}
+
+/// The pre-CSR adjacency layout, reconstructed: per-task heap-allocated
+/// successor lists. Identical contents and order to the CSR slices.
+fn nested_successors(inst: &ProblemInstance) -> Vec<Vec<(TaskId, f64)>> {
+    (0..inst.graph.len()).map(|t| inst.graph.successors(t).to_vec()).collect()
+}
+
+/// The upward-rank DP inner loop over a generic successor accessor —
+/// the same arithmetic as `ranks::native::upward_rank`, so the nested
+/// and CSR timings differ by memory layout only.
+fn upward_rank_over<'a>(
+    inst: &ProblemInstance,
+    order: &[TaskId],
+    succ: impl Fn(TaskId) -> &'a [(TaskId, f64)],
+) -> Vec<f64> {
+    let inv_speed = inst.network.avg_inv_speed();
+    let inv_link = inst.network.avg_inv_link();
+    let mut up = vec![0.0; inst.graph.len()];
+    for &t in order.iter().rev() {
+        let mut best = 0.0f64;
+        for &(s, data) in succ(t) {
+            best = best.max(data * inv_link + up[s]);
+        }
+        up[t] = inst.graph.cost(t) * inv_speed + best;
+    }
+    up
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let configs = per_priority_configs();
+
+    // 1. Bit-exactness gate on the small size: never publish scaling
+    // numbers for a core that computes something different.
+    {
+        let inst = layered_instance(SEED, 1000);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        for cfg in SchedulerConfig::all() {
+            let s = cfg.build();
+            let got = s.schedule_into(&ctx, &mut ws);
+            let want = s.schedule_reference(&inst);
+            assert_eq!(got, want, "{} drifted from the reference core at n=1000", cfg.name());
+            ws.recycle(got);
+        }
+        println!("scale: all 72 configs bit-identical to the reference core at n=1000");
+    }
+
+    let mut b = Bencher::from_env().with_config(Config {
+        measure_time: Duration::from_millis(300),
+        samples: 5,
+        warmup: Duration::from_millis(100),
+    });
+
+    // 2. Time-vs-n curve. The reference core is only timed on the small
+    // sizes (its full-timeline rescans are quadratic); the shared core
+    // covers the whole curve.
+    let timed_sizes: &[usize] =
+        if fast { &[1000, 10_000] } else { &[1000, 10_000, 50_000, 100_000] };
+    let reference_sizes: &[usize] = &[1000, 10_000];
+
+    let mut ws = SchedulerWorkspace::new();
+    for &n in timed_sizes {
+        let inst = layered_instance(SEED, n);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        for cfg in &configs {
+            ctx.warm_for(cfg);
+        }
+        inst.graph.freeze();
+        b.bench(&format!("scale/shared_ctx/n{n}"), || {
+            for cfg in &configs {
+                let s = cfg.build().schedule_into(&ctx, &mut ws);
+                ws.recycle(black_box(s));
+            }
+        });
+        if reference_sizes.contains(&n) {
+            b.bench(&format!("scale/reference/n{n}"), || {
+                for cfg in &configs {
+                    black_box(cfg.build().schedule_reference(black_box(&inst)));
+                }
+            });
+        }
+
+        // 3. Layout microbenchmark: nested-Vec vs CSR rank DP.
+        let order = ptgs::graph::topological_order(&inst.graph).expect("layered DAGs are acyclic");
+        let nested = nested_successors(&inst);
+        let csr_up = upward_rank_over(&inst, &order, |t| inst.graph.successors(t));
+        let nested_up = upward_rank_over(&inst, &order, |t| nested[t].as_slice());
+        assert_eq!(csr_up, nested_up, "layouts must compute identical ranks at n={n}");
+        b.bench(&format!("rank_dp/csr/n{n}"), || {
+            black_box(upward_rank_over(&inst, &order, |t| inst.graph.successors(t)));
+        });
+        b.bench(&format!("rank_dp/nested/n{n}"), || {
+            black_box(upward_rank_over(&inst, &order, |t| nested[t].as_slice()));
+        });
+    }
+
+    // 4. 100k completion pass (all modes): one plan per priority
+    // function, validated, with tasks-scheduled/sec.
+    let inst = layered_instance(SEED, COMPLETION_TASKS);
+    let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+    for cfg in &configs {
+        ctx.warm_for(cfg);
+    }
+    inst.graph.freeze();
+    let mut completion: Vec<Value> = Vec::new();
+    for cfg in &configs {
+        let t0 = Instant::now();
+        let s = cfg.build().schedule_into(&ctx, &mut ws);
+        let secs = t0.elapsed().as_secs_f64();
+        s.validate(&inst)
+            .unwrap_or_else(|e| panic!("{} invalid at n={COMPLETION_TASKS}: {e}", cfg.name()));
+        let rate = COMPLETION_TASKS as f64 / secs;
+        println!(
+            "scale/complete/n{COMPLETION_TASKS} {:<10} {secs:>8.3} s  ({rate:>12.0} tasks/s)",
+            cfg.name()
+        );
+        completion.push(Value::obj(vec![
+            ("config", Value::Str(cfg.name())),
+            ("priority", Value::Str(format!("{:?}", cfg.priority))),
+            ("n", Value::Num(COMPLETION_TASKS as f64)),
+            ("seconds", Value::Num(secs)),
+            ("tasks_per_sec", Value::Num(rate)),
+            ("makespan", Value::Num(s.makespan())),
+        ]));
+        ws.recycle(s);
+    }
+    // Working-set proxies from the completion pass: the document's
+    // headline numbers are the 100k run, so tasks/edges/capacity must
+    // all describe the same workload.
+    let workload = Workload {
+        tasks: inst.graph.len(),
+        edges: inst.graph.num_edges(),
+        nodes: inst.network.len(),
+        workspace_capacity: ws.capacity(),
+    };
+
+    // Emit BENCH_scale.json: curve + layout/reference speedups at the
+    // largest size both cores covered, + the completion pass.
+    let find = |name: String| b.results.iter().find(|m| m.name == name);
+    let mut doc = benchlib::measurements_json_with_workload(&b.results, &workload);
+    if let Value::Obj(fields) = &mut doc {
+        fields.push(("completion".to_string(), Value::Arr(completion)));
+        let n_ref = *reference_sizes.last().expect("non-empty");
+        if let (Some(reference), Some(shared)) = (
+            find(format!("scale/reference/n{n_ref}")),
+            find(format!("scale/shared_ctx/n{n_ref}")),
+        ) {
+            let speedup = reference.min.as_secs_f64() / shared.min.as_secs_f64();
+            println!("scale: shared-ctx speedup vs reference core at n={n_ref}: {speedup:.2}x");
+            fields.push(("speedup_vs_reference".to_string(), Value::Num(speedup)));
+        }
+        let n_top = *timed_sizes.last().expect("non-empty");
+        if let (Some(nested), Some(csr)) = (
+            find(format!("rank_dp/nested/n{n_top}")),
+            find(format!("rank_dp/csr/n{n_top}")),
+        ) {
+            let speedup = nested.min.as_secs_f64() / csr.min.as_secs_f64();
+            println!("scale: CSR rank-DP speedup vs nested layout at n={n_top}: {speedup:.2}x");
+            fields.push(("layout_speedup_rank_dp".to_string(), Value::Num(speedup)));
+        }
+    }
+    // Deliberately not PTGS_BENCH_OUT: that var belongs to bench_sweep,
+    // and `cargo bench` runs both targets — sharing it would make this
+    // bench clobber BENCH_sweep.json.
+    let out = std::env::var("PTGS_BENCH_SCALE_OUT")
+        .unwrap_or_else(|_| "results/BENCH_scale.json".to_string());
+    let path = PathBuf::from(out);
+    benchlib::write_json(&path, &doc).expect("writing BENCH_scale.json");
+    println!("wrote {}", path.display());
+}

@@ -16,12 +16,12 @@ use std::hint::black_box;
 use std::path::PathBuf;
 use std::time::Duration;
 
-use ptgs::benchlib::{self, Bencher, Config};
+use ptgs::benchlib::{self, Bencher, Config, Workload};
 use ptgs::benchmark::Harness;
 use ptgs::datasets::{DatasetSpec, Structure};
 use ptgs::instance::ProblemInstance;
 use ptgs::ranks::RankBackend;
-use ptgs::scheduler::{SchedulerConfig, SchedulingContext};
+use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 use ptgs::util::Value;
 
 fn sweep_instances(count: usize) -> Vec<ProblemInstance> {
@@ -77,6 +77,19 @@ fn main() {
         }
     });
 
+    // Shared context + one reused SchedulerWorkspace: the full
+    // zero-recompute, zero-allocation sweep core.
+    let mut ws = SchedulerWorkspace::new();
+    b.bench("sweep72/shared_ctx_workspace", || {
+        for inst in &instances {
+            let ctx = SchedulingContext::new(inst, RankBackend::Native);
+            for cfg in &configs {
+                let s = cfg.build().schedule_into(black_box(&ctx), &mut ws);
+                ws.recycle(black_box(s));
+            }
+        }
+    });
+
     // The full harness path (validation + timing + records) end to end.
     let h = Harness::all_schedulers();
     b.bench("sweep72/harness_records", || {
@@ -98,7 +111,15 @@ fn main() {
     };
     let speedup = reference.min.as_secs_f64() / shared.min.as_secs_f64();
     println!("sweep72: shared-ctx speedup vs reference core: {speedup:.2}x");
-    let mut doc = benchlib::measurements_json(&b.results);
+    // Working-set proxies make the document comparable with
+    // BENCH_scale.json and across runs of different instance budgets.
+    let workload = Workload {
+        tasks: instances.iter().map(|i| i.graph.len()).sum(),
+        edges: instances.iter().map(|i| i.graph.num_edges()).sum(),
+        nodes: instances.iter().map(|i| i.network.len()).max().unwrap_or(0),
+        workspace_capacity: ws.capacity(),
+    };
+    let mut doc = benchlib::measurements_json_with_workload(&b.results, &workload);
     if let Value::Obj(fields) = &mut doc {
         fields.push(("speedup_vs_reference".to_string(), Value::Num(speedup)));
     }

@@ -189,6 +189,48 @@ pub fn measurements_json(results: &[Measurement]) -> Value {
     ])
 }
 
+/// Peak working-set proxies for one benchmarked workload, so
+/// `BENCH_*.json` documents are comparable across machines and runs:
+/// two equal timings mean something different at 1k and 100k tasks,
+/// and a speedup claim is only interpretable next to the footprint
+/// that produced it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Workload {
+    /// Total tasks scheduled per iteration.
+    pub tasks: usize,
+    /// Total dependency edges walked per iteration.
+    pub edges: usize,
+    /// Network nodes per instance.
+    pub nodes: usize,
+    /// Scratch elements held by the reused
+    /// [`crate::scheduler::SchedulerWorkspace`] after the run
+    /// ([`crate::scheduler::SchedulerWorkspace::capacity`]); 0 when the
+    /// bench does not reuse a workspace.
+    pub workspace_capacity: usize,
+}
+
+/// [`measurements_json`] plus a `"workload"` object carrying the
+/// working-set proxies. Same shape otherwise, so existing consumers of
+/// `benchmarks[]` / `fast_mode` keep working.
+pub fn measurements_json_with_workload(results: &[Measurement], workload: &Workload) -> Value {
+    let mut doc = measurements_json(results);
+    if let Value::Obj(fields) = &mut doc {
+        fields.push((
+            "workload".to_string(),
+            Value::obj(vec![
+                ("tasks", Value::Num(workload.tasks as f64)),
+                ("edges", Value::Num(workload.edges as f64)),
+                ("nodes", Value::Num(workload.nodes as f64)),
+                (
+                    "workspace_capacity",
+                    Value::Num(workload.workspace_capacity as f64),
+                ),
+            ]),
+        ));
+    }
+    doc
+}
+
 /// Write a `BENCH_*.json` document (typically [`measurements_json`],
 /// possibly extended by the caller) to `path`, creating parent
 /// directories — ready for CI artifact upload.
@@ -267,6 +309,23 @@ mod tests {
         assert_eq!(benches[0].req_str("name").unwrap(), "sweep/shared_ctx");
         assert_eq!(benches[0].req_f64("mean_ns").unwrap(), 1500.0);
         assert_eq!(benches[0].req_usize("samples").unwrap(), 3);
+        back.req_bool("fast_mode").unwrap();
+    }
+
+    #[test]
+    fn workload_json_carries_working_set_proxies() {
+        let doc = measurements_json_with_workload(
+            &[],
+            &Workload { tasks: 1000, edges: 2500, nodes: 8, workspace_capacity: 9000 },
+        );
+        let back = crate::util::parse(&doc.to_string_pretty()).unwrap();
+        let w = back.req("workload").unwrap();
+        assert_eq!(w.req_usize("tasks").unwrap(), 1000);
+        assert_eq!(w.req_usize("edges").unwrap(), 2500);
+        assert_eq!(w.req_usize("nodes").unwrap(), 8);
+        assert_eq!(w.req_usize("workspace_capacity").unwrap(), 9000);
+        // The base shape is untouched.
+        assert!(back.req_arr("benchmarks").unwrap().is_empty());
         back.req_bool("fast_mode").unwrap();
     }
 

@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::datasets::DatasetSpec;
 use crate::ranks::RankBackend;
-use crate::scheduler::{SchedulerConfig, SchedulingContext};
+use crate::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 use crate::util::{FromJson, ToJson, Value};
 
 /// One (scheduler, instance) measurement.
@@ -114,13 +114,15 @@ impl Harness {
         }
     }
 
-    /// Run every scheduler on every instance of one dataset.
+    /// Run every scheduler on every instance of one dataset, reusing
+    /// one [`SchedulerWorkspace`] across the whole dataset.
     pub fn run_dataset(&self, spec: &DatasetSpec) -> Vec<Record> {
         let instances = spec.generate();
         let dataset = spec.name();
+        let mut ws = SchedulerWorkspace::new();
         let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
         for (i, inst) in instances.iter().enumerate() {
-            out.extend(self.run_instance(&dataset, i, inst));
+            out.extend(self.run_instance_ws(&dataset, i, inst, &mut ws));
         }
         out
     }
@@ -131,38 +133,69 @@ impl Harness {
     /// amortized over the whole scheduler set (the zero-recompute sweep
     /// core). The context is warmed before timing, so `runtime_ns`
     /// measures plan construction per se — identical treatment for
-    /// every config.
+    /// every config. Builds a private [`SchedulerWorkspace`]; callers
+    /// sweeping many instances should prefer
+    /// [`Harness::run_instance_ws`] and reuse one.
     pub fn run_instance(
         &self,
         dataset: &str,
         instance: usize,
         inst: &crate::instance::ProblemInstance,
     ) -> Vec<Record> {
+        let mut ws = SchedulerWorkspace::new();
+        self.run_instance_ws(dataset, instance, inst, &mut ws)
+    }
+
+    /// [`Harness::run_instance`] against a caller-owned (typically
+    /// per-thread) [`SchedulerWorkspace`]: after warm-up, the whole
+    /// 72-config sweep runs out of the workspace's reused buffers —
+    /// O(1) heap allocations per config instead of rebuilding every
+    /// scratch structure.
+    pub fn run_instance_ws(
+        &self,
+        dataset: &str,
+        instance: usize,
+        inst: &crate::instance::ProblemInstance,
+        ws: &mut SchedulerWorkspace,
+    ) -> Vec<Record> {
         let ctx = SchedulingContext::new(inst, self.backend.clone());
         for cfg in &self.schedulers {
             ctx.warm_for(cfg);
         }
+        inst.graph.freeze(); // CSR built outside the timed region
+        // Warm the workspace too: otherwise the sweep's *first* config
+        // would pay every buffer growth inside its timed region while
+        // the other 71 run on warm buffers — runtime ratios must treat
+        // every config identically.
+        ws.begin(inst.graph.len(), inst.network.len());
+        let warm = ws.take_schedule(inst.graph.len(), inst.network.len());
+        ws.recycle(warm);
         self.schedulers
             .iter()
-            .map(|cfg| self.run_one_with(cfg, &ctx, dataset, instance))
+            .map(|cfg| self.run_one_with(cfg, &ctx, dataset, instance, ws))
             .collect()
     }
 
-    /// Run one scheduler against a pre-built (warm) context.
+    /// Run one scheduler against a pre-built (warm) context and a
+    /// reusable workspace.
     fn run_one_with(
         &self,
         cfg: &SchedulerConfig,
         ctx: &SchedulingContext<'_>,
         dataset: &str,
         instance: usize,
+        ws: &mut SchedulerWorkspace,
     ) -> Record {
         let inst = ctx.instance();
         let scheduler = cfg.build_with(self.backend.clone());
         let mut best_ns = u64::MAX;
         let mut schedule = None;
         for _ in 0..self.options.timing_repeats.max(1) {
+            if let Some(prev) = schedule.take() {
+                ws.recycle(prev);
+            }
             let t0 = Instant::now();
-            let s = scheduler.schedule_with(ctx);
+            let s = scheduler.schedule_into(ctx, ws);
             let ns = t0.elapsed().as_nanos() as u64;
             best_ns = best_ns.min(ns.max(1)); // never 0: ratios divide by it
             schedule = Some(s);
@@ -173,7 +206,7 @@ impl Harness {
                 .validate(inst)
                 .unwrap_or_else(|e| panic!("{} on {dataset}/{instance}: {e}", cfg.name()));
         }
-        Record {
+        let record = Record {
             scheduler: cfg.name(),
             dataset: dataset.to_string(),
             instance,
@@ -181,7 +214,9 @@ impl Harness {
             runtime_ns: best_ns,
             num_tasks: inst.graph.len(),
             num_nodes: inst.network.len(),
-        }
+        };
+        ws.recycle(schedule); // the timelines feed the next config's run
+        record
     }
 
     /// Run one scheduler on one instance (builds and warms a private
@@ -196,16 +231,19 @@ impl Harness {
     ) -> Record {
         let ctx = SchedulingContext::new(inst, self.backend.clone());
         ctx.warm_for(cfg);
-        self.run_one_with(cfg, &ctx, dataset, instance)
+        let mut ws = SchedulerWorkspace::new();
+        self.run_one_with(cfg, &ctx, dataset, instance, &mut ws)
     }
 
     /// Run every scheduler on every instance of an externally-supplied
-    /// set (e.g. loaded workflow traces). Each instance's own name is
-    /// its dataset key, so results report per-trace rows.
+    /// set (e.g. loaded workflow traces), reusing one
+    /// [`SchedulerWorkspace`] across the whole set. Each instance's own
+    /// name is its dataset key, so results report per-trace rows.
     pub fn run_instances(&self, instances: &[crate::instance::ProblemInstance]) -> Vec<Record> {
+        let mut ws = SchedulerWorkspace::new();
         let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
         for (i, inst) in instances.iter().enumerate() {
-            out.extend(self.run_instance(&inst.name, i, inst));
+            out.extend(self.run_instance_ws(&inst.name, i, inst, &mut ws));
         }
         out
     }

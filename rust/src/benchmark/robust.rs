@@ -115,7 +115,9 @@ impl Harness {
     /// perturbed world once per scheduler. Planning and online
     /// replanning likewise share one [`SchedulingContext`] per
     /// instance, so nominal ranks / priorities / pins are computed at
-    /// most once across all configs and trials.
+    /// most once across all configs and trials. Builds a private
+    /// [`crate::scheduler::SchedulerWorkspace`]; multi-instance sweeps
+    /// should prefer [`Harness::run_instance_sim_ws`].
     pub fn run_instance_sim(
         &self,
         dataset: &str,
@@ -123,12 +125,32 @@ impl Harness {
         inst: &ProblemInstance,
         sweep: &SimSweep,
     ) -> Vec<SimRecord> {
+        let mut ws = crate::scheduler::SchedulerWorkspace::new();
+        self.run_instance_sim_ws(dataset, instance, inst, sweep, &mut ws)
+    }
+
+    /// [`Harness::run_instance_sim`] against a caller-owned (typically
+    /// per-thread) [`crate::scheduler::SchedulerWorkspace`]: the 72
+    /// plans are built out of the workspace's scratch buffers, every
+    /// realized trial schedule is recycled back into it, and the online
+    /// replanner replans frontiers from the same pool.
+    pub fn run_instance_sim_ws(
+        &self,
+        dataset: &str,
+        instance: usize,
+        inst: &ProblemInstance,
+        sweep: &SimSweep,
+        ws: &mut crate::scheduler::SchedulerWorkspace,
+    ) -> Vec<SimRecord> {
         let ctx = crate::scheduler::SchedulingContext::new(inst, self.backend.clone());
+        inst.graph.freeze();
         let plans: Vec<crate::schedule::Schedule> = self
             .schedulers
             .iter()
             .map(|cfg| {
-                let plan = cfg.build_with(self.backend.clone()).schedule_with(&ctx);
+                // Plans live for the whole sweep, so they are the one
+                // per-config allocation that cannot be recycled.
+                let plan = cfg.build_with(self.backend.clone()).schedule_into(&ctx, ws);
                 if self.options.validate {
                     plan.validate(inst).unwrap_or_else(|e| {
                         panic!("{} on {dataset}/{instance}: {e}", cfg.name())
@@ -147,15 +169,17 @@ impl Harness {
             for ((cfg, plan), agg) in
                 self.schedulers.iter().zip(&plans).zip(&mut aggs)
             {
-                let out = crate::sim::simulate_against_ctx(&ctx, &eff, plan, cfg, sweep.policy);
+                let out = crate::sim::simulate_into(&ctx, &eff, plan, cfg, sweep.policy, ws);
                 agg.sum += out.makespan;
                 agg.worst = agg.worst.max(out.makespan);
                 agg.ratio_sum += out.robustness_ratio();
                 agg.replans += out.replans;
+                ws.recycle(out.schedule); // realized world consumed above
             }
         }
 
-        self.schedulers
+        let records = self
+            .schedulers
             .iter()
             .zip(&plans)
             .zip(&aggs)
@@ -170,7 +194,13 @@ impl Harness {
                 trials,
                 replans: agg.replans,
             })
-            .collect()
+            .collect();
+        // The plans outlived the trials; feed their buffers back so the
+        // next instance's 72 plans reuse them instead of reallocating.
+        for plan in plans {
+            ws.recycle(plan);
+        }
+        records
     }
 
     /// Simulate one scheduler on one instance over all sweep trials
@@ -195,27 +225,31 @@ impl Harness {
     }
 
     /// Simulate every scheduler over an externally-supplied instance
-    /// set (e.g. loaded workflow traces). Each instance's own name is
-    /// its dataset key, so the robustness table reports per-trace rows.
+    /// set (e.g. loaded workflow traces), reusing one workspace. Each
+    /// instance's own name is its dataset key, so the robustness table
+    /// reports per-trace rows.
     pub fn run_instances_sim(
         &self,
         instances: &[ProblemInstance],
         sweep: &SimSweep,
     ) -> Vec<SimRecord> {
+        let mut ws = crate::scheduler::SchedulerWorkspace::new();
         let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
         for (i, inst) in instances.iter().enumerate() {
-            out.extend(self.run_instance_sim(&inst.name, i, inst, sweep));
+            out.extend(self.run_instance_sim_ws(&inst.name, i, inst, sweep, &mut ws));
         }
         out
     }
 
-    /// Simulate every scheduler over every instance of one dataset.
+    /// Simulate every scheduler over every instance of one dataset,
+    /// reusing one workspace.
     pub fn run_dataset_sim(&self, spec: &DatasetSpec, sweep: &SimSweep) -> Vec<SimRecord> {
         let instances = spec.generate();
         let dataset = spec.name();
+        let mut ws = crate::scheduler::SchedulerWorkspace::new();
         let mut out = Vec::with_capacity(instances.len() * self.schedulers.len());
         for (i, inst) in instances.iter().enumerate() {
-            out.extend(self.run_instance_sim(&dataset, i, inst, sweep));
+            out.extend(self.run_instance_sim_ws(&dataset, i, inst, sweep, &mut ws));
         }
         out
     }

@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use crate::benchmark::{BenchmarkResults, Harness, HarnessOptions, Record, SimRecord, SimSweep};
 use crate::datasets::DatasetSpec;
 use crate::ranks::RankBackend;
-use crate::scheduler::SchedulerConfig;
+use crate::scheduler::{SchedulerConfig, SchedulerWorkspace};
 
 /// One unit of work: a contiguous instance range of one dataset.
 #[derive(Debug, Clone)]
@@ -122,7 +122,7 @@ impl Coordinator {
     fn run_with<R, F>(&self, specs: &[DatasetSpec], per_job: F) -> (Vec<R>, Arc<Metrics>)
     where
         R: Send,
-        F: Fn(&Harness, &Job) -> Vec<R> + Sync,
+        F: Fn(&Harness, &mut SchedulerWorkspace, &Job) -> Vec<R> + Sync,
     {
         // Shard the instance space.
         let mut jobs: Vec<Job> = Vec::new();
@@ -153,12 +153,15 @@ impl Coordinator {
     /// Generic leader/worker scaffolding: fan `jobs` out to `workers`
     /// threads that each run `per_job`, and aggregate the result
     /// batches through a bounded channel (backpressure: workers stall
-    /// rather than buffering unboundedly).
+    /// rather than buffering unboundedly). Every worker thread owns one
+    /// [`SchedulerWorkspace`] for its whole lifetime, so scheduling
+    /// scratch buffers are allocated once per worker, not once per
+    /// (job, config).
     fn run_jobs<J, R, F>(&self, jobs: Vec<J>, per_job: F) -> (Vec<R>, Arc<Metrics>)
     where
         J: Send,
         R: Send,
-        F: Fn(&Harness, &J) -> Vec<R> + Sync,
+        F: Fn(&Harness, &mut SchedulerWorkspace, &J) -> Vec<R> + Sync,
     {
         let metrics = Arc::new(Metrics::default());
         metrics.jobs_total.store(jobs.len(), Ordering::Relaxed);
@@ -179,16 +182,19 @@ impl Coordinator {
                     backend: self.backend.clone(),
                     options: self.options.harness.clone(),
                 };
-                scope.spawn(move || loop {
-                    let job = { queue.lock().unwrap().pop() };
-                    let Some(job) = job else { break };
-                    let batch = per_job(&harness, &job);
-                    metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
-                    metrics.records.fetch_add(batch.len(), Ordering::Relaxed);
-                    // Bounded send: blocks (backpressure) when the
-                    // aggregator lags behind.
-                    if tx.send(batch).is_err() {
-                        break; // aggregator gone; shut down
+                scope.spawn(move || {
+                    let mut ws = SchedulerWorkspace::new();
+                    loop {
+                        let job = { queue.lock().unwrap().pop() };
+                        let Some(job) = job else { break };
+                        let batch = per_job(&harness, &mut ws, &job);
+                        metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                        metrics.records.fetch_add(batch.len(), Ordering::Relaxed);
+                        // Bounded send: blocks (backpressure) when the
+                        // aggregator lags behind.
+                        if tx.send(batch).is_err() {
+                            break; // aggregator gone; shut down
+                        }
                     }
                 });
             }
@@ -229,7 +235,7 @@ impl Coordinator {
         sweep: &SimSweep,
     ) -> (Vec<SimRecord>, Arc<Metrics>) {
         let (mut records, metrics) =
-            self.run_with(specs, |harness, job| run_job_sim(harness, job, sweep));
+            self.run_with(specs, |harness, ws, job| run_job_sim(harness, ws, job, sweep));
         sort_canonical(&mut records);
         (records, metrics)
     }
@@ -248,14 +254,16 @@ impl Coordinator {
         instances: &[crate::instance::ProblemInstance],
     ) -> (BenchmarkResults, Arc<Metrics>) {
         let jobs = self.range_jobs(instances.len());
-        let (mut records, metrics) = self.run_jobs(jobs, |harness, &(start, end)| {
+        let (mut records, metrics) = self.run_jobs(jobs, |harness, ws, &(start, end)| {
             let mut out = Vec::with_capacity((end - start) * harness.schedulers.len());
             for i in start..end {
                 let inst = &instances[i];
                 // One shared SchedulingContext per instance inside
-                // run_instance: ranks/priorities/pins computed once for
-                // the whole scheduler set, not once per config.
-                out.extend(harness.run_instance(&inst.name, i, inst));
+                // run_instance_ws: ranks/priorities/pins computed once
+                // for the whole scheduler set, not once per config —
+                // and the worker's workspace supplies every scratch
+                // buffer.
+                out.extend(harness.run_instance_ws(&inst.name, i, inst, ws));
             }
             out
         });
@@ -280,14 +288,15 @@ impl Coordinator {
         sweep: &SimSweep,
     ) -> (Vec<SimRecord>, Arc<Metrics>) {
         let jobs = self.range_jobs(instances.len());
-        let (mut records, metrics) = self.run_jobs(jobs, |harness, &(start, end)| {
+        let (mut records, metrics) = self.run_jobs(jobs, |harness, ws, &(start, end)| {
             let mut out = Vec::with_capacity((end - start) * harness.schedulers.len());
             for i in start..end {
-                out.extend(harness.run_instance_sim(
+                out.extend(harness.run_instance_sim_ws(
                     &instances[i].name,
                     i,
                     &instances[i],
                     sweep,
+                    ws,
                 ));
             }
             out
@@ -308,29 +317,35 @@ impl Coordinator {
 
 /// Execute one shard: generate its instances (via their deterministic
 /// per-instance streams) and run every scheduler on each, sharing one
-/// [`crate::scheduler::SchedulingContext`] per instance.
-fn run_job(harness: &Harness, job: &Job) -> Vec<Record> {
+/// [`crate::scheduler::SchedulingContext`] per instance and the
+/// worker's [`SchedulerWorkspace`] across the whole shard.
+fn run_job(harness: &Harness, ws: &mut SchedulerWorkspace, job: &Job) -> Vec<Record> {
     let dataset = job.spec.name();
     let mut out = Vec::with_capacity((job.end - job.start) * harness.schedulers.len());
     for i in job.start..job.end {
         let mut rng = job.spec.instance_rng(i);
         let mut inst = job.spec.generate_one(&mut rng);
         inst.name = format!("{dataset}/inst_{i:03}");
-        out.extend(harness.run_instance(&dataset, i, &inst));
+        out.extend(harness.run_instance_ws(&dataset, i, &inst, ws));
     }
     out
 }
 
 /// Execute one simulation shard: generate its instances and run every
 /// scheduler through the simulator on each.
-fn run_job_sim(harness: &Harness, job: &Job, sweep: &SimSweep) -> Vec<SimRecord> {
+fn run_job_sim(
+    harness: &Harness,
+    ws: &mut SchedulerWorkspace,
+    job: &Job,
+    sweep: &SimSweep,
+) -> Vec<SimRecord> {
     let dataset = job.spec.name();
     let mut out = Vec::with_capacity((job.end - job.start) * harness.schedulers.len());
     for i in job.start..job.end {
         let mut rng = job.spec.instance_rng(i);
         let mut inst = job.spec.generate_one(&mut rng);
         inst.name = format!("{dataset}/inst_{i:03}");
-        out.extend(harness.run_instance_sim(&dataset, i, &inst, sweep));
+        out.extend(harness.run_instance_sim_ws(&dataset, i, &inst, sweep, ws));
     }
     out
 }

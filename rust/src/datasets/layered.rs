@@ -1,0 +1,160 @@
+//! Layered wide-DAG generator — the large-graph scaling axis.
+//!
+//! The paper's four dataset families top out at a few dozen tasks;
+//! real WfCommons/Pegasus workflow instances reach tens of thousands
+//! (Beránek et al. 2022), which is where memory layout and allocation
+//! churn dominate scheduler cost. [`gen_layered_sized`] produces a
+//! layered DAG of any size up to ~100k tasks in O(V + E): `L ≈ n^0.4`
+//! layers whose widths are balanced (so a 100k-task graph is ~100
+//! layers of ~1000 tasks — wide, like fan-out-heavy scientific
+//! workflows), with every non-first-layer task drawing 1–3 dependency
+//! edges from the previous layer and clipped-Gaussian weights from the
+//! paper's recipe. Edges are emitted with ascending destinations per
+//! source *and* ascending sources per destination, so
+//! [`TaskGraph::add_edge`]'s sorted-inserts always append — graph
+//! construction never shifts adjacency entries.
+//!
+//! [`Structure::Layered`](super::Structure::Layered) exposes a
+//! [`DEFAULT_TASKS`]-sized variant to the CLI and dataset machinery; it
+//! is deliberately **not** part of [`super::Structure::ALL`], which
+//! remains the paper's 20-dataset grid (golden snapshots pin that
+//! grid). `benches/bench_scale.rs` drives the explicit-size form over
+//! n ∈ {1k, …, 100k}.
+
+use super::rng::Rng;
+use super::{gauss_network, paper_weight};
+use crate::graph::TaskGraph;
+use crate::instance::ProblemInstance;
+use crate::network::Network;
+
+/// Task count of the dataset-grid-sized variant ([`gen_layered`]).
+pub const DEFAULT_TASKS: usize = 200;
+
+/// Nodes in the companion network ([`gen_network`]): wide DAGs only
+/// expose layout effects when placement has real choices, so this is
+/// larger than the paper's 3–5-node networks.
+pub const NETWORK_NODES: usize = 8;
+
+/// Dataset-grid-sized layered DAG (see [`gen_layered_sized`]).
+pub fn gen_layered(rng: &mut Rng) -> TaskGraph {
+    gen_layered_sized(rng, DEFAULT_TASKS)
+}
+
+/// Layered DAG with exactly `n` tasks (`n ≥ 1`): `max(2, ⌈n^0.4⌉)`
+/// layers (capped at `n`) of balanced width; task ids ascend layer by
+/// layer; each task beyond the first layer draws 1–3 distinct
+/// predecessors uniformly from the previous layer. Costs and edge data
+/// sizes follow the paper's clipped-Gaussian weights. Deterministic per
+/// RNG stream.
+pub fn gen_layered_sized(rng: &mut Rng, n: usize) -> TaskGraph {
+    assert!(n >= 1, "layered graph needs at least one task");
+    let layers = (n as f64).powf(0.4).ceil().max(2.0) as usize;
+    let layers = layers.min(n);
+    let mut g = TaskGraph::with_capacity(n);
+    for t in 0..n {
+        g.add_task(format!("l{t}"), paper_weight(rng));
+    }
+
+    // Balanced layer widths: the first `n % layers` layers get one
+    // extra task, ids contiguous per layer.
+    let base = n / layers;
+    let mut start = 0usize;
+    let mut prev: Option<(usize, usize)> = None; // [start, end) of the previous layer
+    let mut scratch: Vec<usize> = Vec::with_capacity(3);
+    for layer in 0..layers {
+        let width = base + usize::from(layer < n % layers);
+        let end = start + width;
+        if let Some((plo, phi)) = prev {
+            for dst in start..end {
+                // 1–3 distinct predecessors from the previous layer,
+                // ascending so `add_edge` appends into `pred[dst]`.
+                let k = (rng.uniform_int(1, 3) as usize).min(phi - plo);
+                scratch.clear();
+                while scratch.len() < k {
+                    let p = rng.uniform_int(plo as u64, phi as u64 - 1) as usize;
+                    if !scratch.contains(&p) {
+                        scratch.push(p);
+                    }
+                }
+                scratch.sort_unstable();
+                for &p in &scratch {
+                    g.add_edge(p, dst, paper_weight(rng));
+                }
+            }
+        }
+        prev = Some((start, end));
+        start = end;
+    }
+    g
+}
+
+/// Companion network for layered instances: [`NETWORK_NODES`] nodes
+/// with the paper's clipped-Gaussian speed/link recipe.
+pub fn gen_network(rng: &mut Rng) -> Network {
+    gauss_network(rng, NETWORK_NODES, 1.0 / 3.0)
+}
+
+/// One self-contained layered instance of `n` tasks for the scale
+/// benchmarks: graph and network drawn from a stream seeded by
+/// `(seed, n)`, named `layered_<n>`. No CCR rescaling — weights stay
+/// exactly as drawn, so timings across sizes measure the scheduler,
+/// not the rescaling.
+pub fn layered_instance(seed: u64, n: usize) -> ProblemInstance {
+    let mut rng = Rng::seeded(seed ^ (n as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93));
+    let graph = gen_layered_sized(&mut rng, n);
+    let network = gen_network(&mut rng);
+    ProblemInstance::new(format!("layered_{n}"), graph, network)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topological_order;
+
+    #[test]
+    fn sized_generation_is_exact_and_valid() {
+        let mut rng = Rng::seeded(7);
+        for n in [1usize, 2, 3, 17, 200, 1000] {
+            let g = gen_layered_sized(&mut rng, n);
+            assert_eq!(g.len(), n);
+            assert!(g.validate().is_ok(), "n = {n}");
+            // Ids ascend layer by layer ⇒ identity is a topo order and
+            // every edge goes forward.
+            for (s, d, w) in g.edges() {
+                assert!(s < d, "edge ({s},{d}) not forward");
+                assert!(w > 0.0);
+            }
+            assert!(topological_order(&g).is_some());
+        }
+    }
+
+    #[test]
+    fn every_non_root_task_has_one_to_three_predecessors() {
+        let mut rng = Rng::seeded(11);
+        let g = gen_layered_sized(&mut rng, 500);
+        let roots = g.sources();
+        for t in 0..g.len() {
+            let deg = g.predecessors(t).len();
+            if roots.contains(&t) {
+                assert_eq!(deg, 0);
+            } else {
+                assert!((1..=3).contains(&deg), "task {t} has {deg} preds");
+            }
+        }
+        // Wide: the largest layer should dwarf the layer count.
+        let layers = (500f64).powf(0.4).ceil() as usize;
+        assert!(roots.len() >= 500 / layers, "first layer should be wide");
+    }
+
+    #[test]
+    fn layered_instance_deterministic_and_named() {
+        let a = layered_instance(42, 300);
+        let b = layered_instance(42, 300);
+        assert_eq!(a, b);
+        assert_eq!(a.name, "layered_300");
+        assert_eq!(a.network.len(), NETWORK_NODES);
+        assert!(a.validate().is_ok());
+        let c = layered_instance(43, 300);
+        assert_ne!(a.graph, c.graph, "seed must matter");
+    }
+}

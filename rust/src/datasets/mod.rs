@@ -12,10 +12,16 @@
 //!
 //! over random complete networks of 3–5 nodes with the same weight
 //! distribution, then link strengths rescaled to hit the target CCR.
+//!
+//! Beyond the paper's grid, [`layered`] generates layered wide DAGs up
+//! to ~100k tasks ([`Structure::Layered`], excluded from
+//! [`Structure::ALL`]) — the large-graph scaling axis driven by
+//! `benches/bench_scale.rs`.
 
 pub mod ccr;
 pub mod chains;
 pub mod cycles;
+pub mod layered;
 pub mod rng;
 pub mod traces;
 pub mod trees;
@@ -54,9 +60,17 @@ pub enum Structure {
     OutTrees,
     Chains,
     Cycles,
+    /// Layered wide DAG ([`layered`]) — the large-graph scaling family.
+    /// Not part of the paper's grid ([`Structure::ALL`]); appended last
+    /// so the existing families keep their discriminants (and thus
+    /// their seeded RNG streams).
+    Layered,
 }
 
 impl Structure {
+    /// The paper's four families — the 20-dataset grid the golden
+    /// snapshots pin. [`Structure::Layered`] is deliberately excluded:
+    /// it is the scale axis, not part of the reproduction grid.
     pub const ALL: [Structure; 4] =
         [Structure::InTrees, Structure::OutTrees, Structure::Chains, Structure::Cycles];
 
@@ -66,11 +80,16 @@ impl Structure {
             Structure::OutTrees => "out_trees",
             Structure::Chains => "chains",
             Structure::Cycles => "cycles",
+            Structure::Layered => "layered",
         }
     }
 
     pub fn from_str_opt(s: &str) -> Option<Structure> {
-        Structure::ALL.iter().copied().find(|x| x.as_str() == s)
+        Structure::ALL
+            .iter()
+            .copied()
+            .chain(std::iter::once(Structure::Layered))
+            .find(|x| x.as_str() == s)
     }
 }
 
@@ -117,11 +136,14 @@ impl DatasetSpec {
             Structure::OutTrees => trees::gen_tree(rng, trees::Direction::Out),
             Structure::Chains => chains::gen_chains(rng),
             Structure::Cycles => cycles::gen_cycles(rng),
+            Structure::Layered => layered::gen_layered(rng),
         };
         let network = match self.structure {
             // The paper sets homogeneous communication strengths for the
             // trace-derived cycles datasets.
             Structure::Cycles => cycles::gen_network(rng),
+            // Wide DAGs need placement choices: a larger network.
+            Structure::Layered => layered::gen_network(rng),
             _ => random_network(rng),
         };
         let mut inst = ProblemInstance::new(String::new(), graph, network);
@@ -233,6 +255,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn layered_spec_generates_valid_wide_instances() {
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Layered, 1.0) };
+        assert_eq!(spec.name(), "layered_ccr_1");
+        for inst in spec.generate() {
+            assert!(inst.validate().is_ok(), "{}", inst.name);
+            assert_eq!(inst.graph.len(), layered::DEFAULT_TASKS);
+            assert_eq!(inst.network.len(), layered::NETWORK_NODES);
+            assert!((inst.ccr() - 1.0).abs() < 1e-6, "{}", inst.ccr());
+        }
+        assert_eq!(Structure::from_str_opt("layered"), Some(Structure::Layered));
+        assert!(!Structure::ALL.contains(&Structure::Layered), "grid stays the paper's 20");
     }
 
     #[test]

@@ -2,22 +2,73 @@
 //!
 //! A [`TaskGraph`] is the `G = (T, D)` of the paper's §I-A: every task
 //! `t` carries a compute cost `c(t) ∈ ℝ⁺` and every dependency edge
-//! `(t, t')` carries a data size `c(t, t') ∈ ℝ⁺`. Storage is adjacency
-//! lists in both directions (successors and predecessors) plus a dense
-//! edge-cost map, sized for the small-to-medium graphs (≤ a few hundred
-//! tasks) the benchmark suite uses.
+//! `(t, t')` carries a data size `c(t, t') ∈ ℝ⁺`.
+//!
+//! ## Storage: build lists + frozen CSR
+//!
+//! Graphs are *built* through sorted per-task adjacency lists (cheap
+//! incremental inserts, O(log deg) duplicate detection) and *read*
+//! through a *CSR mirror* (compressed sparse rows: one flat edge array
+//! per direction plus per-task offsets). The CSR is materialized at
+//! most once per construction epoch — lazily on the first adjacency
+//! query, or eagerly via [`TaskGraph::freeze`] / [`TaskGraph::validate`]
+//! — and any later mutation invalidates it. [`TaskGraph::successors`] /
+//! [`TaskGraph::predecessors`] keep their slice signatures and ascending
+//! iteration order, so every consumer (rank DP, scheduling loop,
+//! simulator replay, trace loaders) is layout-agnostic; they simply walk
+//! two contiguous arrays instead of per-task heap allocations. This is
+//! what lets the scheduling core stream 10k–100k-task workflow
+//! instances (WfCommons/Pegasus scale) without pointer-chasing on the
+//! hot paths.
 
 pub mod topo;
 
 pub use topo::{is_acyclic, topological_order};
+
+use std::sync::OnceLock;
 
 use crate::util::{FromJson, ToJson, Value};
 
 /// Index of a task within its [`TaskGraph`] (dense, 0-based).
 pub type TaskId = usize;
 
+/// Frozen CSR mirror of the adjacency lists: flat edge arrays plus
+/// `n + 1` offsets per direction. Purely derived from the build lists
+/// (never serialized or compared); rebuilding it from the same lists
+/// yields byte-identical slices in the same order.
+#[derive(Debug, Clone)]
+struct Csr {
+    /// `succ_adj[succ_off[t]..succ_off[t + 1]]` = successors of `t`,
+    /// ascending by task id.
+    succ_off: Vec<usize>,
+    succ_adj: Vec<(TaskId, f64)>,
+    /// `pred_adj[pred_off[t]..pred_off[t + 1]]` = predecessors of `t`,
+    /// ascending by task id.
+    pred_off: Vec<usize>,
+    pred_adj: Vec<(TaskId, f64)>,
+}
+
+impl Csr {
+    fn build(succ: &[Vec<(TaskId, f64)>], pred: &[Vec<(TaskId, f64)>]) -> Csr {
+        fn flatten(lists: &[Vec<(TaskId, f64)>]) -> (Vec<usize>, Vec<(TaskId, f64)>) {
+            let total: usize = lists.iter().map(Vec::len).sum();
+            let mut off = Vec::with_capacity(lists.len() + 1);
+            let mut adj = Vec::with_capacity(total);
+            off.push(0);
+            for list in lists {
+                adj.extend_from_slice(list);
+                off.push(adj.len());
+            }
+            (off, adj)
+        }
+        let (succ_off, succ_adj) = flatten(succ);
+        let (pred_off, pred_adj) = flatten(pred);
+        Csr { succ_off, succ_adj, pred_off, pred_adj }
+    }
+}
+
 /// A weighted DAG of computational tasks.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct TaskGraph {
     /// Human-readable task names (same indexing as all other fields).
     names: Vec<String>,
@@ -29,6 +80,22 @@ pub struct TaskGraph {
     pred: Vec<Vec<(TaskId, f64)>>,
     /// Number of edges.
     num_edges: usize,
+    /// Lazily-frozen CSR mirror of `succ`/`pred` (see the module docs);
+    /// reset by every mutation, rebuilt on the next adjacency query.
+    csr: OnceLock<Csr>,
+}
+
+/// Equality is over graph *content* (names, costs, edges) only: whether
+/// the derived CSR mirror happens to be materialized never affects
+/// comparisons.
+impl PartialEq for TaskGraph {
+    fn eq(&self, other: &Self) -> bool {
+        self.names == other.names
+            && self.costs == other.costs
+            && self.succ == other.succ
+            && self.pred == other.pred
+            && self.num_edges == other.num_edges
+    }
 }
 
 impl TaskGraph {
@@ -40,12 +107,26 @@ impl TaskGraph {
             succ: Vec::new(),
             pred: Vec::new(),
             num_edges: 0,
+            csr: OnceLock::new(),
         }
+    }
+
+    /// Create an empty graph with room for `tasks` tasks pre-reserved
+    /// in the per-task build lists — the large-graph generators use
+    /// this to avoid repeated regrowth at the 10k–100k-task scale.
+    pub fn with_capacity(tasks: usize) -> Self {
+        let mut g = TaskGraph::new();
+        g.names.reserve(tasks);
+        g.costs.reserve(tasks);
+        g.succ.reserve(tasks);
+        g.pred.reserve(tasks);
+        g
     }
 
     /// Add a task with the given name and compute cost; returns its id.
     pub fn add_task(&mut self, name: impl Into<String>, cost: f64) -> TaskId {
         assert!(cost >= 0.0, "task cost must be non-negative, got {cost}");
+        self.csr.take();
         let id = self.names.len();
         self.names.push(name.into());
         self.costs.push(cost);
@@ -63,6 +144,7 @@ impl TaskGraph {
         assert!(src < self.len() && dst < self.len(), "edge ({src},{dst}) out of range");
         assert_ne!(src, dst, "self-loop on task {src}");
         assert!(data >= 0.0, "edge data size must be non-negative, got {data}");
+        self.csr.take();
         let pos = self.succ[src].binary_search_by(|&(t, _)| t.cmp(&dst));
         match pos {
             Ok(_) => panic!("duplicate edge ({src}, {dst})"),
@@ -106,40 +188,61 @@ impl TaskGraph {
         &self.costs
     }
 
+    /// The CSR mirror, frozen from the build lists on first use after
+    /// any mutation (thread-safe: concurrent readers of a shared graph
+    /// race benignly on the one-time build).
+    #[inline]
+    fn csr(&self) -> &Csr {
+        self.csr.get_or_init(|| Csr::build(&self.succ, &self.pred))
+    }
+
+    /// Eagerly build the CSR mirror (no-op when already frozen).
+    /// Optional — every adjacency query freezes on demand — but sweeps
+    /// call it once before fanning a graph out to worker threads so no
+    /// worker pays the O(V + E) flatten inside a timed region.
+    pub fn freeze(&self) {
+        let _ = self.csr();
+    }
+
     /// Successors of `t` with edge data sizes, ascending by task id.
+    #[inline]
     pub fn successors(&self, t: TaskId) -> &[(TaskId, f64)] {
-        &self.succ[t]
+        let c = self.csr();
+        &c.succ_adj[c.succ_off[t]..c.succ_off[t + 1]]
     }
 
     /// Predecessors of `t` with edge data sizes, ascending by task id.
+    #[inline]
     pub fn predecessors(&self, t: TaskId) -> &[(TaskId, f64)] {
-        &self.pred[t]
+        let c = self.csr();
+        &c.pred_adj[c.pred_off[t]..c.pred_off[t + 1]]
     }
 
     /// Data size `c(t, t')` of edge `(src, dst)`, if present.
     pub fn edge(&self, src: TaskId, dst: TaskId) -> Option<f64> {
-        self.succ[src]
-            .binary_search_by(|&(t, _)| t.cmp(&dst))
-            .ok()
-            .map(|i| self.succ[src][i].1)
+        let adj = self.successors(src);
+        adj.binary_search_by(|&(t, _)| t.cmp(&dst)).ok().map(|i| adj[i].1)
     }
 
-    /// Iterator over all edges as `(src, dst, data)`.
+    /// Iterator over all edges as `(src, dst, data)`, ascending by
+    /// `(src, dst)` — one linear walk over the flat CSR edge array.
     pub fn edges(&self) -> impl Iterator<Item = (TaskId, TaskId, f64)> + '_ {
-        self.succ
-            .iter()
-            .enumerate()
-            .flat_map(|(s, adj)| adj.iter().map(move |&(d, c)| (s, d, c)))
+        let c = self.csr();
+        (0..self.len()).flat_map(move |s| {
+            c.succ_adj[c.succ_off[s]..c.succ_off[s + 1]]
+                .iter()
+                .map(move |&(d, w)| (s, d, w))
+        })
     }
 
     /// Source tasks (no predecessors).
     pub fn sources(&self) -> Vec<TaskId> {
-        (0..self.len()).filter(|&t| self.pred[t].is_empty()).collect()
+        (0..self.len()).filter(|&t| self.predecessors(t).is_empty()).collect()
     }
 
     /// Sink tasks (no successors).
     pub fn sinks(&self) -> Vec<TaskId> {
-        (0..self.len()).filter(|&t| self.succ[t].is_empty()).collect()
+        (0..self.len()).filter(|&t| self.successors(t).is_empty()).collect()
     }
 
     /// Total compute cost `Σ_t c(t)`.
@@ -152,7 +255,9 @@ impl TaskGraph {
         self.edges().map(|(_, _, c)| c).sum()
     }
 
-    /// Structural validation: acyclicity plus internal-consistency checks.
+    /// Structural validation: acyclicity plus internal-consistency
+    /// checks. Also freezes the CSR mirror (the acyclicity walk reads
+    /// adjacency), so a validated graph is ready for the hot paths.
     pub fn validate(&self) -> Result<(), String> {
         if !is_acyclic(self) {
             return Err("task graph contains a cycle".into());
@@ -162,6 +267,19 @@ impl TaskGraph {
         if back_edges != fwd_edges || fwd_edges != self.num_edges {
             return Err(format!(
                 "inconsistent adjacency: fwd={fwd_edges} back={back_edges} count={}",
+                self.num_edges
+            ));
+        }
+        let c = self.csr();
+        if c.succ_adj.len() != self.num_edges
+            || c.pred_adj.len() != self.num_edges
+            || c.succ_off.len() != self.len() + 1
+            || c.pred_off.len() != self.len() + 1
+        {
+            return Err(format!(
+                "CSR mirror out of sync: {} fwd / {} back flat edges for {} edges",
+                c.succ_adj.len(),
+                c.pred_adj.len(),
                 self.num_edges
             ));
         }
@@ -304,6 +422,58 @@ mod tests {
     fn empty_graph_is_valid() {
         let g = TaskGraph::new();
         assert!(g.is_empty());
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn csr_invalidated_by_mutation() {
+        let mut g = diamond();
+        // Freeze, then mutate: the rebuilt CSR must see the new edge.
+        g.freeze();
+        assert_eq!(g.successors(1), &[(3, 0.7)]);
+        let e = g.add_task("e", 1.0);
+        g.add_edge(1, e, 0.9);
+        assert_eq!(g.successors(1), &[(3, 0.7), (e, 0.9)]);
+        assert_eq!(g.predecessors(e), &[(1, 0.9)]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn frozen_and_unfrozen_graphs_compare_equal() {
+        let a = diamond();
+        let b = diamond();
+        a.freeze(); // equality is over content, not derived state
+        assert_eq!(a, b);
+        let c = a.clone(); // clone may carry the frozen mirror
+        assert_eq!(c, b);
+        assert_eq!(c.successors(0), b.successors(0));
+    }
+
+    #[test]
+    fn csr_enumeration_matches_build_lists() {
+        let g = diamond();
+        for t in 0..g.len() {
+            assert_eq!(g.successors(t), g.succ[t].as_slice());
+            assert_eq!(g.predecessors(t), g.pred[t].as_slice());
+        }
+        let flat: Vec<_> = g.edges().collect();
+        let nested: Vec<_> = g
+            .succ
+            .iter()
+            .enumerate()
+            .flat_map(|(s, adj)| adj.iter().map(move |&(d, w)| (s, d, w)))
+            .collect();
+        assert_eq!(flat, nested);
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut g = TaskGraph::with_capacity(16);
+        assert!(g.is_empty());
+        g.add_task("a", 1.0);
+        g.add_task("b", 2.0);
+        g.add_edge(0, 1, 0.5);
+        assert_eq!(g.successors(0), &[(1, 0.5)]);
         assert!(g.validate().is_ok());
     }
 }

@@ -9,6 +9,9 @@
 //!
 //! * [`graph`] / [`network`] / [`instance`] — the heterogeneous DAG
 //!   scheduling problem model (related-machines; see paper §I-A).
+//!   Task-graph adjacency freezes into a CSR layout (flat edge arrays +
+//!   per-task offsets) on first query, sized for 10k–100k-task
+//!   workflow instances.
 //! * [`schedule`] — schedules, the makespan objective, and a strict
 //!   validity checker for the four §I-A properties.
 //! * [`ranks`] — UpwardRank / DownwardRank / CPoP rank and critical-path
@@ -18,12 +21,16 @@
 //!   list scheduler whose 5 components span 72 algorithms (HEFT, CPoP,
 //!   MCT, MET, Sufferage, … as special cases). Sweeps share one
 //!   [`scheduler::SchedulingContext`] per instance (ranks, priorities,
-//!   pins, exec matrix computed once, never per config) and run the
-//!   zero-recompute core `schedule_with`; the pre-refactor loop remains
+//!   pins, exec matrix computed once, never per config) and one
+//!   reusable [`scheduler::SchedulerWorkspace`] per worker thread
+//!   (scratch buffers allocated once, recycled per config), and run the
+//!   zero-recompute core `schedule_into`; the pre-refactor loop remains
 //!   as `schedule_reference`, the bit-exactness oracle.
 //! * [`datasets`] — the 4×5 benchmark dataset families of §III
 //!   (in_trees, out_trees, chains, cycles × CCR ∈ {1/5, 1/2, 1, 2, 5}),
-//!   plus [`datasets::traces`]: real workflow-trace ingestion (WfCommons
+//!   plus [`datasets::layered`]: the layered wide-DAG scale axis
+//!   (~100k tasks, `benches/bench_scale.rs`),
+//!   and [`datasets::traces`]: real workflow-trace ingestion (WfCommons
 //!   JSON and simple DSLab-style DAG descriptions → [`instance`]s, with
 //!   machine-spec or synthetic network attachment and CCR rescaling).
 //! * [`benchmark`] — the 72-algorithm sweep harness producing makespan /
@@ -87,11 +94,11 @@ pub mod prelude {
     pub use crate::schedule::{render_gantt, Schedule};
     pub use crate::scheduler::{
         CompareFn, LookaheadScheduler, ParametricScheduler, PriorityFn, SchedulerConfig,
-        SchedulingContext,
+        SchedulerWorkspace, SchedulingContext,
     };
     pub use crate::benchmark::{SimRecord, SimSweep};
     pub use crate::sim::{
-        perturbed_instance, simulate, simulate_against, NoiseTrace, Perturbation,
-        ReplayPolicy, SimOptions, SimOutcome,
+        perturbed_instance, simulate, simulate_against, simulate_into, NoiseTrace,
+        Perturbation, ReplayPolicy, SimOptions, SimOutcome,
     };
 }

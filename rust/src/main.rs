@@ -5,7 +5,7 @@
 //! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
 //! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--workers 0] [--repeats 1] [--out results/benchmark.json]
 //! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--out results/robustness.csv]
-//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--simulate (+ the simulate flags)] [--workers 0] [--out <csv>]
+//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--simulate (+ the simulate flags)] [--workers 0] [--out <csv>]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
 //! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
@@ -287,6 +287,25 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let opts = TraceOptions { ccr, fallback };
     // Every instance was already validated by the loader.
     let set = TraceSet::load_paths(&paths, &opts).map_err(|e| anyhow!(e))?;
+    // Corpus-size guard: scheduling is O(n·m) memory per (config,
+    // instance) and the verify pre-pass is serial over all 72 configs —
+    // an accidentally-huge corpus on a CI runner or shared server
+    // should fail fast with a clear message, not OOM an hour in.
+    if let Some(max_tasks) = args.get("max-tasks") {
+        let max_tasks: usize = max_tasks
+            .parse()
+            .map_err(|e| anyhow!("invalid --max-tasks: {e}"))?;
+        for inst in &set.instances {
+            if inst.graph.len() > max_tasks {
+                bail!(
+                    "trace {} has {} tasks, above the --max-tasks bound of {max_tasks}; \
+                     raise the bound (or drop the flag) to schedule it anyway",
+                    inst.name,
+                    inst.graph.len()
+                );
+            }
+        }
+    }
     for inst in &set.instances {
         println!(
             "loaded {}: {} tasks, {} edges, {} nodes, ccr {:.4}",
@@ -307,10 +326,11 @@ fn cmd_trace(args: &Args) -> Result<()> {
     // SchedulingContext per trace keeps the serial pre-pass cheap:
     // ranks/priorities/pins are computed once per trace, not per config.
     if !args.has("no-verify") {
+        let mut ws = ptgs::scheduler::SchedulerWorkspace::new();
         for inst in &set.instances {
             let ctx = ptgs::scheduler::SchedulingContext::new(inst, RankBackend::Native);
             for cfg in &schedulers {
-                let plan = cfg.build().schedule_with(&ctx);
+                let plan = cfg.build().schedule_into(&ctx, &mut ws);
                 plan.validate(inst).map_err(|e| {
                     anyhow!("{} on {}: invalid schedule: {e}", cfg.name(), inst.name)
                 })?;
@@ -333,6 +353,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
                         out.makespan
                     );
                 }
+                ws.recycle(plan);
             }
         }
         println!(
@@ -515,7 +536,7 @@ fn cmd_list(args: &Args) -> Result<()> {
 fn spec_from_args(args: &Args, default_structure: &str) -> Result<DatasetSpec> {
     let structure = args.get_or("structure", default_structure);
     let s = Structure::from_str_opt(&structure).ok_or_else(|| {
-        anyhow!("unknown structure {structure} (in_trees|out_trees|chains|cycles)")
+        anyhow!("unknown structure {structure} (in_trees|out_trees|chains|cycles|layered)")
     })?;
     Ok(DatasetSpec {
         structure: s,

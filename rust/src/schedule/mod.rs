@@ -95,16 +95,46 @@ impl Schedule {
             .binary_search_by(|x| x.start.partial_cmp(&a.start).unwrap())
             .unwrap_or_else(|e| e);
         tl.insert(pos, a);
-        // Re-extend the gap index from the insertion point: entries
-        // before `pos` cover an unchanged prefix. Vec::insert already
-        // shifts the tail, so this adds no asymptotic cost.
+        // Patch the gap index from the insertion point only: entries
+        // before `pos` cover an unchanged prefix, and after the shift
+        // each suffix slot `i > pos` already holds the prefix max of the
+        // new timeline's `[0..=i]` *minus the new assignment* — so the
+        // new value is simply `max(stored, a.end)`. The prefix max is
+        // nondecreasing, so the first suffix slot already `>= a.end`
+        // ends the walk: every later slot is unchanged too. (A unit
+        // test pins this patch against a full rebuild.)
         let pm = &mut self.prefix_max_end[a.node];
         pm.insert(pos, 0.0);
-        let mut run = if pos == 0 { 0.0 } else { pm[pos - 1] };
-        for i in pos..tl.len() {
-            run = run.max(tl[i].end);
-            pm[i] = run;
+        let before = if pos == 0 { 0.0f64 } else { pm[pos - 1] };
+        pm[pos] = before.max(a.end);
+        for i in (pos + 1)..pm.len() {
+            if pm[i] >= a.end {
+                break;
+            }
+            pm[i] = a.end;
         }
+    }
+
+    /// Clear every assignment while keeping all allocations — the
+    /// assignment table, per-node timeline vectors, and the gap index —
+    /// resized for a schedule of `num_tasks` tasks over `num_nodes`
+    /// nodes. [`crate::scheduler::SchedulerWorkspace`] recycles
+    /// schedules through this so a 72-config sweep reuses one set of
+    /// timeline buffers instead of reallocating them per config.
+    pub fn reset(&mut self, num_tasks: usize, num_nodes: usize) {
+        self.assignments.clear();
+        self.assignments.resize(num_tasks, None);
+        self.timelines.truncate(num_nodes);
+        for tl in &mut self.timelines {
+            tl.clear();
+        }
+        self.timelines.resize_with(num_nodes, Vec::new);
+        self.prefix_max_end.truncate(num_nodes);
+        for pm in &mut self.prefix_max_end {
+            pm.clear();
+        }
+        self.prefix_max_end.resize_with(num_nodes, Vec::new);
+        self.scheduled = 0;
     }
 
     /// Assignment of a task, if scheduled.
@@ -345,6 +375,58 @@ mod tests {
         assert_eq!(s.gap_index(0, 3.5), (2, 3.0));
         // dat past the last start → index past the end, prefix max 7.
         assert_eq!(s.gap_index(0, 100.0), (4, 7.0));
+    }
+
+    #[test]
+    fn suffix_patched_gap_index_equals_full_rebuild() {
+        // Adversarial insertion orders (mid-timeline, overlapping ends,
+        // head and tail inserts): after every insert the suffix-patched
+        // gap index must equal a from-scratch fold over the start-sorted
+        // timeline — the invariant `prefix_max_end[i] = max(0,
+        // end of timeline[0..=i])`.
+        let inserts = [
+            asg(0, 0, 10.0, 11.0), // tail first
+            asg(1, 0, 0.0, 4.0),   // head, end dominates later slots
+            asg(2, 0, 5.0, 5.5),   // mid, end below running max
+            asg(3, 0, 2.0, 9.0),   // mid, end dominates through tail
+            asg(4, 0, 1.0, 1.5),   // early, absorbed immediately
+            asg(5, 0, 12.0, 12.5), // strict tail append
+        ];
+        let mut s = Schedule::new(inserts.len(), 1);
+        for a in inserts {
+            s.insert(a);
+            let tl = s.timeline_slice(0);
+            let mut run = 0.0f64;
+            let rebuilt: Vec<f64> = tl
+                .iter()
+                .map(|x| {
+                    run = run.max(x.end);
+                    run
+                })
+                .collect();
+            assert_eq!(s.prefix_max_end[0], rebuilt, "after inserting task {}", a.task);
+        }
+    }
+
+    #[test]
+    fn reset_reuses_schedule_like_new() {
+        let mut s = Schedule::new(2, 2);
+        s.insert(asg(0, 0, 0.0, 1.0));
+        s.insert(asg(1, 1, 0.0, 1.0));
+        // Reshape smaller, then back: must behave exactly like ::new.
+        s.reset(3, 1);
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty() && !s.is_complete());
+        assert_eq!(s.timeline_slice(0), &[]);
+        s.insert(asg(2, 0, 1.0, 2.0));
+        s.insert(asg(0, 0, 4.0, 5.0));
+        assert_eq!(s, {
+            let mut fresh = Schedule::new(3, 1);
+            fresh.insert(asg(2, 0, 1.0, 2.0));
+            fresh.insert(asg(0, 0, 4.0, 5.0));
+            fresh
+        });
+        assert_eq!(s.gap_index(0, 3.0), (1, 2.0));
     }
 
     #[test]

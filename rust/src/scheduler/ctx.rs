@@ -143,16 +143,24 @@ impl<'a> SchedulingContext<'a> {
     /// The priority vector for one priority function, computed once per
     /// function. Values replicate [`super::priorities`] exactly (a unit
     /// test pins the equivalence).
+    ///
+    /// Every vector is NaN-checked as it is materialized
+    /// ([`assert_priorities_comparable`]): a poisoned input (NaN leaking
+    /// out of rank arithmetic) panics here, once, naming the offending
+    /// task — instead of surfacing as an unattributable
+    /// `"priorities must not be NaN"` deep inside the ready heap's
+    /// comparator mid-sweep.
     pub fn priorities(&self, f: PriorityFn) -> &[f64] {
+        let check = |prio: Vec<f64>| assert_priorities_comparable(f, prio, self.inst);
         match f {
             PriorityFn::UpwardRanking => self.prio_ur.get_or_init(|| {
                 PRIORITY_COMPUTATIONS.fetch_add(1, Ordering::Relaxed);
-                self.ranks().up.clone()
+                check(self.ranks().up.clone())
             }),
             PriorityFn::CPoPRanking => self.prio_cr.get_or_init(|| {
                 PRIORITY_COMPUTATIONS.fetch_add(1, Ordering::Relaxed);
                 let r = self.ranks();
-                (0..self.inst.graph.len()).map(|t| r.cpop(t)).collect()
+                check((0..self.inst.graph.len()).map(|t| r.cpop(t)).collect())
             }),
             PriorityFn::ArbitraryTopological => self.prio_at.get_or_init(|| {
                 PRIORITY_COMPUTATIONS.fetch_add(1, Ordering::Relaxed);
@@ -161,7 +169,7 @@ impl<'a> SchedulingContext<'a> {
                 for (pos, &t) in self.topological_order().iter().enumerate() {
                     prio[t] = (n - pos) as f64;
                 }
-                prio
+                check(prio)
             }),
         }
     }
@@ -210,6 +218,29 @@ impl<'a> SchedulingContext<'a> {
     pub fn priority_computations() -> usize {
         PRIORITY_COMPUTATIONS.load(Ordering::Relaxed)
     }
+}
+
+/// Validate that a freshly-materialized priority vector is totally
+/// comparable (no NaN), returning it unchanged. Panics with the first
+/// offending task's id and name: a NaN priority can only come from
+/// poisoned instance data (NaN leaking through cost/speed arithmetic),
+/// and letting it reach the ready heap would instead panic with a
+/// context-free `"priorities must not be NaN"` on some later comparison
+/// — or, worse, silently misorder tasks if comparisons were made total.
+pub(crate) fn assert_priorities_comparable(
+    f: PriorityFn,
+    prio: Vec<f64>,
+    inst: &ProblemInstance,
+) -> Vec<f64> {
+    if let Some(t) = prio.iter().position(|p| p.is_nan()) {
+        panic!(
+            "{f:?} priority of task {t} ({name}) on instance `{inst_name}` is NaN — \
+             the instance carries non-finite costs, data sizes, or speeds",
+            name = inst.graph.name(t),
+            inst_name = inst.name
+        );
+    }
+    prio
 }
 
 #[cfg(test)]
@@ -306,6 +337,43 @@ mod tests {
         // The rank OnceLock must still be empty: an AT-only run skips
         // the rank DP exactly like the legacy per-call path did.
         assert!(ctx.ranks.get().is_none());
+    }
+
+    /// A poisoned-cost instance: rank arithmetic that yields NaN must be
+    /// reported with the offending task when the context materializes
+    /// the priority vector — not later, deep inside `Entry::cmp`. The
+    /// public constructors reject non-finite costs, so the poison is
+    /// injected through the context's own rank slot, exactly where a
+    /// NaN produced by upstream arithmetic would land.
+    #[test]
+    #[should_panic(expected = "priority of task 2 (c)")]
+    fn nan_priority_panics_with_offending_task() {
+        let inst = diamond();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut poisoned = native::ranks(&inst);
+        poisoned.up[2] = f64::NAN;
+        ctx.ranks.set(poisoned).unwrap();
+        let _ = ctx.priorities(PriorityFn::UpwardRanking);
+    }
+
+    #[test]
+    #[should_panic(expected = "CPoPRanking priority of task 1 (b)")]
+    fn nan_cpop_priority_panics_with_offending_task() {
+        let inst = diamond();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut poisoned = native::ranks(&inst);
+        poisoned.down[1] = f64::NAN; // cpop(1) = up[1] + NaN = NaN
+        ctx.ranks.set(poisoned).unwrap();
+        let _ = ctx.priorities(PriorityFn::CPoPRanking);
+    }
+
+    #[test]
+    fn clean_priorities_pass_the_nan_check_unchanged() {
+        let inst = diamond();
+        let prio = vec![3.0, 2.0, 1.0, 0.5];
+        let out =
+            assert_priorities_comparable(PriorityFn::UpwardRanking, prio.clone(), &inst);
+        assert_eq!(out, prio);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::ctx::SchedulingContext;
+use super::workspace::SchedulerWorkspace;
 use super::window::{
     window_append_only, window_append_only_at, window_insertion, window_insertion_indexed,
     Candidate,
@@ -44,7 +45,12 @@ pub struct ParametricScheduler {
 /// ties break toward the smaller task id, deterministically. Shared with
 /// the execution simulator's online replanner ([`crate::sim::replay`]),
 /// which must reproduce exactly this tie-break.
-#[derive(PartialEq)]
+///
+/// The ordering is *total* over distinct tasks (ids break every
+/// priority tie), so the pop sequence of a heap of entries depends only
+/// on the inserted multiset — never on insertion order or on the
+/// capacity a recycled [`super::SchedulerWorkspace`] heap retains.
+#[derive(Debug, PartialEq)]
 pub(crate) struct Entry(pub(crate) f64, pub(crate) Reverse<TaskId>);
 
 impl Eq for Entry {}
@@ -282,26 +288,43 @@ impl ParametricScheduler {
         Choice { best, second }
     }
 
-    /// Run Algorithm 6 against a shared [`SchedulingContext`]: ranks,
-    /// priorities, the critical-path pin set, the topological order,
-    /// and the `exec[t][u]` matrix come from the context (computed once
-    /// per instance, amortized over every configuration evaluated on
-    /// it), and each task's data-available-time row is maintained
-    /// incrementally — updated once per placed predecessor (O(E·m)
-    /// total) instead of being re-derived from every predecessor on
-    /// every candidate evaluation.
+    /// Run Algorithm 6 against a shared [`SchedulingContext`] with a
+    /// private, throwaway [`SchedulerWorkspace`]. Sweeps should prefer
+    /// [`ParametricScheduler::schedule_into`], which reuses one
+    /// workspace's scratch buffers across every configuration.
+    pub fn schedule_with(&self, ctx: &SchedulingContext<'_>) -> Schedule {
+        let mut ws = SchedulerWorkspace::new();
+        self.schedule_into(ctx, &mut ws)
+    }
+
+    /// Run Algorithm 6 against a shared [`SchedulingContext`] and a
+    /// reusable [`SchedulerWorkspace`]: ranks, priorities, the
+    /// critical-path pin set, the topological order, and the
+    /// `exec[t][u]` matrix come from the context (computed once per
+    /// instance, amortized over every configuration evaluated on it);
+    /// the DAT matrix, ready heap, predecessor counters, and the output
+    /// schedule's timeline/gap-index buffers come from the workspace
+    /// (allocated once per worker thread, reused across configs — O(1)
+    /// heap allocations per config after warm-up). Each task's
+    /// data-available-time row is maintained incrementally — updated
+    /// once per placed predecessor (O(E·m) total) instead of being
+    /// re-derived from every predecessor on every candidate evaluation.
     ///
     /// Produces schedules **bit-identical** to
     /// [`ParametricScheduler::schedule_reference`] for every
-    /// configuration (property-tested and pinned by the golden
-    /// snapshots).
-    pub fn schedule_with(&self, ctx: &SchedulingContext<'_>) -> Schedule {
+    /// configuration and any workspace state (property-tested and
+    /// pinned by the golden snapshots).
+    pub fn schedule_into(
+        &self,
+        ctx: &SchedulingContext<'_>,
+        ws: &mut SchedulerWorkspace,
+    ) -> Schedule {
         let inst = ctx.instance();
         let g = &inst.graph;
         let net = &inst.network;
         let n = g.len();
         let m = net.len();
-        let mut sched = Schedule::new(n, m);
+        let mut sched = ws.take_schedule(n, m);
         if n == 0 {
             return sched;
         }
@@ -314,20 +337,23 @@ impl ParametricScheduler {
         };
         let pin_of = |t: TaskId| pinned.and_then(|p| p[t]);
 
-        // Incremental data-available times: row `t` holds, per node,
-        // the earliest moment all *placed* predecessors' outputs can be
-        // on that node. By the time `t` becomes ready every predecessor
-        // has been placed, so its row is final — the same max the
-        // reference path folds per candidate, taken over the same
-        // values (max is order-independent).
-        let mut dat = vec![0.0f64; n * m];
+        // Scratch state from the workspace. Incremental data-available
+        // times: row `t` holds, per node, the earliest moment all
+        // *placed* predecessors' outputs can be on that node. By the
+        // time `t` becomes ready every predecessor has been placed, so
+        // its row is final — the same max the reference path folds per
+        // candidate, taken over the same values (max is
+        // order-independent).
+        ws.begin(n, m);
+        let SchedulerWorkspace { dat, missing, ready, .. } = ws;
 
         // Ready queue: tasks whose predecessors are all scheduled.
-        let mut missing: Vec<usize> = (0..n).map(|t| g.predecessors(t).len()).collect();
-        let mut ready: BinaryHeap<Entry> = (0..n)
-            .filter(|&t| missing[t] == 0)
-            .map(|t| Entry(prio[t], Reverse(t)))
-            .collect();
+        missing.extend((0..n).map(|t| g.predecessors(t).len()));
+        ready.extend(
+            (0..n)
+                .filter(|&t| missing[t] == 0)
+                .map(|t| Entry(prio[t], Reverse(t))),
+        );
 
         let mut scheduled = 0usize;
         while let Some(Entry(_, Reverse(t))) = ready.pop() {
@@ -525,12 +551,18 @@ mod tests {
     fn shared_ctx_equals_reference_for_all_72() {
         let inst = fork_join();
         let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        // One workspace reused (dirty) across all 72 configs: reuse must
+        // never leak state between runs.
+        let mut ws = SchedulerWorkspace::new();
         for cfg in SchedulerConfig::all() {
             let s = cfg.build();
             let fast = s.schedule_with(&ctx);
             let reference = s.schedule_reference(&inst);
             assert_eq!(fast, reference, "{} drifted from the reference path", cfg.name());
             assert_eq!(s.schedule(&inst), reference, "{} one-shot path drifted", cfg.name());
+            let reused = s.schedule_into(&ctx, &mut ws);
+            assert_eq!(reused, reference, "{} dirty-workspace path drifted", cfg.name());
+            ws.recycle(reused);
         }
     }
 

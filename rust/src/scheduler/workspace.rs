@@ -1,0 +1,184 @@
+//! Reusable scheduler scratch memory — the zero-allocation sweep core.
+//!
+//! [`super::ParametricScheduler::schedule_with`] needs four scratch
+//! structures per run: the incremental DAT matrix (`n × m`), the
+//! missing-predecessor counters, the ready heap, and the output
+//! [`Schedule`] with its per-node timeline and gap-index buffers. On
+//! small graphs rebuilding them per config is noise; on 10k–100k-task
+//! workflow instances the allocation and zero-fill churn of a 72-config
+//! sweep dominates everything the zero-recompute context
+//! ([`super::SchedulingContext`]) already amortized.
+//!
+//! A [`SchedulerWorkspace`] owns all four and is `clear()`-and-reused
+//! across runs: after the first configuration on an instance, every
+//! further `schedule_into` call on the same workspace performs **O(1)
+//! heap allocations** (amortized zero — buffers only grow when a larger
+//! instance arrives). The benchmark harness threads one workspace
+//! through each instance sweep, every [`crate::coordinator`] worker
+//! thread owns one across all its jobs, and the simulator's online
+//! replanner ([`crate::sim::replay`]) replans frontiers out of the same
+//! pool.
+//!
+//! Reuse is observable but never semantic: a recycled [`Schedule`] is
+//! [`Schedule::reset`] to the target shape (capacity kept, contents
+//! gone), the DAT matrix is re-zeroed, and the ready heap is rebuilt
+//! from scratch — `schedule_into` with a dirty workspace is
+//! bit-identical to `schedule_with` with none (property-tested).
+//!
+//! The process-wide [`SchedulerWorkspace::buffer_allocations`] counter
+//! records every buffer-growth event (DAT/counter/heap growth, pool
+//! miss), mirroring the context's rank/priority counters: tests assert
+//! a full 72-config sweep over one instance grows each buffer at most
+//! once.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::parametric::Entry;
+use crate::schedule::Schedule;
+
+/// Process-wide count of workspace buffer-growth events (test
+/// instrumentation; see the module docs).
+static BUFFER_ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Reusable scratch memory for the parametric scheduling loop and the
+/// online replanner. Construction is free; every buffer materializes
+/// (and is counted) on first use and is reused thereafter.
+#[derive(Debug, Default)]
+pub struct SchedulerWorkspace {
+    /// Incremental data-available-time matrix, row-major `n × m`
+    /// (re-zeroed per run).
+    pub(crate) dat: Vec<f64>,
+    /// Unplaced-predecessor counters, one per task.
+    pub(crate) missing: Vec<usize>,
+    /// The ready priority queue (emptied by every run; capacity kept).
+    pub(crate) ready: BinaryHeap<Entry>,
+    /// Recycled schedules: [`Schedule::reset`] on reuse, so timeline
+    /// and gap-index buffers survive across configs.
+    pub(crate) pool: Vec<Schedule>,
+}
+
+impl SchedulerWorkspace {
+    /// A fresh workspace with no buffers materialized.
+    pub fn new() -> Self {
+        SchedulerWorkspace::default()
+    }
+
+    /// Prepare the scratch buffers for one run over `n` tasks and `m`
+    /// nodes: DAT zeroed, counters emptied, ready heap emptied, all
+    /// sized without reallocation when capacity suffices.
+    pub(crate) fn begin(&mut self, n: usize, m: usize) {
+        if self.dat.capacity() < n * m {
+            note_alloc();
+        }
+        self.dat.clear();
+        self.dat.resize(n * m, 0.0);
+        self.begin_queue(n);
+    }
+
+    /// The queue-only subset of [`SchedulerWorkspace::begin`] — the
+    /// online replanner ([`crate::sim::replay`]) needs the counters and
+    /// the ready heap but not the DAT matrix, so it skips the
+    /// `n × m` re-zeroing.
+    pub(crate) fn begin_queue(&mut self, n: usize) {
+        if self.missing.capacity() < n {
+            note_alloc();
+            self.missing.reserve(n - self.missing.len());
+        }
+        self.missing.clear();
+        if self.ready.capacity() < n {
+            note_alloc();
+            self.ready.reserve(n - self.ready.len());
+        }
+        self.ready.clear();
+    }
+
+    /// Take a schedule shaped `(n, m)` from the pool, or allocate the
+    /// first one (counted as a buffer allocation).
+    pub(crate) fn take_schedule(&mut self, n: usize, m: usize) -> Schedule {
+        match self.pool.pop() {
+            Some(mut s) => {
+                s.reset(n, m);
+                s
+            }
+            None => {
+                note_alloc();
+                Schedule::new(n, m)
+            }
+        }
+    }
+
+    /// Return a schedule whose contents are no longer needed to the
+    /// pool, keeping its buffers for the next run.
+    pub fn recycle(&mut self, schedule: Schedule) {
+        self.pool.push(schedule);
+    }
+
+    /// Working-set proxy: total element capacity currently held by the
+    /// scratch buffers (DAT slots + counters + heap entries). Reported
+    /// by the scale benchmarks alongside task/edge counts so
+    /// `BENCH_*.json` documents are comparable across runs.
+    pub fn capacity(&self) -> usize {
+        self.dat.capacity() + self.missing.capacity() + self.ready.capacity()
+    }
+
+    /// Process-wide number of workspace buffer-growth events so far
+    /// (every DAT/counter/heap growth and every pool miss adds one).
+    pub fn buffer_allocations() -> usize {
+        BUFFER_ALLOCATIONS.load(Ordering::Relaxed)
+    }
+}
+
+fn note_alloc() {
+    BUFFER_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Assignment;
+
+    // Exact BUFFER_ALLOCATIONS deltas are pinned in
+    // rust/tests/integration_ctx.rs behind its COUNTER_GATE — the
+    // counter is process-wide, and this lib-test binary runs other
+    // workspace-creating tests concurrently, so the unit tests below
+    // assert only race-free, per-workspace properties (buffer shapes
+    // and capacities).
+
+    #[test]
+    fn begin_shapes_buffers_and_reuses_capacity() {
+        let mut ws = SchedulerWorkspace::new();
+        ws.begin(4, 3);
+        assert_eq!(ws.dat.len(), 12);
+        assert!(ws.dat.iter().all(|&x| x == 0.0));
+        assert!(ws.missing.is_empty() && ws.missing.capacity() >= 4);
+        assert!(ws.ready.is_empty() && ws.ready.capacity() >= 4);
+        // Same or smaller shape: capacities (and thus allocations) are
+        // untouched, and the DAT comes back zeroed.
+        let caps = (ws.dat.capacity(), ws.missing.capacity(), ws.ready.capacity());
+        ws.dat[5] = 7.0;
+        ws.begin(4, 3);
+        ws.begin(2, 2);
+        assert_eq!(
+            (ws.dat.capacity(), ws.missing.capacity(), ws.ready.capacity()),
+            caps,
+            "smaller/equal shapes must not regrow any buffer"
+        );
+        assert!(ws.dat.iter().all(|&x| x == 0.0), "DAT must be re-zeroed");
+    }
+
+    #[test]
+    fn schedule_pool_round_trips() {
+        let mut ws = SchedulerWorkspace::new();
+        let mut s = ws.take_schedule(2, 1);
+        s.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+        ws.recycle(s);
+        assert_eq!(ws.pool.len(), 1);
+        let s = ws.take_schedule(3, 2);
+        assert!(s.is_empty(), "recycled schedules come back blank");
+        assert_eq!(s.timeline_slice(1), &[]);
+        assert!(ws.pool.is_empty(), "take must reuse the pooled schedule");
+        ws.begin(3, 2);
+        assert!(ws.capacity() >= 3 * 2 + 3 + 3, "capacity reports held elements");
+    }
+}

@@ -43,12 +43,14 @@ pub mod perturb;
 pub mod replay;
 
 pub use perturb::{perturbed_instance, NoiseTrace, Perturbation};
-pub use replay::{replay_reschedule, replay_reschedule_with, replay_static};
+pub use replay::{
+    replay_reschedule, replay_reschedule_into, replay_reschedule_with, replay_static,
+};
 
 use crate::instance::ProblemInstance;
 use crate::ranks::RankBackend;
 use crate::schedule::Schedule;
-use crate::scheduler::{SchedulerConfig, SchedulingContext};
+use crate::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 
 /// What the executor does when reality drifts from the plan.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -166,15 +168,38 @@ pub fn simulate_against_ctx(
     cfg: &SchedulerConfig,
     policy: ReplayPolicy,
 ) -> SimOutcome {
+    let mut ws = SchedulerWorkspace::new();
+    simulate_into(ctx, eff, plan, cfg, policy, &mut ws)
+}
+
+/// [`simulate_against_ctx`] against a reusable
+/// [`SchedulerWorkspace`]: the reschedule controller replans frontiers
+/// out of the workspace pool and the losing replay of the
+/// min-with-static policy is recycled into it, so sweeps that simulate
+/// thousands of (config, trial) pairs stop churning the allocator.
+/// Callers may recycle the returned outcome's schedule too once
+/// consumed ([`crate::benchmark::Harness::run_instance_sim_ws`] does).
+pub fn simulate_into(
+    ctx: &SchedulingContext<'_>,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    policy: ReplayPolicy,
+    ws: &mut SchedulerWorkspace,
+) -> SimOutcome {
     let planned_makespan = plan.makespan();
-    let static_sched = replay_static(eff, plan);
+    let target = ws.take_schedule(eff.graph.len(), eff.network.len());
+    let static_sched = replay::replay_static_into(eff, plan, target);
     let (schedule, replans, fell_back) = match policy {
         ReplayPolicy::Static => (static_sched, 0, false),
         ReplayPolicy::Reschedule { slack } => {
-            let (resched, replans) = replay::replay_reschedule_with(ctx, eff, plan, cfg, slack);
+            let (resched, replans) =
+                replay::replay_reschedule_into(ctx, eff, plan, cfg, slack, ws);
             if resched.makespan() <= static_sched.makespan() {
+                ws.recycle(static_sched);
                 (resched, replans, false)
             } else {
+                ws.recycle(resched);
                 (static_sched, replans, true)
             }
         }

@@ -25,7 +25,6 @@
 //! fixed-seed test instances do not hit it.)
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 use super::event::{EventKind, EventQueue};
 use crate::graph::TaskId;
@@ -34,7 +33,8 @@ use crate::network::NodeId;
 use crate::ranks::RankBackend;
 use crate::schedule::{Assignment, Schedule};
 use crate::scheduler::{
-    data_available_time, Candidate, ReadyEntry, SchedulerConfig, SchedulingContext,
+    data_available_time, Candidate, ReadyEntry, SchedulerConfig, SchedulerWorkspace,
+    SchedulingContext,
 };
 
 /// Event-driven replay of `plan` on `eff`, keeping the planned
@@ -53,21 +53,44 @@ pub fn replay_static(eff: &ProblemInstance, plan: &Schedule) -> Schedule {
     replay_with_release(eff, plan, None)
 }
 
-/// [`replay_static`] with optional per-task release times: task `t` may
-/// not start before `release[t]` even if its node and data are ready.
-/// The reschedule controller uses this to pin every replanned task to
-/// the wall-clock moment its replan happened — without it, replay would
-/// let "online" decisions start work before the controller could have
-/// known to move it (hindsight bias).
+/// [`replay_static`] into a caller-supplied blank schedule, typically
+/// recycled from a [`SchedulerWorkspace`] pool ([`crate::sim::simulate_into`]).
+pub(crate) fn replay_static_into(
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    out: Schedule,
+) -> Schedule {
+    replay_with_release_into(eff, plan, None, out)
+}
+
 fn replay_with_release(
     eff: &ProblemInstance,
     plan: &Schedule,
     release: Option<&[f64]>,
 ) -> Schedule {
+    let out = Schedule::new(eff.graph.len(), eff.network.len());
+    replay_with_release_into(eff, plan, release, out)
+}
+
+/// [`replay_static`] with optional per-task release times: task `t` may
+/// not start before `release[t]` even if its node and data are ready.
+/// The reschedule controller uses this to pin every replanned task to
+/// the wall-clock moment its replan happened — without it, replay would
+/// let "online" decisions start work before the controller could have
+/// known to move it (hindsight bias). `out` must arrive empty and
+/// shaped `(|T|, |V|)` — the reschedule loop feeds recycled
+/// [`SchedulerWorkspace`] schedules through here so repeated replays
+/// reuse one set of timeline buffers.
+fn replay_with_release_into(
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    release: Option<&[f64]>,
+    mut out: Schedule,
+) -> Schedule {
     let g = &eff.graph;
     let net = &eff.network;
     let n = g.len();
-    let mut out = Schedule::new(n, net.len());
+    debug_assert!(out.is_empty(), "replay target must be blank");
     if n == 0 {
         return out;
     }
@@ -195,6 +218,7 @@ fn replay_with_release(
 /// replan estimates with *nominal* costs — it does not see future
 /// noise. Sufferage selection is not replayed online (the greedy core
 /// of the policy is); critical-path pinning is honored.
+#[allow(clippy::too_many_arguments)]
 fn replan(
     inst: &ProblemInstance,
     committed: &[bool],
@@ -203,30 +227,32 @@ fn replan(
     cfg: &SchedulerConfig,
     prio: &[f64],
     pinned: &[Option<NodeId>],
+    ws: &mut SchedulerWorkspace,
 ) -> Schedule {
     let g = &inst.graph;
     let net = &inst.network;
     let n = g.len();
-    let mut plan = Schedule::new(n, net.len());
+    let mut plan = ws.take_schedule(n, net.len());
     for t in 0..n {
         if committed[t] {
             plan.insert(*actual.assignment(t).unwrap());
         }
     }
 
-    let mut missing: Vec<usize> = (0..n)
-        .map(|t| {
-            if committed[t] {
-                0
-            } else {
-                g.predecessors(t).iter().filter(|&&(p, _)| !committed[p]).count()
-            }
-        })
-        .collect();
-    let mut ready: BinaryHeap<ReadyEntry> = (0..n)
-        .filter(|&t| !committed[t] && missing[t] == 0)
-        .map(|t| ReadyEntry(prio[t], Reverse(t)))
-        .collect();
+    ws.begin_queue(n);
+    let SchedulerWorkspace { missing, ready, .. } = ws;
+    missing.extend((0..n).map(|t| {
+        if committed[t] {
+            0
+        } else {
+            g.predecessors(t).iter().filter(|&&(p, _)| !committed[p]).count()
+        }
+    }));
+    ready.extend(
+        (0..n)
+            .filter(|&t| !committed[t] && missing[t] == 0)
+            .map(|t| ReadyEntry(prio[t], Reverse(t))),
+    );
 
     while let Some(ReadyEntry(_, Reverse(t))) = ready.pop() {
         let candidate = |u: NodeId| -> Candidate {
@@ -284,15 +310,34 @@ pub fn replay_reschedule(
 /// [`SchedulingContext`]: the replanner's nominal priorities and
 /// critical-path pins come from the context, so a sweep's online
 /// policies reuse the same once-per-instance rank computation as its
-/// planners. The context stays untouched until the first slack
-/// violation — zero/low-noise trials never trigger the rank DP, exactly
-/// like the lazy per-call path this replaces.
+/// planners. Builds a private throwaway [`SchedulerWorkspace`]; sweeps
+/// should use [`replay_reschedule_into`] and share one per thread.
 pub fn replay_reschedule_with(
     ctx: &SchedulingContext<'_>,
     eff: &ProblemInstance,
     plan: &Schedule,
     cfg: &SchedulerConfig,
     slack: f64,
+) -> (Schedule, usize) {
+    let mut ws = SchedulerWorkspace::new();
+    replay_reschedule_into(ctx, eff, plan, cfg, slack, &mut ws)
+}
+
+/// [`replay_reschedule_with`] against a reusable [`SchedulerWorkspace`]:
+/// every intermediate schedule of the monitor loop — the per-iteration
+/// replays, the superseded plans, and the replanner's own scratch
+/// queues — cycles through the workspace pool, so a sweep's reschedule
+/// trials stop churning the allocator. The context stays untouched
+/// until the first slack violation — zero/low-noise trials never
+/// trigger the rank DP, exactly like the lazy per-call path this
+/// replaces.
+pub fn replay_reschedule_into(
+    ctx: &SchedulingContext<'_>,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    slack: f64,
+    ws: &mut SchedulerWorkspace,
 ) -> (Schedule, usize) {
     let inst = ctx.instance();
     let n = inst.graph.len();
@@ -317,7 +362,8 @@ pub fn replay_reschedule_with(
     let mut frontier = 0.0f64;
     let mut replans = 0usize;
     loop {
-        let actual = replay_with_release(eff, &current, Some(&release));
+        let target = ws.take_schedule(n, eff.network.len());
+        let actual = replay_with_release_into(eff, &current, Some(&release), target);
         if replans >= n {
             return (actual, replans);
         }
@@ -355,7 +401,9 @@ pub fn replay_reschedule_with(
                 vec![None; n]
             }
         });
-        current = replan(inst, &committed, &actual, now, cfg, prio, pinned);
+        let next = replan(inst, &committed, &actual, now, cfg, prio, pinned, ws);
+        ws.recycle(std::mem::replace(&mut current, next));
+        ws.recycle(actual); // this iteration's replay, fully consumed
         for t in 0..n {
             if !committed[t] {
                 release[t] = release[t].max(now);

@@ -139,6 +139,70 @@ fn schedule_with_gantt_metrics_lookahead() {
 }
 
 #[test]
+fn trace_max_tasks_guard_refuses_oversized_corpora() {
+    // diamond.yaml has 4 tasks: a bound of 2 must refuse fast with a
+    // clear message (before any scheduling), and a generous bound must
+    // proceed normally.
+    let out = ptgs()
+        .args([
+            "trace",
+            "--input",
+            "rust/tests/data/traces/diamond.yaml",
+            "--max-tasks",
+            "2",
+            "--schedulers",
+            "HEFT",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "bound of 2 must refuse a 4-task trace");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--max-tasks bound of 2"), "stderr: {err}");
+    assert!(err.contains("4 tasks"), "stderr: {err}");
+
+    let out = ptgs()
+        .args([
+            "trace",
+            "--input",
+            "rust/tests/data/traces/diamond.yaml",
+            "--max-tasks",
+            "100000",
+            "--schedulers",
+            "HEFT",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("zero-noise replay: exact"), "stdout: {text}");
+
+    let out = ptgs()
+        .args([
+            "trace",
+            "--input",
+            "rust/tests/data/traces/diamond.yaml",
+            "--max-tasks",
+            "not-a-number",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("invalid --max-tasks"));
+}
+
+#[test]
+fn schedule_layered_structure_from_cli() {
+    let out = ptgs()
+        .args(["schedule", "--scheduler", "HEFT", "--structure", "layered", "--count", "1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tasks: 200"), "layered default is 200 tasks: {text}");
+    assert!(text.contains("makespan:"));
+}
+
+#[test]
 fn rank_native_prints_critical_path() {
     let out = ptgs()
         .args(["rank", "--structure", "cycles", "--ccr", "1"])

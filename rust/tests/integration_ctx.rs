@@ -14,7 +14,7 @@ use std::sync::Mutex;
 use ptgs::benchmark::{Harness, SimSweep};
 use ptgs::datasets::{DatasetSpec, Structure};
 use ptgs::instance::ProblemInstance;
-use ptgs::scheduler::{SchedulerConfig, SchedulingContext};
+use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 use ptgs::sim::{Perturbation, ReplayPolicy};
 
 static COUNTER_GATE: Mutex<()> = Mutex::new(());
@@ -78,6 +78,65 @@ fn sim_sweep_with_rescheduling_shares_the_context() {
         delta <= instances.len(),
         "sim sweep recomputed ranks {delta} times for {} instances",
         instances.len()
+    );
+}
+
+/// The workspace counterpart of the rank-computation contract: a full
+/// 72-config sweep over one instance grows each scheduler scratch
+/// buffer **at most once** — one DAT matrix, one counter vector, one
+/// ready heap, one pooled schedule — and a warmed workspace serves a
+/// second full sweep with zero buffer growth. This is what makes the
+/// coordinator's one-workspace-per-worker-thread reuse O(1) allocations
+/// per config.
+#[test]
+fn full_sweep_grows_each_workspace_buffer_at_most_once() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let inst = instances(1).pop().unwrap();
+    let h = Harness::all_schedulers();
+
+    let mut ws = SchedulerWorkspace::new();
+    let before = SchedulerWorkspace::buffer_allocations();
+    let records = h.run_instance_ws("d", 0, &inst, &mut ws);
+    assert_eq!(records.len(), 72);
+    let cold = SchedulerWorkspace::buffer_allocations() - before;
+    assert_eq!(
+        cold, 4,
+        "cold sweep grows exactly the four workspace buffers (dat, missing, ready, schedule)"
+    );
+
+    let before = SchedulerWorkspace::buffer_allocations();
+    let again = h.run_instance_ws("d", 0, &inst, &mut ws);
+    assert_eq!(again.len(), 72);
+    assert_eq!(
+        SchedulerWorkspace::buffer_allocations() - before,
+        0,
+        "a warmed workspace must serve a full 72-config sweep with zero buffer growth"
+    );
+    for (a, b) in records.iter().zip(&again) {
+        assert_eq!(a.makespan, b.makespan, "reuse must not change results");
+    }
+}
+
+/// Workspace reuse across *instances of different shapes* stays within
+/// the grow-only contract: once every shape has been seen, re-sweeping
+/// the whole set triggers no further buffer growth.
+#[test]
+fn workspace_growth_is_monotone_across_instance_shapes() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let h = Harness::all_schedulers();
+    let insts = instances(3);
+    let mut ws = SchedulerWorkspace::new();
+    for (i, inst) in insts.iter().enumerate() {
+        let _ = h.run_instance_ws("d", i, inst, &mut ws);
+    }
+    let before = SchedulerWorkspace::buffer_allocations();
+    for (i, inst) in insts.iter().enumerate() {
+        let _ = h.run_instance_ws("d", i, inst, &mut ws);
+    }
+    assert_eq!(
+        SchedulerWorkspace::buffer_allocations() - before,
+        0,
+        "no growth once every shape has been served"
     );
 }
 

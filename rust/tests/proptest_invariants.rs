@@ -12,7 +12,7 @@ use ptgs::ranks::{native, RankBackend};
 use ptgs::schedule::EPS;
 use ptgs::scheduler::{
     data_available_time, window_append_only, window_insertion, window_insertion_indexed,
-    SchedulerConfig, SchedulingContext,
+    SchedulerConfig, SchedulerWorkspace, SchedulingContext,
 };
 use ptgs::sim::{
     perturbed_instance, simulate, NoiseTrace, Perturbation, ReplayPolicy, SimOptions,
@@ -77,6 +77,9 @@ fn prop_all_configs_always_valid() {
 #[test]
 fn prop_ctx_schedule_equals_reference_all_72() {
     let configs = SchedulerConfig::all();
+    // One workspace reused (dirty) across every case and config: buffer
+    // recycling must never leak state into results.
+    let mut ws = SchedulerWorkspace::new();
     for case in 0..12u64 {
         let mut rng = Rng::seeded(0xC7C7 + case);
         let inst = arbitrary_instance(&mut rng);
@@ -97,7 +100,77 @@ fn prop_ctx_schedule_equals_reference_all_72() {
                 "seed {case}: {} one-shot schedule drifted from the reference",
                 cfg.name()
             );
+            let reused = s.schedule_into(&ctx, &mut ws);
+            assert_eq!(
+                reused,
+                reference,
+                "seed {case}: {} dirty-workspace schedule drifted from the reference",
+                cfg.name()
+            );
+            ws.recycle(reused);
         }
+    }
+}
+
+/// **CSR layout invariant**: `successors()` / `predecessors()` over the
+/// frozen flat-array mirror enumerate exactly the inserted edge
+/// multiset, ascending by neighbor id, for any insertion order and any
+/// interleaving of queries (freezes) with further mutation. This is
+/// what licenses flattening the adjacency storage without touching any
+/// consumer: the golden snapshots stay byte-identical because the
+/// enumeration is provably unchanged.
+#[test]
+fn prop_csr_adjacency_matches_edge_semantics() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(0xC5A0 + case);
+        let n = rng.uniform_int(1, 40) as usize;
+        let mut g = TaskGraph::new();
+        for i in 0..n {
+            g.add_task(format!("t{i}"), rng.uniform_in(0.01, 2.0));
+        }
+        // Random forward-edge set, inserted in shuffled order.
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.uniform() < 0.3 {
+                    pairs.push((i, j));
+                }
+            }
+        }
+        for k in (1..pairs.len()).rev() {
+            let j = rng.uniform_int(0, k as u64) as usize;
+            pairs.swap(k, j);
+        }
+        let mut expect_succ = vec![std::collections::BTreeMap::new(); n];
+        let mut expect_pred = vec![std::collections::BTreeMap::new(); n];
+        for (idx, &(i, j)) in pairs.iter().enumerate() {
+            let w = rng.uniform_in(0.01, 3.0);
+            g.add_edge(i, j, w);
+            expect_succ[i].insert(j, w);
+            expect_pred[j].insert(i, w);
+            if idx % 5 == 0 {
+                // Interleaved query: freezes the CSR mid-construction;
+                // the next mutation must invalidate it.
+                assert_eq!(g.successors(i).len(), expect_succ[i].len());
+            }
+        }
+        for t in 0..n {
+            let want: Vec<(usize, f64)> =
+                expect_succ[t].iter().map(|(&d, &w)| (d, w)).collect();
+            assert_eq!(g.successors(t), want.as_slice(), "seed {case}: succ of {t}");
+            let want: Vec<(usize, f64)> =
+                expect_pred[t].iter().map(|(&p, &w)| (p, w)).collect();
+            assert_eq!(g.predecessors(t), want.as_slice(), "seed {case}: pred of {t}");
+            for &(d, w) in g.successors(t) {
+                assert_eq!(g.edge(t, d), Some(w));
+            }
+        }
+        let mut flat: Vec<(usize, usize)> = g.edges().map(|(s, d, _)| (s, d)).collect();
+        let mut inserted = pairs.clone();
+        flat.sort_unstable();
+        inserted.sort_unstable();
+        assert_eq!(flat, inserted, "seed {case}: edges() must cover the edge set");
+        assert!(g.validate().is_ok(), "seed {case}");
     }
 }
 
