@@ -32,7 +32,7 @@ fn main() {
 
     let coord = Coordinator {
         options: CoordinatorOptions {
-            harness: HarnessOptions { validate: true, timing_repeats: 3 },
+            harness: HarnessOptions { validate: true, timing_repeats: 3, fused: false },
             ..Default::default()
         },
         ..Coordinator::all_schedulers()

@@ -65,7 +65,7 @@ fn main() {
     for repeats in [1usize, 3, 5] {
         let coord = Coordinator {
             options: CoordinatorOptions {
-                harness: HarnessOptions { validate: false, timing_repeats: repeats },
+                harness: HarnessOptions { validate: false, timing_repeats: repeats, fused: true },
                 ..Default::default()
             },
             ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
@@ -79,7 +79,7 @@ fn main() {
     for validate in [false, true] {
         let coord = Coordinator {
             options: CoordinatorOptions {
-                harness: HarnessOptions { validate, timing_repeats: 1 },
+                harness: HarnessOptions { validate, timing_repeats: 1, fused: true },
                 ..Default::default()
             },
             ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])

@@ -32,7 +32,7 @@ use ptgs::datasets::layered::layered_instance;
 use ptgs::graph::TaskId;
 use ptgs::instance::ProblemInstance;
 use ptgs::ranks::RankBackend;
-use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
+use ptgs::scheduler::{fused_sweep, SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 use ptgs::util::Value;
 
 const SEED: u64 = 0x5CA1_AB1E;
@@ -76,19 +76,31 @@ fn main() {
     let configs = per_priority_configs();
 
     // 1. Bit-exactness gate on the small size: never publish scaling
-    // numbers for a core that computes something different.
+    // numbers for a core that computes something different. Covers the
+    // shared-context core *and* the fused lockstep engine.
     {
         let inst = layered_instance(SEED, 1000);
         let ctx = SchedulingContext::new(&inst, RankBackend::Native);
         let mut ws = SchedulerWorkspace::new();
-        for cfg in SchedulerConfig::all() {
+        let outcome = fused_sweep(&ctx, &SchedulerConfig::ALL, &mut ws);
+        let map = outcome.group_of();
+        for (i, cfg) in SchedulerConfig::ALL.iter().enumerate() {
             let s = cfg.build();
             let got = s.schedule_into(&ctx, &mut ws);
             let want = s.schedule_reference(&inst);
             assert_eq!(got, want, "{} drifted from the reference core at n=1000", cfg.name());
+            assert_eq!(
+                outcome.groups[map[i]].schedule,
+                want,
+                "{} fused schedule drifted at n=1000",
+                cfg.name()
+            );
             ws.recycle(got);
         }
-        println!("scale: all 72 configs bit-identical to the reference core at n=1000");
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+        println!("scale: all 72 configs (shared-ctx + fused) bit-identical to the reference at n=1000");
     }
 
     let mut b = Bencher::from_env().with_config(Config {
@@ -140,6 +152,41 @@ fn main() {
         });
     }
 
+    // 3b. Fused 72-config sweep at scale: the whole cube through the
+    // lockstep engine on wide layered DAGs. Fast mode stops at 10k
+    // (the 100k × 72 sweep holds one schedule per terminal group —
+    // fine in full runs, too heavy for CI smoke budgets).
+    let fused_sizes: &[usize] = if fast { &[10_000] } else { &[10_000, 100_000] };
+    let mut fused_stats: Vec<Value> = Vec::new();
+    for &n in fused_sizes {
+        let inst = layered_instance(SEED, n);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        for cfg in SchedulerConfig::ALL.iter() {
+            ctx.warm_for(cfg);
+        }
+        inst.graph.freeze();
+        b.bench(&format!("scale/fused72/n{n}"), || {
+            let outcome = fused_sweep(black_box(&ctx), &SchedulerConfig::ALL, &mut ws);
+            for grp in outcome.groups {
+                ws.recycle(black_box(grp.schedule));
+            }
+        });
+        let outcome = fused_sweep(&ctx, &SchedulerConfig::ALL, &mut ws);
+        println!(
+            "scale/fused72/n{n}: {} terminal groups, {} forks, {} window scans",
+            outcome.stats.final_groups, outcome.stats.fork_events, outcome.stats.window_scans
+        );
+        fused_stats.push(Value::obj(vec![
+            ("n", Value::Num(n as f64)),
+            ("terminal_groups", Value::Num(outcome.stats.final_groups as f64)),
+            ("fork_events", Value::Num(outcome.stats.fork_events as f64)),
+            ("window_scans", Value::Num(outcome.stats.window_scans as f64)),
+        ]));
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+    }
+
     // 4. 100k completion pass (all modes): one plan per priority
     // function, validated, with tasks-scheduled/sec.
     let inst = layered_instance(SEED, COMPLETION_TASKS);
@@ -186,6 +233,7 @@ fn main() {
     let mut doc = benchlib::measurements_json_with_workload(&b.results, &workload);
     if let Value::Obj(fields) = &mut doc {
         fields.push(("completion".to_string(), Value::Arr(completion)));
+        fields.push(("fused".to_string(), Value::Arr(fused_stats)));
         let n_ref = *reference_sizes.last().expect("non-empty");
         if let (Some(reference), Some(shared)) = (
             find(format!("scale/reference/n{n_ref}")),

@@ -1,15 +1,18 @@
-//! End-to-end 72-config sweep benchmark: the zero-recompute shared-
-//! context core ([`SchedulingContext`] + incremental DAT + gap-indexed
-//! timelines) against the pre-refactor per-call reference
-//! (`schedule_reference`), plus the full harness record path.
+//! End-to-end 72-config sweep benchmark: the fused lockstep engine
+//! (`fused_sweep`) against the zero-recompute shared-context core
+//! ([`SchedulingContext`] + incremental DAT + gap-indexed timelines)
+//! and the pre-refactor per-call reference (`schedule_reference`), plus
+//! the full harness record path.
 //!
-//! Before timing anything the two cores are asserted bit-identical on
-//! every (instance, config) pair — the speedup below is only meaningful
-//! because the outputs are exactly equal.
+//! Before timing anything the three cores are asserted bit-identical on
+//! every (instance, config) pair — the speedups below are only
+//! meaningful because the outputs are exactly equal.
 //!
 //! Emits machine-readable `BENCH_sweep.json` (override the path with
-//! `PTGS_BENCH_OUT`) including the measured `speedup_vs_reference`, so
-//! CI can record the repo's perf trajectory on every run
+//! `PTGS_BENCH_OUT`) including the measured `speedup_vs_reference`,
+//! `speedup_vs_shared_ctx` (fused vs the shared-ctx + workspace core),
+//! the fused engine's shared-window-scan ratio and fork counts, so CI
+//! can record the repo's perf trajectory on every run
 //! (`PTGS_BENCH_FAST=1 cargo bench --bench bench_sweep`).
 
 use std::hint::black_box;
@@ -21,7 +24,7 @@ use ptgs::benchmark::Harness;
 use ptgs::datasets::{DatasetSpec, Structure};
 use ptgs::instance::ProblemInstance;
 use ptgs::ranks::RankBackend;
-use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
+use ptgs::scheduler::{fused, fused_sweep, SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 use ptgs::util::Value;
 
 fn sweep_instances(count: usize) -> Vec<ProblemInstance> {
@@ -39,22 +42,40 @@ fn main() {
         warmup: Duration::from_millis(100),
     });
     let instances = sweep_instances(count);
-    let configs = SchedulerConfig::all();
+    let configs = SchedulerConfig::ALL;
 
     // Bit-exactness gate: never publish a speedup over a baseline that
-    // computes something different.
-    for inst in &instances {
-        let ctx = SchedulingContext::new(inst, RankBackend::Native);
-        for cfg in &configs {
-            let s = cfg.build();
-            assert_eq!(
-                s.schedule_with(&ctx),
-                s.schedule_reference(inst),
-                "{} drifted from the reference core on {}",
-                cfg.name(),
-                inst.name
-            );
+    // computes something different. The fused engine is held to the
+    // same standard as the shared-context core, on every instance.
+    {
+        let mut ws = SchedulerWorkspace::new();
+        for inst in &instances {
+            let ctx = SchedulingContext::new(inst, RankBackend::Native);
+            let outcome = fused_sweep(&ctx, &configs, &mut ws);
+            let map = outcome.group_of();
+            for (i, cfg) in configs.iter().enumerate() {
+                let s = cfg.build();
+                let reference = s.schedule_reference(inst);
+                assert_eq!(
+                    s.schedule_with(&ctx),
+                    reference,
+                    "{} drifted from the reference core on {}",
+                    cfg.name(),
+                    inst.name
+                );
+                assert_eq!(
+                    outcome.groups[map[i]].schedule,
+                    reference,
+                    "{} fused schedule drifted from the reference core on {}",
+                    cfg.name(),
+                    inst.name
+                );
+            }
+            for grp in outcome.groups {
+                ws.recycle(grp.schedule);
+            }
         }
+        println!("sweep72: fused + shared-ctx cores bit-identical to the reference");
     }
 
     // The pre-refactor core: ranks, priorities, pins, DATs and timeline
@@ -78,7 +99,7 @@ fn main() {
     });
 
     // Shared context + one reused SchedulerWorkspace: the full
-    // zero-recompute, zero-allocation sweep core.
+    // zero-recompute, zero-allocation per-config sweep core.
     let mut ws = SchedulerWorkspace::new();
     b.bench("sweep72/shared_ctx_workspace", || {
         for inst in &instances {
@@ -90,7 +111,20 @@ fn main() {
         }
     });
 
-    // The full harness path (validation + timing + records) end to end.
+    // The fused lockstep engine: one grouped sweep per instance, window
+    // scans shared across configs until decisions diverge.
+    b.bench("sweep72/fused", || {
+        for inst in &instances {
+            let ctx = SchedulingContext::new(inst, RankBackend::Native);
+            let outcome = fused_sweep(black_box(&ctx), &configs, &mut ws);
+            for grp in outcome.groups {
+                ws.recycle(black_box(grp.schedule));
+            }
+        }
+    });
+
+    // The full harness path (validation + timing + records) end to end
+    // — runs the fused engine by default.
     let h = Harness::all_schedulers();
     b.bench("sweep72/harness_records", || {
         for (i, inst) in instances.iter().enumerate() {
@@ -98,19 +132,52 @@ fn main() {
         }
     });
 
-    // Record the sweep speedup (min over samples — the stable
+    // Sharing statistics, measured outside the timed region: per-config
+    // window scans vs fused window scans, fork events, terminal groups.
+    let mut per_config_scans = 0u64;
+    let mut fused_scans = 0u64;
+    let mut fused_forks = 0u64;
+    let mut fused_groups = 0usize;
+    for inst in &instances {
+        let ctx = SchedulingContext::new(inst, RankBackend::Native);
+        let before = fused::window_scans();
+        for cfg in &configs {
+            let s = cfg.build().schedule_into(&ctx, &mut ws);
+            ws.recycle(s);
+        }
+        per_config_scans += fused::window_scans() - before;
+        let outcome = fused_sweep(&ctx, &configs, &mut ws);
+        fused_scans += outcome.stats.window_scans;
+        fused_forks += outcome.stats.fork_events;
+        fused_groups += outcome.stats.final_groups;
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+    }
+    let scan_ratio = per_config_scans as f64 / fused_scans.max(1) as f64;
+    println!(
+        "sweep72: fused shared-scan ratio {scan_ratio:.2}x ({per_config_scans} per-config vs \
+         {fused_scans} fused scans), {fused_forks} forks, {fused_groups} terminal groups"
+    );
+
+    // Record the sweep speedups (min over samples — the stable
     // estimator) in BENCH_sweep.json for the perf trajectory. Only
-    // write when both cores were actually measured, so a filtered run
+    // write when the cores were actually measured, so a filtered run
     // (`cargo bench -- harness`) never clobbers a real measurement
     // file with a partial document.
     let find = |name: &str| b.results.iter().find(|m| m.name == name);
-    let (Some(reference), Some(shared)) =
-        (find("sweep72/reference_per_call"), find("sweep72/shared_ctx"))
-    else {
+    let (Some(reference), Some(shared), Some(shared_ws), Some(fused_leg)) = (
+        find("sweep72/reference_per_call"),
+        find("sweep72/shared_ctx"),
+        find("sweep72/shared_ctx_workspace"),
+        find("sweep72/fused"),
+    ) else {
         return;
     };
     let speedup = reference.min.as_secs_f64() / shared.min.as_secs_f64();
+    let fused_speedup = shared_ws.min.as_secs_f64() / fused_leg.min.as_secs_f64();
     println!("sweep72: shared-ctx speedup vs reference core: {speedup:.2}x");
+    println!("sweep72: fused speedup vs shared-ctx+workspace core: {fused_speedup:.2}x");
     // Working-set proxies make the document comparable with
     // BENCH_scale.json and across runs of different instance budgets.
     let workload = Workload {
@@ -122,6 +189,18 @@ fn main() {
     let mut doc = benchlib::measurements_json_with_workload(&b.results, &workload);
     if let Value::Obj(fields) = &mut doc {
         fields.push(("speedup_vs_reference".to_string(), Value::Num(speedup)));
+        fields.push(("speedup_vs_shared_ctx".to_string(), Value::Num(fused_speedup)));
+        fields.push((
+            "fused".to_string(),
+            Value::obj(vec![
+                ("shared_scan_ratio", Value::Num(scan_ratio)),
+                ("window_scans", Value::Num(fused_scans as f64)),
+                ("per_config_window_scans", Value::Num(per_config_scans as f64)),
+                ("fork_events", Value::Num(fused_forks as f64)),
+                ("terminal_groups", Value::Num(fused_groups as f64)),
+                ("instances", Value::Num(instances.len() as f64)),
+            ]),
+        ));
     }
     let out = std::env::var("PTGS_BENCH_OUT")
         .unwrap_or_else(|_| "results/BENCH_sweep.json".to_string());

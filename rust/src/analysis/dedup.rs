@@ -1,0 +1,203 @@
+//! Distinct-schedule dedup: how many of the 72 configurations actually
+//! produce *different* schedules on each instance?
+//!
+//! This is the paper's "which components matter" question asked at the
+//! schedule level instead of the makespan level: two configs whose
+//! component choices never change a single placement decision are
+//! indistinguishable on that instance. The fused sweep engine
+//! ([`crate::scheduler::fused`]) makes the signal nearly free — every
+//! [`Record`] carries its schedule's content hash
+//! ([`crate::schedule::Schedule::content_hash`]), computed once per
+//! terminal lockstep group — so the report is a pure aggregation.
+//!
+//! Note the hash classes can be *finer-grained makespan-equal but
+//! schedule-distinct*: two configs may reach the same makespan through
+//! different placements, and conversely never produce hash collisions
+//! for schedules the deterministic core actually emits (see
+//! `content_hash`'s docs).
+
+use std::path::Path;
+
+use super::render::{ascii_table, write_csv};
+use crate::benchmark::Record;
+
+/// Distinct-schedule summary for one (dataset, instance) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DedupRow {
+    pub dataset: String,
+    pub instance: usize,
+    /// Records that carried a schedule hash (all of them, on documents
+    /// produced by the current harness).
+    pub total: usize,
+    /// Number of distinct schedules across those records.
+    pub distinct_schedules: usize,
+    /// Equivalence classes of scheduler names, largest first (ties by
+    /// first appearance); within a class, record order.
+    pub classes: Vec<Vec<String>>,
+}
+
+/// Group records by (dataset, instance) and bucket each group's
+/// schedulers by schedule hash. Records without a hash (documents
+/// predating the field) are skipped. Rows come back sorted by
+/// (dataset, instance); instances whose records all lack hashes are
+/// omitted. Single pass over a stable sort (O(records · log records)),
+/// so reproduce-scale documents (144k records) aggregate instantly.
+pub fn dedup_rows(records: &[Record]) -> Vec<DedupRow> {
+    let mut hashed: Vec<&Record> =
+        records.iter().filter(|r| r.schedule_hash.is_some()).collect();
+    // Stable sort: within one (dataset, instance) group, records keep
+    // their original order, preserving first-appearance class order.
+    hashed.sort_by(|a, b| {
+        (a.dataset.as_str(), a.instance).cmp(&(b.dataset.as_str(), b.instance))
+    });
+
+    let mut rows = Vec::new();
+    let mut group = hashed.as_slice();
+    while let Some(first) = group.first() {
+        let len = group
+            .iter()
+            .take_while(|r| r.dataset == first.dataset && r.instance == first.instance)
+            .count();
+        let (this, rest) = group.split_at(len);
+        group = rest;
+
+        // Bucket by hash, preserving first-appearance order.
+        let mut buckets: Vec<(u64, Vec<String>)> = Vec::new();
+        for r in this {
+            let h = r.schedule_hash.expect("filtered to hashed records");
+            match buckets.iter_mut().find(|(bh, _)| *bh == h) {
+                Some((_, names)) => names.push(r.scheduler.clone()),
+                None => buckets.push((h, vec![r.scheduler.clone()])),
+            }
+        }
+        let distinct = buckets.len();
+        let mut classes: Vec<Vec<String>> =
+            buckets.into_iter().map(|(_, names)| names).collect();
+        // Largest class first; stable sort keeps first-appearance
+        // order among equal sizes.
+        classes.sort_by_key(|c| std::cmp::Reverse(c.len()));
+        rows.push(DedupRow {
+            dataset: first.dataset.clone(),
+            instance: first.instance,
+            total: this.len(),
+            distinct_schedules: distinct,
+            classes,
+        });
+    }
+    rows
+}
+
+/// Render dedup rows as an aligned ASCII table (one row per instance,
+/// largest equivalence class shown by its first member).
+pub fn dedup_table(rows: &[DedupRow]) -> String {
+    let headers = ["dataset", "instance", "schedulers", "distinct", "largest_class"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let largest = r
+                .classes
+                .first()
+                .map(|c| format!("{} ×{}", c.first().map(String::as_str).unwrap_or("-"), c.len()))
+                .unwrap_or_else(|| "-".to_string());
+            vec![
+                r.dataset.clone(),
+                r.instance.to_string(),
+                r.total.to_string(),
+                r.distinct_schedules.to_string(),
+                largest,
+            ]
+        })
+        .collect();
+    ascii_table(&headers, &body)
+}
+
+/// Write dedup rows as CSV: one line per (instance, class), so the full
+/// equivalence structure is machine-readable.
+pub fn write_dedup_csv(path: &Path, rows: &[DedupRow]) -> std::io::Result<()> {
+    let headers = ["dataset", "instance", "distinct", "class", "class_size", "schedulers"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .flat_map(|r| {
+            r.classes.iter().enumerate().map(move |(ci, class)| {
+                vec![
+                    r.dataset.clone(),
+                    r.instance.to_string(),
+                    r.distinct_schedules.to_string(),
+                    ci.to_string(),
+                    class.len().to_string(),
+                    class.join("|"),
+                ]
+            })
+        })
+        .collect();
+    write_csv(path, &headers, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(dataset: &str, instance: usize, scheduler: &str, hash: Option<u64>) -> Record {
+        Record {
+            scheduler: scheduler.into(),
+            dataset: dataset.into(),
+            instance,
+            makespan: 1.0,
+            runtime_ns: 1,
+            num_tasks: 3,
+            num_nodes: 2,
+            schedule_hash: hash,
+            fused_timing: false,
+        }
+    }
+
+    #[test]
+    fn groups_by_hash_within_instance() {
+        let records = vec![
+            rec("d", 0, "A", Some(7)),
+            rec("d", 0, "B", Some(9)),
+            rec("d", 0, "C", Some(7)),
+            rec("d", 1, "A", Some(7)),
+            rec("e", 0, "A", Some(1)),
+        ];
+        let rows = dedup_rows(&records);
+        assert_eq!(rows.len(), 3);
+        let r = &rows[0];
+        assert_eq!((r.dataset.as_str(), r.instance), ("d", 0));
+        assert_eq!(r.total, 3);
+        assert_eq!(r.distinct_schedules, 2);
+        assert_eq!(r.classes, vec![vec!["A".to_string(), "C".to_string()], vec!["B".to_string()]]);
+        assert_eq!(rows[1].distinct_schedules, 1);
+        assert_eq!(rows[2].dataset, "e");
+    }
+
+    #[test]
+    fn hashless_records_are_skipped() {
+        let records = vec![rec("d", 0, "A", None), rec("d", 0, "B", Some(2))];
+        let rows = dedup_rows(&records);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].total, 1);
+        assert_eq!(rows[0].distinct_schedules, 1);
+        assert!(dedup_rows(&[rec("d", 0, "A", None)]).is_empty());
+    }
+
+    #[test]
+    fn table_and_csv_render() {
+        let records = vec![
+            rec("d", 0, "HEFT", Some(7)),
+            rec("d", 0, "MCT", Some(7)),
+            rec("d", 0, "MET", Some(3)),
+        ];
+        let rows = dedup_rows(&records);
+        let table = dedup_table(&rows);
+        assert!(table.contains("HEFT ×2"), "{table}");
+        let dir = std::env::temp_dir().join("ptgs_dedup_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("dedup.csv");
+        write_dedup_csv(&csv, &rows).unwrap();
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.contains("HEFT|MCT"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

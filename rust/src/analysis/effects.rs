@@ -203,6 +203,8 @@ mod tests {
             runtime_ns: 1,
             num_tasks: 1,
             num_nodes: 1,
+            schedule_hash: None,
+            fused_timing: false,
         });
         // Must not panic; unknown scheduler is simply excluded.
         let _ = effect(&results, Component::Compare, None);

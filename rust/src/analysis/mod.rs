@@ -2,6 +2,7 @@
 //! figure of the paper's evaluation section (see DESIGN.md §4).
 
 pub mod adversarial;
+pub mod dedup;
 pub mod effects;
 pub mod interactions;
 pub mod pareto;
@@ -10,6 +11,7 @@ pub mod report;
 pub mod robustness;
 
 pub use adversarial::{adversarial_search, AdversarialOptions, AdversarialResult};
+pub use dedup::{dedup_rows, dedup_table, write_dedup_csv, DedupRow};
 pub use effects::{effect, Component, EffectRow};
 pub use report::write_report;
 pub use robustness::{

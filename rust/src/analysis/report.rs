@@ -41,6 +41,21 @@ pub fn write_report(
         ));
     }
 
+    // Distinct-schedule dedup: the component-relevance question at the
+    // schedule level. Only present when records carry schedule hashes
+    // (every harness-produced document does).
+    let dedup = super::dedup_rows(&results.records);
+    if !dedup.is_empty() {
+        super::write_dedup_csv(&out_dir.join("dedup.csv"), &dedup)?;
+        let distinct: usize = dedup.iter().map(|r| r.distinct_schedules).sum();
+        let total: usize = dedup.iter().map(|r| r.total).sum();
+        md.push_str(&format!(
+            "## dedup — distinct schedules per instance ({distinct} distinct of {total} \
+             schedules overall)\n\n```text\n{}\n```\n\n",
+            super::dedup_table(&dedup).trim_end()
+        ));
+    }
+
     std::fs::create_dir_all(out_dir)?;
     std::fs::write(out_dir.join("REPORT.md"), &md)?;
     Ok(md)
@@ -67,6 +82,8 @@ mod tests {
         for artifact in Artifact::ALL {
             assert!(md.contains(&format!("## {}", artifact.id())), "{}", artifact.id());
         }
+        assert!(md.contains("## dedup"), "dedup section present for hashed records");
+        assert!(dir.join("dedup.csv").exists());
         assert!(md.contains("1.25 s"));
         assert!(dir.join("REPORT.md").exists());
         let _ = std::fs::remove_dir_all(dir);

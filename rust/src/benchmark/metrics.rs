@@ -165,6 +165,8 @@ mod tests {
             runtime_ns: t,
             num_tasks: 4,
             num_nodes: 2,
+            schedule_hash: None,
+            fused_timing: false,
         }
     }
 

@@ -36,15 +36,29 @@ pub struct Record {
     pub dataset: String,
     pub instance: usize,
     pub makespan: f64,
-    /// Wall-clock time to *produce* the schedule, in nanoseconds.
+    /// Wall-clock time to *produce* the schedule, in nanoseconds. Under
+    /// the fused sweep path ([`HarnessOptions::fused`]) this is the
+    /// whole sweep's wall-clock amortized equally over its configs; set
+    /// `fused: false` for paper-exact per-config runtime ratios.
     pub runtime_ns: u64,
     pub num_tasks: usize,
     pub num_nodes: usize,
+    /// Content hash of the produced schedule
+    /// ([`crate::schedule::Schedule::content_hash`]); feeds the
+    /// distinct-schedule dedup report ([`crate::analysis::dedup`]).
+    /// `None` on records loaded from documents predating the field.
+    pub schedule_hash: Option<u64>,
+    /// `true` when `runtime_ns` came from the fused sweep path
+    /// (amortized over the whole config set) rather than a per-config
+    /// timing. Persisted in the JSON document so downstream
+    /// runtime-ratio analysis can detect — and warn about — documents
+    /// whose runtime ratios are flat by construction.
+    pub fused_timing: bool,
 }
 
 impl ToJson for Record {
     fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("scheduler", Value::Str(self.scheduler.clone())),
             ("dataset", Value::Str(self.dataset.clone())),
             ("instance", Value::Num(self.instance as f64)),
@@ -52,12 +66,35 @@ impl ToJson for Record {
             ("runtime_ns", Value::Num(self.runtime_ns as f64)),
             ("num_tasks", Value::Num(self.num_tasks as f64)),
             ("num_nodes", Value::Num(self.num_nodes as f64)),
-        ])
+        ];
+        if let Some(h) = self.schedule_hash {
+            // Hex string: a u64 hash does not fit f64-backed JSON
+            // numbers losslessly.
+            fields.push(("schedule_hash", Value::Str(format!("{h:016x}"))));
+        }
+        if self.fused_timing {
+            fields.push(("fused_timing", Value::Bool(true)));
+        }
+        Value::obj(fields)
     }
 }
 
 impl FromJson for Record {
     fn from_json(v: &Value) -> Result<Self, String> {
+        let schedule_hash = match v.get("schedule_hash") {
+            None => None,
+            Some(h) => Some(
+                u64::from_str_radix(
+                    h.as_str().ok_or("field `schedule_hash` not a string")?,
+                    16,
+                )
+                .map_err(|e| format!("field `schedule_hash` not a hex u64: {e}"))?,
+            ),
+        };
+        let fused_timing = match v.get("fused_timing") {
+            None => false,
+            Some(b) => b.as_bool().ok_or("field `fused_timing` not a bool")?,
+        };
         Ok(Record {
             scheduler: v.req_str("scheduler")?.to_string(),
             dataset: v.req_str("dataset")?.to_string(),
@@ -66,6 +103,8 @@ impl FromJson for Record {
             runtime_ns: v.req_u64("runtime_ns")?,
             num_tasks: v.req_usize("num_tasks")?,
             num_nodes: v.req_usize("num_nodes")?,
+            schedule_hash,
+            fused_timing,
         })
     }
 }
@@ -80,11 +119,20 @@ pub struct HarnessOptions {
     /// *minimum* runtime — the paper itself treats runtime ratios as
     /// estimates; min-of-k suppresses scheduler-exogenous noise.
     pub timing_repeats: usize,
+    /// Run multi-config sweeps through the fused lockstep engine
+    /// ([`crate::scheduler::fused_sweep`]) — the default. Makespans and
+    /// schedules are bit-identical to the per-config path; `runtime_ns`
+    /// becomes the fused sweep's wall-clock amortized equally over its
+    /// configs (every config costs the same under lockstep sharing).
+    /// Set `false` to time each config's own `schedule_into` call —
+    /// required for paper-exact *runtime ratio* artifacts
+    /// (`ptgs benchmark`/`reproduce` do this).
+    pub fused: bool,
 }
 
 impl Default for HarnessOptions {
     fn default() -> Self {
-        HarnessOptions { validate: true, timing_repeats: 1 }
+        HarnessOptions { validate: true, timing_repeats: 1, fused: true }
     }
 }
 
@@ -150,7 +198,10 @@ impl Harness {
     /// per-thread) [`SchedulerWorkspace`]: after warm-up, the whole
     /// 72-config sweep runs out of the workspace's reused buffers —
     /// O(1) heap allocations per config instead of rebuilding every
-    /// scratch structure.
+    /// scratch structure. With [`HarnessOptions::fused`] (the default)
+    /// a multi-config sweep runs through the fused lockstep engine,
+    /// sharing one loop state and one window scan per candidate across
+    /// configs until their decisions diverge.
     pub fn run_instance_ws(
         &self,
         dataset: &str,
@@ -163,6 +214,9 @@ impl Harness {
             ctx.warm_for(cfg);
         }
         inst.graph.freeze(); // CSR built outside the timed region
+        if self.options.fused && self.schedulers.len() > 1 {
+            return self.run_instance_fused(&ctx, dataset, instance, ws);
+        }
         // Warm the workspace too: otherwise the sweep's *first* config
         // would pay every buffer growth inside its timed region while
         // the other 71 run on warm buffers — runtime ratios must treat
@@ -173,6 +227,103 @@ impl Harness {
         self.schedulers
             .iter()
             .map(|cfg| self.run_one_with(cfg, &ctx, dataset, instance, ws))
+            .collect()
+    }
+
+    /// The fused sweep path of [`Harness::run_instance_ws`]: one
+    /// [`crate::scheduler::fused_sweep`] call per timing repeat (min
+    /// total kept), schedules validated and hashed **once per terminal
+    /// group** rather than once per config, and each config's record
+    /// derived from its group's shared schedule. `runtime_ns` is the
+    /// fused total amortized equally over the configs.
+    fn run_instance_fused(
+        &self,
+        ctx: &SchedulingContext<'_>,
+        dataset: &str,
+        instance: usize,
+        ws: &mut SchedulerWorkspace,
+    ) -> Vec<Record> {
+        let inst = ctx.instance();
+        // Pre-shape the root-level pools outside the timed region (the
+        // fused engine starts from up to three lockstep groups, each
+        // with an n × m DAT matrix — the bulk of a cold workspace's
+        // growth). Fork clones beyond the roots are fork-count
+        // dependent and may still grow a cold pool inside the first
+        // timed sweep; `timing_repeats ≥ 2` (min-of-k) or a pre-warmed
+        // workspace removes that too, and runtime-*ratio* studies
+        // should use the per-config path (`fused: false`) regardless.
+        let (n, m) = (inst.graph.len(), inst.network.len());
+        let roots = self
+            .schedulers
+            .iter()
+            .map(|c| c.priority)
+            .collect::<std::collections::HashSet<_>>()
+            .len();
+        let mut warm_scratch = Vec::with_capacity(roots);
+        let mut warm_scheds = Vec::with_capacity(roots);
+        for _ in 0..roots {
+            let mut scratch = ws.take_group_scratch();
+            // Shape only pools that would actually grow: on a warm
+            // workspace this is a no-op rather than roots × n × m of
+            // redundant zeroing per instance.
+            if scratch.would_grow(n, m) {
+                scratch.begin(n, m);
+            }
+            warm_scratch.push(scratch);
+            warm_scheds.push(ws.take_schedule(n, m));
+        }
+        for scratch in warm_scratch {
+            ws.recycle_group_scratch(scratch);
+        }
+        for sched in warm_scheds {
+            ws.recycle(sched);
+        }
+
+        let mut best_ns = u64::MAX;
+        let mut outcome = None;
+        for _ in 0..self.options.timing_repeats.max(1) {
+            if let Some(prev) = outcome.take() {
+                recycle_outcome(ws, prev);
+            }
+            let t0 = Instant::now();
+            let out = crate::scheduler::fused_sweep(ctx, &self.schedulers, ws);
+            let ns = t0.elapsed().as_nanos() as u64;
+            best_ns = best_ns.min(ns.max(1));
+            outcome = Some(out);
+        }
+        let outcome = outcome.expect("timing_repeats >= 1");
+        let per_config_ns = (best_ns / self.schedulers.len() as u64).max(1);
+        let mut records: Vec<Option<Record>> = (0..self.schedulers.len()).map(|_| None).collect();
+        for grp in &outcome.groups {
+            if self.options.validate {
+                grp.schedule.validate(inst).unwrap_or_else(|e| {
+                    panic!(
+                        "{} on {dataset}/{instance} (fused group of {}): {e}",
+                        self.schedulers[grp.members[0]].name(),
+                        grp.members.len()
+                    )
+                });
+            }
+            let makespan = grp.schedule.makespan();
+            let hash = grp.schedule.content_hash();
+            for &i in &grp.members {
+                records[i] = Some(Record {
+                    scheduler: self.schedulers[i].name(),
+                    dataset: dataset.to_string(),
+                    instance,
+                    makespan,
+                    runtime_ns: per_config_ns,
+                    num_tasks: inst.graph.len(),
+                    num_nodes: inst.network.len(),
+                    schedule_hash: Some(hash),
+                    fused_timing: true,
+                });
+            }
+        }
+        recycle_outcome(ws, outcome);
+        records
+            .into_iter()
+            .map(|r| r.expect("fused groups partition every config"))
             .collect()
     }
 
@@ -214,6 +365,8 @@ impl Harness {
             runtime_ns: best_ns,
             num_tasks: inst.graph.len(),
             num_nodes: inst.network.len(),
+            schedule_hash: Some(schedule.content_hash()),
+            fused_timing: false,
         };
         ws.recycle(schedule); // the timelines feed the next config's run
         record
@@ -255,6 +408,13 @@ impl Harness {
             records.extend(self.run_dataset(spec));
         }
         BenchmarkResults { records }
+    }
+}
+
+/// Feed a fused sweep outcome's schedules back into the workspace pool.
+fn recycle_outcome(ws: &mut SchedulerWorkspace, outcome: crate::scheduler::FusedOutcome) {
+    for grp in outcome.groups {
+        ws.recycle(grp.schedule);
     }
 }
 
@@ -326,6 +486,34 @@ mod tests {
             assert!(r.runtime_ns >= 1);
             assert_eq!(r.dataset, "chains_ccr_1");
         }
+    }
+
+    /// The fused sweep path (default) and the per-config timing path
+    /// produce identical makespans and schedule hashes for the full
+    /// 72-config cube — only `runtime_ns` semantics differ.
+    #[test]
+    fn fused_and_per_config_sweeps_agree() {
+        let fused = Harness::all_schedulers();
+        assert!(fused.options.fused, "fused must be the default sweep path");
+        let per_cfg = Harness {
+            options: HarnessOptions { fused: false, ..HarnessOptions::default() },
+            ..Harness::all_schedulers()
+        };
+        let a = fused.run_dataset(&tiny_spec());
+        let b = per_cfg.run_dataset(&tiny_spec());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scheduler, y.scheduler);
+            assert_eq!(x.makespan, y.makespan, "{}/{}", x.dataset, x.scheduler);
+            assert_eq!(x.schedule_hash, y.schedule_hash, "{}", x.scheduler);
+            assert!(x.schedule_hash.is_some());
+            assert!(x.fused_timing, "fused records must carry the timing marker");
+            assert!(!y.fused_timing, "per-config records must not");
+        }
+        // The marker survives the JSON document round-trip.
+        let doc = a.to_json().to_string();
+        let back = Vec::<Record>::from_json(&crate::util::parse(&doc).unwrap()).unwrap();
+        assert_eq!(a, back);
     }
 
     #[test]

@@ -130,10 +130,15 @@ impl Harness {
     }
 
     /// [`Harness::run_instance_sim`] against a caller-owned (typically
-    /// per-thread) [`crate::scheduler::SchedulerWorkspace`]: the 72
-    /// plans are built out of the workspace's scratch buffers, every
-    /// realized trial schedule is recycled back into it, and the online
-    /// replanner replans frontiers from the same pool.
+    /// per-thread) [`crate::scheduler::SchedulerWorkspace`]: plans are
+    /// built out of the workspace's scratch buffers, every realized
+    /// trial schedule is recycled back into it, and the online
+    /// replanner replans frontiers from the same pool. With
+    /// [`super::HarnessOptions::fused`] (the default) the planning
+    /// stage runs through the fused lockstep engine: configs that never
+    /// diverge share **one** plan schedule (validated once per group),
+    /// while each trial's replay stays per config (the replay policy
+    /// consults the config).
     pub fn run_instance_sim_ws(
         &self,
         dataset: &str,
@@ -144,21 +149,45 @@ impl Harness {
     ) -> Vec<SimRecord> {
         let ctx = crate::scheduler::SchedulingContext::new(inst, self.backend.clone());
         inst.graph.freeze();
-        let plans: Vec<crate::schedule::Schedule> = self
-            .schedulers
-            .iter()
-            .map(|cfg| {
-                // Plans live for the whole sweep, so they are the one
-                // per-config allocation that cannot be recycled.
-                let plan = cfg.build_with(self.backend.clone()).schedule_into(&ctx, ws);
-                if self.options.validate {
-                    plan.validate(inst).unwrap_or_else(|e| {
-                        panic!("{} on {dataset}/{instance}: {e}", cfg.name())
-                    });
+        // Plans live for the whole sweep, so they are the one
+        // allocation that cannot be recycled until the records are
+        // built. `plan_of[i]` maps config `i` to its plan in `plans`.
+        let (plans, plan_of): (Vec<crate::schedule::Schedule>, Vec<usize>) =
+            if self.options.fused && self.schedulers.len() > 1 {
+                let outcome = crate::scheduler::fused_sweep(&ctx, &self.schedulers, ws);
+                let plan_of = outcome.group_of();
+                let mut plans = Vec::with_capacity(outcome.groups.len());
+                for grp in outcome.groups {
+                    if self.options.validate {
+                        grp.schedule.validate(inst).unwrap_or_else(|e| {
+                            panic!(
+                                "{} on {dataset}/{instance} (fused group of {}): {e}",
+                                self.schedulers[grp.members[0]].name(),
+                                grp.members.len()
+                            )
+                        });
+                    }
+                    plans.push(grp.schedule);
                 }
-                plan
-            })
-            .collect();
+                (plans, plan_of)
+            } else {
+                let plans: Vec<crate::schedule::Schedule> = self
+                    .schedulers
+                    .iter()
+                    .map(|cfg| {
+                        let plan =
+                            cfg.build_with(self.backend.clone()).schedule_into(&ctx, ws);
+                        if self.options.validate {
+                            plan.validate(inst).unwrap_or_else(|e| {
+                                panic!("{} on {dataset}/{instance}: {e}", cfg.name())
+                            });
+                        }
+                        plan
+                    })
+                    .collect();
+                let plan_of = (0..plans.len()).collect();
+                (plans, plan_of)
+            };
 
         let trials = sweep.trials.max(1);
         let mut aggs = vec![TrialAgg::default(); self.schedulers.len()];
@@ -166,9 +195,8 @@ impl Harness {
             let trace =
                 crate::sim::NoiseTrace::sample(inst, &sweep.perturb, sweep.trial_seed(instance, k));
             let eff = crate::sim::perturbed_instance(inst, &trace);
-            for ((cfg, plan), agg) in
-                self.schedulers.iter().zip(&plans).zip(&mut aggs)
-            {
+            for ((i, cfg), agg) in self.schedulers.iter().enumerate().zip(&mut aggs) {
+                let plan = &plans[plan_of[i]];
                 let out = crate::sim::simulate_into(&ctx, &eff, plan, cfg, sweep.policy, ws);
                 agg.sum += out.makespan;
                 agg.worst = agg.worst.max(out.makespan);
@@ -181,13 +209,13 @@ impl Harness {
         let records = self
             .schedulers
             .iter()
-            .zip(&plans)
+            .enumerate()
             .zip(&aggs)
-            .map(|((cfg, plan), agg)| SimRecord {
+            .map(|((i, cfg), agg)| SimRecord {
                 scheduler: cfg.name(),
                 dataset: dataset.to_string(),
                 instance,
-                static_makespan: plan.makespan(),
+                static_makespan: plans[plan_of[i]].makespan(),
                 mean_sim_makespan: agg.sum / trials as f64,
                 worst_sim_makespan: agg.worst,
                 robustness: agg.ratio_sum / trials as f64,
@@ -196,7 +224,7 @@ impl Harness {
             })
             .collect();
         // The plans outlived the trials; feed their buffers back so the
-        // next instance's 72 plans reuse them instead of reallocating.
+        // next instance's plans reuse them instead of reallocating.
         for plan in plans {
             ws.recycle(plan);
         }
@@ -304,6 +332,23 @@ mod tests {
             assert_eq!(r.worst_sim_makespan, r.static_makespan);
             assert_eq!(r.replans, 0);
         }
+    }
+
+    /// Fused planning (shared group plans) and per-config planning
+    /// yield byte-identical sim records: the plans are bit-equal, and
+    /// the replays are per config either way.
+    #[test]
+    fn fused_and_per_config_sim_planning_agree() {
+        use super::super::HarnessOptions;
+        let sweep = SimSweep { trials: 3, ..SimSweep::default() };
+        let fused = Harness::with_schedulers(SchedulerConfig::all());
+        let per_cfg = Harness {
+            options: HarnessOptions { fused: false, ..HarnessOptions::default() },
+            ..Harness::with_schedulers(SchedulerConfig::all())
+        };
+        let a = fused.run_dataset_sim(&tiny_spec(), &sweep);
+        let b = per_cfg.run_dataset_sim(&tiny_spec(), &sweep);
+        assert_eq!(a, b);
     }
 
     #[test]

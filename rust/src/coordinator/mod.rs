@@ -156,7 +156,10 @@ impl Coordinator {
     /// rather than buffering unboundedly). Every worker thread owns one
     /// [`SchedulerWorkspace`] for its whole lifetime, so scheduling
     /// scratch buffers are allocated once per worker, not once per
-    /// (job, config).
+    /// (job, config) — and, under the default
+    /// [`HarnessOptions::fused`], each in-job sweep runs through the
+    /// fused lockstep engine whose fork clones draw from the same
+    /// per-worker pools.
     fn run_jobs<J, R, F>(&self, jobs: Vec<J>, per_job: F) -> (Vec<R>, Arc<Metrics>)
     where
         J: Send,

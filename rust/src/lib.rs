@@ -23,9 +23,13 @@
 //!   [`scheduler::SchedulingContext`] per instance (ranks, priorities,
 //!   pins, exec matrix computed once, never per config) and one
 //!   reusable [`scheduler::SchedulerWorkspace`] per worker thread
-//!   (scratch buffers allocated once, recycled per config), and run the
-//!   zero-recompute core `schedule_into`; the pre-refactor loop remains
-//!   as `schedule_reference`, the bit-exactness oracle.
+//!   (scratch buffers allocated once, recycled per config). Multi-config
+//!   sweeps default to the **fused engine**
+//!   ([`scheduler::fused_sweep`]): lockstep groups share one loop state
+//!   and one window scan per candidate until their placement decisions
+//!   diverge, forking copy-on-diverge; `schedule_into` remains the
+//!   per-config zero-recompute core, and the pre-refactor loop remains
+//!   as `schedule_reference` — both bit-exactness oracles.
 //! * [`datasets`] — the 4×5 benchmark dataset families of §III
 //!   (in_trees, out_trees, chains, cycles × CCR ∈ {1/5, 1/2, 1, 2, 5}),
 //!   plus [`datasets::layered`]: the layered wide-DAG scale axis
@@ -93,8 +97,9 @@ pub mod prelude {
     pub use crate::ranks::{RankBackend, Ranks};
     pub use crate::schedule::{render_gantt, Schedule};
     pub use crate::scheduler::{
-        CompareFn, LookaheadScheduler, ParametricScheduler, PriorityFn, SchedulerConfig,
-        SchedulerWorkspace, SchedulingContext,
+        fused_sweep, CompareFn, FusedGroup, FusedOutcome, FusedStats, LookaheadScheduler,
+        ParametricScheduler, PriorityFn, SchedulerConfig, SchedulerWorkspace,
+        SchedulingContext,
     };
     pub use crate::benchmark::{SimRecord, SimSweep};
     pub use crate::sim::{

@@ -3,14 +3,18 @@
 //! ```text
 //! ptgs generate  --structure chains --ccr 1 --count 100 --out instances.json
 //! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
-//! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--workers 0] [--repeats 1] [--out results/benchmark.json]
-//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--out results/robustness.csv]
-//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--simulate (+ the simulate flags)] [--workers 0] [--out <csv>]
+//! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--threads N|--workers 0] [--repeats 1] [--fused] [--out results/benchmark.json]
+//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--threads N|--workers 0] [--out results/robustness.csv]
+//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--per-config] [--simulate (+ the simulate flags)] [--threads N|--workers 0] [--out <csv>]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
-//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--out-dir results]
+//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N|--workers 0] [--fused] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
 //! ptgs list      schedulers|datasets|artifacts
 //! ```
+//!
+//! Worker-thread count resolves as `--threads N` (must be ≥ 1), then the
+//! legacy `--workers N` (0 = auto), then the `PTGS_THREADS` environment
+//! variable, then available parallelism.
 
 use ptgs::util::error::{Context, Result};
 use ptgs::{anyhow, bail};
@@ -160,11 +164,16 @@ fn cmd_benchmark(args: &Args) -> Result<()> {
         count,
         seed,
     )?;
-    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
+    let workers = worker_count(args)?;
     let repeats = args.get_parse("repeats", 1usize).map_err(|e| anyhow!(e))?;
     let out = PathBuf::from(args.get_or("out", "results/benchmark.json"));
 
-    let results = run_benchmark(schedulers, &specs, workers, repeats)?;
+    // Per-config timing by default: benchmark records feed the paper's
+    // runtime-ratio artifacts, which need each config timed on its own.
+    // `--fused` opts into the fused sweep (identical makespans, ~an
+    // order of magnitude faster; runtime_ns becomes the amortized
+    // fused cost, flattening runtime ratios to 1).
+    let results = run_benchmark(schedulers, &specs, workers, repeats, args.has("fused"))?;
     results.save(&out)?;
     println!(
         "wrote {} records ({} schedulers × {} datasets) to {}",
@@ -227,11 +236,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     )?;
     let sweep = sweep_from_args(args)?;
 
-    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
-    let mut options = CoordinatorOptions::default();
-    if workers > 0 {
-        options.workers = workers;
-    }
+    let options = coordinator_options(args)?;
     let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
     let t0 = std::time::Instant::now();
     let records = coord.run_sim_blocking(&specs, &sweep);
@@ -319,39 +324,59 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
     let schedulers = parse_schedulers(&args.get_or("schedulers", "all"))?;
 
+    // Resolve (and strictly validate) the worker flags *before* the
+    // serial verify pre-pass: a bad --threads/PTGS_THREADS value must
+    // fail fast, not after minutes of scheduling a large corpus.
+    let mut options = coordinator_options(args)?;
+    options.chunk_size = 1; // traces are few and heterogeneous in size
+    // Fused sweeps amortize runtime_ns equally over the configs; pass
+    // --per-config when the saved records will feed runtime-ratio
+    // analysis (`ptgs analyze` on a trace --out document).
+    options.harness.fused = !args.has("per-config");
+
     // Every plan must replay bit-exactly under zero noise — the
     // simulator-consistency contract for external workloads. This
-    // schedules each (config, trace) pair once, serially, on top of the
-    // sweep below; `--no-verify` skips it for large corpora. One shared
-    // SchedulingContext per trace keeps the serial pre-pass cheap:
-    // ranks/priorities/pins are computed once per trace, not per config.
+    // plans each trace once through the **fused sweep engine** (configs
+    // share one lockstep loop until their decisions diverge, so the
+    // serial pre-pass costs roughly one schedule per distinct outcome,
+    // not one per config) on top of the sweep below; `--no-verify`
+    // skips it for large corpora. The zero-noise replay itself stays
+    // per config — that is the contract under test.
     if !args.has("no-verify") {
         let mut ws = ptgs::scheduler::SchedulerWorkspace::new();
         for inst in &set.instances {
             let ctx = ptgs::scheduler::SchedulingContext::new(inst, RankBackend::Native);
-            for cfg in &schedulers {
-                let plan = cfg.build().schedule_into(&ctx, &mut ws);
+            let outcome = ptgs::scheduler::fused_sweep(&ctx, &schedulers, &mut ws);
+            for grp in outcome.groups {
+                let plan = grp.schedule;
                 plan.validate(inst).map_err(|e| {
-                    anyhow!("{} on {}: invalid schedule: {e}", cfg.name(), inst.name)
+                    anyhow!(
+                        "{} on {}: invalid schedule: {e}",
+                        schedulers[grp.members[0]].name(),
+                        inst.name
+                    )
                 })?;
-                let out = ptgs::sim::simulate(
-                    inst,
-                    &plan,
-                    cfg,
-                    &SimOptions {
-                        perturb: Perturbation::none(),
-                        seed: 0,
-                        policy: ReplayPolicy::Static,
-                    },
-                );
-                if out.makespan != plan.makespan() {
-                    bail!(
-                        "zero-noise replay drifted for {} on {}: planned {} realized {}",
-                        cfg.name(),
-                        inst.name,
-                        plan.makespan(),
-                        out.makespan
+                for &i in &grp.members {
+                    let cfg = &schedulers[i];
+                    let out = ptgs::sim::simulate(
+                        inst,
+                        &plan,
+                        cfg,
+                        &SimOptions {
+                            perturb: Perturbation::none(),
+                            seed: 0,
+                            policy: ReplayPolicy::Static,
+                        },
                     );
+                    if out.makespan != plan.makespan() {
+                        bail!(
+                            "zero-noise replay drifted for {} on {}: planned {} realized {}",
+                            cfg.name(),
+                            inst.name,
+                            plan.makespan(),
+                            out.makespan
+                        );
+                    }
                 }
                 ws.recycle(plan);
             }
@@ -363,12 +388,6 @@ fn cmd_trace(args: &Args) -> Result<()> {
         );
     }
 
-    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
-    let mut options = CoordinatorOptions::default();
-    if workers > 0 {
-        options.workers = workers;
-    }
-    options.chunk_size = 1; // traces are few and heterogeneous in size
     let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
 
     if args.has("simulate") {
@@ -387,6 +406,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         println!("robustness CSV written to {}", out.display());
     } else {
         let results = coord.run_traces_blocking(&set.instances);
+        let dedup = ptgs::analysis::dedup_rows(&results.records);
         for ds in results.datasets() {
             let recs: Vec<_> = results.records.iter().filter(|r| r.dataset == ds).collect();
             let best = recs
@@ -397,8 +417,17 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 .iter()
                 .max_by(|a, b| a.makespan.partial_cmp(&b.makespan).unwrap())
                 .expect("non-empty dataset");
+            // Distinct-schedule dedup: how many of the configs actually
+            // produced different schedules on this trace (nearly free
+            // under the fused sweep — hashes ride on the records).
+            let distinct = dedup
+                .iter()
+                .find(|r| r.dataset == ds)
+                .map(|r| r.distinct_schedules)
+                .unwrap_or(0);
             println!(
-                "{ds}: best {} ({:.4}), worst {} ({:.4}) over {} schedulers",
+                "{ds}: best {} ({:.4}), worst {} ({:.4}) over {} schedulers, \
+                 {distinct} distinct schedule(s)",
                 best.scheduler,
                 best.makespan,
                 worst.scheduler,
@@ -420,6 +449,15 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
     let results = BenchmarkResults::load(&path)
         .with_context(|| format!("loading {}", path.display()))?;
+    if results.records.iter().any(|r| r.fused_timing) {
+        eprintln!(
+            "warning: {} contains fused-timed records (runtime_ns amortized over the \
+             whole config sweep) — runtime ratios will be flat at ~1.0; regenerate \
+             with per-config timing (e.g. `ptgs trace --per-config`) for runtime-ratio \
+             analysis",
+            path.display()
+        );
+    }
     for a in parse_artifacts(&args.get_or("artifact", "all"))? {
         println!("{}", a.generate(&results, &out_dir)?);
     }
@@ -429,13 +467,16 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 fn cmd_reproduce(args: &Args) -> Result<()> {
     let count = args.get_parse("count", 100usize).map_err(|e| anyhow!(e))?;
     let seed = args.get_parse("seed", 0x5A6A_5EEDu64).map_err(|e| anyhow!(e))?;
-    let workers = args.get_parse("workers", 0usize).map_err(|e| anyhow!(e))?;
+    let workers = worker_count(args)?;
     let repeats = args.get_parse("repeats", 3usize).map_err(|e| anyhow!(e))?;
     let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
 
     let specs = DatasetSpec::all(count, seed);
     let t0 = std::time::Instant::now();
-    let results = run_benchmark(SchedulerConfig::all(), &specs, workers, repeats)?;
+    // Paper reproduction needs per-config runtime ratios, so fused
+    // timing stays opt-in here too.
+    let results =
+        run_benchmark(SchedulerConfig::all(), &specs, workers, repeats, args.has("fused"))?;
     let elapsed = t0.elapsed().as_secs_f64();
     results.save(&out_dir.join("benchmark.json"))?;
     match args.get("artifact") {
@@ -533,6 +574,43 @@ fn cmd_list(args: &Args) -> Result<()> {
 // helpers
 // ---------------------------------------------------------------------
 
+/// Resolve the coordinator worker count: `--threads N` (strict: must be
+/// ≥ 1), else the legacy `--workers N` (0 = auto), else the
+/// `PTGS_THREADS` environment variable, else `None` (auto = available
+/// parallelism).
+fn worker_count(args: &Args) -> Result<Option<usize>> {
+    if let Some(v) = args.get("threads") {
+        let n: usize = v.parse().map_err(|e| anyhow!("invalid --threads: {e}"))?;
+        if n == 0 {
+            bail!("--threads must be >= 1, got 0 (omit the flag for auto)");
+        }
+        return Ok(Some(n));
+    }
+    if let Some(v) = args.get("workers") {
+        let n: usize = v.parse().map_err(|e| anyhow!("invalid --workers: {e}"))?;
+        return Ok(if n == 0 { None } else { Some(n) });
+    }
+    match std::env::var("PTGS_THREADS") {
+        Ok(v) if !v.is_empty() => {
+            let n: usize = v.parse().map_err(|e| anyhow!("invalid PTGS_THREADS: {e}"))?;
+            if n == 0 {
+                bail!("PTGS_THREADS must be >= 1, got 0 (unset it for auto)");
+            }
+            Ok(Some(n))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Coordinator options with the resolved worker count applied.
+fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
+    let mut options = CoordinatorOptions::default();
+    if let Some(n) = worker_count(args)? {
+        options.workers = n;
+    }
+    Ok(options)
+}
+
 fn spec_from_args(args: &Args, default_structure: &str) -> Result<DatasetSpec> {
     let structure = args.get_or("structure", default_structure);
     let s = Structure::from_str_opt(&structure).ok_or_else(|| {
@@ -607,14 +685,15 @@ fn parse_artifacts(s: &str) -> Result<Vec<Artifact>> {
 fn run_benchmark(
     schedulers: Vec<SchedulerConfig>,
     specs: &[DatasetSpec],
-    workers: usize,
+    workers: Option<usize>,
     repeats: usize,
+    fused: bool,
 ) -> Result<BenchmarkResults> {
     let mut options = CoordinatorOptions::default();
-    if workers > 0 {
-        options.workers = workers;
+    if let Some(n) = workers {
+        options.workers = n;
     }
-    options.harness = HarnessOptions { validate: true, timing_repeats: repeats.max(1) };
+    options.harness = HarnessOptions { validate: true, timing_repeats: repeats.max(1), fused };
     let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
     let t0 = std::time::Instant::now();
     let results = coord.run_blocking(specs);

@@ -137,6 +137,46 @@ impl Schedule {
         self.scheduled = 0;
     }
 
+    /// Overwrite this schedule with the contents of `src`, reusing every
+    /// buffer this schedule already owns (assignment table, per-node
+    /// timeline vectors, gap index). The fused sweep engine
+    /// ([`crate::scheduler::fused`]) forks lockstep groups through this:
+    /// a copy-on-diverge clone into a pooled schedule costs memcpys, not
+    /// fresh allocations, once the pool is warm.
+    pub fn copy_from(&mut self, src: &Schedule) {
+        self.assignments.clone_from(&src.assignments);
+        self.timelines.clone_from(&src.timelines);
+        self.prefix_max_end.clone_from(&src.prefix_max_end);
+        self.scheduled = src.scheduled;
+    }
+
+    /// Content hash of the assignment map (FNV-1a over `(task, node,
+    /// start bits, end bits)` in task order). Two schedules compare
+    /// equal iff their hashes are computed from identical assignment
+    /// maps, so sweep-level dedup ([`crate::analysis::dedup`]) can
+    /// count distinct schedules across the 72 configs without keeping
+    /// every schedule alive. Collisions are possible in principle
+    /// (64-bit hash) but not between schedules that differ in any
+    /// assignment produced by the deterministic scheduling core.
+    pub fn content_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        };
+        for (t, a) in self.assignments.iter().enumerate() {
+            if let Some(a) = a {
+                mix(t as u64);
+                mix(a.node as u64);
+                mix(a.start.to_bits());
+                mix(a.end.to_bits());
+            }
+        }
+        h
+    }
+
     /// Assignment of a task, if scheduled.
     pub fn assignment(&self, t: TaskId) -> Option<&Assignment> {
         self.assignments[t].as_ref()
@@ -427,6 +467,40 @@ mod tests {
             fresh
         });
         assert_eq!(s.gap_index(0, 3.0), (1, 2.0));
+    }
+
+    #[test]
+    fn copy_from_reproduces_source_exactly() {
+        let mut src = Schedule::new(3, 2);
+        src.insert(asg(0, 0, 0.0, 1.0));
+        src.insert(asg(2, 1, 0.5, 1.5));
+        // Target starts with a different shape and stale contents.
+        let mut dst = Schedule::new(5, 3);
+        dst.insert(asg(4, 2, 3.0, 4.0));
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.len(), 2);
+        assert_eq!(dst.gap_index(1, 0.2), src.gap_index(1, 0.2));
+        // The copy is deep: mutating the copy leaves the source alone.
+        dst.insert(asg(1, 0, 2.0, 3.0));
+        assert_eq!(src.len(), 2);
+    }
+
+    #[test]
+    fn content_hash_tracks_assignment_map() {
+        let mut a = Schedule::new(2, 2);
+        a.insert(asg(0, 0, 0.0, 1.0));
+        a.insert(asg(1, 1, 0.0, 1.0));
+        let mut b = Schedule::new(2, 2);
+        // Insertion order must not matter (hash walks task order).
+        b.insert(asg(1, 1, 0.0, 1.0));
+        b.insert(asg(0, 0, 0.0, 1.0));
+        assert_eq!(a.content_hash(), b.content_hash());
+        let mut c = Schedule::new(2, 2);
+        c.insert(asg(0, 0, 0.0, 1.0));
+        c.insert(asg(1, 0, 1.0, 2.0)); // different node/start
+        assert_ne!(a.content_hash(), c.content_hash());
+        assert_ne!(Schedule::new(0, 1).content_hash(), a.content_hash());
     }
 
     #[test]

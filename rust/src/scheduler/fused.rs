@@ -1,0 +1,634 @@
+//! The fused 72-config sweep engine: lockstep group scheduling with
+//! copy-on-diverge forking.
+//!
+//! A sweep evaluates every configuration of the component cube on the
+//! *same* instance, and most configurations agree on most placement
+//! decisions — two configs that have made identical decisions so far
+//! hold bit-identical partial schedules, DAT matrices, and ready heaps.
+//! Running them as 72 independent [`super::ParametricScheduler::schedule_into`]
+//! loops recomputes all of that shared state 72 times over.
+//!
+//! [`fused_sweep`] instead runs the sweep as a set of **lockstep
+//! groups**:
+//!
+//! * Configurations start grouped by priority function (heap entries
+//!   embed priority values, so the ready heap is only shareable within
+//!   one priority vector). Each group owns *one* loop state — schedule,
+//!   incremental DAT matrix, missing-predecessor counters, ready heap.
+//! * Each iteration, the group pops its highest-priority ready task
+//!   once and evaluates each candidate `(task, node)` window **once**
+//!   ([`WindowMemo`]): the EFT/EST/Quickest comparison triple — and
+//!   every member needing the same window kind, including the sufferage
+//!   runner-up evaluation and critical-path pins — share one DAT-row
+//!   read and one gap-indexed timeline scan instead of three to twelve.
+//! * Members whose selected placement differs **fork**: the group
+//!   splits into one subgroup per distinct decision, each child cloning
+//!   the parent's loop state copy-on-diverge
+//!   ([`crate::schedule::Schedule::copy_from`] +
+//!   [`super::workspace::GroupScratch::copy_from`]) out of the
+//!   [`SchedulerWorkspace`] pools — memcpys, not allocations, once the
+//!   pools are warm, preserving the O(1)-allocs-after-warmup property.
+//!
+//! **Bit-exactness contract:** every group's final schedule is
+//! bit-identical to `schedule_into` for each of its member configs —
+//! same candidate arithmetic in the same node order, same comparison
+//! chain, same sufferage selection, same heap tie-breaks (the pop
+//! sequence of the shared heap depends only on its entry multiset;
+//! see [`super::parametric`]'s `Entry` ordering). Property tests pin
+//! `fused_sweep ≡ configs.len() × schedule_into` over random graphs
+//! from every dataset structure, and the benches gate on it before
+//! timing.
+//!
+//! Process-wide counters record the sharing: [`window_scans`] counts
+//! window evaluations performed (by this engine *and* by
+//! `schedule_into`, so the sharing ratio is directly measurable) and
+//! [`fork_events`] counts group splits. `rust/tests/integration_ctx.rs`
+//! counter-asserts the compare-triple sharing factor and fork-count
+//! determinism; `benches/bench_sweep.rs` reports the measured
+//! shared-scan ratio and fork counts in `BENCH_sweep.json`.
+
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::ctx::SchedulingContext;
+use super::parametric::{select_candidate, Choice, Entry};
+use super::window::{window_append_only_at, window_insertion_indexed, Candidate};
+use super::workspace::{GroupScratch, SchedulerWorkspace};
+use super::{PriorityFn, SchedulerConfig};
+use crate::graph::{TaskGraph, TaskId};
+use crate::network::{Network, NodeId};
+use crate::schedule::{Assignment, Schedule};
+
+/// Process-wide count of candidate window evaluations performed by the
+/// fused engine and by `schedule_into` (test/bench instrumentation).
+static WINDOW_SCANS: AtomicU64 = AtomicU64::new(0);
+/// Process-wide count of lockstep-group fork events (a split into `k`
+/// subgroups adds `k − 1`).
+static FORK_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide number of candidate window evaluations performed so far
+/// by the scheduling cores (the fused engine and `schedule_into`; the
+/// reference oracle is deliberately uncounted). Tests read deltas to
+/// pin the fused engine's sharing factor.
+pub fn window_scans() -> u64 {
+    WINDOW_SCANS.load(Ordering::Relaxed)
+}
+
+/// Process-wide number of fork events recorded by fused sweeps so far.
+pub fn fork_events() -> u64 {
+    FORK_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Flush a locally-accumulated window-scan count to the process-wide
+/// counter (one atomic add per run, not per scan).
+pub(crate) fn note_window_scans(n: u64) {
+    if n > 0 {
+        WINDOW_SCANS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+fn note_fork_events(n: u64) {
+    if n > 0 {
+        FORK_EVENTS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Sharing statistics of one [`fused_sweep`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FusedStats {
+    /// Window evaluations this sweep performed (shared across members).
+    pub window_scans: u64,
+    /// Group splits (a fork into `k` subgroups counts `k − 1`).
+    pub fork_events: u64,
+    /// Lockstep groups at the start (one per priority function present).
+    pub initial_groups: usize,
+    /// Terminal groups — equivalence classes of configs whose decision
+    /// sequences (and hence schedules) never diverged.
+    pub final_groups: usize,
+}
+
+/// One terminal lockstep group: the configs (indices into the sweep's
+/// config slice) that never diverged, and their shared final schedule.
+#[derive(Debug)]
+pub struct FusedGroup {
+    pub members: Vec<usize>,
+    pub schedule: Schedule,
+}
+
+/// The result of a fused sweep: terminal groups partitioning the config
+/// indices, plus sharing stats. Recycle each group's schedule back into
+/// the workspace when done.
+#[derive(Debug)]
+pub struct FusedOutcome {
+    pub groups: Vec<FusedGroup>,
+    pub stats: FusedStats,
+    /// Number of configs the sweep covered (the groups partition
+    /// `0..num_configs`).
+    pub num_configs: usize,
+}
+
+impl FusedOutcome {
+    /// Map each config index to the index of its terminal group.
+    pub fn group_of(&self) -> Vec<usize> {
+        let mut map = vec![usize::MAX; self.num_configs];
+        for (gi, grp) in self.groups.iter().enumerate() {
+            for &i in &grp.members {
+                map[i] = gi;
+            }
+        }
+        debug_assert!(
+            map.iter().all(|&gi| gi != usize::MAX),
+            "groups must partition every config"
+        );
+        map
+    }
+}
+
+/// One placement decision: which task goes where. Candidates come from
+/// the shared [`WindowMemo`], so equal decisions are bit-equal and the
+/// key below partitions members exactly.
+#[derive(Debug, Clone, Copy)]
+struct Decision {
+    task: TaskId,
+    cand: Candidate,
+}
+
+impl Decision {
+    fn key(&self) -> (TaskId, NodeId, u64, u64) {
+        (
+            self.task,
+            self.cand.node,
+            self.cand.start.to_bits(),
+            self.cand.end.to_bits(),
+        )
+    }
+}
+
+/// Per-iteration memo of candidate windows for one task: each
+/// `(window kind, node)` pair is evaluated at most once per group
+/// iteration, no matter how many members consult it.
+#[derive(Debug, Default)]
+struct WindowMemo {
+    ins: Vec<Option<Candidate>>,
+    app: Vec<Option<Candidate>>,
+}
+
+impl WindowMemo {
+    fn reset(&mut self, m: usize) {
+        self.ins.clear();
+        self.ins.resize(m, None);
+        self.app.clear();
+        self.app.resize(m, None);
+    }
+
+    /// The candidate window of the memo's task on node `u`, computing
+    /// (and counting) the scan on first use.
+    fn get(
+        &mut self,
+        sched: &Schedule,
+        u: NodeId,
+        dat: &[f64],
+        exec: &[f64],
+        append: bool,
+        scans: &mut u64,
+    ) -> Candidate {
+        let slot = if append { &mut self.app[u] } else { &mut self.ins[u] };
+        if let Some(c) = *slot {
+            return c;
+        }
+        *scans += 1;
+        let c = if append {
+            window_append_only_at(sched, u, dat[u], exec[u])
+        } else {
+            window_insertion_indexed(sched, u, dat[u], exec[u])
+        };
+        *slot = Some(c);
+        c
+    }
+}
+
+/// One lockstep group's live loop state.
+struct GroupState {
+    members: Vec<usize>,
+    sched: Schedule,
+    scratch: GroupScratch,
+    placed: usize,
+}
+
+/// One member's `Choice` over the shared memo: the selection chain is
+/// the same [`select_candidate`] the per-config hot path runs — only
+/// the window provider differs (memoized here, direct there) — so the
+/// fused/per-config bit-exactness contract holds by construction.
+#[allow(clippy::too_many_arguments)]
+fn choose(
+    cfg: &SchedulerConfig,
+    memo: &mut WindowMemo,
+    sched: &Schedule,
+    m: usize,
+    dat: &[f64],
+    exec: &[f64],
+    pinned: Option<NodeId>,
+    scans: &mut u64,
+) -> Choice {
+    select_candidate(cfg.compare, m, pinned, |u| {
+        memo.get(sched, u, dat, exec, cfg.append_only, scans)
+    })
+}
+
+/// Apply one decision to a group's state: the heap fix-up when the
+/// sufferage runner-up was placed instead of the popped task, the
+/// placement itself, and the incremental DAT / readiness fold —
+/// arithmetic identical to `schedule_into`'s loop tail.
+#[allow(clippy::too_many_arguments)]
+fn apply(
+    state: &mut GroupState,
+    popped: TaskId,
+    d: &Decision,
+    prio: &[f64],
+    g: &TaskGraph,
+    net: &Network,
+    m: usize,
+) {
+    if d.task != popped {
+        // Sufferage placed the runner-up: it is the current heap top
+        // (the shared iteration popped only `popped`); remove it and
+        // return the popped task, exactly as `schedule_into` does.
+        let returned = state.scratch.ready.pop();
+        debug_assert_eq!(
+            returned.map(|e| (e.1).0),
+            Some(d.task),
+            "runner-up must be the heap top"
+        );
+        state.scratch.ready.push(Entry(prio[popped], Reverse(popped)));
+    }
+    state.sched.insert(Assignment {
+        task: d.task,
+        node: d.cand.node,
+        start: d.cand.start,
+        end: d.cand.end,
+    });
+    state.placed += 1;
+    for &(s, data) in g.successors(d.task) {
+        // Fold this placement into the successor's DAT row.
+        let row = &mut state.scratch.dat[s * m..(s + 1) * m];
+        for (u, slot) in row.iter_mut().enumerate() {
+            *slot = slot.max(d.cand.end + net.comm_time(data, d.cand.node, u));
+        }
+        state.scratch.missing[s] -= 1;
+        if state.scratch.missing[s] == 0 {
+            state.scratch.ready.push(Entry(prio[s], Reverse(s)));
+        }
+    }
+}
+
+/// Run every config of `configs` on the context's instance as a fused
+/// lockstep sweep. Returns terminal groups (configs partitioned by
+/// final schedule identity-by-construction) whose schedules are
+/// **bit-identical** to running
+/// [`super::ParametricScheduler::schedule_into`] per config. See the
+/// module docs for the sharing model.
+///
+/// Groups are reported in ascending order of their first member index;
+/// group schedules come from (and should be recycled back into) the
+/// workspace's schedule pool.
+pub fn fused_sweep(
+    ctx: &SchedulingContext<'_>,
+    configs: &[SchedulerConfig],
+    ws: &mut SchedulerWorkspace,
+) -> FusedOutcome {
+    let inst = ctx.instance();
+    let g = &inst.graph;
+    let net = &inst.network;
+    let n = g.len();
+    let m = net.len();
+    let num_configs = configs.len();
+    let mut stats = FusedStats::default();
+
+    if num_configs == 0 {
+        return FusedOutcome { groups: Vec::new(), stats, num_configs };
+    }
+    if n == 0 {
+        // Every config trivially produces the same empty schedule.
+        stats.initial_groups = 1;
+        stats.final_groups = 1;
+        let groups = vec![FusedGroup {
+            members: (0..num_configs).collect(),
+            schedule: ws.take_schedule(0, m),
+        }];
+        return FusedOutcome { groups, stats, num_configs };
+    }
+
+    // The pin set is only materialized when some member reserves the
+    // critical path (else an AT-only sweep would needlessly run the
+    // rank DP, which the per-config path skips).
+    let any_cp = configs.iter().any(|c| c.critical_path);
+    let pins: &[Option<NodeId>] = if any_cp { ctx.cp_pinned() } else { &[] };
+    let pin_of = |cfg: &SchedulerConfig, t: TaskId| -> Option<NodeId> {
+        if cfg.critical_path {
+            pins[t]
+        } else {
+            None
+        }
+    };
+
+    // Root groups: one per priority function present. The lockstep
+    // invariant requires identical ready-heap contents, and heap
+    // entries embed priority values, so groups never span priority
+    // functions.
+    let mut pending: Vec<GroupState> = Vec::new();
+    for pf in PriorityFn::ALL {
+        let members: Vec<usize> = (0..num_configs)
+            .filter(|&i| configs[i].priority == pf)
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        let prio = ctx.priorities(pf);
+        let mut scratch = ws.take_group_scratch();
+        scratch.begin(n, m);
+        {
+            let GroupScratch { missing, ready, .. } = &mut scratch;
+            missing.extend((0..n).map(|t| g.predecessors(t).len()));
+            ready.extend(
+                (0..n)
+                    .filter(|&t| missing[t] == 0)
+                    .map(|t| Entry(prio[t], Reverse(t))),
+            );
+        }
+        pending.push(GroupState {
+            members,
+            sched: ws.take_schedule(n, m),
+            scratch,
+            placed: 0,
+        });
+    }
+    stats.initial_groups = pending.len();
+
+    // Reusable per-iteration buffers (no per-iteration allocations).
+    let mut memo_t = WindowMemo::default();
+    let mut memo_t2 = WindowMemo::default();
+    let mut decisions: Vec<Decision> = Vec::new();
+    let mut class_of: Vec<usize> = Vec::new();
+    let mut class_reps: Vec<Decision> = Vec::new();
+    let mut finished: Vec<FusedGroup> = Vec::new();
+    let mut scans = 0u64;
+    let mut forks = 0u64;
+
+    while let Some(mut grp) = pending.pop() {
+        let prio = ctx.priorities(configs[grp.members[0]].priority);
+        while let Some(Entry(_, Reverse(t))) = grp.scratch.ready.pop() {
+            // The sufferage runner-up, when any member wants one: after
+            // popping `t`, the heap top is exactly the entry the
+            // per-config loop would pop second.
+            let any_suff = grp.members.iter().any(|&i| configs[i].sufferage);
+            let runner_up: Option<Entry> = if any_suff {
+                grp.scratch.ready.peek().copied()
+            } else {
+                None
+            };
+
+            // Evaluate every member's decision over the shared memos.
+            memo_t.reset(m);
+            if runner_up.is_some() {
+                memo_t2.reset(m);
+            }
+            decisions.clear();
+            {
+                let sched = &grp.sched;
+                let dat_t = &grp.scratch.dat[t * m..(t + 1) * m];
+                let exec_t = ctx.exec_row(t);
+                for &i in &grp.members {
+                    let cfg = &configs[i];
+                    let choice_t = choose(
+                        cfg,
+                        &mut memo_t,
+                        sched,
+                        m,
+                        dat_t,
+                        exec_t,
+                        pin_of(cfg, t),
+                        &mut scans,
+                    );
+                    let d = match (cfg.sufferage, runner_up) {
+                        (true, Some(Entry(_, Reverse(t2)))) => {
+                            let dat_t2 = &grp.scratch.dat[t2 * m..(t2 + 1) * m];
+                            let choice_t2 = choose(
+                                cfg,
+                                &mut memo_t2,
+                                sched,
+                                m,
+                                dat_t2,
+                                ctx.exec_row(t2),
+                                pin_of(cfg, t2),
+                                &mut scans,
+                            );
+                            if choice_t2.sufferage_value(cfg.compare)
+                                > choice_t.sufferage_value(cfg.compare)
+                            {
+                                Decision { task: t2, cand: choice_t2.best }
+                            } else {
+                                Decision { task: t, cand: choice_t.best }
+                            }
+                        }
+                        _ => Decision { task: t, cand: choice_t.best },
+                    };
+                    decisions.push(d);
+                }
+            }
+
+            // Partition members by decision (first-seen class order, so
+            // class 0 always contains the group's first member).
+            class_reps.clear();
+            class_of.clear();
+            for d in &decisions {
+                let ci = match class_reps.iter().position(|r| r.key() == d.key()) {
+                    Some(ci) => ci,
+                    None => {
+                        class_reps.push(*d);
+                        class_reps.len() - 1
+                    }
+                };
+                class_of.push(ci);
+            }
+
+            // Copy-on-diverge: classes beyond the first fork off with a
+            // clone of the post-pop state, then apply their decision.
+            if class_reps.len() > 1 {
+                forks += (class_reps.len() - 1) as u64;
+                for (ci, rep) in class_reps.iter().enumerate().skip(1) {
+                    let members: Vec<usize> = grp
+                        .members
+                        .iter()
+                        .zip(&class_of)
+                        .filter(|&(_, &c)| c == ci)
+                        .map(|(&i, _)| i)
+                        .collect();
+                    let mut scratch = ws.take_group_scratch();
+                    scratch.copy_from(&grp.scratch);
+                    let mut sched = ws.take_schedule(n, m);
+                    sched.copy_from(&grp.sched);
+                    let mut child = GroupState {
+                        members,
+                        sched,
+                        scratch,
+                        placed: grp.placed,
+                    };
+                    apply(&mut child, t, rep, prio, g, net, m);
+                    pending.push(child);
+                }
+                // The parent keeps class 0's members, in place.
+                let mut keep = 0usize;
+                for k in 0..class_of.len() {
+                    if class_of[k] == 0 {
+                        grp.members[keep] = grp.members[k];
+                        keep += 1;
+                    }
+                }
+                grp.members.truncate(keep);
+            }
+            apply(&mut grp, t, &class_reps[0], prio, g, net, m);
+        }
+        let GroupState { members, sched, scratch, placed } = grp;
+        debug_assert_eq!(placed, n, "fused group must place every task");
+        ws.recycle_group_scratch(scratch);
+        finished.push(FusedGroup { members, schedule: sched });
+    }
+
+    finished.sort_by_key(|grp| grp.members[0]);
+    stats.final_groups = finished.len();
+    stats.window_scans = scans;
+    stats.fork_events = forks;
+    note_window_scans(scans);
+    note_fork_events(forks);
+    FusedOutcome { groups: finished, stats, num_configs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::ProblemInstance;
+    use crate::ranks::RankBackend;
+
+    fn fork_join() -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        for i in 0..5 {
+            g.add_task(format!("t{i}"), 1.0 + i as f64 * 0.5);
+        }
+        for mid in 1..=3 {
+            g.add_edge(0, mid, 1.0);
+            g.add_edge(mid, 4, 0.5 * mid as f64);
+        }
+        let net = Network::new(
+            vec![1.0, 2.0, 0.5],
+            vec![1.0, 1.0, 2.0, 1.0, 1.0, 0.5, 2.0, 0.5, 1.0],
+        );
+        ProblemInstance::new("fj", g, net)
+    }
+
+    fn assert_fused_matches_per_config(inst: &ProblemInstance, configs: &[SchedulerConfig]) {
+        let ctx = SchedulingContext::new(inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        let outcome = fused_sweep(&ctx, configs, &mut ws);
+
+        // Groups partition the config indices.
+        let mut seen = vec![false; configs.len()];
+        for grp in &outcome.groups {
+            for &i in &grp.members {
+                assert!(!seen[i], "config {i} appears in two groups");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "groups must cover every config");
+        assert_eq!(outcome.stats.final_groups, outcome.groups.len());
+
+        // Bit-exactness against the per-config core.
+        let map = outcome.group_of();
+        let mut oracle_ws = SchedulerWorkspace::new();
+        for (i, cfg) in configs.iter().enumerate() {
+            let want = cfg.build().schedule_into(&ctx, &mut oracle_ws);
+            assert_eq!(
+                outcome.groups[map[i]].schedule,
+                want,
+                "{} drifted from schedule_into",
+                cfg.name()
+            );
+            oracle_ws.recycle(want);
+        }
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+    }
+
+    #[test]
+    fn fused_matches_per_config_for_all_72_on_fork_join() {
+        assert_fused_matches_per_config(&fork_join(), &SchedulerConfig::all());
+    }
+
+    #[test]
+    fn fused_matches_per_config_for_single_and_small_sets() {
+        let inst = fork_join();
+        assert_fused_matches_per_config(&inst, &[SchedulerConfig::heft()]);
+        assert_fused_matches_per_config(
+            &inst,
+            &[
+                SchedulerConfig::heft(),
+                SchedulerConfig::cpop(),
+                SchedulerConfig::met(),
+                SchedulerConfig::sufferage_classic(),
+            ],
+        );
+    }
+
+    #[test]
+    fn fused_initial_groups_track_priority_functions() {
+        let inst = fork_join();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        let outcome = fused_sweep(&ctx, &SchedulerConfig::all(), &mut ws);
+        assert_eq!(outcome.stats.initial_groups, 3, "one root group per priority fn");
+        assert!(outcome.stats.final_groups >= 3);
+        assert!(outcome.stats.window_scans > 0);
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+    }
+
+    #[test]
+    fn fused_deterministic_across_runs_and_dirty_workspaces() {
+        let inst = fork_join();
+        let configs = SchedulerConfig::all();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        let a = fused_sweep(&ctx, &configs, &mut ws);
+        let a_members: Vec<Vec<usize>> = a.groups.iter().map(|grp| grp.members.clone()).collect();
+        let a_hashes: Vec<u64> = a.groups.iter().map(|grp| grp.schedule.content_hash()).collect();
+        let a_stats = a.stats;
+        for grp in a.groups {
+            ws.recycle(grp.schedule); // dirty pools for the second run
+        }
+        let b = fused_sweep(&ctx, &configs, &mut ws);
+        let b_members: Vec<Vec<usize>> = b.groups.iter().map(|grp| grp.members.clone()).collect();
+        let b_hashes: Vec<u64> = b.groups.iter().map(|grp| grp.schedule.content_hash()).collect();
+        assert_eq!(a_members, b_members);
+        assert_eq!(a_hashes, b_hashes);
+        assert_eq!(a_stats, b.stats, "fork counts and scan counts must be deterministic");
+        for grp in b.groups {
+            ws.recycle(grp.schedule);
+        }
+    }
+
+    #[test]
+    fn fused_empty_graph_and_empty_config_set() {
+        let inst = ProblemInstance::new("e", TaskGraph::new(), Network::homogeneous(2, 1.0));
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        let outcome = fused_sweep(&ctx, &SchedulerConfig::all(), &mut ws);
+        assert_eq!(outcome.groups.len(), 1);
+        assert!(outcome.groups[0].schedule.is_empty());
+        assert_eq!(outcome.groups[0].members.len(), 72);
+
+        let none = fused_sweep(&ctx, &[], &mut ws);
+        assert!(none.groups.is_empty());
+        assert_eq!(none.stats, FusedStats::default());
+    }
+}

@@ -15,26 +15,41 @@
 //! Classic algorithms fall out as corners of the cube (paper Table I):
 //! **HEFT** [5], **MCT** [9], **MET** [9], **Sufferage** [11].
 //!
-//! ## Zero-recompute, zero-allocation core
+//! ## The three-tier scheduling core
 //!
-//! Everything the scheduling loop needs before its first iteration —
-//! ranks, priority vectors, the critical-path pin set, the topological
-//! order, and the dense execution-time matrix — depends only on the
-//! `(instance, rank backend)` pair, so sweeps build one immutable
-//! [`SchedulingContext`] per instance ([`ctx`]) and run every
-//! configuration through
-//! [`ParametricScheduler::schedule_into`], threading one reusable
-//! [`SchedulerWorkspace`] per worker thread ([`workspace`]) so scratch
-//! buffers are allocated once, not per config — the difference between
-//! noise and dominance on 10k–100k-task workflow instances. Inside the
-//! loop, per-task data-available times are maintained incrementally and
-//! the insertion-window scan enters each timeline through the
-//! [`crate::schedule::Schedule::gap_index`]. The pre-refactor per-call
-//! loop survives as [`ParametricScheduler::schedule_reference`] — the
-//! bit-exactness oracle and benchmark baseline.
+//! The crate keeps three implementations of Algorithm 6, each the
+//! oracle for the next:
+//!
+//! 1. **Reference** — [`ParametricScheduler::schedule_reference`], the
+//!    pre-refactor per-call loop: recomputes ranks, priorities, DATs,
+//!    and timeline scans from scratch. Slow, simple, the bit-exactness
+//!    oracle and benchmark baseline.
+//! 2. **Shared-context / workspace** —
+//!    [`ParametricScheduler::schedule_into`]: everything the loop needs
+//!    before its first iteration (ranks, priority vectors, the
+//!    critical-path pin set, the topological order, the dense
+//!    execution-time matrix) depends only on the `(instance, backend)`
+//!    pair, so it comes from one immutable [`SchedulingContext`] per
+//!    instance ([`ctx`]); scratch buffers come from a reusable
+//!    [`SchedulerWorkspace`] per worker thread ([`workspace`]) — O(1)
+//!    heap allocations per config after warm-up. Inside the loop,
+//!    per-task data-available times are maintained incrementally and
+//!    the insertion-window scan enters each timeline through the
+//!    [`crate::schedule::Schedule::gap_index`].
+//! 3. **Fused sweep** — [`fused_sweep`] ([`fused`]): a multi-config
+//!    sweep runs as lockstep groups that share one loop state (and one
+//!    window scan per candidate) while their partial schedules are
+//!    bit-identical, forking copy-on-diverge the moment a placement
+//!    decision differs. The default sweep path of the benchmark
+//!    harness and coordinator; `schedule_into` remains the per-config
+//!    API and the fused oracle.
+//!
+//! All three produce **bit-identical** schedules for every config
+//! (property-tested; pinned by the golden snapshots).
 
 mod compare;
 pub mod ctx;
+pub mod fused;
 pub mod lookahead;
 mod parametric;
 mod priority;
@@ -43,6 +58,7 @@ pub mod workspace;
 
 pub use compare::CompareFn;
 pub use ctx::SchedulingContext;
+pub use fused::{fused_sweep, FusedGroup, FusedOutcome, FusedStats};
 pub use lookahead::LookaheadScheduler;
 pub(crate) use parametric::Entry as ReadyEntry;
 pub use parametric::ParametricScheduler;
@@ -72,27 +88,57 @@ pub struct SchedulerConfig {
 }
 
 impl SchedulerConfig {
-    /// All 72 configurations, in a deterministic order (priority-major).
-    pub fn all() -> Vec<SchedulerConfig> {
-        let mut out = Vec::with_capacity(72);
-        for priority in PriorityFn::ALL {
-            for compare in CompareFn::ALL {
-                for append_only in [false, true] {
-                    for critical_path in [false, true] {
-                        for sufferage in [false, true] {
-                            out.push(SchedulerConfig {
-                                priority,
-                                compare,
-                                append_only,
-                                critical_path,
-                                sufferage,
-                            });
+    /// All 72 configurations as a `const` array, in the same
+    /// deterministic priority-major order [`SchedulerConfig::all`] has
+    /// always used. Hot sweep paths (the fused engine, benches, name
+    /// lookup) iterate this without allocating; `all()` remains as a
+    /// thin `Vec` shim for callers that own their scheduler list.
+    pub const ALL: [SchedulerConfig; 72] = SchedulerConfig::build_all();
+
+    const fn build_all() -> [SchedulerConfig; 72] {
+        let mut out = [SchedulerConfig {
+            priority: PriorityFn::UpwardRanking,
+            compare: CompareFn::Eft,
+            append_only: false,
+            critical_path: false,
+            sufferage: false,
+        }; 72];
+        let mut idx = 0;
+        let mut p = 0;
+        while p < 3 {
+            let mut c = 0;
+            while c < 3 {
+                let mut a = 0;
+                while a < 2 {
+                    let mut cp = 0;
+                    while cp < 2 {
+                        let mut s = 0;
+                        while s < 2 {
+                            out[idx] = SchedulerConfig {
+                                priority: PriorityFn::ALL[p],
+                                compare: CompareFn::ALL[c],
+                                append_only: a == 1,
+                                critical_path: cp == 1,
+                                sufferage: s == 1,
+                            };
+                            idx += 1;
+                            s += 1;
                         }
+                        cp += 1;
                     }
+                    a += 1;
                 }
+                c += 1;
             }
+            p += 1;
         }
         out
+    }
+
+    /// All 72 configurations, in a deterministic order (priority-major).
+    /// Thin shim over [`SchedulerConfig::ALL`].
+    pub fn all() -> Vec<SchedulerConfig> {
+        Self::ALL.to_vec()
     }
 
     /// HEFT [5]: UpwardRanking + insertion + EFT.
@@ -184,7 +230,7 @@ impl SchedulerConfig {
 
     /// Parse a systematic name or alias back into a config.
     pub fn from_name(name: &str) -> Option<SchedulerConfig> {
-        Self::all().into_iter().find(|c| c.name() == name)
+        Self::ALL.into_iter().find(|c| c.name() == name)
     }
 
     /// Build a scheduler with the default (native) rank backend.
@@ -216,6 +262,34 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 72, "names must be unique");
+    }
+
+    /// The const array is the single source of truth: the `all()` shim
+    /// returns it verbatim, and the historic priority-major order is
+    /// pinned (golden snapshots and CSV outputs iterate it).
+    #[test]
+    fn const_all_matches_shim_and_order() {
+        assert_eq!(SchedulerConfig::ALL.to_vec(), SchedulerConfig::all());
+        assert_eq!(SchedulerConfig::ALL[0], SchedulerConfig::heft());
+        let mut want = Vec::with_capacity(72);
+        for priority in PriorityFn::ALL {
+            for compare in CompareFn::ALL {
+                for append_only in [false, true] {
+                    for critical_path in [false, true] {
+                        for sufferage in [false, true] {
+                            want.push(SchedulerConfig {
+                                priority,
+                                compare,
+                                append_only,
+                                critical_path,
+                                sufferage,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(SchedulerConfig::ALL.to_vec(), want);
     }
 
     #[test]

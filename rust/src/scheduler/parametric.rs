@@ -50,7 +50,7 @@ pub struct ParametricScheduler {
 /// priority tie), so the pop sequence of a heap of entries depends only
 /// on the inserted multiset — never on insertion order or on the
 /// capacity a recycled [`super::SchedulerWorkspace`] heap retains.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub(crate) struct Entry(pub(crate) f64, pub(crate) Reverse<TaskId>);
 
 impl Eq for Entry {}
@@ -69,9 +69,55 @@ impl Ord for Entry {
 }
 
 /// Best and (optional) second-best candidate for one task.
-struct Choice {
-    best: Candidate,
-    second: Option<Candidate>,
+pub(crate) struct Choice {
+    pub(crate) best: Candidate,
+    pub(crate) second: Option<Candidate>,
+}
+
+impl Choice {
+    /// Sufferage value: how much worse the second-best node is
+    /// (`Compare(second, best) ≥ 0`); 0 when there is no alternative.
+    pub(crate) fn sufferage_value(&self, compare: super::CompareFn) -> f64 {
+        self.second
+            .as_ref()
+            .map(|s| compare.eval(s, &self.best))
+            .unwrap_or(0.0)
+    }
+}
+
+/// The candidate-selection chain of Algorithm 6 (lines 12–19): evaluate
+/// the window on every node (or only the pinned one) in ascending node
+/// order and keep the best and second-best per the comparison function.
+///
+/// This is the **single source of truth** for the hot per-config path
+/// ([`ParametricScheduler::choose_with`]) and the fused engine's
+/// memo-backed evaluation ([`super::fused`]): bit-exactness between the
+/// two cores reduces to both calling this one function with window
+/// providers that return identical candidates. (The pre-refactor
+/// [`ParametricScheduler::choose`] keeps its own verbatim copy — it is
+/// the frozen reference oracle.)
+pub(crate) fn select_candidate(
+    compare: super::CompareFn,
+    num_nodes: usize,
+    pinned: Option<NodeId>,
+    mut window: impl FnMut(NodeId) -> Candidate,
+) -> Choice {
+    if let Some(u) = pinned {
+        // Critical-path reservation: single candidate, no sufferage.
+        return Choice { best: window(u), second: None };
+    }
+    let mut best = window(0);
+    let mut second: Option<Candidate> = None;
+    for u in 1..num_nodes {
+        let c = window(u);
+        if compare.eval(&c, &best) < 0.0 {
+            second = Some(best);
+            best = c;
+        } else if second.as_ref().map_or(true, |s| compare.eval(&c, s) < 0.0) {
+            second = Some(c);
+        }
+    }
+    Choice { best, second }
 }
 
 impl ParametricScheduler {
@@ -128,14 +174,11 @@ impl ParametricScheduler {
         Choice { best, second }
     }
 
-    /// Sufferage value of a choice: how much worse the second-best node
-    /// is (`Compare(second, best) ≥ 0`); 0 when there is no alternative.
+    /// Sufferage value of a choice under this scheduler's comparison
+    /// function (shared with the fused engine via
+    /// [`Choice::sufferage_value`]).
     fn sufferage_value(&self, choice: &Choice) -> f64 {
-        choice
-            .second
-            .as_ref()
-            .map(|s| self.cfg.compare.eval(s, &choice.best))
-            .unwrap_or(0.0)
+        choice.sufferage_value(self.cfg.compare)
     }
 
     /// Run Algorithm 6 on an instance, producing a complete schedule.
@@ -249,7 +292,10 @@ impl ParametricScheduler {
     /// the insertion scan enters the timeline through the gap index —
     /// no predecessor walks, no cost divisions, no full rescans.
     /// Bit-identical to [`ParametricScheduler::choose`] (same candidate
-    /// values, same iteration order, same comparisons).
+    /// values, same iteration order, same comparisons). The selection
+    /// chain itself is the shared [`select_candidate`], which the fused
+    /// engine also runs (over its window memo) — one source of truth
+    /// for the fused/per-config bit-exactness contract.
     fn choose_with(
         &self,
         ctx: &SchedulingContext<'_>,
@@ -258,34 +304,13 @@ impl ParametricScheduler {
         exec_row: &[f64],
         pinned: Option<NodeId>,
     ) -> Choice {
-        let window = |u: NodeId| -> Candidate {
+        select_candidate(self.cfg.compare, ctx.instance().network.len(), pinned, |u| {
             if self.cfg.append_only {
                 window_append_only_at(sched, u, dat_row[u], exec_row[u])
             } else {
                 window_insertion_indexed(sched, u, dat_row[u], exec_row[u])
             }
-        };
-
-        if let Some(u) = pinned {
-            // Critical-path reservation: single candidate, no sufferage.
-            return Choice { best: window(u), second: None };
-        }
-
-        let mut best = window(0);
-        let mut second: Option<Candidate> = None;
-        for u in 1..ctx.instance().network.len() {
-            let c = window(u);
-            if self.cfg.compare.eval(&c, &best) < 0.0 {
-                second = Some(best);
-                best = c;
-            } else if second
-                .as_ref()
-                .map_or(true, |s| self.cfg.compare.eval(&c, s) < 0.0)
-            {
-                second = Some(c);
-            }
-        }
-        Choice { best, second }
+        })
     }
 
     /// Run Algorithm 6 against a shared [`SchedulingContext`] with a
@@ -314,6 +339,10 @@ impl ParametricScheduler {
     /// [`ParametricScheduler::schedule_reference`] for every
     /// configuration and any workspace state (property-tested and
     /// pinned by the golden snapshots).
+    ///
+    /// KEEP IN SYNC: [`super::fused`]'s `apply` mirrors this loop's
+    /// tail (placement + successor DAT fold + readiness pushes), and
+    /// its sufferage handling mirrors the top-2 selection below.
     pub fn schedule_into(
         &self,
         ctx: &SchedulingContext<'_>,
@@ -355,8 +384,16 @@ impl ParametricScheduler {
                 .map(|t| Entry(prio[t], Reverse(t))),
         );
 
+        // Window scans this run will perform, accumulated locally and
+        // flushed to the process-wide counter once at the end (an atomic
+        // per scan would tax the innermost loop). `choose_with` scans one
+        // window per node, or exactly one when the task is pinned.
+        let mut scans = 0u64;
+        let scan_cost = |pin: Option<NodeId>| if pin.is_some() { 1 } else { m as u64 };
+
         let mut scheduled = 0usize;
         while let Some(Entry(_, Reverse(t))) = ready.pop() {
+            scans += scan_cost(pin_of(t));
             let choice_t = self.choose_with(
                 ctx,
                 &sched,
@@ -370,6 +407,7 @@ impl ParametricScheduler {
             let (task, cand) = if self.cfg.sufferage {
                 match ready.pop() {
                     Some(Entry(p2, Reverse(t2))) => {
+                        scans += scan_cost(pin_of(t2));
                         let choice_t2 = self.choose_with(
                             ctx,
                             &sched,
@@ -413,6 +451,7 @@ impl ParametricScheduler {
             }
         }
         debug_assert_eq!(scheduled, n, "list scheduling must place every task");
+        super::fused::note_window_scans(scans);
         sched
     }
 }

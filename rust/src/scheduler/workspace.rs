@@ -56,6 +56,80 @@ pub struct SchedulerWorkspace {
     /// Recycled schedules: [`Schedule::reset`] on reuse, so timeline
     /// and gap-index buffers survive across configs.
     pub(crate) pool: Vec<Schedule>,
+    /// Recycled lockstep-group loop states for the fused sweep engine
+    /// ([`super::fused`]): every fork clones into one of these instead
+    /// of allocating, so a fused sweep's allocation count is bounded by
+    /// the *peak* number of live groups ever seen, not by fork events.
+    pub(crate) group_pool: Vec<GroupScratch>,
+}
+
+/// One lockstep group's mutable loop state minus the output schedule:
+/// the incremental DAT matrix, the missing-predecessor counters, and
+/// the ready heap. The fused engine takes these from the workspace's
+/// group pool, clones them buffer-reusingly on forks, and recycles them
+/// when a group finishes.
+#[derive(Debug, Default)]
+pub(crate) struct GroupScratch {
+    pub(crate) dat: Vec<f64>,
+    pub(crate) missing: Vec<usize>,
+    pub(crate) ready: BinaryHeap<Entry>,
+}
+
+impl GroupScratch {
+    /// Shape the buffers for a fresh run over `n` tasks and `m` nodes
+    /// (DAT zeroed, counters and heap emptied), counting growth exactly
+    /// like [`SchedulerWorkspace::begin`].
+    pub(crate) fn begin(&mut self, n: usize, m: usize) {
+        if self.dat.capacity() < n * m {
+            note_alloc();
+        }
+        self.dat.clear();
+        self.dat.resize(n * m, 0.0);
+        if self.missing.capacity() < n {
+            note_alloc();
+            self.missing.reserve(n - self.missing.len());
+        }
+        self.missing.clear();
+        if self.ready.capacity() < n {
+            note_alloc();
+            self.ready.reserve(n - self.ready.len());
+        }
+        self.ready.clear();
+    }
+
+    /// Buffer-reusing deep copy of another group's loop state (the
+    /// copy-on-diverge fork). `Vec::clone_from` / `BinaryHeap`'s
+    /// delegating `clone_from` reuse existing capacity, so a fork into
+    /// a pooled scratch performs memcpys, not allocations, once warm.
+    pub(crate) fn copy_from(&mut self, src: &GroupScratch) {
+        if self.dat.capacity() < src.dat.len() {
+            note_alloc();
+        }
+        self.dat.clone_from(&src.dat);
+        if self.missing.capacity() < src.missing.len() {
+            note_alloc();
+        }
+        self.missing.clone_from(&src.missing);
+        if self.ready.capacity() < src.ready.len() {
+            note_alloc();
+        }
+        self.ready.clone_from(&src.ready);
+    }
+
+    /// Would [`GroupScratch::begin`] for this shape grow any buffer?
+    /// Lets warm-up code skip the (pure-memset) shaping of
+    /// already-large-enough pooled scratches.
+    pub(crate) fn would_grow(&self, n: usize, m: usize) -> bool {
+        self.dat.capacity() < n * m
+            || self.missing.capacity() < n
+            || self.ready.capacity() < n
+    }
+
+    /// Element capacity held (working-set proxy; see
+    /// [`SchedulerWorkspace::capacity`]).
+    fn capacity(&self) -> usize {
+        self.dat.capacity() + self.missing.capacity() + self.ready.capacity()
+    }
 }
 
 impl SchedulerWorkspace {
@@ -114,12 +188,30 @@ impl SchedulerWorkspace {
         self.pool.push(schedule);
     }
 
+    /// Take a group loop state from the pool, or allocate the first one
+    /// (counted as a buffer allocation, like a schedule-pool miss).
+    pub(crate) fn take_group_scratch(&mut self) -> GroupScratch {
+        self.group_pool.pop().unwrap_or_else(|| {
+            note_alloc();
+            GroupScratch::default()
+        })
+    }
+
+    /// Return a group loop state to the pool, keeping its buffers.
+    pub(crate) fn recycle_group_scratch(&mut self, scratch: GroupScratch) {
+        self.group_pool.push(scratch);
+    }
+
     /// Working-set proxy: total element capacity currently held by the
-    /// scratch buffers (DAT slots + counters + heap entries). Reported
-    /// by the scale benchmarks alongside task/edge counts so
-    /// `BENCH_*.json` documents are comparable across runs.
+    /// scratch buffers (DAT slots + counters + heap entries, including
+    /// pooled fused-group states). Reported by the scale benchmarks
+    /// alongside task/edge counts so `BENCH_*.json` documents are
+    /// comparable across runs.
     pub fn capacity(&self) -> usize {
-        self.dat.capacity() + self.missing.capacity() + self.ready.capacity()
+        self.dat.capacity()
+            + self.missing.capacity()
+            + self.ready.capacity()
+            + self.group_pool.iter().map(GroupScratch::capacity).sum::<usize>()
     }
 
     /// Process-wide number of workspace buffer-growth events so far
@@ -165,6 +257,33 @@ mod tests {
             "smaller/equal shapes must not regrow any buffer"
         );
         assert!(ws.dat.iter().all(|&x| x == 0.0), "DAT must be re-zeroed");
+    }
+
+    #[test]
+    fn group_scratch_round_trips_and_copies() {
+        let mut ws = SchedulerWorkspace::new();
+        let mut a = ws.take_group_scratch();
+        a.begin(3, 2);
+        a.dat[4] = 7.0;
+        a.missing.extend([0usize, 1, 2]);
+        a.ready.push(Entry(1.0, std::cmp::Reverse(0)));
+
+        let mut b = ws.take_group_scratch();
+        b.copy_from(&a);
+        assert_eq!(b.dat, a.dat);
+        assert_eq!(b.missing, a.missing);
+        assert_eq!(b.ready.len(), 1);
+        // The copy is independent state.
+        b.dat[4] = 0.0;
+        assert_eq!(a.dat[4], 7.0);
+
+        ws.recycle_group_scratch(a);
+        ws.recycle_group_scratch(b);
+        assert_eq!(ws.group_pool.len(), 2);
+        let c = ws.take_group_scratch();
+        assert_eq!(ws.group_pool.len(), 1, "take must reuse pooled scratch");
+        assert!(ws.capacity() >= 6, "pooled scratch counts toward capacity");
+        ws.recycle_group_scratch(c);
     }
 
     #[test]

@@ -191,6 +191,65 @@ fn trace_max_tasks_guard_refuses_oversized_corpora() {
 }
 
 #[test]
+fn threads_flag_parses_and_rejects_bad_values() {
+    // Valid: --threads pins the coordinator worker count.
+    let out = ptgs()
+        .args([
+            "trace",
+            "--input",
+            "rust/tests/data/traces/diamond.yaml",
+            "--schedulers",
+            "HEFT,MCT",
+            "--threads",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("distinct schedule(s)"), "stdout: {text}");
+
+    // Zero is an error (omit the flag for auto), not silently auto.
+    let out = ptgs()
+        .args([
+            "trace",
+            "--input",
+            "rust/tests/data/traces/diamond.yaml",
+            "--schedulers",
+            "HEFT",
+            "--threads",
+            "0",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--threads must be >= 1"));
+
+    // Non-numeric fails with a parse error naming the flag.
+    let out = ptgs()
+        .args(["simulate", "--count", "1", "--trials", "1", "--threads", "lots"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("invalid --threads"));
+
+    // PTGS_THREADS is the env fallback; a bad value also fails clearly.
+    let out = ptgs()
+        .env("PTGS_THREADS", "nope")
+        .args([
+            "trace",
+            "--input",
+            "rust/tests/data/traces/diamond.yaml",
+            "--schedulers",
+            "HEFT",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("invalid PTGS_THREADS"));
+}
+
+#[test]
 fn schedule_layered_structure_from_cli() {
     let out = ptgs()
         .args(["schedule", "--scheduler", "HEFT", "--structure", "layered", "--count", "1"])

@@ -11,16 +11,27 @@
 
 use std::sync::Mutex;
 
-use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::benchmark::{Harness, HarnessOptions, SimSweep};
 use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::graph::TaskGraph;
 use ptgs::instance::ProblemInstance;
-use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
+use ptgs::network::Network;
+use ptgs::ranks::RankBackend;
+use ptgs::scheduler::{fused, fused_sweep, SchedulerConfig, SchedulerWorkspace, SchedulingContext};
 use ptgs::sim::{Perturbation, ReplayPolicy};
 
 static COUNTER_GATE: Mutex<()> = Mutex::new(());
 
 fn instances(count: usize) -> Vec<ProblemInstance> {
     DatasetSpec { count, ..DatasetSpec::new(Structure::Chains, 1.0) }.generate()
+}
+
+/// A harness forced onto the per-config timing path (fused off).
+fn per_config_harness() -> Harness {
+    Harness {
+        options: HarnessOptions { fused: false, ..HarnessOptions::default() },
+        ..Harness::all_schedulers()
+    }
 }
 
 /// The acceptance criterion of the zero-recompute refactor: across a
@@ -81,18 +92,18 @@ fn sim_sweep_with_rescheduling_shares_the_context() {
     );
 }
 
-/// The workspace counterpart of the rank-computation contract: a full
-/// 72-config sweep over one instance grows each scheduler scratch
-/// buffer **at most once** — one DAT matrix, one counter vector, one
-/// ready heap, one pooled schedule — and a warmed workspace serves a
-/// second full sweep with zero buffer growth. This is what makes the
-/// coordinator's one-workspace-per-worker-thread reuse O(1) allocations
-/// per config.
+/// The workspace counterpart of the rank-computation contract, on the
+/// per-config timing path: a full 72-config sweep over one instance
+/// grows each scheduler scratch buffer **at most once** — one DAT
+/// matrix, one counter vector, one ready heap, one pooled schedule —
+/// and a warmed workspace serves a second full sweep with zero buffer
+/// growth. This is what makes the coordinator's
+/// one-workspace-per-worker-thread reuse O(1) allocations per config.
 #[test]
 fn full_sweep_grows_each_workspace_buffer_at_most_once() {
     let _gate = COUNTER_GATE.lock().unwrap();
     let inst = instances(1).pop().unwrap();
-    let h = Harness::all_schedulers();
+    let h = per_config_harness();
 
     let mut ws = SchedulerWorkspace::new();
     let before = SchedulerWorkspace::buffer_allocations();
@@ -117,13 +128,138 @@ fn full_sweep_grows_each_workspace_buffer_at_most_once() {
     }
 }
 
+/// The fused sweep's allocation contract: the cold sweep grows a
+/// deterministic set of group/schedule buffers (one per peak live
+/// lockstep group), and once the pools have settled (two warm-up
+/// sweeps: pool positions pair with group roles deterministically from
+/// the second run on) a full fused sweep — including every fork clone —
+/// performs **zero** buffer growth.
+#[test]
+fn fused_sweep_reuses_workspace_after_warmup() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let inst = instances(1).pop().unwrap();
+    let h = Harness::all_schedulers();
+    assert!(h.options.fused, "fused must be the default sweep path");
+
+    let mut ws = SchedulerWorkspace::new();
+    let before = SchedulerWorkspace::buffer_allocations();
+    let records = h.run_instance_ws("d", 0, &inst, &mut ws);
+    assert_eq!(records.len(), 72);
+    assert!(
+        SchedulerWorkspace::buffer_allocations() - before > 0,
+        "cold fused sweep materializes its group buffers"
+    );
+    let _ = h.run_instance_ws("d", 0, &inst, &mut ws);
+
+    let before = SchedulerWorkspace::buffer_allocations();
+    let again = h.run_instance_ws("d", 0, &inst, &mut ws);
+    assert_eq!(
+        SchedulerWorkspace::buffer_allocations() - before,
+        0,
+        "a settled workspace must serve a full fused sweep (incl. forks) with zero growth"
+    );
+    for (a, b) in records.iter().zip(&again) {
+        assert_eq!(a.makespan, b.makespan, "fused reuse must not change results");
+        assert_eq!(a.schedule_hash, b.schedule_hash, "{}", a.scheduler);
+    }
+}
+
+/// The tentpole sharing contract, counter-asserted: on a
+/// homogeneous-network chain every config makes the same placement
+/// decisions, so the fused sweep never forks and shares each window
+/// scan across the whole EFT/EST/Quickest compare triple (and more).
+/// The per-config core must therefore perform at least 3× the window
+/// scans the fused engine does.
+#[test]
+fn fused_shares_window_scans_by_at_least_the_compare_triple() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let mut g = TaskGraph::new();
+    for i in 0..12 {
+        g.add_task(format!("t{i}"), 1.0);
+    }
+    for i in 0..11 {
+        g.add_edge(i, i + 1, 1.0);
+    }
+    let inst = ProblemInstance::new("chain", g, Network::homogeneous(2, 1.0));
+    let configs = SchedulerConfig::all();
+    let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+    let mut ws = SchedulerWorkspace::new();
+
+    let before = fused::window_scans();
+    for cfg in &configs {
+        let s = cfg.build().schedule_into(&ctx, &mut ws);
+        ws.recycle(s);
+    }
+    let per_config_scans = fused::window_scans() - before;
+
+    let before_scans = fused::window_scans();
+    let before_forks = fused::fork_events();
+    let outcome = fused_sweep(&ctx, &configs, &mut ws);
+    let fused_scans = fused::window_scans() - before_scans;
+    assert_eq!(outcome.stats.window_scans, fused_scans, "stats must match the counter");
+    assert_eq!(
+        fused::fork_events() - before_forks,
+        0,
+        "a homogeneous chain must never diverge"
+    );
+    assert_eq!(outcome.stats.final_groups, 3, "one terminal group per priority fn");
+    assert!(
+        fused_scans * 3 <= per_config_scans,
+        "fused must share ≥ the compare-triple factor: fused {fused_scans} vs \
+         per-config {per_config_scans}"
+    );
+    for grp in outcome.groups {
+        ws.recycle(grp.schedule);
+    }
+}
+
+/// Fork counts are a pure function of the instance: repeated fused
+/// sweeps report identical fork events, window scans, and group
+/// structure, and the schedule-level dedup can only merge groups
+/// (configs that diverged mid-run may still converge to equal final
+/// schedules), never split them.
+#[test]
+fn fused_fork_counts_are_deterministic() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let inst = instances(2).pop().unwrap();
+    let configs = SchedulerConfig::all();
+    let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+    let mut ws = SchedulerWorkspace::new();
+
+    let a = fused_sweep(&ctx, &configs, &mut ws);
+    let a_members: Vec<Vec<usize>> = a.groups.iter().map(|g| g.members.clone()).collect();
+    let mut hashes: Vec<u64> = a.groups.iter().map(|g| g.schedule.content_hash()).collect();
+    let a_stats = a.stats;
+    for grp in a.groups {
+        ws.recycle(grp.schedule);
+    }
+
+    let b = fused_sweep(&ctx, &configs, &mut ws);
+    assert_eq!(b.stats, a_stats, "fork/scan counts must be deterministic across runs");
+    let b_members: Vec<Vec<usize>> = b.groups.iter().map(|g| g.members.clone()).collect();
+    assert_eq!(b_members, a_members);
+    for grp in b.groups {
+        ws.recycle(grp.schedule);
+    }
+
+    hashes.sort_unstable();
+    hashes.dedup();
+    assert!(
+        hashes.len() <= a_stats.final_groups,
+        "distinct schedules can never exceed terminal groups"
+    );
+}
+
 /// Workspace reuse across *instances of different shapes* stays within
 /// the grow-only contract: once every shape has been seen, re-sweeping
-/// the whole set triggers no further buffer growth.
+/// the whole set triggers no further buffer growth. Pinned on the
+/// per-config path, whose four buffers settle after one pass (the
+/// fused engine's pools need two passes to settle — see
+/// `fused_sweep_reuses_workspace_after_warmup`).
 #[test]
 fn workspace_growth_is_monotone_across_instance_shapes() {
     let _gate = COUNTER_GATE.lock().unwrap();
-    let h = Harness::all_schedulers();
+    let h = per_config_harness();
     let insts = instances(3);
     let mut ws = SchedulerWorkspace::new();
     for (i, inst) in insts.iter().enumerate() {

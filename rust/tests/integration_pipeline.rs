@@ -18,7 +18,11 @@ fn run_mini() -> BenchmarkResults {
     let coord = Coordinator {
         options: CoordinatorOptions {
             chunk_size: 1,
-            harness: HarnessOptions { validate: true, timing_repeats: 1 },
+            // Per-config timing: this pipeline exercises the paper's
+            // runtime-ratio and two-axis pareto machinery, which the
+            // fused path's amortized runtimes would flatten to 1.0
+            // (fused ≡ per-config is covered in benchmark::tests).
+            harness: HarnessOptions { validate: true, timing_repeats: 1, fused: false },
             ..Default::default()
         },
         ..Coordinator::all_schedulers()

@@ -274,6 +274,9 @@ fn cli_trace_static_summary_over_directory() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("zero-noise replay: exact for 3 config(s) on 4 trace(s)"), "{text}");
     assert!(text.contains("montage_like: best"), "{text}");
+    // The dedup satellite: every summary row reports how many of the
+    // configs produced genuinely different schedules.
+    assert!(text.contains("distinct schedule(s)"), "{text}");
 }
 
 #[test]

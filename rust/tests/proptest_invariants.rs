@@ -11,8 +11,8 @@ use ptgs::network::Network;
 use ptgs::ranks::{native, RankBackend};
 use ptgs::schedule::EPS;
 use ptgs::scheduler::{
-    data_available_time, window_append_only, window_insertion, window_insertion_indexed,
-    SchedulerConfig, SchedulerWorkspace, SchedulingContext,
+    data_available_time, fused_sweep, window_append_only, window_insertion,
+    window_insertion_indexed, SchedulerConfig, SchedulerWorkspace, SchedulingContext,
 };
 use ptgs::sim::{
     perturbed_instance, simulate, NoiseTrace, Perturbation, ReplayPolicy, SimOptions,
@@ -171,6 +171,63 @@ fn prop_csr_adjacency_matches_edge_semantics() {
         inserted.sort_unstable();
         assert_eq!(flat, inserted, "seed {case}: edges() must cover the edge set");
         assert!(g.validate().is_ok(), "seed {case}");
+    }
+}
+
+/// **Fused-sweep keystone invariant**: the lockstep/copy-on-diverge
+/// engine produces, for every one of the 72 configs, a schedule
+/// bit-identical to that config's own `schedule_into` run — on
+/// arbitrary random DAGs *and* on instances drawn from every dataset
+/// structure, including the wide `Layered` scale family. This is what
+/// licenses making the fused engine the default sweep path.
+#[test]
+fn prop_fused_sweep_equals_per_config_all_72() {
+    let configs = SchedulerConfig::all();
+    let mut ws = SchedulerWorkspace::new(); // dirty across cases: reuse must not leak
+    let mut oracle_ws = SchedulerWorkspace::new();
+
+    let mut check = |inst: &ProblemInstance, label: &str| {
+        let ctx = SchedulingContext::new(inst, RankBackend::Native);
+        let outcome = fused_sweep(&ctx, &configs, &mut ws);
+        let map = outcome.group_of();
+        assert_eq!(
+            outcome.groups.iter().map(|g| g.members.len()).sum::<usize>(),
+            configs.len(),
+            "{label}: groups must partition the configs"
+        );
+        for (i, cfg) in configs.iter().enumerate() {
+            let want = cfg.build().schedule_into(&ctx, &mut oracle_ws);
+            assert_eq!(
+                outcome.groups[map[i]].schedule,
+                want,
+                "{label}: {} fused schedule drifted from schedule_into",
+                cfg.name()
+            );
+            oracle_ws.recycle(want);
+        }
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+    };
+
+    // Arbitrary random DAGs.
+    for case in 0..8u64 {
+        let mut rng = Rng::seeded(0xF05E_D + case);
+        let inst = arbitrary_instance(&mut rng);
+        check(&inst, &format!("arbitrary seed {case}"));
+    }
+    // Every dataset structure, including Layered (excluded from
+    // Structure::ALL to keep the paper grid intact, so added by hand).
+    let mut structures = ptgs::datasets::Structure::ALL.to_vec();
+    structures.push(ptgs::datasets::Structure::Layered);
+    for structure in structures {
+        let spec = ptgs::datasets::DatasetSpec {
+            count: 2,
+            ..ptgs::datasets::DatasetSpec::new(structure, 1.0)
+        };
+        for (i, inst) in spec.generate().iter().enumerate() {
+            check(inst, &format!("{structure:?} instance {i}"));
+        }
     }
 }
 
