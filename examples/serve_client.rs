@@ -1,0 +1,89 @@
+//! Talk to a running `ptgs serve` daemon: submit a generated instance,
+//! print the per-config makespan spread and dedup summary, resubmit the
+//! same body to demonstrate the content-hash cache, and read back the
+//! daemon's `/stats` counters.
+//!
+//! ```bash
+//! # terminal 1
+//! cargo run --release -- serve
+//! # terminal 2
+//! cargo run --release --example serve_client
+//! cargo run --release --example serve_client -- --addr 127.0.0.1:7463 --shutdown
+//! ```
+//!
+//! `--shutdown` additionally POSTs `/shutdown` at the end — the
+//! daemon's clean-exit control path (useful from scripts and CI).
+
+use ptgs::serve::http;
+use ptgs::util::error::Result;
+use ptgs::util::{parse, Args, ToJson, Value};
+use ptgs::{anyhow, prelude::*};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.get_or("addr", "127.0.0.1:7463");
+
+    // A small chains instance; any ProblemInstance JSON works, e.g. one
+    // loaded from a workflow trace with `load_trace`.
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
+    let mut rng = spec.instance_rng(0);
+    let inst = spec.generate_one(&mut rng);
+    let body = Value::obj(vec![("instance", inst.to_json())]).to_string();
+
+    let mut client = http::Client::connect(&addr)
+        .map_err(|e| anyhow!("connecting to {addr}: {e} (is `ptgs serve` running?)"))?;
+
+    let (status, resp) = client.request("POST", "/schedule", &body)?;
+    if status != 200 {
+        return Err(anyhow!("POST /schedule -> {status}: {resp}"));
+    }
+    let doc = parse(&resp).map_err(|e| anyhow!(e))?;
+    let payload = doc.req("payload").map_err(|e| anyhow!(e))?;
+    let results = payload.req_arr("results").map_err(|e| anyhow!(e))?;
+    let makespans: Vec<f64> = results
+        .iter()
+        .map(|r| r.req_f64("makespan").map_err(|e| anyhow!(e)))
+        .collect::<Result<_>>()?;
+    let best = makespans.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst = makespans.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "{}: {} tasks on {} nodes — {} configs, makespan {best:.2}..{worst:.2}, \
+         {} distinct schedules",
+        payload.req_str("instance").map_err(|e| anyhow!(e))?,
+        payload.req_u64("num_tasks").map_err(|e| anyhow!(e))?,
+        payload.req_u64("num_nodes").map_err(|e| anyhow!(e))?,
+        results.len(),
+        payload.req_u64("distinct_schedules").map_err(|e| anyhow!(e))?,
+    );
+
+    // Byte-identical resubmission: answered from the response cache.
+    let (status, resp) = client.request("POST", "/schedule", &body)?;
+    let doc = parse(&resp).map_err(|e| anyhow!(e))?;
+    println!(
+        "resubmission -> {status}, cached: {} ({}us)",
+        doc.req_bool("cached").map_err(|e| anyhow!(e))?,
+        doc.req_u64("latency_us").map_err(|e| anyhow!(e))?,
+    );
+
+    let (status, stats) = client.request("GET", "/stats", "")?;
+    if status != 200 {
+        return Err(anyhow!("GET /stats -> {status}: {stats}"));
+    }
+    let s = parse(&stats).map_err(|e| anyhow!(e))?;
+    println!(
+        "stats: {} ok / {} total, cache hit rate {:.2}, queue {}/{}, p50 {}us p99 {}us",
+        s.req_u64("requests_ok").map_err(|e| anyhow!(e))?,
+        s.req_u64("requests_total").map_err(|e| anyhow!(e))?,
+        s.req_f64("cache_hit_rate").map_err(|e| anyhow!(e))?,
+        s.req_u64("queue_depth").map_err(|e| anyhow!(e))?,
+        s.req_u64("queue_capacity").map_err(|e| anyhow!(e))?,
+        s.req("latency").and_then(|l| l.req_u64("p50_us")).map_err(|e| anyhow!(e))?,
+        s.req("latency").and_then(|l| l.req_u64("p99_us")).map_err(|e| anyhow!(e))?,
+    );
+
+    if args.has("shutdown") {
+        let (status, _) = client.request("POST", "/shutdown", "")?;
+        println!("shutdown -> {status}");
+    }
+    Ok(())
+}

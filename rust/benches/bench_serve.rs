@@ -1,0 +1,179 @@
+//! `ptgs serve` daemon benchmark: end-to-end request latency over real
+//! localhost sockets for a mix of trace sizes (the four vendored
+//! workflow fixtures plus a synthetic chains instance), the cached
+//! resubmission fast path, and a multi-client throughput section
+//! measuring requests/sec with the daemon's own p50/p99 latency
+//! counters scraped from `GET /stats`.
+//!
+//! Emits machine-readable `BENCH_serve.json` (override the path with
+//! `PTGS_BENCH_OUT`) so CI can track serving latency and throughput on
+//! every run (`PTGS_BENCH_FAST=1 cargo bench --bench bench_serve`).
+
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ptgs::benchlib::{self, Bencher, Config};
+use ptgs::datasets::traces::{load_trace, TraceOptions};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::serve::{http, ServeOptions, Server};
+use ptgs::util::{parse, ToJson, Value};
+
+const FIXTURES: [&str; 4] = [
+    "diamond.yaml",
+    "epigenomics_like.json",
+    "montage_like.json",
+    "seismology_like.json",
+];
+
+fn load_fixture(name: &str) -> ProblemInstance {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/traces")
+        .join(name);
+    load_trace(&path, &TraceOptions::default())
+        .unwrap_or_else(|e| panic!("loading {name}: {e}"))
+}
+
+/// Mixed trace sizes: every vendored fixture plus a synthetic chains
+/// instance (the paper's default graph scale).
+fn workloads() -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    for &name in FIXTURES {
+        let short = name.trim_end_matches(".json").trim_end_matches(".yaml");
+        let inst = load_fixture(name);
+        let body = Value::obj(vec![("instance", inst.to_json())]).to_string();
+        out.push((short.to_string(), body));
+    }
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
+    let mut rng = spec.instance_rng(0);
+    let inst = spec.generate_one(&mut rng);
+    let body = Value::obj(vec![("instance", inst.to_json())]).to_string();
+    out.push(("chains_synthetic".to_string(), body));
+    out
+}
+
+fn main() {
+    let mut b = Bencher::from_env().with_config(Config {
+        measure_time: Duration::from_millis(200),
+        samples: 10,
+        warmup: Duration::from_millis(100),
+    });
+    let workloads = workloads();
+
+    // ---- per-request end-to-end latency, cache disabled (every timed
+    // iteration runs the full fused sweep on a warm worker) ----
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        cache_size: 0,
+        ..ServeOptions::default()
+    })
+    .expect("starting uncached server");
+    let addr = server.local_addr().to_string();
+    for (name, body) in &workloads {
+        // Warm the worker's workspace for this shape before timing.
+        let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", body).unwrap();
+        assert_eq!(status, 200, "{name}: {resp}");
+        b.bench(&format!("serve/request/{name}"), || {
+            let (status, resp) =
+                http::roundtrip(black_box(&addr), "POST", "/schedule", black_box(body)).unwrap();
+            assert_eq!(status, 200, "{resp}");
+            black_box(resp);
+        });
+    }
+    drop(server);
+
+    // ---- cached resubmission fast path ----
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        ..ServeOptions::default()
+    })
+    .expect("starting caching server");
+    let addr = server.local_addr().to_string();
+    let (_, body) = &workloads[0];
+    let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    b.bench("serve/request_cached", || {
+        let (status, resp) =
+            http::roundtrip(black_box(&addr), "POST", "/schedule", black_box(body)).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        black_box(resp);
+    });
+    drop(server);
+
+    // ---- throughput: concurrent clients cycling the workload mix ----
+    let client_threads = 8usize;
+    let requests_per_client = if benchlib::fast_mode() { 5 } else { 40 };
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        cache_size: 0,
+        ..ServeOptions::default()
+    })
+    .expect("starting throughput server");
+    let workers = ServeOptions::default().workers;
+    let addr = server.local_addr().to_string();
+    // Warm every worker across the shapes before the clock starts.
+    for (_, body) in &workloads {
+        let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..client_threads {
+            let addr = &addr;
+            let workloads = &workloads;
+            scope.spawn(move || {
+                let mut client = http::Client::connect(addr).unwrap();
+                for i in 0..requests_per_client {
+                    let (_, body) = &workloads[(c + i) % workloads.len()];
+                    let (status, resp) = client.request("POST", "/schedule", body).unwrap();
+                    assert_eq!(status, 200, "{resp}");
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let total_requests = client_threads * requests_per_client;
+    let rps = total_requests as f64 / elapsed.as_secs_f64();
+    let (status, stats_body) = http::roundtrip(&addr, "GET", "/stats", "").unwrap();
+    assert_eq!(status, 200, "{stats_body}");
+    let stats = parse(&stats_body).expect("parsing /stats");
+    let latency = stats.req("latency").expect("latency block");
+    let p50_us = latency.req_u64("p50_us").unwrap_or(0);
+    let p99_us = latency.req_u64("p99_us").unwrap_or(0);
+    let max_us = latency.req_u64("max_us").unwrap_or(0);
+    println!(
+        "serve: {total_requests} requests over {client_threads} clients / {workers} workers in \
+         {:.2}s — {rps:.1} req/s, p50 {p50_us}us, p99 {p99_us}us",
+        elapsed.as_secs_f64()
+    );
+    drop(server);
+
+    // ---- machine-readable document ----
+    let mut doc = benchlib::measurements_json(&b.results);
+    if let Value::Obj(fields) = &mut doc {
+        fields.push((
+            "serve".to_string(),
+            Value::obj(vec![
+                ("client_threads", Value::Num(client_threads as f64)),
+                ("workers", Value::Num(workers as f64)),
+                ("requests", Value::Num(total_requests as f64)),
+                ("wall_s", Value::Num(elapsed.as_secs_f64())),
+                ("requests_per_sec", Value::Num(rps)),
+                ("p50_us", Value::Num(p50_us as f64)),
+                ("p99_us", Value::Num(p99_us as f64)),
+                ("max_us", Value::Num(max_us as f64)),
+                ("trace_mix", Value::Arr(
+                    workloads.iter().map(|(n, _)| Value::Str(n.clone())).collect(),
+                )),
+            ]),
+        ));
+    }
+    let out = std::env::var("PTGS_BENCH_OUT")
+        .unwrap_or_else(|_| "results/BENCH_serve.json".to_string());
+    let path = PathBuf::from(out);
+    benchlib::write_json(&path, &doc).expect("writing BENCH_serve.json");
+    println!("wrote {}", path.display());
+}

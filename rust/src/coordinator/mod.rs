@@ -59,11 +59,33 @@ pub fn sort_canonical<T: CanonicalOrder>(records: &mut [T]) {
 }
 
 /// Live progress counters (shared with the caller for monitoring).
+///
+/// On a run with failures, `jobs_done + jobs_failed == jobs_total` once
+/// `run_jobs` returns; [`Metrics::failed_jobs`] names each failed job.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub jobs_total: AtomicUsize,
+    /// Jobs that completed and contributed records.
     pub jobs_done: AtomicUsize,
+    /// Jobs whose `per_job` panicked: contained, counted, and skipped —
+    /// the rest of the sweep keeps running (see [`Coordinator`] docs on
+    /// `run_jobs` failure semantics).
+    pub jobs_failed: AtomicUsize,
     pub records: AtomicUsize,
+    /// Identity + panic message of every failed job, in completion
+    /// order (`"{job:?}: {panic message}"`).
+    pub failed_jobs: Mutex<Vec<String>>,
+}
+
+impl Metrics {
+    /// Record one contained per-job panic.
+    fn note_failure(&self, description: String) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        self.failed_jobs
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(description);
+    }
 }
 
 /// Coordinator configuration.
@@ -160,9 +182,23 @@ impl Coordinator {
     /// [`HarnessOptions::fused`], each in-job sweep runs through the
     /// fused lockstep engine whose fork clones draw from the same
     /// per-worker pools.
+    ///
+    /// Failure semantics: a `per_job` panic is **contained**, never
+    /// propagated. The panic is caught (`catch_unwind`), the job is
+    /// counted in [`Metrics::jobs_failed`] with its identity and panic
+    /// message recorded in [`Metrics::failed_jobs`], the worker's
+    /// workspace is replaced (its scratch may be mid-update), and the
+    /// worker moves on to the next job. Before this hardening, one
+    /// panicking job poisoned the shared queue mutex and cascaded a
+    /// panic through every worker and the `thread::scope` leader,
+    /// aborting the whole sweep — intolerable for the long-lived
+    /// `ptgs serve` daemon, which shares this containment policy. The
+    /// queue lock itself also recovers from poisoning
+    /// (`unwrap_or_else(into_inner)`): the queue's `Vec` state is valid
+    /// after any panic, since `pop` is the only mutation.
     fn run_jobs<J, R, F>(&self, jobs: Vec<J>, per_job: F) -> (Vec<R>, Arc<Metrics>)
     where
-        J: Send,
+        J: Send + std::fmt::Debug,
         R: Send,
         F: Fn(&Harness, &mut SchedulerWorkspace, &J) -> Vec<R> + Sync,
     {
@@ -188,9 +224,24 @@ impl Coordinator {
                 scope.spawn(move || {
                     let mut ws = SchedulerWorkspace::new();
                     loop {
-                        let job = { queue.lock().unwrap().pop() };
+                        let job = {
+                            queue.lock().unwrap_or_else(|e| e.into_inner()).pop()
+                        };
                         let Some(job) = job else { break };
-                        let batch = per_job(&harness, &mut ws, &job);
+                        let batch = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| per_job(&harness, &mut ws, &job)),
+                        );
+                        let batch = match batch {
+                            Ok(batch) => batch,
+                            Err(payload) => {
+                                // Contained: count it, name it, drop the
+                                // possibly-inconsistent scratch, move on.
+                                let msg = crate::util::panic_message(payload.as_ref());
+                                metrics.note_failure(format!("{job:?}: {msg}"));
+                                ws = SchedulerWorkspace::new();
+                                continue;
+                            }
+                        };
                         metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
                         metrics.records.fetch_add(batch.len(), Ordering::Relaxed);
                         // Bounded send: blocks (backpressure) when the
@@ -461,6 +512,39 @@ mod tests {
                 .run_instances_sim(&instances, &sweep);
         sort_canonical(&mut serial_sim);
         assert_eq!(par_sim, serial_sim, "trace sim sweep must match serial byte-for-byte");
+    }
+
+    #[test]
+    fn panicking_job_does_not_abort_the_sweep() {
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers: 2, chunk_size: 1, ..Default::default() },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
+        };
+        // Regression: before catch_unwind + poison recovery, job 3's
+        // panic poisoned the shared queue mutex and cascaded through
+        // every worker and the thread::scope leader.
+        let jobs: Vec<usize> = (0..6).collect();
+        let (mut records, metrics) = coord.run_jobs(jobs, |_harness, _ws, &job| {
+            if job == 3 {
+                panic!("synthetic failure in job {job}");
+            }
+            vec![job]
+        });
+        records.sort_unstable();
+        assert_eq!(records, vec![0, 1, 2, 4, 5], "surviving jobs all complete");
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            metrics.jobs_done.load(Ordering::Relaxed)
+                + metrics.jobs_failed.load(Ordering::Relaxed),
+            metrics.jobs_total.load(Ordering::Relaxed),
+            "every job is accounted for"
+        );
+        let failed = metrics.failed_jobs.lock().unwrap();
+        assert_eq!(failed.len(), 1);
+        assert!(
+            failed[0].contains("3") && failed[0].contains("synthetic failure in job 3"),
+            "failed job identity + message surfaced: {failed:?}"
+        );
     }
 
     #[test]

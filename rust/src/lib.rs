@@ -48,6 +48,11 @@
 //!   static makespan bit-exactly; robustness ratios surface through
 //!   [`benchmark::Harness`] / [`coordinator`] sweeps and the
 //!   [`analysis::robustness_table`].
+//! * [`serve`] — scheduling as a service: the `ptgs serve` daemon
+//!   (in-crate HTTP/1.1, pure `std::thread`) running the fused sweep
+//!   per request, with a bounded job queue (429 backpressure),
+//!   per-request deadlines, warm per-worker workspaces, and a
+//!   content-hash response cache.
 //! * [`analysis`] — pareto fronts, per-component effects, pairwise
 //!   interactions, the robustness table, and renderers for every
 //!   table/figure in the paper.
@@ -78,6 +83,7 @@ pub mod ranks;
 pub mod runtime;
 pub mod schedule;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
@@ -102,6 +108,7 @@ pub mod prelude {
         SchedulingContext,
     };
     pub use crate::benchmark::{SimRecord, SimSweep};
+    pub use crate::serve::{ServeOptions, Server};
     pub use crate::sim::{
         perturbed_instance, simulate, simulate_against, simulate_into, NoiseTrace,
         Perturbation, ReplayPolicy, SimOptions, SimOutcome,

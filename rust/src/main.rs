@@ -9,6 +9,7 @@
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
 //! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N|--workers 0] [--fused] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
+//! ptgs serve     [--addr 127.0.0.1:7463] [--threads N] [--queue-depth 64] [--timeout-ms 30000] [--cache-size 256] [--schedulers all] [--debug]
 //! ptgs list      schedulers|datasets|artifacts
 //! ```
 //!
@@ -46,6 +47,8 @@ COMMANDS:
   analyze    derive tables/figures from saved benchmark results
   reproduce  full paper reproduction (benchmark + all 13 artifacts)
   rank       compute task ranks (native or XLA backend)
+  serve      run the scheduling daemon (HTTP/1.1 JSON API, fused sweep
+             per request; POST /shutdown for clean exit)
   list       list schedulers | datasets | artifacts
 
 Run `ptgs <COMMAND> --help`-style flags per the module docs in
@@ -62,6 +65,7 @@ fn main() {
         Some("analyze") => cmd_analyze(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("rank") => cmd_rank(&args),
+        Some("serve") => cmd_serve(&args),
         Some("adversarial") => cmd_adversarial(&args),
         Some("list") => cmd_list(&args),
         _ => {
@@ -567,6 +571,41 @@ fn cmd_list(args: &Args) -> Result<()> {
         }
         other => bail!("unknown list target {other:?} (schedulers|datasets|artifacts)"),
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let defaults = ptgs::serve::ServeOptions::default();
+    let timeout_ms: u64 = args.get_parse("timeout-ms", 30_000u64).map_err(|e| anyhow!(e))?;
+    if timeout_ms == 0 {
+        bail!("--timeout-ms must be >= 1");
+    }
+    let queue_depth: usize =
+        args.get_parse("queue-depth", defaults.queue_depth).map_err(|e| anyhow!(e))?;
+    if queue_depth == 0 {
+        bail!("--queue-depth must be >= 1");
+    }
+    let opts = ptgs::serve::ServeOptions {
+        addr: args.get_or("addr", &defaults.addr),
+        workers: worker_count(args)?.unwrap_or(defaults.workers),
+        queue_depth,
+        default_timeout: std::time::Duration::from_millis(timeout_ms),
+        cache_size: args.get_parse("cache-size", defaults.cache_size).map_err(|e| anyhow!(e))?,
+        schedulers: parse_schedulers(&args.get_or("schedulers", "all"))?,
+        debug: args.has("debug"),
+    };
+    let workers = opts.workers;
+    let schedulers = opts.schedulers.len();
+    let mut server = ptgs::serve::Server::start(opts)?;
+    // The address line goes first and alone: scripted callers (CI, the
+    // e2e test) parse it to find an ephemeral port.
+    println!("ptgs serve: listening on {}", server.local_addr());
+    println!(
+        "ptgs serve: {workers} workers, {schedulers} schedulers; \
+         POST /schedule, GET /stats, GET /healthz, POST /shutdown"
+    );
+    server.wait();
+    println!("ptgs serve: shut down cleanly");
     Ok(())
 }
 

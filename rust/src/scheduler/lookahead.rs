@@ -16,12 +16,28 @@
 //! `k`, so runtime grows roughly by a factor `|V|·b^k` — the classic
 //! quality/runtime knob the paper's methodology is designed to study.
 
+use super::priority::cmp_priority;
 use super::window::{window_append_only, window_insertion, Candidate};
 use super::SchedulerConfig;
 use crate::graph::TaskId;
 use crate::instance::ProblemInstance;
 use crate::ranks::RankBackend;
 use crate::schedule::{Assignment, Schedule};
+
+/// Position in `ready` of the highest-priority task (ties → min id).
+///
+/// Comparison routes through the shared total-order comparator
+/// ([`cmp_priority`]): a poisoned (NaN) priority degrades to a
+/// deterministic pick instead of the panic the former bare
+/// `partial_cmp(..).unwrap()` raised mid-schedule.
+fn select_highest_priority(ready: &[TaskId], prio: &[f64]) -> usize {
+    ready
+        .iter()
+        .enumerate()
+        .max_by(|(_, &a), (_, &b)| cmp_priority(prio[a], prio[b]).then(b.cmp(&a)))
+        .map(|(pos, _)| pos)
+        .expect("ready set is non-empty")
+}
 
 /// A parametric scheduler with k-depth lookahead node selection.
 #[derive(Debug, Clone)]
@@ -107,14 +123,8 @@ impl LookaheadScheduler {
 
         while !ready.is_empty() {
             // Highest-priority ready task (ties → min id).
-            let (pos, &t) = ready
-                .iter()
-                .enumerate()
-                .max_by(|(_, &a), (_, &b)| {
-                    prio[a].partial_cmp(&prio[b]).unwrap().then(b.cmp(&a))
-                })
-                .unwrap();
-            ready.swap_remove(pos);
+            let pos = select_highest_priority(&ready, &prio);
+            let t = ready.swap_remove(pos);
 
             // Score every node by simulated partial makespan after
             // placing t there and running `depth` greedy levels; ties
@@ -235,5 +245,26 @@ mod tests {
     fn name_encodes_depth() {
         let la = LookaheadScheduler::new(SchedulerConfig::heft(), 2);
         assert_eq!(la.name(), "HEFT_LA2");
+    }
+
+    #[test]
+    fn nan_priority_selection_is_deterministic_not_a_panic() {
+        // Poisoned priorities can't enter via public constructors (cost
+        // validation rejects non-finite inputs), so drive the selection
+        // helper directly — this used to be a bare
+        // `partial_cmp(..).unwrap()` that panicked on NaN.
+        let ready = vec![0, 1, 2];
+        let prio = vec![f64::NAN, 1.0, f64::NAN];
+        // IEEE total order puts positive NaN above every number; the
+        // NaN tie then breaks to the min id.
+        assert_eq!(ready[select_highest_priority(&ready, &prio)], 0);
+
+        let all_nan = vec![f64::NAN; 3];
+        assert_eq!(ready[select_highest_priority(&ready, &all_nan)], 0);
+
+        // Finite priorities are untouched by the fallback: plain max,
+        // ties → min id, exactly the historical behaviour.
+        let finite = vec![2.0, 5.0, 5.0];
+        assert_eq!(ready[select_highest_priority(&ready, &finite)], 1);
     }
 }

@@ -51,6 +51,20 @@ impl std::fmt::Display for PriorityFn {
 /// so priority orders that are not strictly topological (CPoP ranks are
 /// constant along the critical path) still produce precedence-valid
 /// schedules.
+/// Total-order comparison for priority values.
+///
+/// Agrees with `partial_cmp` wherever the operands are comparable — so
+/// every finite-priority schedule is bit-identical to the historical
+/// `partial_cmp(..).unwrap()` path, including the `-0.0 == 0.0` tie
+/// (which IEEE `total_cmp` would instead split) — and falls back to
+/// `f64::total_cmp` when a NaN shows up, yielding a deterministic order
+/// instead of a panic. `assert_priorities_comparable` guards ctx
+/// materialization, but paths that compute priorities themselves (the
+/// lookahead scheduler) compare through this instead of unwrapping.
+pub(crate) fn cmp_priority(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap_or_else(|| a.total_cmp(&b))
+}
+
 pub fn priorities(f: PriorityFn, inst: &ProblemInstance, ranks: &Ranks) -> Vec<f64> {
     match f {
         PriorityFn::UpwardRanking => ranks.up.clone(),
@@ -121,5 +135,27 @@ mod tests {
         for (s, d, _) in p.graph.edges() {
             assert!(prio[s] > prio[d], "positive costs ⇒ strict decrease");
         }
+    }
+
+    #[test]
+    fn cmp_priority_matches_partial_cmp_on_comparable_values() {
+        use std::cmp::Ordering;
+        assert_eq!(cmp_priority(1.0, 2.0), Ordering::Less);
+        assert_eq!(cmp_priority(2.0, 1.0), Ordering::Greater);
+        assert_eq!(cmp_priority(1.5, 1.5), Ordering::Equal);
+        // partial_cmp says -0.0 == 0.0 (total_cmp would split them);
+        // the comparator must keep the historical tie so pinned
+        // schedules don't shift.
+        assert_eq!(cmp_priority(-0.0, 0.0), Ordering::Equal);
+    }
+
+    #[test]
+    fn cmp_priority_is_total_and_deterministic_on_nan() {
+        use std::cmp::Ordering;
+        assert_eq!(cmp_priority(f64::NAN, f64::NAN), Ordering::Equal);
+        // Positive NaN sits above every number in IEEE total order.
+        assert_eq!(cmp_priority(f64::NAN, 1.0), Ordering::Greater);
+        assert_eq!(cmp_priority(1.0, f64::NAN), Ordering::Less);
+        assert_eq!(cmp_priority(f64::NAN, f64::INFINITY), Ordering::Greater);
     }
 }

@@ -1,0 +1,130 @@
+//! Response cache keyed by content hash of the raw request body.
+//!
+//! Scheduling is deterministic, so two byte-identical `/schedule`
+//! bodies produce byte-identical result payloads — a repeat submission
+//! can skip JSON parsing, `SchedulingContext` warm-up, and the whole
+//! fused sweep. Keys are FNV-1a over the body bytes, the same hash
+//! family as [`crate::schedule::Schedule::content_hash`] (64-bit FNV
+//! offset/prime), applied to bytes instead of assignment words.
+//! Eviction is FIFO by first insertion — requests are content-addressed
+//! and the cache is a warm-start optimization, not a source of truth,
+//! so recency bookkeeping isn't worth a second lock touch per hit.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::util::Value;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over raw bytes.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[derive(Debug, Default)]
+struct CacheState {
+    map: HashMap<u64, Arc<Value>>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<u64>,
+}
+
+/// FIFO-evicting response cache; capacity 0 disables caching entirely
+/// (every lookup misses, every insert is dropped).
+#[derive(Debug)]
+pub struct ResponseCache {
+    state: Mutex<CacheState>,
+    capacity: usize,
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize) -> Self {
+        ResponseCache { state: Mutex::new(CacheState::default()), capacity }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, CacheState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn get(&self, key: u64) -> Option<Arc<Value>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.lock().map.get(&key).cloned()
+    }
+
+    pub fn insert(&self, key: u64, payload: Arc<Value>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut s = self.lock();
+        if s.map.insert(key, payload).is_none() {
+            s.order.push_back(key);
+            while s.map.len() > self.capacity {
+                if let Some(old) = s.order.pop_front() {
+                    s.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Standard FNV-1a test vectors (64-bit).
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let cache = ResponseCache::new(4);
+        let key = fnv1a(b"{\"instance\":{}}");
+        assert!(cache.get(key).is_none());
+        cache.insert(key, Arc::new(Value::Bool(true)));
+        assert_eq!(*cache.get(key).unwrap(), Value::Bool(true));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let cache = ResponseCache::new(2);
+        cache.insert(1, Arc::new(Value::Num(1.0)));
+        cache.insert(2, Arc::new(Value::Num(2.0)));
+        cache.insert(3, Arc::new(Value::Num(3.0))); // evicts key 1
+        assert!(cache.get(1).is_none());
+        assert!(cache.get(2).is_some());
+        assert!(cache.get(3).is_some());
+        assert_eq!(cache.len(), 2);
+        // Re-inserting an existing key does not grow or double-track.
+        cache.insert(3, Arc::new(Value::Num(3.0)));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let cache = ResponseCache::new(0);
+        cache.insert(7, Arc::new(Value::Null));
+        assert!(cache.get(7).is_none());
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,263 @@
+//! Minimal in-crate HTTP/1.1 framing over `TcpStream` — exactly enough
+//! for the daemon's JSON API (this environment vendors no hyper/axum;
+//! DESIGN.md §Substitutions): request-line + headers + Content-Length
+//! bodies, keep-alive, and nothing else (no chunked encoding, no TLS).
+//! The tiny blocking [`Client`] half is shared by the integration
+//! tests, `benches/bench_serve.rs`, and `examples/serve_client.rs`.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Cap on request-line + header bytes; past this the request is
+/// malformed, not merely large.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on declared body size: large enough for a 100k-task instance
+/// document, small enough that a hostile Content-Length cannot OOM the
+/// daemon.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+    /// Whether the connection should be held open after the response
+    /// (HTTP/1.1 default unless `Connection: close`).
+    pub keep_alive: bool,
+}
+
+fn malformed(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Read one request off the connection. `Ok(None)` is a clean EOF
+/// before any request line (the client hung up between requests);
+/// `ErrorKind::InvalidData` marks a malformed request the caller
+/// should answer with 400.
+pub fn read_request(reader: &mut BufReader<TcpStream>) -> io::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(malformed("malformed request line"));
+    }
+
+    let mut content_length = 0usize;
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut header_bytes = line.len();
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Err(malformed("eof inside headers"));
+        }
+        header_bytes += header.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(malformed("headers too large"));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(malformed("malformed header"));
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length =
+                value.parse().map_err(|_| malformed("bad Content-Length"))?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            keep_alive = !value.eq_ignore_ascii_case("close");
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(malformed("body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| malformed("body not UTF-8"))?;
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+/// Reason phrase for the status codes the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one JSON response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Tiny blocking client over one keep-alive connection.
+#[derive(Debug)]
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// One request/response round-trip; returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> io::Result<(u16, String)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: ptgs\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+        read_response(&mut self.reader)
+    }
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> io::Result<(u16, String)> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(malformed("eof before status line"));
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| malformed("malformed status line"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Err(malformed("eof inside response headers"));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| malformed("bad Content-Length"))?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| malformed("body not UTF-8"))?;
+    Ok((status, body))
+}
+
+/// One-shot convenience: connect, send one request, return the reply.
+pub fn roundtrip(addr: &str, method: &str, path: &str, body: &str) -> io::Result<(u16, String)> {
+    Client::connect(addr)?.request(method, path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Framing round-trip over a real localhost socket pair: the client
+    /// half writes, the server half parses, and vice versa.
+    #[test]
+    fn request_and_response_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut stream = stream;
+            // Two requests on one keep-alive connection.
+            for expect_body in ["{\"x\":1}", ""] {
+                let req = read_request(&mut reader).unwrap().unwrap();
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/echo");
+                assert_eq!(req.body, expect_body);
+                assert!(req.keep_alive);
+                write_response(&mut stream, 200, &req.body, true).unwrap();
+            }
+            // Clean EOF after the client hangs up.
+            assert!(read_request(&mut reader).unwrap().is_none());
+        });
+
+        let mut client = Client::connect(&addr).unwrap();
+        let (status, body) = client.request("POST", "/echo", "{\"x\":1}").unwrap();
+        assert_eq!((status, body.as_str()), (200, "{\"x\":1}"));
+        let (status, body) = client.request("POST", "/echo", "").unwrap();
+        assert_eq!((status, body.as_str()), (200, ""));
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_request_line_is_invalid_data() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream);
+            let err = read_request(&mut reader).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        });
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(b"this is not http\r\n\r\n").unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_content_length_is_refused_before_allocation() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream);
+            let err = read_request(&mut reader).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        });
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let huge = MAX_BODY_BYTES + 1;
+        stream
+            .write_all(format!("POST /x HTTP/1.1\r\nContent-Length: {huge}\r\n\r\n").as_bytes())
+            .unwrap();
+        server.join().unwrap();
+    }
+}

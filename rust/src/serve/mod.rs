@@ -1,0 +1,586 @@
+//! `ptgs serve` — scheduling as a service: a persistent daemon that
+//! runs the fused 72-config sweep per request over plain HTTP/1.1
+//! (in-crate framing, [`http`]; this environment vendors no web stack).
+//!
+//! Architecture (pure `std::thread`, no async runtime):
+//!
+//! * an **acceptor** thread owns the listener and spawns one detached
+//!   connection thread per client (keep-alive, bounded read timeout);
+//! * connection threads parse requests and push jobs onto a **bounded
+//!   queue** ([`queue::BoundedQueue`]) — a full queue sheds load with
+//!   HTTP 429 instead of buffering unboundedly, and every request
+//!   carries a deadline (default [`ServeOptions::default_timeout`],
+//!   per-request `timeout_ms`) answered with 408 when missed;
+//! * a fixed pool of **worker** threads each owns one warm
+//!   [`SchedulerWorkspace`] for its whole lifetime, so after a couple
+//!   of warm-up requests repeat traffic runs allocation-free (the PR 4
+//!   `buffer_allocations()` counter test extends across requests in
+//!   `tests/integration_ctx.rs`); a panicking job is contained
+//!   (`catch_unwind`, same policy as [`crate::coordinator`]) and fails
+//!   only its own request with a 500 — the daemon keeps serving;
+//! * a **response cache** ([`cache::ResponseCache`]) keyed by FNV-1a
+//!   content hash of the raw body lets byte-identical resubmissions
+//!   skip parsing, context warm-up, and the sweep entirely.
+//!
+//! Endpoints: `POST /schedule` (instance in, per-config makespans +
+//! dedup equivalence classes out), `GET /stats` (queue depth, cache
+//! hit rate, fused-engine counters, latency percentiles),
+//! `GET /healthz`, and `POST /shutdown` — the clean-shutdown control
+//! path (a pure-std process cannot trap SIGTERM; orchestrators should
+//! POST /shutdown and then wait for exit).
+
+pub mod cache;
+pub mod http;
+pub mod queue;
+pub mod stats;
+
+pub use cache::{fnv1a, ResponseCache};
+pub use queue::{BoundedQueue, PushError};
+pub use stats::{LatencySummary, ServeStats};
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::analysis::dedup_rows;
+use crate::benchmark::{Harness, HarnessOptions};
+use crate::instance::ProblemInstance;
+use crate::ranks::RankBackend;
+use crate::scheduler::{fused, SchedulerConfig, SchedulerWorkspace};
+use crate::util::error::{Context, Result};
+use crate::util::{panic_message, FromJson, Value};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Listen address; port 0 binds an ephemeral port (read it back
+    /// from [`Server::local_addr`]).
+    pub addr: String,
+    /// Worker threads, each holding one warm workspace across requests.
+    pub workers: usize,
+    /// Bounded queue depth; pushes beyond it are rejected with 429.
+    pub queue_depth: usize,
+    /// Default per-request deadline (a request's `timeout_ms` field
+    /// overrides it).
+    pub default_timeout: Duration,
+    /// Response-cache capacity in entries (0 disables caching).
+    pub cache_size: usize,
+    /// Scheduler set swept per request.
+    pub schedulers: Vec<SchedulerConfig>,
+    /// Honor the `debug_sleep_ms` / `debug_panic` request fields —
+    /// deterministic hooks for exercising the backpressure, timeout,
+    /// and panic-containment paths in tests. Off in production.
+    pub debug: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7463".into(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            queue_depth: 64,
+            default_timeout: Duration::from_millis(30_000),
+            cache_size: 256,
+            schedulers: SchedulerConfig::all(),
+            debug: false,
+        }
+    }
+}
+
+/// What a worker sends back for one job.
+#[derive(Debug)]
+enum JobReply {
+    /// The deterministic result payload (also what the cache stores).
+    Ok(Arc<Value>),
+    /// The job panicked; contained, with this message.
+    Failed(String),
+}
+
+/// One queued `/schedule` request.
+#[derive(Debug)]
+struct Job {
+    inst: ProblemInstance,
+    deadline: Instant,
+    debug_sleep_ms: u64,
+    debug_panic: bool,
+    /// Rendezvous back to the connection thread. Capacity 1, so a
+    /// worker's send never blocks even when the requester already
+    /// timed out and hung up.
+    reply: SyncSender<JobReply>,
+}
+
+/// State shared by the acceptor, connection, and worker threads.
+#[derive(Debug)]
+struct Inner {
+    opts: ServeOptions,
+    queue: BoundedQueue<Job>,
+    cache: ResponseCache,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    local_addr: SocketAddr,
+}
+
+/// A running daemon. Dropping the server shuts it down cleanly.
+#[derive(Debug)]
+pub struct Server {
+    inner: Arc<Inner>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `opts.addr` and start the acceptor + worker pool. Returns
+    /// once the listener is live (requests can be sent immediately).
+    pub fn start(opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let inner = Arc::new(Inner {
+            queue: BoundedQueue::new(opts.queue_depth),
+            cache: ResponseCache::new(opts.cache_size),
+            stats: ServeStats::default(),
+            shutdown: AtomicBool::new(false),
+            local_addr,
+            opts,
+        });
+        let workers = (0..inner.opts.workers.max(1))
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        let acceptor = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || accept_loop(&listener, &inner))
+        };
+        Ok(Server { inner, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.local_addr
+    }
+
+    /// Live serving counters (same data as `GET /stats`).
+    pub fn stats(&self) -> &ServeStats {
+        &self.inner.stats
+    }
+
+    /// Signal shutdown without blocking: close the queue (workers
+    /// drain what's left and exit) and wake the acceptor. Idempotent;
+    /// `POST /shutdown` triggers exactly this.
+    pub fn request_shutdown(&self) {
+        request_shutdown(&self.inner);
+    }
+
+    /// Block until the acceptor and every worker have exited.
+    pub fn wait(&mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// [`Server::request_shutdown`] then [`Server::wait`].
+    pub fn shutdown(&mut self) {
+        self.request_shutdown();
+        self.wait();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn request_shutdown(inner: &Inner) {
+    if inner.shutdown.swap(true, Ordering::SeqCst) {
+        return; // already requested
+    }
+    inner.queue.close();
+    // Self-connect to pop the acceptor out of its blocking accept();
+    // it re-checks the flag per connection.
+    let _ = TcpStream::connect(inner.local_addr);
+}
+
+fn accept_loop(listener: &TcpListener, inner: &Arc<Inner>) {
+    for conn in listener.incoming() {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            // Listener drops on return: further connects are refused.
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let inner = Arc::clone(inner);
+        // Detached: each connection thread dies with its socket (EOF,
+        // read timeout, or write failure) and holds only an Arc.
+        std::thread::spawn(move || connection_loop(stream, &inner));
+    }
+}
+
+fn connection_loop(stream: TcpStream, inner: &Arc<Inner>) {
+    // Idle keep-alive connections expire instead of pinning threads
+    // (and a silent client cannot hold shutdown hostage).
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => io::BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut stream = stream;
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean EOF between requests
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                let _ = http::write_response(&mut stream, 400, &error_body(&e.to_string()), false);
+                return;
+            }
+            Err(_) => return, // timeout / reset
+        };
+        let (status, body) = route(inner, &req);
+        let written = http::write_response(&mut stream, status, &body, req.keep_alive);
+        if req.method == "POST" && req.path == "/shutdown" {
+            // Respond first, then bring the daemon down.
+            request_shutdown(inner);
+            return;
+        }
+        if written.is_err() || !req.keep_alive {
+            return;
+        }
+    }
+}
+
+fn route(inner: &Arc<Inner>, req: &http::Request) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/schedule") => handle_schedule(inner, &req.body),
+        ("GET", "/stats") => (200, stats_json(inner).to_string()),
+        ("GET", "/healthz") => (200, r#"{"ok":true}"#.to_string()),
+        ("POST", "/shutdown") => (200, r#"{"shutting_down":true}"#.to_string()),
+        ("GET" | "POST", _) => (404, error_body("no such endpoint")),
+        _ => (405, error_body("method not allowed")),
+    }
+}
+
+/// The `/schedule` flow: cache lookup on the raw bytes, then parse +
+/// validate, then enqueue with explicit backpressure and await the
+/// worker's reply under the request deadline.
+fn handle_schedule(inner: &Arc<Inner>, body: &str) -> (u16, String) {
+    let t0 = Instant::now();
+    inner.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+
+    let key = fnv1a(body.as_bytes());
+    if let Some(payload) = inner.cache.get(key) {
+        // Byte-identical resubmission: scheduling is deterministic, so
+        // the stored payload IS the answer — no parsing, no warm-up,
+        // no sweep.
+        inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        inner.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+        let resp = envelope(&payload, true, t0);
+        inner.stats.record_latency(elapsed_us(t0));
+        return (200, resp);
+    }
+    inner.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+
+    let (inst, timeout, debug_sleep_ms, debug_panic) = match parse_schedule_request(inner, body) {
+        Ok(parsed) => parsed,
+        Err(msg) => {
+            inner.stats.requests_bad.fetch_add(1, Ordering::Relaxed);
+            return (400, error_body(&msg));
+        }
+    };
+
+    let deadline = t0 + timeout;
+    let (reply_tx, reply_rx) = sync_channel(1);
+    let job = Job { inst, deadline, debug_sleep_ms, debug_panic, reply: reply_tx };
+    if let Err((_, e)) = inner.queue.try_push(job) {
+        return match e {
+            PushError::Full => {
+                inner.stats.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                (429, error_body("queue full — retry later"))
+            }
+            PushError::Closed => (503, error_body("shutting down")),
+        };
+    }
+    match reply_rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+        Ok(JobReply::Ok(payload)) => {
+            inner.cache.insert(key, Arc::clone(&payload));
+            inner.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+            let resp = envelope(&payload, false, t0);
+            inner.stats.record_latency(elapsed_us(t0));
+            (200, resp)
+        }
+        Ok(JobReply::Failed(msg)) => {
+            inner.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+            (500, error_body(&format!("scheduling failed: {msg}")))
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            // The job may still be queued (its worker will notice the
+            // expired deadline and skip it) or mid-sweep (the reply
+            // lands in the rendezvous buffer and is dropped with it).
+            inner.stats.requests_timed_out.fetch_add(1, Ordering::Relaxed);
+            (408, error_body("deadline exceeded"))
+        }
+        Err(RecvTimeoutError::Disconnected) => (503, error_body("shutting down")),
+    }
+}
+
+type ParsedRequest = (ProblemInstance, Duration, u64, bool);
+
+fn parse_schedule_request(inner: &Inner, body: &str) -> std::result::Result<ParsedRequest, String> {
+    let doc = crate::util::parse(body)?;
+    let inst = ProblemInstance::from_json(doc.req("instance")?)?;
+    inst.validate()?;
+    let timeout = match doc.get("timeout_ms") {
+        None => inner.opts.default_timeout,
+        Some(v) => {
+            let ms = v.as_u64().ok_or("field `timeout_ms` not a u64")?;
+            if ms == 0 {
+                return Err("`timeout_ms` must be >= 1".into());
+            }
+            Duration::from_millis(ms)
+        }
+    };
+    let (mut debug_sleep_ms, mut debug_panic) = (0, false);
+    if inner.opts.debug {
+        debug_sleep_ms = doc.get("debug_sleep_ms").and_then(Value::as_u64).unwrap_or(0);
+        debug_panic = doc.get("debug_panic").and_then(Value::as_bool).unwrap_or(false);
+    }
+    Ok((inst, timeout, debug_sleep_ms, debug_panic))
+}
+
+/// Worker: one warm [`SchedulerWorkspace`] for the thread's lifetime.
+/// After the first couple of requests have grown its buffers, every
+/// further request of comparable size runs allocation-free — the
+/// counter test in `tests/integration_ctx.rs` pins this across N
+/// requests, not just within one sweep.
+fn worker_loop(inner: &Inner) {
+    let mut ws = SchedulerWorkspace::new();
+    let harness = Harness {
+        schedulers: inner.opts.schedulers.clone(),
+        backend: RankBackend::Native,
+        options: HarnessOptions::default(),
+    };
+    while let Some(job) = inner.queue.pop() {
+        if Instant::now() >= job.deadline {
+            // Expired while queued: the requester already answered 408;
+            // don't burn a sweep on a result nobody is waiting for.
+            continue;
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| run_schedule_job(&harness, &mut ws, &job)));
+        let reply = match outcome {
+            Ok(payload) => JobReply::Ok(Arc::new(payload)),
+            Err(payload) => {
+                // Same containment policy as `Coordinator::run_jobs`:
+                // the daemon must outlive any one bad request. The
+                // workspace may be mid-update — replace it.
+                ws = SchedulerWorkspace::new();
+                JobReply::Failed(panic_message(payload.as_ref()))
+            }
+        };
+        // The requester may have timed out and hung up; capacity-1
+        // rendezvous means this send never blocks either way.
+        let _ = job.reply.send(reply);
+    }
+}
+
+/// Run one request's sweep and shape the deterministic result payload
+/// (what the cache stores; the per-response envelope wraps it).
+fn run_schedule_job(harness: &Harness, ws: &mut SchedulerWorkspace, job: &Job) -> Value {
+    if job.debug_sleep_ms > 0 {
+        std::thread::sleep(Duration::from_millis(job.debug_sleep_ms));
+    }
+    if job.debug_panic {
+        panic!("debug_panic requested");
+    }
+    let inst = &job.inst;
+    let records = harness.run_instance_ws(&inst.name, 0, inst, ws);
+    let dedup = dedup_rows(&records);
+    let results = Value::Arr(
+        records
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("scheduler", Value::Str(r.scheduler.clone())),
+                    ("makespan", Value::Num(r.makespan)),
+                ];
+                if let Some(h) = r.schedule_hash {
+                    fields.push(("schedule_hash", Value::Str(format!("{h:016x}"))));
+                }
+                Value::obj(fields)
+            })
+            .collect(),
+    );
+    let (distinct, classes) = match dedup.first() {
+        Some(row) => (
+            row.distinct_schedules,
+            Value::Arr(
+                row.classes
+                    .iter()
+                    .map(|class| {
+                        Value::Arr(class.iter().map(|s| Value::Str(s.clone())).collect())
+                    })
+                    .collect(),
+            ),
+        ),
+        None => (0, Value::Arr(Vec::new())),
+    };
+    Value::obj(vec![
+        ("instance", Value::Str(inst.name.clone())),
+        ("num_tasks", Value::Num(inst.graph.len() as f64)),
+        ("num_nodes", Value::Num(inst.network.len() as f64)),
+        ("results", results),
+        ("distinct_schedules", Value::Num(distinct as f64)),
+        ("equivalence_classes", classes),
+    ])
+}
+
+/// Wrap the deterministic payload with the per-response fields. Only
+/// the envelope varies between a fresh and a cached answer.
+fn envelope(payload: &Value, cached: bool, t0: Instant) -> String {
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("cached", Value::Bool(cached)),
+        ("latency_us", Value::Num(elapsed_us(t0) as f64)),
+        ("payload", payload.clone()),
+    ])
+    .to_string()
+}
+
+fn error_body(msg: &str) -> String {
+    Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::Str(msg.to_string()))])
+        .to_string()
+}
+
+fn elapsed_us(t0: Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX)
+}
+
+fn stats_json(inner: &Inner) -> Value {
+    let s = &inner.stats;
+    let count = |c: &std::sync::atomic::AtomicU64| Value::Num(c.load(Ordering::Relaxed) as f64);
+    let lat = s.latency_summary();
+    Value::obj(vec![
+        ("queue_depth", Value::Num(inner.queue.len() as f64)),
+        ("queue_capacity", Value::Num(inner.queue.capacity() as f64)),
+        ("workers", Value::Num(inner.opts.workers.max(1) as f64)),
+        ("requests_total", count(&s.requests_total)),
+        ("requests_ok", count(&s.requests_ok)),
+        ("requests_rejected", count(&s.requests_rejected)),
+        ("requests_timed_out", count(&s.requests_timed_out)),
+        ("requests_failed", count(&s.requests_failed)),
+        ("requests_bad", count(&s.requests_bad)),
+        ("cache_entries", Value::Num(inner.cache.len() as f64)),
+        ("cache_hits", count(&s.cache_hits)),
+        ("cache_misses", count(&s.cache_misses)),
+        ("cache_hit_rate", Value::Num(s.cache_hit_rate())),
+        // Process-wide scheduling-core counters: deltas between reads
+        // track the fused engine's sharing behavior under live traffic.
+        ("window_scans", Value::Num(fused::window_scans() as f64)),
+        ("fork_events", Value::Num(fused::fork_events() as f64)),
+        (
+            "buffer_allocations",
+            Value::Num(SchedulerWorkspace::buffer_allocations() as f64),
+        ),
+        (
+            "latency",
+            Value::obj(vec![
+                ("count", Value::Num(lat.count as f64)),
+                ("p50_us", Value::Num(lat.p50_us as f64)),
+                ("p99_us", Value::Num(lat.p99_us as f64)),
+                ("max_us", Value::Num(lat.max_us as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{DatasetSpec, Structure};
+
+    fn tiny_options() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            schedulers: vec![SchedulerConfig::heft(), SchedulerConfig::mct()],
+            ..ServeOptions::default()
+        }
+    }
+
+    fn tiny_body() -> String {
+        use crate::util::ToJson;
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let mut rng = spec.instance_rng(0);
+        let inst = spec.generate_one(&mut rng);
+        Value::obj(vec![("instance", inst.to_json())]).to_string()
+    }
+
+    #[test]
+    fn ephemeral_start_schedule_and_clean_shutdown() {
+        let mut server = Server::start(tiny_options()).unwrap();
+        let addr = server.local_addr().to_string();
+        let (status, body) = http::roundtrip(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!((status, body.as_str()), (200, r#"{"ok":true}"#));
+        let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &tiny_body()).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let doc = crate::util::parse(&body).unwrap();
+        assert!(doc.req_bool("ok").unwrap());
+        let payload = doc.req("payload").unwrap();
+        assert_eq!(payload.req_arr("results").unwrap().len(), 2);
+        server.shutdown();
+        // Idempotent: a second shutdown (and the Drop) are no-ops.
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_endpoint_exposes_the_documented_fields() {
+        let mut server = Server::start(tiny_options()).unwrap();
+        let addr = server.local_addr().to_string();
+        let (_, _) = http::roundtrip(&addr, "POST", "/schedule", &tiny_body()).unwrap();
+        let (status, body) = http::roundtrip(&addr, "GET", "/stats", "").unwrap();
+        assert_eq!(status, 200);
+        let doc = crate::util::parse(&body).unwrap();
+        for field in [
+            "queue_depth",
+            "queue_capacity",
+            "requests_total",
+            "requests_ok",
+            "requests_rejected",
+            "requests_timed_out",
+            "requests_failed",
+            "requests_bad",
+            "cache_entries",
+            "cache_hits",
+            "cache_misses",
+            "window_scans",
+            "fork_events",
+            "buffer_allocations",
+        ] {
+            assert!(doc.req_u64(field).is_ok(), "missing /stats field {field}: {body}");
+        }
+        doc.req_f64("cache_hit_rate").unwrap();
+        let lat = doc.req("latency").unwrap();
+        assert!(lat.req_u64("count").unwrap() >= 1);
+        lat.req_u64("p50_us").unwrap();
+        lat.req_u64("p99_us").unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let mut server = Server::start(tiny_options()).unwrap();
+        let addr = server.local_addr().to_string();
+        let (status, _) = http::roundtrip(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = http::roundtrip(&addr, "PUT", "/schedule", "{}").unwrap();
+        assert_eq!(status, 405);
+        server.shutdown();
+    }
+}

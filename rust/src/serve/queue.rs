@@ -1,0 +1,175 @@
+//! Bounded MPMC job queue with explicit rejection — the daemon's
+//! backpressure primitive. Unlike `mpsc::sync_channel`, a full queue
+//! *fails fast* ([`BoundedQueue::try_push`] → [`PushError::Full`], the
+//! HTTP 429 path) instead of blocking the connection thread, and the
+//! queue can be closed for shutdown: blocked consumers wake, queued
+//! work still drains, and further pushes are refused.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Why a [`BoundedQueue::try_push`] was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity — the caller should shed load (HTTP 429).
+    Full,
+    /// Queue closed — the daemon is shutting down (HTTP 503).
+    Closed,
+}
+
+#[derive(Debug)]
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer/multi-consumer FIFO queue built on
+/// `Mutex` + `Condvar` (this environment vendors no crossbeam).
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Poison-recovering lock: the `VecDeque` is valid after any
+    /// panic (push/pop are not interruptible mid-update by unwinds in
+    /// *this* module), so a poisoned mutex must not cascade — same
+    /// policy as [`crate::coordinator`]'s job queue.
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue without blocking. On refusal the item comes back to the
+    /// caller together with the reason, so it can be failed gracefully
+    /// (e.g. replying 429 with the request still in hand).
+    pub fn try_push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut s = self.lock();
+        if s.closed {
+            return Err((item, PushError::Closed));
+        }
+        if s.items.len() >= self.capacity {
+            return Err((item, PushError::Full));
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available (FIFO order) or the queue is
+    /// closed *and* drained — `None` is the consumer's shutdown signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.lock();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Close the queue: every blocked [`BoundedQueue::pop`] wakes,
+    /// already-queued items still drain, further pushes are refused
+    /// with [`PushError::Closed`]. Idempotent.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Current number of queued items (the `/stats` `queue_depth`).
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_push_pop() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_queue_rejects_with_the_item_returned() {
+        let q = BoundedQueue::new(2);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        let (item, err) = q.try_push("c").unwrap_err();
+        assert_eq!((item, err), ("c", PushError::Full));
+        // Draining one slot re-opens the queue.
+        assert_eq!(q.pop(), Some("a"));
+        q.try_push("c").unwrap();
+    }
+
+    #[test]
+    fn closed_queue_refuses_pushes_but_drains() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2).unwrap_err().1, PushError::Closed);
+        assert_eq!(q.pop(), Some(1)); // queued work still drains
+        assert_eq!(q.pop(), None); // then the shutdown signal
+        assert_eq!(q.pop(), None); // and stays down
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_close() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        for v in 0..3 {
+            q.try_push(v).unwrap();
+        }
+        // Give the consumer a moment to block on the empty queue, then
+        // close — it must wake and exit rather than hang.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(1).unwrap();
+        assert_eq!(q.try_push(2).unwrap_err().1, PushError::Full);
+    }
+}

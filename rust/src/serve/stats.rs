@@ -1,0 +1,148 @@
+//! Daemon observability counters: request outcomes, cache hit rate,
+//! and a fixed-size latency ring feeding p50/p99 summaries — the data
+//! behind the `/stats` endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Completed-request latencies kept for percentile summaries. A ring
+/// this size keeps `/stats` O(1)-memory under sustained traffic while
+/// still smoothing percentiles over the recent few thousand requests.
+const LATENCY_RING: usize = 4096;
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<u64>,
+    next: usize,
+}
+
+/// Monotonic serving counters, shared across connection and worker
+/// threads. All counters are `Relaxed` — they are monitoring signals,
+/// not synchronization.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Every `/schedule` request received (including rejects).
+    pub requests_total: AtomicU64,
+    /// Requests answered 200 (fresh or cached).
+    pub requests_ok: AtomicU64,
+    /// Requests shed with 429 (queue full).
+    pub requests_rejected: AtomicU64,
+    /// Requests that missed their deadline (408).
+    pub requests_timed_out: AtomicU64,
+    /// Requests whose job panicked (500, contained).
+    pub requests_failed: AtomicU64,
+    /// Requests refused as malformed (400).
+    pub requests_bad: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    /// Ring of recent end-to-end request latencies, microseconds.
+    latencies_us: Mutex<Ring>,
+    /// Total latencies ever recorded (the ring only keeps the tail).
+    latency_count: AtomicU64,
+}
+
+/// Percentile summary over the recent-latency ring.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    /// Total requests ever measured (not just the ring's tail).
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl ServeStats {
+    fn ring(&self) -> MutexGuard<'_, Ring> {
+        self.latencies_us.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one completed request's end-to-end latency.
+    pub fn record_latency(&self, micros: u64) {
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring();
+        if ring.buf.len() < LATENCY_RING {
+            ring.buf.push(micros);
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = micros;
+        }
+        ring.next = (ring.next + 1) % LATENCY_RING;
+    }
+
+    /// p50/p99/max over the ring's snapshot (nearest-rank on a sorted
+    /// copy — the ring is small by construction).
+    pub fn latency_summary(&self) -> LatencySummary {
+        let mut snapshot = self.ring().buf.clone();
+        let count = self.latency_count.load(Ordering::Relaxed);
+        if snapshot.is_empty() {
+            return LatencySummary { count, p50_us: 0, p99_us: 0, max_us: 0 };
+        }
+        snapshot.sort_unstable();
+        let rank = |p: usize| snapshot[(snapshot.len() - 1) * p / 100];
+        LatencySummary {
+            count,
+            p50_us: rank(50),
+            p99_us: rank(99),
+            max_us: *snapshot.last().expect("non-empty"),
+        }
+    }
+
+    /// Cache hit rate in [0, 1]; 0 when no lookups happened yet.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let total = hits + self.cache_misses.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let s = ServeStats::default();
+        assert_eq!(
+            s.latency_summary(),
+            LatencySummary { count: 0, p50_us: 0, p99_us: 0, max_us: 0 }
+        );
+        assert_eq!(s.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_over_known_distribution() {
+        let s = ServeStats::default();
+        for v in 1..=100 {
+            s.record_latency(v);
+        }
+        let sum = s.latency_summary();
+        assert_eq!(sum.count, 100);
+        assert_eq!(sum.max_us, 100);
+        assert!((49..=51).contains(&sum.p50_us), "p50 {}", sum.p50_us);
+        assert!((98..=100).contains(&sum.p99_us), "p99 {}", sum.p99_us);
+    }
+
+    #[test]
+    fn ring_wraps_but_count_keeps_growing() {
+        let s = ServeStats::default();
+        for _ in 0..(LATENCY_RING as u64 + 10) {
+            s.record_latency(5);
+        }
+        let sum = s.latency_summary();
+        assert_eq!(sum.count, LATENCY_RING as u64 + 10);
+        assert_eq!(sum.p50_us, 5);
+        assert_eq!(sum.max_us, 5);
+    }
+
+    #[test]
+    fn hit_rate() {
+        let s = ServeStats::default();
+        s.cache_hits.fetch_add(3, Ordering::Relaxed);
+        s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -3,10 +3,11 @@
 //!
 //! This environment vendors no `serde_json`, so the crate carries its
 //! own implementation (DESIGN.md §Substitutions). It supports exactly
-//! the JSON this project produces and consumes: UTF-8 text, finite f64
-//! numbers, `\uXXXX` escapes (incl. surrogate pairs), arbitrarily nested
-//! arrays/objects. Object key order is preserved (Vec-backed) so output
-//! is deterministic.
+//! the JSON this project produces and consumes: UTF-8 text, f64 numbers
+//! (non-finite values serialize as `null` — see [`Value::to_string`]'s
+//! number policy on `write_num`), `\uXXXX` escapes (incl. surrogate
+//! pairs), arbitrarily nested arrays/objects. Object key order is
+//! preserved (Vec-backed) so output is deterministic.
 
 use std::fmt;
 
@@ -210,9 +211,17 @@ impl fmt::Display for Value {
 
 /// Numbers: shortest round-trip formatting Rust offers; integers render
 /// without a trailing `.0` to stay conventional JSON.
+///
+/// Non-finite policy: JSON has no NaN/±inf literal, and a long-lived
+/// process (the `ptgs serve` daemon, a mid-sweep results writer) must
+/// not panic over one degenerate makespan. Non-finite numbers serialize
+/// as `null` — `serde_json`'s default policy — so a round-trip turns
+/// `Num(NaN)` into `Null`, and typed readers surface it as the crate's
+/// usual "field not a number" `Err` instead of a process abort.
 fn write_num(n: f64, out: &mut String) {
-    assert!(n.is_finite(), "JSON cannot represent non-finite number {n}");
-    if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
         out.push_str(&format!("{}", n as i64));
     } else {
         out.push_str(&format!("{n}")); // shortest repr that round-trips
@@ -523,6 +532,33 @@ mod tests {
             let v = parse(&Value::Num(x).to_string()).unwrap();
             assert_eq!(v.as_f64().unwrap(), x, "{x}");
         }
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // The documented policy: no panic, `null` on the wire, for
+        // every writer (compact, pretty, Display) and at any nesting.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Value::Num(bad).to_string(), "null", "{bad}");
+            assert_eq!(Value::Num(bad).to_string_pretty().trim(), "null", "{bad}");
+            assert_eq!(format!("{}", Value::Num(bad)), "null", "{bad}");
+        }
+        let doc = Value::obj(vec![
+            ("ok", Value::Num(1.5)),
+            ("bad", Value::Num(f64::NAN)),
+            ("nested", Value::Arr(vec![Value::Num(f64::INFINITY)])),
+        ]);
+        assert_eq!(doc.to_string(), r#"{"ok":1.5,"bad":null,"nested":[null]}"#);
+    }
+
+    #[test]
+    fn non_finite_round_trips_to_null() {
+        // Round-trip lands on Null, so typed readers err ("not a
+        // number") instead of the old mid-write panic.
+        let doc = Value::obj(vec![("makespan", Value::Num(f64::NAN))]);
+        let back = parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("makespan"), Some(&Value::Null));
+        assert!(back.req_f64("makespan").is_err());
     }
 
     #[test]

@@ -33,3 +33,18 @@ impl<T: FromJson> FromJson for Vec<T> {
             .collect()
     }
 }
+
+/// Render a caught panic payload (from `std::panic::catch_unwind`) as a
+/// message string. `panic!("...")` payloads are `&str` or `String`;
+/// anything else gets a generic label. Shared by every component that
+/// contains panics instead of crashing (the [`crate::coordinator`]
+/// worker pool, the `ptgs serve` daemon).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

@@ -276,6 +276,48 @@ fn workspace_growth_is_monotone_across_instance_shapes() {
     );
 }
 
+/// The daemon-side extension of the workspace contract: a `ptgs serve`
+/// worker holds its workspace **across requests**, so after two
+/// warm-up requests (the fused pools settle on the second pass, as in
+/// `fused_sweep_reuses_workspace_after_warmup`) N further repeat
+/// requests perform zero buffer growth — O(1) allocations per request,
+/// not per sweep. Cache disabled so every request really runs the
+/// sweep.
+#[test]
+fn serve_worker_workspace_is_warm_across_requests() {
+    use ptgs::serve::{http, ServeOptions, Server};
+    use ptgs::util::{ToJson, Value};
+
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        cache_size: 0,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let inst = instances(1).pop().unwrap();
+    let body = Value::obj(vec![("instance", inst.to_json())]).to_string();
+
+    for _ in 0..2 {
+        let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", &body).unwrap();
+        assert_eq!(status, 200, "warm-up request failed: {resp}");
+    }
+
+    let before = SchedulerWorkspace::buffer_allocations();
+    for i in 0..5 {
+        let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", &body).unwrap();
+        assert_eq!(status, 200, "request {i} failed: {resp}");
+    }
+    assert_eq!(
+        SchedulerWorkspace::buffer_allocations() - before,
+        0,
+        "a warmed serve worker must answer repeat requests with zero buffer growth"
+    );
+    server.shutdown();
+}
+
 /// The single-config convenience paths (`run_one`, `schedule()`)
 /// produce the same makespans as the shared-context sweep path.
 #[test]

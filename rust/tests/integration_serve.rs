@@ -1,0 +1,375 @@
+//! End-to-end tests for the `ptgs serve` daemon: concurrent requests
+//! over real sockets must come back bit-identical to an in-process
+//! [`Harness::run_instance_ws`] sweep, byte-identical resubmissions
+//! must hit the response cache, a full queue must shed load with 429,
+//! slow jobs must miss their deadline with 408, a panicking job must
+//! fail only its own request (the daemon survives), and both the
+//! library server and the `ptgs serve` binary must shut down cleanly.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ptgs::analysis::dedup_rows;
+use ptgs::benchmark::Harness;
+use ptgs::datasets::traces::{load_trace, TraceOptions};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace};
+use ptgs::serve::http;
+use ptgs::serve::{ServeOptions, Server};
+use ptgs::util::{parse, ToJson, Value};
+
+const FIXTURES: [&str; 4] = [
+    "diamond.yaml",
+    "epigenomics_like.json",
+    "montage_like.json",
+    "seismology_like.json",
+];
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/traces")
+        .join(name)
+}
+
+fn load_fixture(name: &str) -> ProblemInstance {
+    load_trace(&fixture(name), &TraceOptions::default())
+        .unwrap_or_else(|e| panic!("loading {name}: {e}"))
+}
+
+fn tiny_instance() -> ProblemInstance {
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
+    let mut rng = spec.instance_rng(0);
+    spec.generate_one(&mut rng)
+}
+
+/// `POST /schedule` body for an instance, with optional extra fields
+/// (`timeout_ms`, the debug hooks).
+fn schedule_body(inst: &ProblemInstance, extra: &[(&str, Value)]) -> String {
+    let mut fields = vec![("instance", inst.to_json())];
+    for &(k, ref v) in extra {
+        fields.push((k, v.clone()));
+    }
+    Value::obj(fields).to_string()
+}
+
+/// Poll `GET /stats` until `pred` holds (the daemon's queue/worker
+/// handoffs are asynchronous); panics after ~4s of retries.
+fn poll_stats(addr: &str, what: &str, pred: impl Fn(&Value) -> bool) -> Value {
+    for _ in 0..400 {
+        let (status, body) = http::roundtrip(addr, "GET", "/stats", "").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let doc = parse(&body).unwrap();
+        if pred(&doc) {
+            return doc;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for /stats condition: {what}");
+}
+
+/// The tentpole equivalence claim: for every vendored trace fixture,
+/// submitted concurrently, the daemon's response carries exactly the
+/// records an in-process full-sweep harness produces — same scheduler
+/// order, bit-identical makespans (the JSON serializer is shortest
+/// round-trip, so `f64` survives the wire), same schedule hashes, and
+/// the same dedup equivalence classes.
+#[test]
+fn concurrent_fixture_requests_match_harness() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    std::thread::scope(|scope| {
+        for name in FIXTURES {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let inst = load_fixture(name);
+                let (status, body) =
+                    http::roundtrip(&addr, "POST", "/schedule", &schedule_body(&inst, &[]))
+                        .unwrap();
+                assert_eq!(status, 200, "{name}: {body}");
+                let doc = parse(&body).unwrap();
+                assert!(doc.req_bool("ok").unwrap());
+                let payload = doc.req("payload").unwrap();
+
+                let mut ws = SchedulerWorkspace::new();
+                let records =
+                    Harness::all_schedulers().run_instance_ws(&inst.name, 0, &inst, &mut ws);
+
+                assert_eq!(payload.req_str("instance").unwrap(), inst.name, "{name}");
+                assert_eq!(payload.req_usize("num_tasks").unwrap(), inst.graph.len());
+                assert_eq!(payload.req_usize("num_nodes").unwrap(), inst.network.len());
+                let results = payload.req_arr("results").unwrap();
+                assert_eq!(results.len(), records.len(), "{name}");
+                for (res, rec) in results.iter().zip(&records) {
+                    assert_eq!(res.req_str("scheduler").unwrap(), rec.scheduler);
+                    assert_eq!(
+                        res.req_f64("makespan").unwrap().to_bits(),
+                        rec.makespan.to_bits(),
+                        "{name}/{}: makespan not bit-identical over the wire",
+                        rec.scheduler
+                    );
+                    assert_eq!(
+                        res.req_str("schedule_hash").unwrap(),
+                        format!("{:016x}", rec.schedule_hash.unwrap()),
+                        "{name}/{}",
+                        rec.scheduler
+                    );
+                }
+
+                let dedup = dedup_rows(&records);
+                let row = dedup.first().expect("one instance, one dedup row");
+                assert_eq!(
+                    payload.req_usize("distinct_schedules").unwrap(),
+                    row.distinct_schedules,
+                    "{name}"
+                );
+                let classes = payload.req_arr("equivalence_classes").unwrap();
+                assert_eq!(classes.len(), row.classes.len(), "{name}");
+                for (got, want) in classes.iter().zip(&row.classes) {
+                    let got: Vec<&str> =
+                        got.as_arr().unwrap().iter().map(|v| v.as_str().unwrap()).collect();
+                    assert_eq!(&got, want, "{name}");
+                }
+            });
+        }
+    });
+    server.shutdown();
+}
+
+#[test]
+fn resubmission_hits_the_cache() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        schedulers: vec![SchedulerConfig::heft(), SchedulerConfig::cpop()],
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let body = schedule_body(&tiny_instance(), &[]);
+
+    let mut client = http::Client::connect(&addr).unwrap();
+    let (status, first) = client.request("POST", "/schedule", &body).unwrap();
+    assert_eq!(status, 200, "{first}");
+    let (status, second) = client.request("POST", "/schedule", &body).unwrap();
+    assert_eq!(status, 200, "{second}");
+
+    let first = parse(&first).unwrap();
+    let second = parse(&second).unwrap();
+    assert!(!first.req_bool("cached").unwrap());
+    assert!(second.req_bool("cached").unwrap(), "byte-identical resubmission must hit");
+    // Only the envelope (cached flag, latency) may differ — the
+    // deterministic payload is the same stored Value.
+    assert_eq!(first.req("payload").unwrap(), second.req("payload").unwrap());
+
+    let stats = poll_stats(&addr, "cache hit recorded", |s| {
+        s.req_u64("cache_hits").unwrap() >= 1
+    });
+    assert_eq!(stats.req_u64("cache_hits").unwrap(), 1);
+    assert_eq!(stats.req_u64("cache_entries").unwrap(), 1);
+    assert!(stats.req_f64("cache_hit_rate").unwrap() > 0.0);
+    server.shutdown();
+}
+
+/// Backpressure: with one worker pinned on a slow job and a queue of
+/// depth 1 already holding a second, a third submission is shed with
+/// 429 instead of buffering — and the two admitted jobs still finish.
+#[test]
+fn queue_full_requests_are_rejected_with_429() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_depth: 1,
+        cache_size: 0, // resubmissions must not short-circuit the queue
+        schedulers: vec![SchedulerConfig::heft()],
+        debug: true,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let inst = tiny_instance();
+    let slow = schedule_body(&inst, &[("debug_sleep_ms", Value::Num(2000.0))]);
+
+    std::thread::scope(|scope| {
+        let a = scope.spawn(|| http::roundtrip(&addr, "POST", "/schedule", &slow).unwrap());
+        // Wait until A occupies the worker (queue drained again)...
+        poll_stats(&addr, "job A picked up by the worker", |s| {
+            s.req_u64("requests_total").unwrap() >= 1 && s.req_u64("queue_depth").unwrap() == 0
+        });
+        let b = scope.spawn(|| http::roundtrip(&addr, "POST", "/schedule", &slow).unwrap());
+        // ...and B fills the only queue slot.
+        poll_stats(&addr, "job B queued", |s| s.req_u64("queue_depth").unwrap() == 1);
+
+        let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &slow).unwrap();
+        assert_eq!(status, 429, "{body}");
+        let doc = parse(&body).unwrap();
+        assert!(!doc.req_bool("ok").unwrap());
+        assert!(doc.req_str("error").unwrap().contains("queue full"), "{body}");
+
+        // The admitted jobs are unaffected by the shed one.
+        assert_eq!(a.join().unwrap().0, 200);
+        assert_eq!(b.join().unwrap().0, 200);
+    });
+    let stats = poll_stats(&addr, "rejection counted", |s| {
+        s.req_u64("requests_rejected").unwrap() >= 1
+    });
+    assert_eq!(stats.req_u64("requests_rejected").unwrap(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn slow_request_times_out_with_408() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        cache_size: 0,
+        schedulers: vec![SchedulerConfig::heft()],
+        debug: true,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let inst = tiny_instance();
+
+    let slow = schedule_body(
+        &inst,
+        &[("debug_sleep_ms", Value::Num(500.0)), ("timeout_ms", Value::Num(50.0))],
+    );
+    let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &slow).unwrap();
+    assert_eq!(status, 408, "{body}");
+    assert!(parse(&body).unwrap().req_str("error").unwrap().contains("deadline"));
+
+    // The daemon is not wedged: a normal request still completes.
+    let (status, body) =
+        http::roundtrip(&addr, "POST", "/schedule", &schedule_body(&inst, &[])).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let stats = poll_stats(&addr, "timeout counted", |s| {
+        s.req_u64("requests_timed_out").unwrap() >= 1
+    });
+    assert_eq!(stats.req_u64("requests_timed_out").unwrap(), 1);
+    server.shutdown();
+}
+
+/// The crash-proofing claim: a job that panics mid-sweep answers *its*
+/// request with a 500 carrying the panic message — and the daemon (and
+/// its worker) keep serving.
+#[test]
+fn panicking_job_fails_request_but_daemon_survives() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        cache_size: 0,
+        schedulers: vec![SchedulerConfig::heft()],
+        debug: true,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let inst = tiny_instance();
+
+    let poison = schedule_body(&inst, &[("debug_panic", Value::Bool(true))]);
+    let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &poison).unwrap();
+    assert_eq!(status, 500, "{body}");
+    let doc = parse(&body).unwrap();
+    assert!(!doc.req_bool("ok").unwrap());
+    assert!(doc.req_str("error").unwrap().contains("debug_panic requested"), "{body}");
+
+    // Same single worker, next request: contained, not crashed.
+    let (status, body) =
+        http::roundtrip(&addr, "POST", "/schedule", &schedule_body(&inst, &[])).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let stats = poll_stats(&addr, "failure counted", |s| {
+        s.req_u64("requests_failed").unwrap() >= 1
+    });
+    assert_eq!(stats.req_u64("requests_failed").unwrap(), 1);
+    assert_eq!(stats.req_u64("requests_ok").unwrap(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_400_not_a_crash() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        schedulers: vec![SchedulerConfig::heft()],
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (status, body) = http::roundtrip(&addr, "POST", "/schedule", "{not json").unwrap();
+    assert_eq!(status, 400, "{body}");
+    let (status, body) =
+        http::roundtrip(&addr, "POST", "/schedule", r#"{"instance": 5}"#).unwrap();
+    assert_eq!(status, 400, "{body}");
+    let (status, _) = http::roundtrip(&addr, "GET", "/nope", "").unwrap();
+    assert_eq!(status, 404);
+
+    let stats = poll_stats(&addr, "bad requests counted", |s| {
+        s.req_u64("requests_bad").unwrap() >= 2
+    });
+    assert_eq!(stats.req_u64("requests_bad").unwrap(), 2);
+    // Malformed requests never occupied a queue slot or a worker.
+    assert_eq!(stats.req_u64("requests_ok").unwrap(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_endpoint_stops_the_daemon() {
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        schedulers: vec![SchedulerConfig::heft()],
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (status, body) = http::roundtrip(&addr, "POST", "/shutdown", "").unwrap();
+    assert_eq!((status, body.as_str()), (200, r#"{"shutting_down":true}"#));
+    server.wait(); // acceptor and workers exit on their own
+
+    // The listener is gone: new connections are refused.
+    assert!(http::roundtrip(&addr, "GET", "/healthz", "").is_err());
+}
+
+/// Binary-level round-trip: `ptgs serve` on an ephemeral port prints
+/// its bound address, serves a request, and exits cleanly on
+/// `POST /shutdown` — the daemon's scripted control path (pure std
+/// cannot trap SIGTERM).
+#[test]
+fn cli_serve_round_trip_and_clean_shutdown() {
+    use std::io::{BufRead, BufReader};
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_ptgs"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--threads", "1", "--schedulers", "HEFT"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let banner = lines.next().unwrap().unwrap();
+    assert!(banner.starts_with("ptgs serve: listening on "), "{banner}");
+    let addr = banner.rsplit(' ').next().unwrap().to_string();
+
+    let (status, body) =
+        http::roundtrip(&addr, "POST", "/schedule", &schedule_body(&tiny_instance(), &[]))
+            .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let (status, _) = http::roundtrip(&addr, "POST", "/shutdown", "").unwrap();
+    assert_eq!(status, 200);
+
+    let out = child.wait().unwrap();
+    assert!(out.success(), "serve exited with {out:?}");
+    let rest: Vec<String> = lines.map(Result::unwrap).collect();
+    assert!(
+        rest.iter().any(|l| l.contains("shut down cleanly")),
+        "missing clean-shutdown banner: {rest:?}"
+    );
+}
