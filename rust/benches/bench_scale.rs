@@ -22,6 +22,16 @@
 //! machine-readable `BENCH_scale.json` (override the path with
 //! `PTGS_BENCH_SCALE_OUT`) with the working-set proxies
 //! (`benchlib::Workload`) alongside the timings.
+//!
+//! The **million-task streaming leg** (`scale/fused72/n1m`) drives the
+//! full 72-config cube through `fused_sweep_threaded` at n = 1M in
+//! full runs (a 20k *proxy* under `PTGS_BENCH_FAST=1`, flagged
+//! `"proxy": true` in the JSON) and records wall-clock, the pooled
+//! DAT-row high-water mark, and the peak-RSS delta next to the
+//! analytic footprint the pre-streaming dense `n×m` matrices would
+//! have needed. Setting `PTGS_BENCH_ASSERT_RSS=1` (CI bench-smoke
+//! does) turns that comparison into a hard assertion: the streaming
+//! sweep's real memory growth must stay below the dense baseline.
 
 use std::hint::black_box;
 use std::path::PathBuf;
@@ -32,7 +42,9 @@ use ptgs::datasets::layered::layered_instance;
 use ptgs::graph::TaskId;
 use ptgs::instance::ProblemInstance;
 use ptgs::ranks::RankBackend;
-use ptgs::scheduler::{fused_sweep, SchedulerConfig, SchedulerWorkspace, SchedulingContext};
+use ptgs::scheduler::{
+    fused_sweep, fused_sweep_threaded, SchedulerConfig, SchedulerWorkspace, SchedulingContext,
+};
 use ptgs::util::Value;
 
 const SEED: u64 = 0x5CA1_AB1E;
@@ -84,6 +96,10 @@ fn main() {
         let mut ws = SchedulerWorkspace::new();
         let outcome = fused_sweep(&ctx, &SchedulerConfig::ALL, &mut ws);
         let map = outcome.group_of();
+        let mut pool: Vec<SchedulerWorkspace> =
+            (0..2).map(|_| SchedulerWorkspace::new()).collect();
+        let threaded = fused_sweep_threaded(&ctx, &SchedulerConfig::ALL, &mut pool);
+        let tmap = threaded.group_of();
         for (i, cfg) in SchedulerConfig::ALL.iter().enumerate() {
             let s = cfg.build();
             let got = s.schedule_into(&ctx, &mut ws);
@@ -95,12 +111,20 @@ fn main() {
                 "{} fused schedule drifted at n=1000",
                 cfg.name()
             );
+            assert_eq!(
+                threaded.groups[tmap[i]].schedule,
+                want,
+                "{} threaded fused schedule drifted at n=1000",
+                cfg.name()
+            );
             ws.recycle(got);
         }
-        for grp in outcome.groups {
+        for grp in outcome.groups.into_iter().chain(threaded.groups) {
             ws.recycle(grp.schedule);
         }
-        println!("scale: all 72 configs (shared-ctx + fused) bit-identical to the reference at n=1000");
+        println!(
+            "scale: all 72 configs (shared-ctx + fused + threaded) bit-identical to the reference at n=1000"
+        );
     }
 
     let mut b = Bencher::from_env().with_config(Config {
@@ -187,6 +211,108 @@ fn main() {
         }
     }
 
+    // 3c. Million-task streaming leg: the full cube through the
+    // threaded fused engine, one workspace per worker. A single timed
+    // pass rather than a Bencher loop — at this scale the numbers that
+    // matter are wall-clock, the pooled DAT-row high-water mark, and
+    // peak RSS, not mean ± std over repeats. Fast mode substitutes a
+    // 20k proxy so CI smoke drives the identical code path (threaded
+    // forks, retirement, lazy tiles) inside its budget.
+    let n1m_stats = {
+        let n1m: usize = if fast { 20_000 } else { 1_000_000 };
+        let inst = layered_instance(SEED, n1m);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        for cfg in SchedulerConfig::ALL.iter() {
+            ctx.warm_for(cfg);
+        }
+        inst.graph.freeze();
+        let threads = std::thread::available_parallelism().map_or(4, |p| p.get()).clamp(1, 8);
+        let mut pool: Vec<SchedulerWorkspace> =
+            (0..threads).map(|_| SchedulerWorkspace::new()).collect();
+
+        let rss_before = benchlib::peak_rss_bytes();
+        let t0 = Instant::now();
+        let outcome = fused_sweep_threaded(&ctx, &SchedulerConfig::ALL, &mut pool);
+        let secs = t0.elapsed().as_secs_f64();
+        let rss_after = benchlib::peak_rss_bytes();
+
+        let m = inst.network.len();
+        let peak_rows =
+            pool.iter().map(SchedulerWorkspace::peak_live_dat_rows).max().unwrap_or(0);
+        // What the pre-streaming core would have allocated for the same
+        // sweep: one dense n×m exec matrix plus a full n×m DAT matrix
+        // in every terminal group's scratch (terminal groups lower-
+        // bound the scratches that existed).
+        let dense_baseline =
+            8u64 * (n1m as u64) * (m as u64) * (outcome.stats.final_groups as u64 + 1);
+        let rss_delta = match (rss_before, rss_after) {
+            (Some(a), Some(b)) => Some(b.saturating_sub(a)),
+            _ => None,
+        };
+        println!(
+            "scale/fused72/n1m (n={n1m}{}): {secs:.3} s on {threads} threads, \
+             {} terminal groups, {} forks, peak {} pooled DAT rows \
+             (dense model: {} full n×m matrices)",
+            if fast { ", proxy" } else { "" },
+            outcome.stats.final_groups,
+            outcome.stats.fork_events,
+            peak_rows,
+            outcome.stats.final_groups + 1,
+        );
+        if let Some(delta) = rss_delta {
+            println!(
+                "scale/fused72/n1m: peak-RSS delta {:.1} MiB vs dense baseline {:.1} MiB",
+                delta as f64 / (1024.0 * 1024.0),
+                dense_baseline as f64 / (1024.0 * 1024.0),
+            );
+        }
+        let assert_rss =
+            std::env::var("PTGS_BENCH_ASSERT_RSS").is_ok_and(|v| !v.is_empty() && v != "0");
+        if assert_rss {
+            let delta = rss_delta
+                .expect("PTGS_BENCH_ASSERT_RSS requires procfs (VmHWM) — linux only");
+            assert!(
+                delta < dense_baseline,
+                "streaming fused sweep at n={n1m} grew peak RSS by {delta} bytes — \
+                 not below the {dense_baseline}-byte dense-matrix baseline it replaced"
+            );
+            println!(
+                "scale/fused72/n1m: RSS assertion passed ({delta} < {dense_baseline} bytes)"
+            );
+        }
+        // Pooled rows must track the frontier (a couple of layers of
+        // the wide DAG), not the task count — the tentpole invariant,
+        // asserted on every run at whatever size this leg ran.
+        let layers = (n1m as f64).powf(0.4).ceil().max(2.0) as usize;
+        let width = n1m / layers + 1;
+        assert!(
+            peak_rows <= 3 * width,
+            "peak pooled DAT rows {peak_rows} exceeds 3× the layer width {width} at n={n1m}"
+        );
+
+        let mut fields = vec![
+            ("n", Value::Num(n1m as f64)),
+            ("proxy", Value::Bool(fast)),
+            ("threads", Value::Num(threads as f64)),
+            ("seconds", Value::Num(secs)),
+            ("terminal_groups", Value::Num(outcome.stats.final_groups as f64)),
+            ("fork_events", Value::Num(outcome.stats.fork_events as f64)),
+            ("window_scans", Value::Num(outcome.stats.window_scans as f64)),
+            ("peak_live_dat_rows", Value::Num(peak_rows as f64)),
+            ("dense_baseline_bytes", Value::Num(dense_baseline as f64)),
+        ];
+        if let Some(b) = rss_after {
+            fields.push(("peak_rss_bytes", Value::Num(b as f64)));
+        }
+        if let Some(d) = rss_delta {
+            fields.push(("rss_delta_bytes", Value::Num(d as f64)));
+        }
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
+        }
+        Value::obj(fields)
+    };
+
     // 4. 100k completion pass (all modes): one plan per priority
     // function, validated, with tasks-scheduled/sec.
     let inst = layered_instance(SEED, COMPLETION_TASKS);
@@ -234,6 +360,7 @@ fn main() {
     if let Value::Obj(fields) = &mut doc {
         fields.push(("completion".to_string(), Value::Arr(completion)));
         fields.push(("fused".to_string(), Value::Arr(fused_stats)));
+        fields.push(("n1m".to_string(), n1m_stats));
         let n_ref = *reference_sizes.last().expect("non-empty");
         if let (Some(reference), Some(shared)) = (
             find(format!("scale/reference/n{n_ref}")),

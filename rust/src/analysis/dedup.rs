@@ -24,7 +24,9 @@ use crate::benchmark::Record;
 /// Distinct-schedule summary for one (dataset, instance) pair.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DedupRow {
+    /// Dataset name.
     pub dataset: String,
+    /// Instance index within the dataset.
     pub instance: usize,
     /// Records that carried a schedule hash (all of them, on documents
     /// produced by the current harness).

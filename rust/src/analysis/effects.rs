@@ -9,14 +9,20 @@ use crate::scheduler::{CompareFn, PriorityFn, SchedulerConfig};
 /// The five algorithmic components of the parametric scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Component {
+    /// Task prioritization function (UR / CR / AT).
     Priority,
+    /// Candidate comparison function (EFT / EST / Quickest).
     Compare,
+    /// Append-only vs insertion-based window finding.
     AppendOnly,
+    /// Critical-path reservation on/off.
     CriticalPath,
+    /// Sufferage top-2 selection on/off.
     Sufferage,
 }
 
 impl Component {
+    /// All five components, in the paper's order.
     pub const ALL: [Component; 5] = [
         Component::Priority,
         Component::Compare,
@@ -25,6 +31,7 @@ impl Component {
         Component::Sufferage,
     ];
 
+    /// Snake-case column name used in tables and CSV output.
     pub fn as_str(&self) -> &'static str {
         match self {
             Component::Priority => "initial_priority",
@@ -82,9 +89,13 @@ impl std::fmt::Display for Component {
 /// per-instance measurement of every scheduler having that value.
 #[derive(Debug, Clone)]
 pub struct EffectRow {
+    /// Component name ([`Component::as_str`]).
     pub component: String,
+    /// The component value this row aggregates (e.g. `EFT`, `true`).
     pub value: String,
+    /// Makespan-ratio distribution across matching measurements.
     pub makespan: Stats,
+    /// Runtime-ratio distribution across matching measurements.
     pub runtime: Stats,
 }
 

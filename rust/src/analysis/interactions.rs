@@ -27,10 +27,15 @@ pub fn parse_dataset_name(name: &str) -> Option<(String, String)> {
 /// One cell of an interaction table.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InteractionCell {
+    /// Value of the first component (row).
     pub a: String,
+    /// Value of the second component (column).
     pub b: String,
+    /// Mean makespan ratio over measurements matching both values.
     pub mean_makespan_ratio: f64,
+    /// Mean runtime ratio over measurements matching both values.
     pub mean_runtime_ratio: f64,
+    /// Measurements aggregated into the cell.
     pub n: usize,
 }
 

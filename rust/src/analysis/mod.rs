@@ -31,22 +31,36 @@ use render::{ascii_table, fmt_f, write_csv};
 /// Every reproducible artifact of the paper's evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Artifact {
+    /// Pareto-optimal schedulers with their components (Table I).
     Table1,
+    /// Pareto scatter of mean ratios per dataset (Fig. 3a).
     Fig3a,
+    /// Pareto-rank grid, scheduler × dataset (Fig. 3b).
     Fig3b,
+    /// Effect of the priority function (Fig. 4).
     Fig4,
+    /// Effect of the comparison function (Fig. 5).
     Fig5,
+    /// Effect of insertion vs append-only (Fig. 6).
     Fig6,
+    /// Effect of critical-path reservation (Fig. 7).
     Fig7,
+    /// Effect of sufferage selection (Fig. 8).
     Fig8,
+    /// Per-dataset priority effect (Fig. 9).
     Fig9,
+    /// Interaction: append-only × priority (Fig. 10a).
     Fig10a,
+    /// Interaction: append-only × compare (Fig. 10b).
     Fig10b,
+    /// Interaction: sufferage × compare (Fig. 10c).
     Fig10c,
+    /// Interaction: critical-path × priority (Fig. 10d).
     Fig10d,
 }
 
 impl Artifact {
+    /// Every artifact, in paper order.
     pub const ALL: [Artifact; 13] = [
         Artifact::Table1,
         Artifact::Fig3a,
@@ -63,6 +77,7 @@ impl Artifact {
         Artifact::Fig10d,
     ];
 
+    /// Stable CLI/file identifier (`table1`, `fig3a`, …).
     pub fn id(&self) -> &'static str {
         match self {
             Artifact::Table1 => "table1",
@@ -81,10 +96,12 @@ impl Artifact {
         }
     }
 
+    /// Parse an [`Artifact::id`] back into the artifact.
     pub fn from_id(id: &str) -> Option<Artifact> {
         Artifact::ALL.iter().copied().find(|a| a.id() == id)
     }
 
+    /// One-line human description (CLI `--list` output).
     pub fn description(&self) -> &'static str {
         match self {
             Artifact::Table1 => "schedulers pareto-optimal for >=1 dataset, with components",

@@ -8,9 +8,13 @@ use crate::benchmark::MeanRatios;
 /// One scheduler's position for one dataset, with its pareto flag.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParetoPoint {
+    /// Scheduler name.
     pub scheduler: String,
+    /// Mean makespan ratio on the dataset.
     pub makespan_ratio: f64,
+    /// Mean runtime ratio on the dataset.
     pub runtime_ratio: f64,
+    /// Pareto-optimal within the dataset's point set?
     pub pareto: bool,
 }
 

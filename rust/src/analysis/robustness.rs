@@ -17,7 +17,9 @@ use crate::benchmark::SimRecord;
 /// Aggregated robustness of one scheduler on one dataset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RobustnessRow {
+    /// Scheduler name.
     pub scheduler: String,
+    /// Dataset name.
     pub dataset: String,
     /// Mean robustness ratio over instances (1.0 = plans hold exactly).
     pub mean_robustness: f64,
@@ -25,6 +27,7 @@ pub struct RobustnessRow {
     pub worst_robustness: f64,
     /// Mean planned (static) makespan, for context.
     pub mean_static_makespan: f64,
+    /// Instances aggregated.
     pub instances: usize,
     /// Total replans across all instances and trials.
     pub replans: usize,

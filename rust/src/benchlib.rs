@@ -67,11 +67,17 @@ pub fn fast_mode() -> bool {
 /// by the perf harness in EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark name as passed to [`Bencher::bench`] (`group/name`).
     pub name: String,
+    /// Mean wall-clock per iteration across samples.
     pub mean: Duration,
+    /// Population standard deviation of the per-sample means.
     pub std: Duration,
+    /// Fastest per-iteration time over all samples.
     pub min: Duration,
+    /// Iterations per sample, fixed by warm-up calibration.
     pub iters_per_sample: u64,
+    /// Number of samples taken.
     pub samples: usize,
 }
 
@@ -79,6 +85,7 @@ pub struct Measurement {
 pub struct Bencher {
     config: Config,
     filter: Option<String>,
+    /// Completed measurements, in run order; feed to [`measurements_json`].
     pub results: Vec<Measurement>,
 }
 
@@ -231,6 +238,27 @@ pub fn measurements_json_with_workload(results: &[Measurement], workload: &Workl
     doc
 }
 
+/// Peak resident-set size of the current process in bytes (`VmHWM`
+/// from `/proc/self/status`), or `None` where procfs is unavailable.
+///
+/// This is a process-lifetime high-water mark — it only ever grows —
+/// so callers measure a workload's footprint as the *delta* between
+/// two reads around it. `benches/bench_scale.rs` uses this to record
+/// the streaming fused sweep's peak RSS next to the analytic
+/// dense-matrix baseline it replaced.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line
+        .trim_start_matches("VmHWM:")
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .ok()?;
+    Some(kb * 1024)
+}
+
 /// Write a `BENCH_*.json` document (typically [`measurements_json`],
 /// possibly extended by the caller) to `path`, creating parent
 /// directories — ready for CI artifact upload.
@@ -327,6 +355,17 @@ mod tests {
         // The base shape is untouched.
         assert!(back.req_arr("benchmarks").unwrap().is_empty());
         back.req_bool("fast_mode").unwrap();
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_reads_a_positive_high_water_mark() {
+        // Any running process has touched at least one page; the HWM is
+        // monotone, so a second read can only be >= the first.
+        let a = peak_rss_bytes().expect("procfs available on linux");
+        assert!(a > 0);
+        let b = peak_rss_bytes().unwrap();
+        assert!(b >= a);
     }
 
     #[test]

@@ -23,9 +23,13 @@ use crate::schedule::Schedule;
 /// Extended metrics of one schedule on one instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExtendedMetrics {
+    /// Schedule length ([`Schedule::makespan`]).
     pub makespan: f64,
+    /// Serial-time-on-fastest-node / makespan.
     pub speedup: f64,
+    /// Speedup divided by the network's node count.
     pub efficiency: f64,
+    /// Mean idle time between consecutive tasks per used node.
     pub slack: f64,
 }
 

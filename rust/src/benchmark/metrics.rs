@@ -9,10 +9,15 @@ use super::Record;
 /// Per-instance ratios of one scheduler against the evaluated set.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RatioRecord {
+    /// Scheduler name.
     pub scheduler: String,
+    /// Dataset name.
     pub dataset: String,
+    /// Instance index within the dataset.
     pub instance: usize,
+    /// Makespan / best makespan on this instance across the set.
     pub makespan_ratio: f64,
+    /// Runtime / best runtime on this instance across the set.
     pub runtime_ratio: f64,
 }
 
@@ -20,10 +25,15 @@ pub struct RatioRecord {
 /// pareto plots, Fig. 3a).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MeanRatios {
+    /// Scheduler name.
     pub scheduler: String,
+    /// Dataset name.
     pub dataset: String,
+    /// Mean makespan ratio over the dataset's instances.
     pub makespan_ratio: f64,
+    /// Mean runtime ratio over the dataset's instances.
     pub runtime_ratio: f64,
+    /// Instances aggregated.
     pub instances: usize,
 }
 
@@ -110,17 +120,26 @@ impl BenchmarkResults {
 /// Simple descriptive statistics for effect plots (Figs. 4–10).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Stats {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Lower quartile (linear interpolation).
     pub q25: f64,
+    /// Median.
     pub median: f64,
+    /// Upper quartile (linear interpolation).
     pub q75: f64,
+    /// Maximum.
     pub max: f64,
 }
 
 impl Stats {
+    /// Descriptive statistics of a non-empty sample.
     pub fn of(values: &[f64]) -> Stats {
         assert!(!values.is_empty(), "stats of empty slice");
         let n = values.len();

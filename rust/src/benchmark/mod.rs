@@ -32,16 +32,22 @@ use crate::util::{FromJson, ToJson, Value};
 /// One (scheduler, instance) measurement.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Record {
+    /// Scheduler name ([`SchedulerConfig::name`]).
     pub scheduler: String,
+    /// Dataset name the instance came from.
     pub dataset: String,
+    /// Instance index within the dataset.
     pub instance: usize,
+    /// Makespan of the produced schedule.
     pub makespan: f64,
     /// Wall-clock time to *produce* the schedule, in nanoseconds. Under
     /// the fused sweep path ([`HarnessOptions::fused`]) this is the
     /// whole sweep's wall-clock amortized equally over its configs; set
     /// `fused: false` for paper-exact per-config runtime ratios.
     pub runtime_ns: u64,
+    /// Task count of the instance.
     pub num_tasks: usize,
+    /// Network node count of the instance.
     pub num_nodes: usize,
     /// Content hash of the produced schedule
     /// ([`crate::schedule::Schedule::content_hash`]); feeds the
@@ -139,8 +145,11 @@ impl Default for HarnessOptions {
 /// Serial benchmark executor.
 #[derive(Debug, Clone)]
 pub struct Harness {
+    /// Scheduler configurations to run on every instance.
     pub schedulers: Vec<SchedulerConfig>,
+    /// Rank backend used for every schedule.
     pub backend: RankBackend,
+    /// Sweep-path and timing knobs.
     pub options: HarnessOptions,
 }
 
@@ -154,6 +163,7 @@ impl Harness {
         }
     }
 
+    /// Harness over an explicit scheduler list, default options.
     pub fn with_schedulers(schedulers: Vec<SchedulerConfig>) -> Self {
         Harness {
             schedulers,
@@ -421,10 +431,12 @@ fn recycle_outcome(ws: &mut SchedulerWorkspace, outcome: crate::scheduler::Fused
 /// A pile of records plus ratio/aggregation machinery (see [`metrics`]).
 #[derive(Debug, Clone, Default)]
 pub struct BenchmarkResults {
+    /// Every (scheduler, instance) measurement of the run.
     pub records: Vec<Record>,
 }
 
 impl BenchmarkResults {
+    /// Wrap raw records.
     pub fn new(records: Vec<Record>) -> Self {
         BenchmarkResults { records }
     }
@@ -438,6 +450,7 @@ impl BenchmarkResults {
         std::fs::write(path, doc.to_string())
     }
 
+    /// Load a document written by [`BenchmarkResults::save`].
     pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         let bad = |e: String| std::io::Error::new(std::io::ErrorKind::InvalidData, e);

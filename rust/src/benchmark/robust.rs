@@ -17,7 +17,9 @@ use crate::util::{FromJson, ToJson, Value};
 /// A simulation sweep: noise model, replay policy, trials per instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimSweep {
+    /// Noise model applied to every trial.
     pub perturb: Perturbation,
+    /// Static replay or online rescheduling.
     pub policy: ReplayPolicy,
     /// Noise trials per (scheduler, instance).
     pub trials: usize,
@@ -50,8 +52,11 @@ impl SimSweep {
 /// One (scheduler, instance) robustness measurement over all trials.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimRecord {
+    /// Scheduler name ([`SchedulerConfig::name`]).
     pub scheduler: String,
+    /// Dataset name the instance came from.
     pub dataset: String,
+    /// Instance index within the dataset.
     pub instance: usize,
     /// The plan's own (static) makespan.
     pub static_makespan: f64,
@@ -61,6 +66,7 @@ pub struct SimRecord {
     pub worst_sim_makespan: f64,
     /// Mean robustness ratio (realized / planned) over the trials.
     pub robustness: f64,
+    /// Noise trials aggregated into this record.
     pub trials: usize,
     /// Total replans across trials (0 under the static policy).
     pub replans: usize,

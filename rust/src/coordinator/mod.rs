@@ -64,6 +64,7 @@ pub fn sort_canonical<T: CanonicalOrder>(records: &mut [T]) {
 /// `run_jobs` returns; [`Metrics::failed_jobs`] names each failed job.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Jobs enqueued for this run.
     pub jobs_total: AtomicUsize,
     /// Jobs that completed and contributed records.
     pub jobs_done: AtomicUsize,
@@ -71,6 +72,7 @@ pub struct Metrics {
     /// the rest of the sweep keeps running (see [`Coordinator`] docs on
     /// `run_jobs` failure semantics).
     pub jobs_failed: AtomicUsize,
+    /// Records received by the leader so far.
     pub records: AtomicUsize,
     /// Identity + panic message of every failed job, in completion
     /// order (`"{job:?}: {panic message}"`).
@@ -117,8 +119,11 @@ impl Default for CoordinatorOptions {
 /// The leader: owns the scheduler set and fans work out to workers.
 #[derive(Debug, Clone)]
 pub struct Coordinator {
+    /// Scheduler configurations every worker runs per instance.
     pub schedulers: Vec<SchedulerConfig>,
+    /// Rank backend handed to each worker's harness.
     pub backend: RankBackend,
+    /// Threading, sharding, and backpressure knobs.
     pub options: CoordinatorOptions,
 }
 
@@ -132,6 +137,7 @@ impl Coordinator {
         }
     }
 
+    /// Coordinator over an explicit scheduler list, default options.
     pub fn with_schedulers(schedulers: Vec<SchedulerConfig>) -> Self {
         Coordinator {
             schedulers,

@@ -56,9 +56,13 @@ pub const SPEED_EPS: f64 = 0.05;
 /// Task-graph family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Structure {
+    /// In-trees: leaves-to-root reduction DAGs (paper §III).
     InTrees,
+    /// Out-trees: root-to-leaves fan-out DAGs (paper §III).
     OutTrees,
+    /// Parallel chains joined at a source and sink (paper §III).
     Chains,
+    /// Chained diamond/cycle motifs (paper §III).
     Cycles,
     /// Layered wide DAG ([`layered`]) — the large-graph scaling family.
     /// Not part of the paper's grid ([`Structure::ALL`]); appended last
@@ -74,6 +78,7 @@ impl Structure {
     pub const ALL: [Structure; 4] =
         [Structure::InTrees, Structure::OutTrees, Structure::Chains, Structure::Cycles];
 
+    /// Snake-case family name (`in_trees`, `layered`, …).
     pub fn as_str(&self) -> &'static str {
         match self {
             Structure::InTrees => "in_trees",
@@ -84,6 +89,7 @@ impl Structure {
         }
     }
 
+    /// Parse [`Structure::as_str`] output (includes `layered`).
     pub fn from_str_opt(s: &str) -> Option<Structure> {
         Structure::ALL
             .iter()
@@ -102,13 +108,18 @@ impl std::fmt::Display for Structure {
 /// Specification of one dataset: a structure family at a target CCR.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DatasetSpec {
+    /// Task-graph family.
     pub structure: Structure,
+    /// Target communication-to-computation ratio.
     pub ccr: f64,
+    /// Instances to generate.
     pub count: usize,
+    /// Base RNG seed; instance `i` forks stream `i`.
     pub seed: u64,
 }
 
 impl DatasetSpec {
+    /// Spec with the default instance count and seed.
     pub fn new(structure: Structure, ccr: f64) -> Self {
         DatasetSpec { structure, ccr, count: DEFAULT_COUNT, seed: 0x5A6A_5EED }
     }

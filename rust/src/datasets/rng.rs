@@ -35,6 +35,7 @@ impl Rng {
         Rng::seeded(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the xoshiro256++ stream.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -70,8 +70,11 @@ impl TraceFormat {
 /// network exactly.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkSynthesis {
+    /// Machines to synthesize.
     pub nodes: usize,
+    /// Standard deviation of the clipped-Gaussian speeds/links.
     pub heterogeneity: f64,
+    /// Base seed, mixed with the trace name.
     pub seed: u64,
 }
 
@@ -265,11 +268,14 @@ pub fn to_trace_json(inst: &ProblemInstance) -> Value {
 /// per-trace rows.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceSet {
+    /// Name of the set (individual traces keep their own names).
     pub name: String,
+    /// One instance per loaded trace, in sorted path order.
     pub instances: Vec<ProblemInstance>,
 }
 
 impl TraceSet {
+    /// Wrap already-loaded instances under a set name.
     pub fn new(name: impl Into<String>, instances: Vec<ProblemInstance>) -> Self {
         TraceSet { name: name.into(), instances }
     }
@@ -316,10 +322,12 @@ impl TraceSet {
         Ok(TraceSet::new("traces", instances))
     }
 
+    /// Number of traces in the set.
     pub fn len(&self) -> usize {
         self.instances.len()
     }
 
+    /// No traces loaded?
     pub fn is_empty(&self) -> bool {
         self.instances.is_empty()
     }

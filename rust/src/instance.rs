@@ -10,11 +10,14 @@ use crate::util::{FromJson, ToJson, Value};
 pub struct ProblemInstance {
     /// Instance name (e.g. `in_trees_ccr_1.0/inst_042`).
     pub name: String,
+    /// The task DAG: costs, dependencies, edge data sizes.
     pub graph: TaskGraph,
+    /// The heterogeneous network the tasks are placed onto.
     pub network: Network,
 }
 
 impl ProblemInstance {
+    /// Bundle a graph and network under an instance name.
     pub fn new(name: impl Into<String>, graph: TaskGraph, network: Network) -> Self {
         ProblemInstance { name: name.into(), graph, network }
     }

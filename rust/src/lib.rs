@@ -21,7 +21,7 @@
 //!   list scheduler whose 5 components span 72 algorithms (HEFT, CPoP,
 //!   MCT, MET, Sufferage, … as special cases). Sweeps share one
 //!   [`scheduler::SchedulingContext`] per instance (ranks, priorities,
-//!   pins, exec matrix computed once, never per config) and one
+//!   pins, topo order computed once, never per config) and one
 //!   reusable [`scheduler::SchedulerWorkspace`] per worker thread
 //!   (scratch buffers allocated once, recycled per config). Multi-config
 //!   sweeps default to the **fused engine**
@@ -70,6 +70,16 @@
 //! assert!(schedule.validate(&instance).is_ok());
 //! println!("makespan = {}", schedule.makespan());
 //! ```
+//!
+//! ## Architecture
+//!
+//! `ARCHITECTURE.md` at the repository root maps the crate layer by
+//! layer — problem model → immutable context → pooled workspaces →
+//! scheduling cores → harnesses and services — and states the two
+//! invariants every layer upholds: bit-exactness against
+//! `schedule_reference` and O(1) heap allocations per warm run.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod benchlib;

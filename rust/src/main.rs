@@ -3,19 +3,24 @@
 //! ```text
 //! ptgs generate  --structure chains --ccr 1 --count 100 --out instances.json
 //! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
-//! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--threads N|--workers 0] [--repeats 1] [--fused] [--out results/benchmark.json]
-//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--threads N|--workers 0] [--out results/robustness.csv]
-//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--per-config] [--simulate (+ the simulate flags)] [--threads N|--workers 0] [--out <csv>]
+//! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--threads N] [--repeats 1] [--fused] [--out results/benchmark.json]
+//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--threads N] [--out results/robustness.csv]
+//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--per-config] [--simulate (+ the simulate flags)] [--threads N] [--out <csv>]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
-//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N|--workers 0] [--fused] [--out-dir results]
+//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N] [--fused] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
 //! ptgs serve     [--addr 127.0.0.1:7463] [--threads N] [--queue-depth 64] [--timeout-ms 30000] [--cache-size 256] [--schedulers all] [--debug]
 //! ptgs list      schedulers|datasets|artifacts
 //! ```
 //!
-//! Worker-thread count resolves as `--threads N` (must be ≥ 1), then the
-//! legacy `--workers N` (0 = auto), then the `PTGS_THREADS` environment
-//! variable, then available parallelism.
+//! Worker-thread count: use `--threads N` (must be ≥ 1) or the
+//! `PTGS_THREADS` environment variable; the default is available
+//! parallelism. The legacy `--workers N` flag (0 = auto) is
+//! **deprecated** — it is still accepted between `--threads` and
+//! `PTGS_THREADS` in the resolution order, but new scripts should use
+//! `--threads`. The pool serves both instance-level parallelism (the
+//! coordinator) and fused-sweep fork parallelism (post-fork lockstep
+//! groups drain across the same worker threads).
 
 use ptgs::util::error::{Context, Result};
 use ptgs::{anyhow, bail};
@@ -342,15 +347,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
     // simulator-consistency contract for external workloads. This
     // plans each trace once through the **fused sweep engine** (configs
     // share one lockstep loop until their decisions diverge, so the
-    // serial pre-pass costs roughly one schedule per distinct outcome,
-    // not one per config) on top of the sweep below; `--no-verify`
-    // skips it for large corpora. The zero-noise replay itself stays
-    // per config — that is the contract under test.
+    // pre-pass costs roughly one schedule per distinct outcome, not one
+    // per config), with fork-spawned groups drained across the same
+    // `--threads` pool the sweep below uses; `--no-verify` skips it for
+    // large corpora. The zero-noise replay itself stays per config —
+    // that is the contract under test.
     if !args.has("no-verify") {
-        let mut ws = ptgs::scheduler::SchedulerWorkspace::new();
+        let mut pool: Vec<ptgs::scheduler::SchedulerWorkspace> = (0..options.workers.max(1))
+            .map(|_| ptgs::scheduler::SchedulerWorkspace::new())
+            .collect();
         for inst in &set.instances {
             let ctx = ptgs::scheduler::SchedulingContext::new(inst, RankBackend::Native);
-            let outcome = ptgs::scheduler::fused_sweep(&ctx, &schedulers, &mut ws);
+            let outcome = ptgs::scheduler::fused_sweep_threaded(&ctx, &schedulers, &mut pool);
             for grp in outcome.groups {
                 let plan = grp.schedule;
                 plan.validate(inst).map_err(|e| {
@@ -382,7 +390,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
                         );
                     }
                 }
-                ws.recycle(plan);
+                pool[0].recycle(plan);
             }
         }
         println!(
@@ -613,10 +621,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 // helpers
 // ---------------------------------------------------------------------
 
-/// Resolve the coordinator worker count: `--threads N` (strict: must be
-/// ≥ 1), else the legacy `--workers N` (0 = auto), else the
-/// `PTGS_THREADS` environment variable, else `None` (auto = available
-/// parallelism).
+/// Resolve the worker-thread count: `--threads N` (strict: must be
+/// ≥ 1), else the **deprecated** legacy `--workers N` (0 = auto), else
+/// the `PTGS_THREADS` environment variable, else `None` (auto =
+/// available parallelism). The resolved pool drives both instance-level
+/// parallelism and fused-sweep fork parallelism.
 fn worker_count(args: &Args) -> Result<Option<usize>> {
     if let Some(v) = args.get("threads") {
         let n: usize = v.parse().map_err(|e| anyhow!("invalid --threads: {e}"))?;

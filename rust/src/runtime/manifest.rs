@@ -8,8 +8,11 @@ use crate::util::{parse, FromJson, Value};
 /// Shape/dtype of one tensor in the artifact's signature.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name in the entry point's signature.
     pub name: String,
+    /// Dimension sizes, row-major.
     pub shape: Vec<usize>,
+    /// Element dtype string (e.g. `f32`).
     pub dtype: String,
 }
 
@@ -31,15 +34,21 @@ impl FromJson for TensorSpec {
 /// One AOT-compiled entry point.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ManifestEntry {
+    /// HLO artifact filename, relative to the manifest.
     pub file: String,
+    /// Entry-point (computation) name inside the artifact.
     pub entry: String,
+    /// Batch dimension the artifact was compiled for.
     pub batch: usize,
+    /// Task-count dimension the artifact was compiled for.
     pub n: usize,
     /// Fixpoint iteration bound baked into the artifact: sound only for
     /// graphs whose longest path has ≤ `iters` edges. Older manifests
     /// without the field default to `n` (the always-safe bound).
     pub iters: usize,
+    /// Input tensor signature, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signature, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -71,10 +80,12 @@ impl FromJson for ManifestEntry {
 pub struct Manifest {
     /// Tropical "no edge" sentinel used by the kernels.
     pub neg: f64,
+    /// Every compiled entry point the artifact directory provides.
     pub entries: Vec<ManifestEntry>,
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from `path`.
     pub fn load(path: &Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;

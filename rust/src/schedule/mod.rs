@@ -14,11 +14,19 @@ pub const EPS: f64 = 1e-9;
 /// One scheduled task: the `(t, v, r, e)` tuple of the paper.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Assignment {
+    /// The task placed.
     pub task: TaskId,
+    /// Node it runs on.
     pub node: NodeId,
+    /// Start time `r`.
     pub start: f64,
+    /// Finish time `e`.
     pub end: f64,
 }
+
+/// Per-task node slot value meaning "not scheduled" in the
+/// struct-of-arrays assignment table (see [`Schedule`]).
+const UNSCHEDULED: u32 = u32::MAX;
 
 /// A (possibly partial) schedule: per-task assignments plus per-node
 /// timelines kept sorted by start time for O(log) window queries.
@@ -26,6 +34,18 @@ pub struct Assignment {
 /// Timelines store `Assignment` values inline (not task-id indirections)
 /// so the insertion-window gap scan — the scheduler's innermost loop —
 /// walks contiguous memory (EXPERIMENTS.md §Perf).
+///
+/// ## Struct-of-arrays assignment table
+///
+/// The per-task assignment map is stored as three parallel vectors
+/// (`node: u32` with a [`UNSCHEDULED`] sentinel, `start: f64`,
+/// `end: f64`) rather than a `Vec<Option<Assignment>>`: 20 bytes per
+/// task instead of 40, and the common "which node / when" probes touch
+/// only the vector they need. At the million-task sizes the scale
+/// bench drives, the assignment tables of 72 configs are a first-order
+/// memory term. [`Schedule::assignment`] reconstructs the `Assignment`
+/// value on the fly; `Assignment` is `Copy`, so the accessor API is
+/// unchanged apart from returning by value.
 ///
 /// ## Gap index
 ///
@@ -42,7 +62,14 @@ pub struct Assignment {
 /// never affects equality comparisons.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
-    assignments: Vec<Option<Assignment>>,
+    /// Per task: assigned node, or [`UNSCHEDULED`]. Unscheduled slots
+    /// keep `start`/`end` at 0.0 so equal schedules are equal
+    /// vector-for-vector regardless of construction history.
+    node: Vec<u32>,
+    /// Per task: start time (0.0 while unscheduled).
+    start: Vec<f64>,
+    /// Per task: end time (0.0 while unscheduled).
+    end: Vec<f64>,
     /// Per node: assignments sorted by start time.
     timelines: Vec<Vec<Assignment>>,
     /// Per node: prefix max of `end` over the start-sorted timeline,
@@ -57,7 +84,9 @@ impl Schedule {
     /// Empty schedule for `num_tasks` tasks over `num_nodes` nodes.
     pub fn new(num_tasks: usize, num_nodes: usize) -> Self {
         Schedule {
-            assignments: vec![None; num_tasks],
+            node: vec![UNSCHEDULED; num_tasks],
+            start: vec![0.0; num_tasks],
+            end: vec![0.0; num_tasks],
             timelines: vec![Vec::new(); num_nodes],
             prefix_max_end: vec![Vec::new(); num_nodes],
             scheduled: 0,
@@ -76,19 +105,21 @@ impl Schedule {
 
     /// True when every task has an assignment.
     pub fn is_complete(&self) -> bool {
-        self.scheduled == self.assignments.len()
+        self.scheduled == self.node.len()
     }
 
     /// Insert an assignment. Panics if the task is already scheduled —
     /// the scheduler must never double-schedule.
     pub fn insert(&mut self, a: Assignment) {
         assert!(
-            self.assignments[a.task].is_none(),
+            self.node[a.task] == UNSCHEDULED,
             "task {} scheduled twice",
             a.task
         );
         assert!(a.end >= a.start - EPS, "negative-duration assignment: {a:?}");
-        self.assignments[a.task] = Some(a);
+        self.node[a.task] = a.node as u32;
+        self.start[a.task] = a.start;
+        self.end[a.task] = a.end;
         self.scheduled += 1;
         let tl = &mut self.timelines[a.node];
         let pos = tl
@@ -122,8 +153,12 @@ impl Schedule {
     /// schedules through this so a 72-config sweep reuses one set of
     /// timeline buffers instead of reallocating them per config.
     pub fn reset(&mut self, num_tasks: usize, num_nodes: usize) {
-        self.assignments.clear();
-        self.assignments.resize(num_tasks, None);
+        self.node.clear();
+        self.node.resize(num_tasks, UNSCHEDULED);
+        self.start.clear();
+        self.start.resize(num_tasks, 0.0);
+        self.end.clear();
+        self.end.resize(num_tasks, 0.0);
         self.timelines.truncate(num_nodes);
         for tl in &mut self.timelines {
             tl.clear();
@@ -144,7 +179,9 @@ impl Schedule {
     /// a copy-on-diverge clone into a pooled schedule costs memcpys, not
     /// fresh allocations, once the pool is warm.
     pub fn copy_from(&mut self, src: &Schedule) {
-        self.assignments.clone_from(&src.assignments);
+        self.node.clone_from(&src.node);
+        self.start.clone_from(&src.start);
+        self.end.clone_from(&src.end);
         self.timelines.clone_from(&src.timelines);
         self.prefix_max_end.clone_from(&src.prefix_max_end);
         self.scheduled = src.scheduled;
@@ -166,20 +203,30 @@ impl Schedule {
             h ^= x;
             h = h.wrapping_mul(PRIME);
         };
-        for (t, a) in self.assignments.iter().enumerate() {
-            if let Some(a) = a {
+        for t in 0..self.node.len() {
+            if self.node[t] != UNSCHEDULED {
                 mix(t as u64);
-                mix(a.node as u64);
-                mix(a.start.to_bits());
-                mix(a.end.to_bits());
+                mix(self.node[t] as u64);
+                mix(self.start[t].to_bits());
+                mix(self.end[t].to_bits());
             }
         }
         h
     }
 
-    /// Assignment of a task, if scheduled.
-    pub fn assignment(&self, t: TaskId) -> Option<&Assignment> {
-        self.assignments[t].as_ref()
+    /// Assignment of a task, if scheduled. Returned by value
+    /// (`Assignment` is `Copy`): the struct-of-arrays storage has no
+    /// `Assignment` in memory to reference.
+    pub fn assignment(&self, t: TaskId) -> Option<Assignment> {
+        if self.node[t] == UNSCHEDULED {
+            return None;
+        }
+        Some(Assignment {
+            task: t,
+            node: self.node[t] as NodeId,
+            start: self.start[t],
+            end: self.end[t],
+        })
     }
 
     /// Tasks scheduled on `node`, ascending by start time.
@@ -220,16 +267,16 @@ impl Schedule {
         self.timelines[node].last().map(|a| a.end).unwrap_or(0.0)
     }
 
-    /// All assignments in task-id order (scheduled only).
-    pub fn assignments(&self) -> impl Iterator<Item = &Assignment> + '_ {
-        self.assignments.iter().filter_map(|a| a.as_ref())
+    /// All assignments in task-id order (scheduled only), by value.
+    pub fn assignments(&self) -> impl Iterator<Item = Assignment> + '_ {
+        (0..self.node.len()).filter_map(|t| self.assignment(t))
     }
 
     /// Makespan `m(S) = max e` (0 for the empty schedule).
     pub fn makespan(&self) -> f64 {
-        self.assignments()
-            .map(|a| a.end)
-            .fold(0.0, f64::max)
+        // Unscheduled slots hold 0.0, which the empty-schedule fold
+        // starts from anyway, so the raw column scan is exact.
+        self.end.iter().copied().fold(0.0, f64::max)
     }
 
     /// Check all four validity properties of the paper's §I-A against a
@@ -240,15 +287,15 @@ impl Schedule {
 
         // 1. Every task scheduled exactly once (exactly-once is enforced
         //    structurally by `insert`; completeness checked here).
-        if self.assignments.len() != g.len() {
+        if self.node.len() != g.len() {
             return Err(format!(
                 "schedule sized for {} tasks, graph has {}",
-                self.assignments.len(),
+                self.node.len(),
                 g.len()
             ));
         }
         for t in 0..g.len() {
-            if self.assignments[t].is_none() {
+            if self.node[t] == UNSCHEDULED {
                 return Err(format!("task {t} ({}) not scheduled", g.name(t)));
             }
         }
@@ -283,8 +330,8 @@ impl Schedule {
 
         // 4. Precedence + communication delays.
         for (src, dst, data) in g.edges() {
-            let a = self.assignments[src].unwrap();
-            let b = self.assignments[dst].unwrap();
+            let a = self.assignment(src).unwrap();
+            let b = self.assignment(dst).unwrap();
             let arrival = a.end + net.comm_time(data, a.node, b.node);
             if arrival > b.start + EPS {
                 return Err(format!(

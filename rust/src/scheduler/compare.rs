@@ -16,6 +16,7 @@ pub enum CompareFn {
 }
 
 impl CompareFn {
+    /// The three comparison functions, in the paper's order.
     pub const ALL: [CompareFn; 3] = [CompareFn::Eft, CompareFn::Est, CompareFn::Quickest];
 
     /// Signed comparison: `< 0` iff `a` is strictly better than `b`.

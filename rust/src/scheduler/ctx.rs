@@ -3,14 +3,22 @@
 //! A 72-config sweep evaluates every point of the component cube on the
 //! *same* problem instance, yet the quantities the list scheduler needs
 //! before its first iteration — task ranks, the three priority vectors,
-//! the critical-path pin set, the topological order, and the dense
-//! `exec[t][u]` execution-time matrix — depend only on the
-//! `(ProblemInstance, RankBackend)` pair, never on the configuration.
-//! [`SchedulingContext`] computes each of them **at most once** per
-//! instance and hands immutable views to every
+//! the critical-path pin set, and the topological order — depend only
+//! on the `(ProblemInstance, RankBackend)` pair, never on the
+//! configuration. [`SchedulingContext`] computes each of them **at most
+//! once** per instance and hands immutable views to every
 //! [`super::ParametricScheduler::schedule_with`] call, the online
 //! replanner ([`crate::sim::replay`]), the benchmark harness, the
 //! coordinator workers, the analysis layer, and the CLI.
+//!
+//! Execution times are **not** materialized as a dense `exec[t][u]`
+//! matrix anymore: at a million tasks that table alone is `n·m` floats
+//! of resident memory the loop reads once or twice per row.
+//! [`SchedulingContext::exec_time`] performs the same `c(t)/s(u)`
+//! division on demand, and the hot loops read rows through the
+//! tile-pooled cache in [`super::SchedulerWorkspace`]
+//! ([`super::workspace::ExecTiles`]), which computes rows on first
+//! touch and keeps only a bounded working set resident.
 //!
 //! All fields are lazily materialized (`OnceLock`), so a single
 //! `ArbitraryTopological` run still never touches the rank DP, and a
@@ -25,7 +33,7 @@
 //!
 //! **Bit-exactness contract:** every value served by the context is
 //! produced by the same arithmetic as the legacy per-call path
-//! (`native::ranks` up-vector ≡ `upward_rank`; `exec[t][u]` is the same
+//! (`native::ranks` up-vector ≡ `upward_rank`; `exec_time` is the same
 //! `cost/speed` division; priorities replicate
 //! [`super::priorities`]), so `schedule_with(&ctx)` and the reference
 //! path produce identical schedules. `rust/tests/proptest_invariants.rs`
@@ -57,9 +65,6 @@ static PRIORITY_COMPUTATIONS: AtomicUsize = AtomicUsize::new(0);
 pub struct SchedulingContext<'a> {
     inst: &'a ProblemInstance,
     backend: RankBackend,
-    /// Dense execution-time matrix, row-major `n × m`:
-    /// `exec[t·m + u] = c(t) / s(u)`.
-    exec: OnceLock<Vec<f64>>,
     ranks: OnceLock<Ranks>,
     prio_ur: OnceLock<Vec<f64>>,
     prio_cr: OnceLock<Vec<f64>>,
@@ -70,13 +75,11 @@ pub struct SchedulingContext<'a> {
 
 impl<'a> SchedulingContext<'a> {
     /// Build a context for one instance under one rank backend.
-    /// Construction is free: every field, including the execution-time
-    /// matrix, materializes on first use.
+    /// Construction is free: every field materializes on first use.
     pub fn new(inst: &'a ProblemInstance, backend: RankBackend) -> Self {
         SchedulingContext {
             inst,
             backend,
-            exec: OnceLock::new(),
             ranks: OnceLock::new(),
             prio_ur: OnceLock::new(),
             prio_cr: OnceLock::new(),
@@ -84,22 +87,6 @@ impl<'a> SchedulingContext<'a> {
             topo: OnceLock::new(),
             cp_pins: OnceLock::new(),
         }
-    }
-
-    /// The dense execution-time matrix, built on first use.
-    fn exec(&self) -> &[f64] {
-        self.exec.get_or_init(|| {
-            let n = self.inst.graph.len();
-            let m = self.inst.network.len();
-            let mut exec = Vec::with_capacity(n * m);
-            for t in 0..n {
-                let cost = self.inst.graph.cost(t);
-                for u in 0..m {
-                    exec.push(self.inst.network.exec_time(cost, u));
-                }
-            }
-            exec
-        })
     }
 
     /// The instance this context was built for.
@@ -112,18 +99,16 @@ impl<'a> SchedulingContext<'a> {
         &self.backend
     }
 
-    /// Precomputed execution time of task `t` on node `u`
-    /// (`c(t) / s(u)`, identical to [`crate::network::Network::exec_time`]).
+    /// Execution time of task `t` on node `u`, computed on demand —
+    /// exactly [`crate::network::Network::exec_time`]'s `c(t) / s(u)`
+    /// division, so values are bit-identical to the dense matrix the
+    /// context materialized before the million-task work. Hot loops
+    /// that want whole rows should go through the workspace's
+    /// [`super::workspace::ExecTiles`] cache instead of calling this
+    /// per node.
     #[inline]
     pub fn exec_time(&self, t: TaskId, u: NodeId) -> f64 {
-        self.exec()[t * self.inst.network.len() + u]
-    }
-
-    /// Row of execution times of task `t` over all nodes.
-    #[inline]
-    pub fn exec_row(&self, t: TaskId) -> &[f64] {
-        let m = self.inst.network.len();
-        &self.exec()[t * m..(t + 1) * m]
+        self.inst.network.exec_time(self.inst.graph.cost(t), u)
     }
 
     /// Full task ranks (upward + downward), computed once.
@@ -191,13 +176,13 @@ impl<'a> SchedulingContext<'a> {
         })
     }
 
-    /// Materialize exactly the pieces one configuration needs (the
-    /// exec matrix, its priority vector, and the pin set when CP
-    /// reservation is on) — the harness calls this before timing so
-    /// measured runtimes cover plan construction against a warm
-    /// context.
+    /// Materialize exactly the pieces one configuration needs (its
+    /// priority vector, and the pin set when CP reservation is on) —
+    /// the harness calls this before timing so measured runtimes cover
+    /// plan construction against a warm context. Execution times are
+    /// computed on demand (see [`SchedulingContext::exec_time`]) and
+    /// need no warming.
     pub fn warm_for(&self, cfg: &super::SchedulerConfig) -> &Self {
-        let _ = self.exec();
         let _ = self.priorities(cfg.priority);
         if cfg.critical_path {
             let _ = self.cp_pinned();
@@ -266,7 +251,7 @@ mod tests {
     }
 
     #[test]
-    fn exec_matrix_matches_network() {
+    fn exec_times_match_network() {
         let inst = diamond();
         let ctx = SchedulingContext::new(&inst, RankBackend::Native);
         for t in 0..inst.graph.len() {
@@ -276,7 +261,6 @@ mod tests {
                     inst.network.exec_time(inst.graph.cost(t), u)
                 );
             }
-            assert_eq!(ctx.exec_row(t).len(), inst.network.len());
         }
     }
 

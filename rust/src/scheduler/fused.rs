@@ -14,7 +14,8 @@
 //! * Configurations start grouped by priority function (heap entries
 //!   embed priority values, so the ready heap is only shareable within
 //!   one priority vector). Each group owns *one* loop state — schedule,
-//!   incremental DAT matrix, missing-predecessor counters, ready heap.
+//!   pooled incremental DAT rows, missing-predecessor counters, ready
+//!   heap.
 //! * Each iteration, the group pops its highest-priority ready task
 //!   once and evaluates each candidate `(task, node)` window **once**
 //!   ([`WindowMemo`]): the EFT/EST/Quickest comparison triple — and
@@ -39,6 +40,17 @@
 //! from every dataset structure, and the benches gate on it before
 //! timing.
 //!
+//! **Fork parallelism:** once groups diverge they never interact again
+//! — a forked child is a closed, independent sub-problem. [`fused_sweep_threaded`]
+//! exploits this by draining the group queue from one worker thread per
+//! provided workspace (the same `--threads` pool the coordinator and
+//! harness use): root groups are built serially, forked children land
+//! on a shared queue, and any idle worker picks them up. Every group's
+//! evolution is self-contained, so the threaded sweep produces the
+//! same terminal groups, schedules, and scan/fork totals as the serial
+//! [`fused_sweep`] — bit-for-bit, regardless of thread count or
+//! scheduling order (asserted by tests).
+//!
 //! Process-wide counters record the sharing: [`window_scans`] counts
 //! window evaluations performed (by this engine *and* by
 //! `schedule_into`, so the sharing ratio is directly measurable) and
@@ -49,6 +61,7 @@
 
 use std::cmp::Reverse;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 
 use super::ctx::SchedulingContext;
 use super::parametric::{select_candidate, Choice, Entry};
@@ -111,7 +124,10 @@ pub struct FusedStats {
 /// config slice) that never diverged, and their shared final schedule.
 #[derive(Debug)]
 pub struct FusedGroup {
+    /// Indices into the sweep's config slice, in ascending order.
     pub members: Vec<usize>,
+    /// The schedule every member config produces, bit-identical to
+    /// `schedule_into` for each of them.
     pub schedule: Schedule,
 }
 
@@ -120,7 +136,9 @@ pub struct FusedGroup {
 /// the workspace when done.
 #[derive(Debug)]
 pub struct FusedOutcome {
+    /// Terminal groups in ascending order of their first member index.
     pub groups: Vec<FusedGroup>,
+    /// Sharing statistics of the sweep that produced the groups.
     pub stats: FusedStats,
     /// Number of configs the sweep covered (the groups partition
     /// `0..num_configs`).
@@ -239,7 +257,6 @@ fn choose(
 /// sufferage runner-up was placed instead of the popped task, the
 /// placement itself, and the incremental DAT / readiness fold —
 /// arithmetic identical to `schedule_into`'s loop tail.
-#[allow(clippy::too_many_arguments)]
 fn apply(
     state: &mut GroupState,
     popped: TaskId,
@@ -247,7 +264,6 @@ fn apply(
     prio: &[f64],
     g: &TaskGraph,
     net: &Network,
-    m: usize,
 ) {
     if d.task != popped {
         // Sufferage placed the runner-up: it is the current heap top
@@ -268,9 +284,14 @@ fn apply(
         end: d.cand.end,
     });
     state.placed += 1;
+    // Frontier retirement, exactly as in `schedule_into`: the placed
+    // task's DAT row is never read again in this group, and any forked
+    // sibling copied its own row before this apply ran.
+    state.scratch.dat.retire(d.task);
     for &(s, data) in g.successors(d.task) {
-        // Fold this placement into the successor's DAT row.
-        let row = &mut state.scratch.dat[s * m..(s + 1) * m];
+        // Fold this placement into the successor's DAT row,
+        // materializing it (zero-filled) on first touch.
+        let row = state.scratch.dat.row_mut(s);
         for (u, slot) in row.iter_mut().enumerate() {
             *slot = slot.max(d.cand.end + net.comm_time(data, d.cand.node, u));
         }
@@ -278,6 +299,209 @@ fn apply(
         if state.scratch.missing[s] == 0 {
             state.scratch.ready.push(Entry(prio[s], Reverse(s)));
         }
+    }
+}
+
+/// Reusable per-iteration buffers and counters for one worker driving
+/// groups (no per-iteration allocations).
+#[derive(Default)]
+struct IterScratch {
+    memo_t: WindowMemo,
+    memo_t2: WindowMemo,
+    decisions: Vec<Decision>,
+    class_of: Vec<usize>,
+    class_reps: Vec<Decision>,
+    scans: u64,
+    forks: u64,
+}
+
+/// Build the root groups out of a workspace's pools: one per priority
+/// function present. The lockstep invariant requires identical
+/// ready-heap contents, and heap entries embed priority values, so
+/// groups never span priority functions.
+fn build_root_groups(
+    ctx: &SchedulingContext<'_>,
+    configs: &[SchedulerConfig],
+    ws: &mut SchedulerWorkspace,
+) -> Vec<GroupState> {
+    let inst = ctx.instance();
+    let g = &inst.graph;
+    let n = g.len();
+    let m = inst.network.len();
+    let mut roots: Vec<GroupState> = Vec::new();
+    for pf in PriorityFn::ALL {
+        let members: Vec<usize> = (0..configs.len())
+            .filter(|&i| configs[i].priority == pf)
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        let prio = ctx.priorities(pf);
+        let mut scratch = ws.take_group_scratch();
+        scratch.begin(n, m);
+        {
+            let GroupScratch { missing, ready, .. } = &mut scratch;
+            missing.extend((0..n).map(|t| g.predecessors(t).len()));
+            ready.extend(
+                (0..n)
+                    .filter(|&t| missing[t] == 0)
+                    .map(|t| Entry(prio[t], Reverse(t))),
+            );
+        }
+        roots.push(GroupState {
+            members,
+            sched: ws.take_schedule(n, m),
+            scratch,
+            placed: 0,
+        });
+    }
+    roots
+}
+
+/// Drive one lockstep group to completion: the shared per-iteration
+/// member evaluation, decision partitioning, and copy-on-diverge
+/// forking. Forked children (built out of `ws`'s pools) are handed to
+/// `fork_sink` — the serial driver pushes them on its local stack, the
+/// threaded driver on the shared work queue. A group's evolution
+/// depends only on its own state, so where children run never changes
+/// what they produce.
+fn run_group(
+    ctx: &SchedulingContext<'_>,
+    configs: &[SchedulerConfig],
+    pins: &[Option<NodeId>],
+    grp: &mut GroupState,
+    ws: &mut SchedulerWorkspace,
+    it: &mut IterScratch,
+    fork_sink: &mut dyn FnMut(GroupState),
+) {
+    let inst = ctx.instance();
+    let g = &inst.graph;
+    let net = &inst.network;
+    let n = g.len();
+    let m = net.len();
+    let pin_of = |cfg: &SchedulerConfig, t: TaskId| -> Option<NodeId> {
+        if cfg.critical_path {
+            pins[t]
+        } else {
+            None
+        }
+    };
+    let prio = ctx.priorities(configs[grp.members[0]].priority);
+    while let Some(Entry(_, Reverse(t))) = grp.scratch.ready.pop() {
+        // The sufferage runner-up, when any member wants one: after
+        // popping `t`, the heap top is exactly the entry the
+        // per-config loop would pop second.
+        let any_suff = grp.members.iter().any(|&i| configs[i].sufferage);
+        let runner_up: Option<Entry> = if any_suff {
+            grp.scratch.ready.peek().copied()
+        } else {
+            None
+        };
+
+        // Evaluate every member's decision over the shared memos.
+        it.memo_t.reset(m);
+        if runner_up.is_some() {
+            it.memo_t2.reset(m);
+        }
+        it.decisions.clear();
+        {
+            let sched = &grp.sched;
+            // Both candidates' exec rows up front: `rows2` keeps the
+            // two tiles simultaneously resident in the workspace cache.
+            let t2opt = runner_up.map(|Entry(_, Reverse(t2))| t2);
+            let (exec_t, exec_t2) = ws.exec.rows2(inst, t, t2opt);
+            let dat_t = grp.scratch.dat.row(t);
+            for &i in &grp.members {
+                let cfg = &configs[i];
+                let choice_t = choose(
+                    cfg,
+                    &mut it.memo_t,
+                    sched,
+                    m,
+                    dat_t,
+                    exec_t,
+                    pin_of(cfg, t),
+                    &mut it.scans,
+                );
+                let d = match (cfg.sufferage, runner_up) {
+                    (true, Some(Entry(_, Reverse(t2)))) => {
+                        let dat_t2 = grp.scratch.dat.row(t2);
+                        let choice_t2 = choose(
+                            cfg,
+                            &mut it.memo_t2,
+                            sched,
+                            m,
+                            dat_t2,
+                            exec_t2.expect("runner-up exec row is resident"),
+                            pin_of(cfg, t2),
+                            &mut it.scans,
+                        );
+                        if choice_t2.sufferage_value(cfg.compare)
+                            > choice_t.sufferage_value(cfg.compare)
+                        {
+                            Decision { task: t2, cand: choice_t2.best }
+                        } else {
+                            Decision { task: t, cand: choice_t.best }
+                        }
+                    }
+                    _ => Decision { task: t, cand: choice_t.best },
+                };
+                it.decisions.push(d);
+            }
+        }
+
+        // Partition members by decision (first-seen class order, so
+        // class 0 always contains the group's first member).
+        it.class_reps.clear();
+        it.class_of.clear();
+        for d in &it.decisions {
+            let ci = match it.class_reps.iter().position(|r| r.key() == d.key()) {
+                Some(ci) => ci,
+                None => {
+                    it.class_reps.push(*d);
+                    it.class_reps.len() - 1
+                }
+            };
+            it.class_of.push(ci);
+        }
+
+        // Copy-on-diverge: classes beyond the first fork off with a
+        // clone of the post-pop state, then apply their decision.
+        if it.class_reps.len() > 1 {
+            it.forks += (it.class_reps.len() - 1) as u64;
+            for (ci, rep) in it.class_reps.iter().enumerate().skip(1) {
+                let members: Vec<usize> = grp
+                    .members
+                    .iter()
+                    .zip(&it.class_of)
+                    .filter(|&(_, &c)| c == ci)
+                    .map(|(&i, _)| i)
+                    .collect();
+                let mut scratch = ws.take_group_scratch();
+                scratch.copy_from(&grp.scratch);
+                let mut sched = ws.take_schedule(n, m);
+                sched.copy_from(&grp.sched);
+                let mut child = GroupState {
+                    members,
+                    sched,
+                    scratch,
+                    placed: grp.placed,
+                };
+                apply(&mut child, t, rep, prio, g, net);
+                fork_sink(child);
+            }
+            // The parent keeps class 0's members, in place.
+            let mut keep = 0usize;
+            for k in 0..it.class_of.len() {
+                if it.class_of[k] == 0 {
+                    grp.members[keep] = grp.members[k];
+                    keep += 1;
+                }
+            }
+            grp.members.truncate(keep);
+        }
+        let d0 = it.class_reps[0];
+        apply(&mut grp, t, &d0, prio, g, net);
     }
 }
 
@@ -297,10 +521,8 @@ pub fn fused_sweep(
     ws: &mut SchedulerWorkspace,
 ) -> FusedOutcome {
     let inst = ctx.instance();
-    let g = &inst.graph;
-    let net = &inst.network;
-    let n = g.len();
-    let m = net.len();
+    let n = inst.graph.len();
+    let m = inst.network.len();
     let num_configs = configs.len();
     let mut stats = FusedStats::default();
 
@@ -323,177 +545,128 @@ pub fn fused_sweep(
     // rank DP, which the per-config path skips).
     let any_cp = configs.iter().any(|c| c.critical_path);
     let pins: &[Option<NodeId>] = if any_cp { ctx.cp_pinned() } else { &[] };
-    let pin_of = |cfg: &SchedulerConfig, t: TaskId| -> Option<NodeId> {
-        if cfg.critical_path {
-            pins[t]
-        } else {
-            None
-        }
-    };
 
-    // Root groups: one per priority function present. The lockstep
-    // invariant requires identical ready-heap contents, and heap
-    // entries embed priority values, so groups never span priority
-    // functions.
-    let mut pending: Vec<GroupState> = Vec::new();
-    for pf in PriorityFn::ALL {
-        let members: Vec<usize> = (0..num_configs)
-            .filter(|&i| configs[i].priority == pf)
-            .collect();
-        if members.is_empty() {
-            continue;
-        }
-        let prio = ctx.priorities(pf);
-        let mut scratch = ws.take_group_scratch();
-        scratch.begin(n, m);
-        {
-            let GroupScratch { missing, ready, .. } = &mut scratch;
-            missing.extend((0..n).map(|t| g.predecessors(t).len()));
-            ready.extend(
-                (0..n)
-                    .filter(|&t| missing[t] == 0)
-                    .map(|t| Entry(prio[t], Reverse(t))),
-            );
-        }
-        pending.push(GroupState {
-            members,
-            sched: ws.take_schedule(n, m),
-            scratch,
-            placed: 0,
-        });
-    }
+    let mut pending = build_root_groups(ctx, configs, ws);
     stats.initial_groups = pending.len();
+    ws.exec.begin(n, m);
 
-    // Reusable per-iteration buffers (no per-iteration allocations).
-    let mut memo_t = WindowMemo::default();
-    let mut memo_t2 = WindowMemo::default();
-    let mut decisions: Vec<Decision> = Vec::new();
-    let mut class_of: Vec<usize> = Vec::new();
-    let mut class_reps: Vec<Decision> = Vec::new();
+    let mut it = IterScratch::default();
     let mut finished: Vec<FusedGroup> = Vec::new();
-    let mut scans = 0u64;
-    let mut forks = 0u64;
-
     while let Some(mut grp) = pending.pop() {
-        let prio = ctx.priorities(configs[grp.members[0]].priority);
-        while let Some(Entry(_, Reverse(t))) = grp.scratch.ready.pop() {
-            // The sufferage runner-up, when any member wants one: after
-            // popping `t`, the heap top is exactly the entry the
-            // per-config loop would pop second.
-            let any_suff = grp.members.iter().any(|&i| configs[i].sufferage);
-            let runner_up: Option<Entry> = if any_suff {
-                grp.scratch.ready.peek().copied()
-            } else {
-                None
-            };
-
-            // Evaluate every member's decision over the shared memos.
-            memo_t.reset(m);
-            if runner_up.is_some() {
-                memo_t2.reset(m);
-            }
-            decisions.clear();
-            {
-                let sched = &grp.sched;
-                let dat_t = &grp.scratch.dat[t * m..(t + 1) * m];
-                let exec_t = ctx.exec_row(t);
-                for &i in &grp.members {
-                    let cfg = &configs[i];
-                    let choice_t = choose(
-                        cfg,
-                        &mut memo_t,
-                        sched,
-                        m,
-                        dat_t,
-                        exec_t,
-                        pin_of(cfg, t),
-                        &mut scans,
-                    );
-                    let d = match (cfg.sufferage, runner_up) {
-                        (true, Some(Entry(_, Reverse(t2)))) => {
-                            let dat_t2 = &grp.scratch.dat[t2 * m..(t2 + 1) * m];
-                            let choice_t2 = choose(
-                                cfg,
-                                &mut memo_t2,
-                                sched,
-                                m,
-                                dat_t2,
-                                ctx.exec_row(t2),
-                                pin_of(cfg, t2),
-                                &mut scans,
-                            );
-                            if choice_t2.sufferage_value(cfg.compare)
-                                > choice_t.sufferage_value(cfg.compare)
-                            {
-                                Decision { task: t2, cand: choice_t2.best }
-                            } else {
-                                Decision { task: t, cand: choice_t.best }
-                            }
-                        }
-                        _ => Decision { task: t, cand: choice_t.best },
-                    };
-                    decisions.push(d);
-                }
-            }
-
-            // Partition members by decision (first-seen class order, so
-            // class 0 always contains the group's first member).
-            class_reps.clear();
-            class_of.clear();
-            for d in &decisions {
-                let ci = match class_reps.iter().position(|r| r.key() == d.key()) {
-                    Some(ci) => ci,
-                    None => {
-                        class_reps.push(*d);
-                        class_reps.len() - 1
-                    }
-                };
-                class_of.push(ci);
-            }
-
-            // Copy-on-diverge: classes beyond the first fork off with a
-            // clone of the post-pop state, then apply their decision.
-            if class_reps.len() > 1 {
-                forks += (class_reps.len() - 1) as u64;
-                for (ci, rep) in class_reps.iter().enumerate().skip(1) {
-                    let members: Vec<usize> = grp
-                        .members
-                        .iter()
-                        .zip(&class_of)
-                        .filter(|&(_, &c)| c == ci)
-                        .map(|(&i, _)| i)
-                        .collect();
-                    let mut scratch = ws.take_group_scratch();
-                    scratch.copy_from(&grp.scratch);
-                    let mut sched = ws.take_schedule(n, m);
-                    sched.copy_from(&grp.sched);
-                    let mut child = GroupState {
-                        members,
-                        sched,
-                        scratch,
-                        placed: grp.placed,
-                    };
-                    apply(&mut child, t, rep, prio, g, net, m);
-                    pending.push(child);
-                }
-                // The parent keeps class 0's members, in place.
-                let mut keep = 0usize;
-                for k in 0..class_of.len() {
-                    if class_of[k] == 0 {
-                        grp.members[keep] = grp.members[k];
-                        keep += 1;
-                    }
-                }
-                grp.members.truncate(keep);
-            }
-            apply(&mut grp, t, &class_reps[0], prio, g, net, m);
-        }
+        run_group(ctx, configs, pins, &mut grp, ws, &mut it, &mut |child| {
+            pending.push(child)
+        });
         let GroupState { members, sched, scratch, placed } = grp;
         debug_assert_eq!(placed, n, "fused group must place every task");
         ws.recycle_group_scratch(scratch);
         finished.push(FusedGroup { members, schedule: sched });
     }
 
+    finished.sort_by_key(|grp| grp.members[0]);
+    stats.final_groups = finished.len();
+    stats.window_scans = it.scans;
+    stats.fork_events = it.forks;
+    note_window_scans(it.scans);
+    note_fork_events(it.forks);
+    FusedOutcome { groups: finished, stats, num_configs }
+}
+
+/// Shared work queue of the threaded sweep: live groups plus the count
+/// of groups currently being driven by a worker (used for termination —
+/// the sweep is over when the queue is empty *and* nothing in flight
+/// can fork more work).
+struct WorkQueue {
+    pending: Vec<GroupState>,
+    in_flight: usize,
+}
+
+/// [`fused_sweep`], with fork-spawned groups drained in parallel by one
+/// worker thread per provided workspace.
+///
+/// Post-fork groups are independent sub-problems (see the module docs),
+/// so the result — terminal groups, their schedules, and the scan/fork
+/// stats — is **bit-identical** to the serial sweep for any number of
+/// workspaces. Workspace pools are per-worker: root groups draw on
+/// `workspaces[0]`, each forked child on the pool of whichever worker
+/// forked it, and finished group states recycle into the pool of the
+/// worker that completed them. With a single workspace (or a trivial
+/// sweep) this delegates to the serial engine.
+///
+/// The caller supplies one workspace per desired thread — typically the
+/// same `--threads` pool the instance-level coordinator uses.
+pub fn fused_sweep_threaded(
+    ctx: &SchedulingContext<'_>,
+    configs: &[SchedulerConfig],
+    workspaces: &mut [SchedulerWorkspace],
+) -> FusedOutcome {
+    assert!(!workspaces.is_empty(), "fused_sweep_threaded needs at least one workspace");
+    let inst = ctx.instance();
+    let n = inst.graph.len();
+    let m = inst.network.len();
+    let num_configs = configs.len();
+    if workspaces.len() == 1 || num_configs <= 1 || n == 0 {
+        return fused_sweep(ctx, configs, &mut workspaces[0]);
+    }
+
+    let mut stats = FusedStats::default();
+    let any_cp = configs.iter().any(|c| c.critical_path);
+    let pins: &[Option<NodeId>] = if any_cp { ctx.cp_pinned() } else { &[] };
+
+    let roots = build_root_groups(ctx, configs, &mut workspaces[0]);
+    stats.initial_groups = roots.len();
+
+    let queue = Mutex::new(WorkQueue { pending: roots, in_flight: 0 });
+    let work_cv = Condvar::new();
+    // Finished groups plus summed scan/fork counters. Sums of per-group
+    // u64 contributions are order-independent, so the stats stay
+    // deterministic under any thread interleaving.
+    let done: Mutex<(Vec<FusedGroup>, u64, u64)> = Mutex::new((Vec::new(), 0, 0));
+
+    std::thread::scope(|scope| {
+        for ws in workspaces.iter_mut() {
+            let (queue, work_cv, done) = (&queue, &work_cv, &done);
+            scope.spawn(move || {
+                ws.exec.begin(n, m);
+                let mut it = IterScratch::default();
+                let mut finished: Vec<FusedGroup> = Vec::new();
+                loop {
+                    let grp = {
+                        let mut q = queue.lock().unwrap();
+                        loop {
+                            if let Some(g) = q.pending.pop() {
+                                q.in_flight += 1;
+                                break Some(g);
+                            }
+                            if q.in_flight == 0 {
+                                break None;
+                            }
+                            q = work_cv.wait(q).unwrap();
+                        }
+                    };
+                    let Some(mut grp) = grp else { break };
+                    run_group(ctx, configs, pins, &mut grp, ws, &mut it, &mut |child| {
+                        queue.lock().unwrap().pending.push(child);
+                        work_cv.notify_one();
+                    });
+                    let GroupState { members, sched, scratch, placed } = grp;
+                    debug_assert_eq!(placed, n, "fused group must place every task");
+                    ws.recycle_group_scratch(scratch);
+                    finished.push(FusedGroup { members, schedule: sched });
+                    let mut q = queue.lock().unwrap();
+                    q.in_flight -= 1;
+                    if q.in_flight == 0 && q.pending.is_empty() {
+                        work_cv.notify_all(); // sweep over: release the waiters
+                    }
+                }
+                let mut d = done.lock().unwrap();
+                d.0.append(&mut finished);
+                d.1 += it.scans;
+                d.2 += it.forks;
+            });
+        }
+    });
+
+    let (mut finished, scans, forks) = done.into_inner().unwrap();
     finished.sort_by_key(|grp| grp.members[0]);
     stats.final_groups = finished.len();
     stats.window_scans = scans;
@@ -614,6 +787,38 @@ mod tests {
         assert_eq!(a_stats, b.stats, "fork counts and scan counts must be deterministic");
         for grp in b.groups {
             ws.recycle(grp.schedule);
+        }
+    }
+
+    #[test]
+    fn threaded_sweep_matches_serial_bit_for_bit() {
+        let inst = fork_join();
+        let configs = SchedulerConfig::all();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+
+        let mut serial_ws = SchedulerWorkspace::new();
+        let serial = fused_sweep(&ctx, &configs, &mut serial_ws);
+
+        for threads in [1usize, 2, 4] {
+            let mut pool: Vec<SchedulerWorkspace> =
+                (0..threads).map(|_| SchedulerWorkspace::new()).collect();
+            let threaded = fused_sweep_threaded(&ctx, &configs, &mut pool);
+            assert_eq!(threaded.num_configs, serial.num_configs);
+            assert_eq!(
+                threaded.stats, serial.stats,
+                "{threads}-thread stats drifted from serial"
+            );
+            let want: Vec<(&[usize], u64)> = serial
+                .groups
+                .iter()
+                .map(|grp| (grp.members.as_slice(), grp.schedule.content_hash()))
+                .collect();
+            let got: Vec<(&[usize], u64)> = threaded
+                .groups
+                .iter()
+                .map(|grp| (grp.members.as_slice(), grp.schedule.content_hash()))
+                .collect();
+            assert_eq!(got, want, "{threads}-thread groups drifted from serial");
         }
     }
 

@@ -49,15 +49,18 @@ pub struct LookaheadScheduler {
 }
 
 impl LookaheadScheduler {
+    /// Lookahead scheduler over `cfg` with the native rank backend.
     pub fn new(cfg: SchedulerConfig, depth: usize) -> Self {
         LookaheadScheduler { cfg, backend: RankBackend::Native, depth }
     }
 
+    /// Replace the rank backend.
     pub fn with_backend(mut self, backend: RankBackend) -> Self {
         self.backend = backend;
         self
     }
 
+    /// `{config name}_LA{depth}`.
     pub fn name(&self) -> String {
         format!("{}_LA{}", self.cfg.name(), self.depth)
     }

@@ -27,14 +27,16 @@
 //! 2. **Shared-context / workspace** —
 //!    [`ParametricScheduler::schedule_into`]: everything the loop needs
 //!    before its first iteration (ranks, priority vectors, the
-//!    critical-path pin set, the topological order, the dense
-//!    execution-time matrix) depends only on the `(instance, backend)`
-//!    pair, so it comes from one immutable [`SchedulingContext`] per
-//!    instance ([`ctx`]); scratch buffers come from a reusable
-//!    [`SchedulerWorkspace`] per worker thread ([`workspace`]) — O(1)
-//!    heap allocations per config after warm-up. Inside the loop,
-//!    per-task data-available times are maintained incrementally and
-//!    the insertion-window scan enters each timeline through the
+//!    critical-path pin set, the topological order) depends only on the
+//!    `(instance, backend)` pair, so it comes from one immutable
+//!    [`SchedulingContext`] per instance ([`ctx`]); scratch buffers
+//!    come from a reusable [`SchedulerWorkspace`] per worker thread
+//!    ([`workspace`]) — O(1) heap allocations per config after warm-up.
+//!    Inside the loop, execution times are computed lazily in pooled
+//!    tiles, per-task data-available times are maintained incrementally
+//!    in pooled rows that **retire** when their task is placed (peak
+//!    memory tracks the frontier width, not `n·m`), and the
+//!    insertion-window scan enters each timeline through the
 //!    [`crate::schedule::Schedule::gap_index`].
 //! 3. **Fused sweep** — [`fused_sweep`] ([`fused`]): a multi-config
 //!    sweep runs as lockstep groups that share one loop state (and one
@@ -42,7 +44,9 @@
 //!    bit-identical, forking copy-on-diverge the moment a placement
 //!    decision differs. The default sweep path of the benchmark
 //!    harness and coordinator; `schedule_into` remains the per-config
-//!    API and the fused oracle.
+//!    API and the fused oracle. [`fused_sweep_threaded`] drains
+//!    fork-spawned groups across a worker pool (one workspace per
+//!    thread) with bit-identical results.
 //!
 //! All three produce **bit-identical** schedules for every config
 //! (property-tested; pinned by the golden snapshots).
@@ -58,7 +62,7 @@ pub mod workspace;
 
 pub use compare::CompareFn;
 pub use ctx::SchedulingContext;
-pub use fused::{fused_sweep, FusedGroup, FusedOutcome, FusedStats};
+pub use fused::{fused_sweep, fused_sweep_threaded, FusedGroup, FusedOutcome, FusedStats};
 pub use lookahead::LookaheadScheduler;
 pub(crate) use parametric::Entry as ReadyEntry;
 pub use parametric::ParametricScheduler;
@@ -76,7 +80,9 @@ use crate::ranks::RankBackend;
 /// 3 × 3 × 2 × 2 × 2 = 72-algorithm component space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SchedulerConfig {
+    /// Task prioritization component (ready-queue ordering).
     pub priority: PriorityFn,
+    /// Candidate comparison component (node selection).
     pub compare: CompareFn,
     /// `true` → append-only window finding (Algorithm 4);
     /// `false` → insertion-based (Algorithm 5).

@@ -121,14 +121,17 @@ pub(crate) fn select_candidate(
 }
 
 impl ParametricScheduler {
+    /// Scheduler for one configuration with an explicit rank backend.
     pub fn new(cfg: SchedulerConfig, backend: RankBackend) -> Self {
         ParametricScheduler { cfg, backend }
     }
 
+    /// The configuration this scheduler runs.
     pub fn config(&self) -> &SchedulerConfig {
         &self.cfg
     }
 
+    /// The configuration's name ([`SchedulerConfig::name`]).
     pub fn name(&self) -> String {
         self.cfg.name()
     }
@@ -324,16 +327,19 @@ impl ParametricScheduler {
 
     /// Run Algorithm 6 against a shared [`SchedulingContext`] and a
     /// reusable [`SchedulerWorkspace`]: ranks, priorities, the
-    /// critical-path pin set, the topological order, and the
-    /// `exec[t][u]` matrix come from the context (computed once per
-    /// instance, amortized over every configuration evaluated on it);
-    /// the DAT matrix, ready heap, predecessor counters, and the output
-    /// schedule's timeline/gap-index buffers come from the workspace
-    /// (allocated once per worker thread, reused across configs — O(1)
-    /// heap allocations per config after warm-up). Each task's
-    /// data-available-time row is maintained incrementally — updated
-    /// once per placed predecessor (O(E·m) total) instead of being
-    /// re-derived from every predecessor on every candidate evaluation.
+    /// critical-path pin set, and the topological order come from the
+    /// context (computed once per instance, amortized over every
+    /// configuration evaluated on it); the pooled DAT rows, lazily-
+    /// computed execution-time tiles, ready heap, predecessor counters,
+    /// and the output schedule's timeline/gap-index buffers come from
+    /// the workspace (allocated once per worker thread, reused across
+    /// configs — O(1) heap allocations per config after warm-up). Each
+    /// task's data-available-time row is maintained incrementally —
+    /// materialized when its first predecessor is placed, updated once
+    /// per placed predecessor (O(E·m) total), and **retired** back to
+    /// the workspace pool the moment the task itself is placed, so peak
+    /// resident DAT memory tracks the ready-frontier width instead of
+    /// `n·m` (see [`super::workspace`]).
     ///
     /// Produces schedules **bit-identical** to
     /// [`ParametricScheduler::schedule_reference`] for every
@@ -372,9 +378,11 @@ impl ParametricScheduler {
         // time `t` becomes ready every predecessor has been placed, so
         // its row is final — the same max the reference path folds per
         // candidate, taken over the same values (max is
-        // order-independent).
+        // order-independent). Rows live in a bounded pool: a task with
+        // no placed predecessor reads the shared zero row, and a placed
+        // task's row retires immediately (it is never read again).
         ws.begin(n, m);
-        let SchedulerWorkspace { dat, missing, ready, .. } = ws;
+        let SchedulerWorkspace { dat, exec, missing, ready, .. } = ws;
 
         // Ready queue: tasks whose predecessors are all scheduled.
         missing.extend((0..n).map(|t| g.predecessors(t).len()));
@@ -394,13 +402,8 @@ impl ParametricScheduler {
         let mut scheduled = 0usize;
         while let Some(Entry(_, Reverse(t))) = ready.pop() {
             scans += scan_cost(pin_of(t));
-            let choice_t = self.choose_with(
-                ctx,
-                &sched,
-                &dat[t * m..(t + 1) * m],
-                ctx.exec_row(t),
-                pin_of(t),
-            );
+            let choice_t =
+                self.choose_with(ctx, &sched, dat.row(t), exec.row(inst, t), pin_of(t));
 
             // Sufferage selection over the top-2 ready tasks
             // (Algorithm 6, lines 20–36).
@@ -411,8 +414,8 @@ impl ParametricScheduler {
                         let choice_t2 = self.choose_with(
                             ctx,
                             &sched,
-                            &dat[t2 * m..(t2 + 1) * m],
-                            ctx.exec_row(t2),
+                            dat.row(t2),
+                            exec.row(inst, t2),
                             pin_of(t2),
                         );
                         if self.sufferage_value(&choice_t2) > self.sufferage_value(&choice_t) {
@@ -437,10 +440,16 @@ impl ParametricScheduler {
                 end: cand.end,
             });
             scheduled += 1;
+            // Frontier retirement: the placed task's DAT row is never
+            // read again (rows are only consulted while their task is
+            // an unplaced candidate) — its slot feeds the successors
+            // materialized just below.
+            dat.retire(task);
 
             for &(s, data) in g.successors(task) {
-                // Fold this placement into the successor's DAT row.
-                let row = &mut dat[s * m..(s + 1) * m];
+                // Fold this placement into the successor's DAT row,
+                // materializing it (zero-filled) on first touch.
+                let row = dat.row_mut(s);
                 for (u, slot) in row.iter_mut().enumerate() {
                     *slot = slot.max(cand.end + net.comm_time(data, cand.node, u));
                 }

@@ -20,6 +20,7 @@ pub enum PriorityFn {
 }
 
 impl PriorityFn {
+    /// The three priority functions, in the paper's order.
     pub const ALL: [PriorityFn; 3] = [
         PriorityFn::UpwardRanking,
         PriorityFn::CPoPRanking,
@@ -65,6 +66,8 @@ pub(crate) fn cmp_priority(a: f64, b: f64) -> std::cmp::Ordering {
     a.partial_cmp(&b).unwrap_or_else(|| a.total_cmp(&b))
 }
 
+/// Materialize the per-task priority vector for one priority function
+/// from precomputed ranks (higher = scheduled earlier).
 pub fn priorities(f: PriorityFn, inst: &ProblemInstance, ranks: &Ranks) -> Vec<f64> {
     match f {
         PriorityFn::UpwardRanking => ranks.up.clone(),

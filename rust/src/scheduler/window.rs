@@ -22,8 +22,11 @@ use crate::schedule::{Schedule, EPS};
 /// A candidate placement of a task on a node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
+    /// Node the task would run on.
     pub node: NodeId,
+    /// Start time of the placement.
     pub start: f64,
+    /// Finish time of the placement.
     pub end: f64,
 }
 

@@ -1,15 +1,16 @@
-//! Reusable scheduler scratch memory — the zero-allocation sweep core.
+//! Reusable scheduler scratch memory — the zero-allocation sweep core
+//! and the million-task streaming memory model.
 //!
 //! [`super::ParametricScheduler::schedule_with`] needs four scratch
-//! structures per run: the incremental DAT matrix (`n × m`), the
+//! structures per run: the incremental DAT rows, the
 //! missing-predecessor counters, the ready heap, and the output
 //! [`Schedule`] with its per-node timeline and gap-index buffers. On
-//! small graphs rebuilding them per config is noise; on 10k–100k-task
+//! small graphs rebuilding them per config is noise; on 10k–1M-task
 //! workflow instances the allocation and zero-fill churn of a 72-config
 //! sweep dominates everything the zero-recompute context
 //! ([`super::SchedulingContext`]) already amortized.
 //!
-//! A [`SchedulerWorkspace`] owns all four and is `clear()`-and-reused
+//! A [`SchedulerWorkspace`] owns all of them and is `clear()`-and-reused
 //! across runs: after the first configuration on an instance, every
 //! further `schedule_into` call on the same workspace performs **O(1)
 //! heap allocations** (amortized zero — buffers only grow when a larger
@@ -19,36 +20,376 @@
 //! replanner ([`crate::sim::replay`]) replans frontiers out of the same
 //! pool.
 //!
+//! ## Streaming memory model (million-task scaling)
+//!
+//! Two structures used to be dense `n × m` matrices and are now bounded
+//! working sets, so peak resident memory tracks the *frontier width*
+//! of the scheduling wave instead of the instance size:
+//!
+//! * **Execution times** ([`ExecTiles`]): `exec[t][u] = c(t)/s(u)` rows
+//!   are computed on first touch, a tile (64 consecutive task rows) at
+//!   a time, into a small fixed pool of tile buffers with round-robin
+//!   eviction. The arithmetic is exactly
+//!   [`crate::network::Network::exec_time`], so values are bit-identical
+//!   to the dense matrix this replaces.
+//! * **Data-available times** ([`DatPool`]): a task's DAT row
+//!   materializes (zero-filled, exactly like the old dense zero fill)
+//!   when its first predecessor is placed, and **retires** back to a
+//!   free list the moment the task itself is placed — after that the
+//!   scheduling loop provably never reads it (a row is only consulted
+//!   while its task is an unplaced ready/runner-up candidate). Debug
+//!   builds poison retired rows with NaN and assert on any read, so a
+//!   violation of that invariant fails loudly in tests. Peak pooled-row
+//!   counts are tracked ([`SchedulerWorkspace::peak_live_dat_rows`])
+//!   and counter-asserted in `rust/tests/integration_ctx.rs`.
+//!
 //! Reuse is observable but never semantic: a recycled [`Schedule`] is
 //! [`Schedule::reset`] to the target shape (capacity kept, contents
-//! gone), the DAT matrix is re-zeroed, and the ready heap is rebuilt
+//! gone), DAT rows come back zero-filled, and the ready heap is rebuilt
 //! from scratch — `schedule_into` with a dirty workspace is
 //! bit-identical to `schedule_with` with none (property-tested).
 //!
 //! The process-wide [`SchedulerWorkspace::buffer_allocations`] counter
-//! records every buffer-growth event (DAT/counter/heap growth, pool
-//! miss), mirroring the context's rank/priority counters: tests assert
-//! a full 72-config sweep over one instance grows each buffer at most
-//! once.
+//! records every buffer-growth event (counter/heap growth, pool miss,
+//! DAT-row or exec-tile storage growth), mirroring the context's
+//! rank/priority counters: tests assert a warm workspace performs
+//! **zero** growth events per sweep.
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::parametric::Entry;
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
 use crate::schedule::Schedule;
 
 /// Process-wide count of workspace buffer-growth events (test
 /// instrumentation; see the module docs).
 static BUFFER_ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
 
+/// Rows per execution-time tile (consecutive task ids share a tile).
+const TILE_ROWS: usize = 64;
+/// Maximum resident tiles before round-robin eviction kicks in. With
+/// `TILE_ROWS = 64` this bounds the exec working set to
+/// `64 · 64 · m` floats regardless of instance size.
+const MAX_TILE_SLOTS: usize = 64;
+
+/// `slot_of` sentinel: row never materialized (reads serve zeros).
+const DAT_NONE: u32 = u32::MAX;
+/// `slot_of` sentinel: row retired (reads are a bug; see module docs).
+const DAT_RETIRED: u32 = u32::MAX - 1;
+
+/// Lazily-computed, tile-pooled execution-time rows (`c(t)/s(u)`), the
+/// replacement for the dense `exec[t][u]` matrix the context used to
+/// materialize. Tiles of [`TILE_ROWS`] consecutive task rows are
+/// computed on first touch into a bounded pool of buffers
+/// ([`MAX_TILE_SLOTS`]) with round-robin eviction; recomputing an
+/// evicted tile is a handful of divisions, and the values are
+/// bit-identical however many times they are recomputed.
+#[derive(Debug, Default)]
+pub struct ExecTiles {
+    /// Nodes per row (the current run's `m`).
+    m: usize,
+    /// Tasks in the current run (bounds the last, possibly short tile).
+    n: usize,
+    /// Per tile index: resident slot `+ 1`, or 0 when not resident.
+    slot_of: Vec<u32>,
+    /// Tile buffers, each holding up to `TILE_ROWS · m` values.
+    slots: Vec<Vec<f64>>,
+    /// Per slot: the tile it currently holds (`u32::MAX` = none).
+    tile_in: Vec<u32>,
+    /// Slots handed out this run (`<= min(MAX_TILE_SLOTS, tiles)`).
+    used: usize,
+    /// Round-robin eviction cursor.
+    clock: usize,
+}
+
+impl ExecTiles {
+    /// Reset the tile map for a run over `n` tasks and `m` nodes.
+    /// Tile *buffers* are kept (warm reuse); every mapping is dropped,
+    /// because cached values are only valid for one instance.
+    pub(crate) fn begin(&mut self, n: usize, m: usize) {
+        self.m = m;
+        self.n = n;
+        let tiles = n.div_ceil(TILE_ROWS);
+        if self.slot_of.capacity() < tiles {
+            note_alloc();
+        }
+        self.slot_of.clear();
+        self.slot_of.resize(tiles, 0);
+        for t in &mut self.tile_in {
+            *t = u32::MAX;
+        }
+        self.used = 0;
+        self.clock = 0;
+    }
+
+    /// Ensure task `t`'s tile is resident and return its slot index,
+    /// never evicting `protect` (the other row of a two-row lookup).
+    fn ensure(&mut self, inst: &ProblemInstance, t: TaskId, protect: Option<usize>) -> usize {
+        let tile = t / TILE_ROWS;
+        let mapped = self.slot_of[tile];
+        if mapped != 0 {
+            return (mapped - 1) as usize;
+        }
+        let cap = MAX_TILE_SLOTS.min(self.slot_of.len());
+        let slot = if self.used < cap {
+            let s = self.used;
+            self.used += 1;
+            if self.slots.len() <= s {
+                self.slots.push(Vec::new());
+                self.tile_in.push(u32::MAX);
+            }
+            s
+        } else {
+            // Round-robin eviction, skipping the protected slot. `cap`
+            // is >= 2 whenever two distinct tiles exist (eviction only
+            // starts once `used == cap`), so this always terminates.
+            let mut s = self.clock % cap;
+            if Some(s) == protect {
+                s = (s + 1) % cap;
+            }
+            self.clock = s + 1;
+            let old = self.tile_in[s];
+            if old != u32::MAX {
+                self.slot_of[old as usize] = 0;
+            }
+            s
+        };
+        // Fill the tile: same `exec_time` arithmetic as the dense
+        // matrix this cache replaces (bit-exactness contract).
+        let first = tile * TILE_ROWS;
+        let rows = TILE_ROWS.min(self.n - first);
+        let buf = &mut self.slots[slot];
+        if buf.capacity() < rows * self.m {
+            note_alloc();
+        }
+        buf.clear();
+        buf.reserve(rows * self.m);
+        for r in 0..rows {
+            let cost = inst.graph.cost(first + r);
+            for u in 0..self.m {
+                buf.push(inst.network.exec_time(cost, u));
+            }
+        }
+        self.tile_in[slot] = tile as u32;
+        self.slot_of[tile] = (slot + 1) as u32;
+        slot
+    }
+
+    /// Execution-time row of task `t` (computed on first touch).
+    pub(crate) fn row(&mut self, inst: &ProblemInstance, t: TaskId) -> &[f64] {
+        let slot = self.ensure(inst, t, None);
+        let off = (t % TILE_ROWS) * self.m;
+        &self.slots[slot][off..off + self.m]
+    }
+
+    /// Two rows at once, both guaranteed valid simultaneously (the
+    /// second lookup never evicts the first's tile) — the shape the
+    /// fused engine's member loop needs for the sufferage runner-up.
+    pub(crate) fn rows2(
+        &mut self,
+        inst: &ProblemInstance,
+        t: TaskId,
+        t2: Option<TaskId>,
+    ) -> (&[f64], Option<&[f64]>) {
+        let s1 = self.ensure(inst, t, None);
+        let s2 = t2.map(|t2| self.ensure(inst, t2, Some(s1)));
+        let m = self.m;
+        let r1 = &self.slots[s1][(t % TILE_ROWS) * m..(t % TILE_ROWS) * m + m];
+        let r2 = s2.map(|s2| {
+            let t2 = t2.unwrap();
+            &self.slots[s2][(t2 % TILE_ROWS) * m..(t2 % TILE_ROWS) * m + m]
+        });
+        (r1, r2)
+    }
+
+    /// Element capacity held by tile buffers and the tile map.
+    fn capacity(&self) -> usize {
+        self.slot_of.capacity() + self.slots.iter().map(Vec::capacity).sum::<usize>()
+    }
+}
+
+/// Pooled incremental data-available-time rows with bounded-frontier
+/// retirement — the replacement for the dense `n × m` DAT matrix. See
+/// the module docs for the lifecycle (materialize on first predecessor
+/// placement, retire on the task's own placement).
+#[derive(Debug, Default)]
+pub struct DatPool {
+    /// Nodes per row (the current run's `m`).
+    m: usize,
+    /// Per task: row slot, [`DAT_NONE`], or [`DAT_RETIRED`].
+    slot_of: Vec<u32>,
+    /// Slot-major row storage (`slot s` at `rows[s·m .. (s+1)·m]`).
+    rows: Vec<f64>,
+    /// Recycled slot indices, ready for rematerialization.
+    free: Vec<u32>,
+    /// One shared all-zeros row, served for never-materialized tasks
+    /// (bit-identical to the dense matrix's zero fill).
+    zero: Vec<f64>,
+    /// Currently materialized, unretired rows.
+    live: usize,
+    /// High-water mark of `live` since the last `begin`.
+    peak_live: usize,
+}
+
+impl DatPool {
+    /// Shape the pool for a run over `n` tasks and `m` nodes: every
+    /// task back to "never materialized", all row slots on the free
+    /// list, buffers kept. O(n + slots), *not* O(n·m) — there is no
+    /// dense matrix to zero.
+    pub(crate) fn begin(&mut self, n: usize, m: usize) {
+        if self.m != m {
+            // Slot boundaries are m-dependent; drop stale row storage
+            // (capacity kept) rather than reinterpret it.
+            self.rows.clear();
+            self.m = m;
+        }
+        if self.slot_of.capacity() < n {
+            note_alloc();
+        }
+        self.slot_of.clear();
+        self.slot_of.resize(n, DAT_NONE);
+        if self.zero.capacity() < m {
+            note_alloc();
+        }
+        self.zero.clear();
+        self.zero.resize(m, 0.0);
+        self.free.clear();
+        let slots = if m == 0 { 0 } else { self.rows.len() / m };
+        self.free.extend((0..slots as u32).rev());
+        self.live = 0;
+        self.peak_live = 0;
+    }
+
+    /// Read task `t`'s DAT row. Never materializes: a task with no
+    /// placed predecessor reads the shared zero row, exactly the value
+    /// its dense-matrix row held. Reading a retired row is a bug in
+    /// the retirement invariant and asserts in debug builds.
+    #[inline]
+    pub(crate) fn row(&self, t: TaskId) -> &[f64] {
+        match self.slot_of[t] {
+            DAT_NONE => &self.zero,
+            DAT_RETIRED => {
+                debug_assert!(false, "read of retired DAT row for task {t}");
+                &self.zero
+            }
+            s => &self.rows[s as usize * self.m..(s as usize + 1) * self.m],
+        }
+    }
+
+    /// Mutable row of task `t`, materializing it zero-filled on first
+    /// touch (from the free list when possible; storage grows — and is
+    /// counted — only when the peak frontier grows).
+    pub(crate) fn row_mut(&mut self, t: TaskId) -> &mut [f64] {
+        let slot = match self.slot_of[t] {
+            DAT_RETIRED => {
+                debug_assert!(false, "write to retired DAT row for task {t}");
+                // Release builds: rematerialize rather than corrupt a
+                // live row (unreachable under the loop invariant).
+                self.materialize(t)
+            }
+            DAT_NONE => self.materialize(t),
+            s => s as usize,
+        };
+        &mut self.rows[slot * self.m..(slot + 1) * self.m]
+    }
+
+    fn materialize(&mut self, t: TaskId) -> usize {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let s = s as usize;
+                self.rows[s * self.m..(s + 1) * self.m].fill(0.0);
+                s
+            }
+            None => {
+                if self.rows.capacity() < self.rows.len() + self.m {
+                    note_alloc();
+                }
+                let s = self.rows.len() / self.m.max(1);
+                self.rows.resize(self.rows.len() + self.m, 0.0);
+                s
+            }
+        };
+        self.slot_of[t] = slot as u32;
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        slot
+    }
+
+    /// Retire task `t`'s row: it was just placed, so the loop will
+    /// never read it again — its slot goes back to the free list for
+    /// the next materialization. Debug builds poison the freed row
+    /// with NaN so a stale read through a dangling slot is caught by
+    /// the window arithmetic's NaN checks as well as the sentinel
+    /// assert in [`DatPool::row`].
+    pub(crate) fn retire(&mut self, t: TaskId) {
+        match self.slot_of[t] {
+            DAT_RETIRED => debug_assert!(false, "task {t} retired twice"),
+            DAT_NONE => {}
+            s => {
+                let s = s as usize;
+                #[cfg(debug_assertions)]
+                self.rows[s * self.m..(s + 1) * self.m].fill(f64::NAN);
+                self.free.push(s as u32);
+                self.live -= 1;
+            }
+        }
+        self.slot_of[t] = DAT_RETIRED;
+    }
+
+    /// Buffer-reusing deep copy (the fused engine's copy-on-diverge
+    /// fork): `clone_from` reuses existing capacity, so a fork into a
+    /// pooled DatPool performs memcpys, not allocations, once warm.
+    pub(crate) fn copy_from(&mut self, src: &DatPool) {
+        self.m = src.m;
+        if self.slot_of.capacity() < src.slot_of.len() {
+            note_alloc();
+        }
+        self.slot_of.clone_from(&src.slot_of);
+        if self.rows.capacity() < src.rows.len() {
+            note_alloc();
+        }
+        self.rows.clone_from(&src.rows);
+        if self.free.capacity() < src.free.len() {
+            note_alloc();
+        }
+        self.free.clone_from(&src.free);
+        if self.zero.capacity() < src.zero.len() {
+            note_alloc();
+        }
+        self.zero.clone_from(&src.zero);
+        self.live = src.live;
+        self.peak_live = src.peak_live;
+    }
+
+    /// Currently materialized, unretired rows.
+    pub(crate) fn live_rows(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of live rows since the last `begin` — the
+    /// measured frontier width of the run.
+    pub(crate) fn peak_live_rows(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Element capacity held (working-set proxy).
+    fn capacity(&self) -> usize {
+        self.rows.capacity() + self.slot_of.capacity() + self.free.capacity()
+    }
+}
+
 /// Reusable scratch memory for the parametric scheduling loop and the
 /// online replanner. Construction is free; every buffer materializes
 /// (and is counted) on first use and is reused thereafter.
 #[derive(Debug, Default)]
 pub struct SchedulerWorkspace {
-    /// Incremental data-available-time matrix, row-major `n × m`
-    /// (re-zeroed per run).
-    pub(crate) dat: Vec<f64>,
+    /// Pooled incremental data-available-time rows with frontier
+    /// retirement (see [`DatPool`]).
+    pub(crate) dat: DatPool,
+    /// Lazily-computed execution-time tiles (see [`ExecTiles`]).
+    pub(crate) exec: ExecTiles,
     /// Unplaced-predecessor counters, one per task.
     pub(crate) missing: Vec<usize>,
     /// The ready priority queue (emptied by every run; capacity kept).
@@ -64,27 +405,23 @@ pub struct SchedulerWorkspace {
 }
 
 /// One lockstep group's mutable loop state minus the output schedule:
-/// the incremental DAT matrix, the missing-predecessor counters, and
-/// the ready heap. The fused engine takes these from the workspace's
+/// the pooled DAT rows, the missing-predecessor counters, and the
+/// ready heap. The fused engine takes these from the workspace's
 /// group pool, clones them buffer-reusingly on forks, and recycles them
 /// when a group finishes.
 #[derive(Debug, Default)]
 pub(crate) struct GroupScratch {
-    pub(crate) dat: Vec<f64>,
+    pub(crate) dat: DatPool,
     pub(crate) missing: Vec<usize>,
     pub(crate) ready: BinaryHeap<Entry>,
 }
 
 impl GroupScratch {
     /// Shape the buffers for a fresh run over `n` tasks and `m` nodes
-    /// (DAT zeroed, counters and heap emptied), counting growth exactly
-    /// like [`SchedulerWorkspace::begin`].
+    /// (DAT pool reset, counters and heap emptied), counting growth
+    /// exactly like [`SchedulerWorkspace::begin`].
     pub(crate) fn begin(&mut self, n: usize, m: usize) {
-        if self.dat.capacity() < n * m {
-            note_alloc();
-        }
-        self.dat.clear();
-        self.dat.resize(n * m, 0.0);
+        self.dat.begin(n, m);
         if self.missing.capacity() < n {
             note_alloc();
             self.missing.reserve(n - self.missing.len());
@@ -102,10 +439,7 @@ impl GroupScratch {
     /// delegating `clone_from` reuse existing capacity, so a fork into
     /// a pooled scratch performs memcpys, not allocations, once warm.
     pub(crate) fn copy_from(&mut self, src: &GroupScratch) {
-        if self.dat.capacity() < src.dat.len() {
-            note_alloc();
-        }
-        self.dat.clone_from(&src.dat);
+        self.dat.copy_from(&src.dat);
         if self.missing.capacity() < src.missing.len() {
             note_alloc();
         }
@@ -117,10 +451,10 @@ impl GroupScratch {
     }
 
     /// Would [`GroupScratch::begin`] for this shape grow any buffer?
-    /// Lets warm-up code skip the (pure-memset) shaping of
-    /// already-large-enough pooled scratches.
-    pub(crate) fn would_grow(&self, n: usize, m: usize) -> bool {
-        self.dat.capacity() < n * m
+    /// Lets warm-up code skip the shaping of already-large-enough
+    /// pooled scratches.
+    pub(crate) fn would_grow(&self, n: usize, _m: usize) -> bool {
+        self.dat.slot_of.capacity() < n
             || self.missing.capacity() < n
             || self.ready.capacity() < n
     }
@@ -139,21 +473,18 @@ impl SchedulerWorkspace {
     }
 
     /// Prepare the scratch buffers for one run over `n` tasks and `m`
-    /// nodes: DAT zeroed, counters emptied, ready heap emptied, all
-    /// sized without reallocation when capacity suffices.
+    /// nodes: DAT pool reset, exec tiles invalidated, counters and
+    /// ready heap emptied, all sized without reallocation when capacity
+    /// suffices.
     pub(crate) fn begin(&mut self, n: usize, m: usize) {
-        if self.dat.capacity() < n * m {
-            note_alloc();
-        }
-        self.dat.clear();
-        self.dat.resize(n * m, 0.0);
+        self.dat.begin(n, m);
+        self.exec.begin(n, m);
         self.begin_queue(n);
     }
 
     /// The queue-only subset of [`SchedulerWorkspace::begin`] — the
     /// online replanner ([`crate::sim::replay`]) needs the counters and
-    /// the ready heap but not the DAT matrix, so it skips the
-    /// `n × m` re-zeroing.
+    /// the ready heap but not the DAT rows or exec tiles.
     pub(crate) fn begin_queue(&mut self, n: usize) {
         if self.missing.capacity() < n {
             note_alloc();
@@ -202,20 +533,46 @@ impl SchedulerWorkspace {
         self.group_pool.push(scratch);
     }
 
+    /// DAT rows currently materialized and unretired in this
+    /// workspace's own pool (excludes pooled fused-group states).
+    pub fn live_dat_rows(&self) -> usize {
+        self.dat.live_rows()
+    }
+
+    /// High-water mark of live DAT rows since the workspace's pool was
+    /// last reshaped — the measured frontier width of the most recent
+    /// `schedule_into` run. For fused sweeps, the maximum is taken over
+    /// the recycled group states too (each group retains its own
+    /// high-water mark until reused), so this reports the widest
+    /// frontier any lockstep group saw.
+    pub fn peak_live_dat_rows(&self) -> usize {
+        self.dat
+            .peak_live_rows()
+            .max(
+                self.group_pool
+                    .iter()
+                    .map(|g| g.dat.peak_live_rows())
+                    .max()
+                    .unwrap_or(0),
+            )
+    }
+
     /// Working-set proxy: total element capacity currently held by the
-    /// scratch buffers (DAT slots + counters + heap entries, including
-    /// pooled fused-group states). Reported by the scale benchmarks
-    /// alongside task/edge counts so `BENCH_*.json` documents are
-    /// comparable across runs.
+    /// scratch buffers (pooled DAT slots + exec tiles + counters + heap
+    /// entries, including pooled fused-group states). Reported by the
+    /// scale benchmarks alongside task/edge counts so `BENCH_*.json`
+    /// documents are comparable across runs.
     pub fn capacity(&self) -> usize {
         self.dat.capacity()
+            + self.exec.capacity()
             + self.missing.capacity()
             + self.ready.capacity()
             + self.group_pool.iter().map(GroupScratch::capacity).sum::<usize>()
     }
 
     /// Process-wide number of workspace buffer-growth events so far
-    /// (every DAT/counter/heap growth and every pool miss adds one).
+    /// (every counter/heap/row-storage growth and every pool miss adds
+    /// one).
     pub fn buffer_allocations() -> usize {
         BUFFER_ALLOCATIONS.load(Ordering::Relaxed)
     }
@@ -228,35 +585,136 @@ fn note_alloc() {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
     use crate::schedule::Assignment;
 
     // Exact BUFFER_ALLOCATIONS deltas are pinned in
     // rust/tests/integration_ctx.rs behind its COUNTER_GATE — the
     // counter is process-wide, and this lib-test binary runs other
     // workspace-creating tests concurrently, so the unit tests below
-    // assert only race-free, per-workspace properties (buffer shapes
-    // and capacities).
+    // assert only race-free, per-workspace properties (buffer shapes,
+    // capacities, row lifecycles).
+
+    fn tiny_inst(n: usize, m: usize) -> ProblemInstance {
+        let mut g = TaskGraph::new();
+        for i in 0..n {
+            g.add_task(format!("t{i}"), 1.0 + i as f64);
+        }
+        ProblemInstance::new("tiny", g, Network::homogeneous(m, 2.0))
+    }
 
     #[test]
     fn begin_shapes_buffers_and_reuses_capacity() {
         let mut ws = SchedulerWorkspace::new();
         ws.begin(4, 3);
-        assert_eq!(ws.dat.len(), 12);
-        assert!(ws.dat.iter().all(|&x| x == 0.0));
+        assert_eq!(ws.dat.slot_of.len(), 4);
+        assert!(ws.dat.slot_of.iter().all(|&s| s == DAT_NONE));
         assert!(ws.missing.is_empty() && ws.missing.capacity() >= 4);
         assert!(ws.ready.is_empty() && ws.ready.capacity() >= 4);
-        // Same or smaller shape: capacities (and thus allocations) are
-        // untouched, and the DAT comes back zeroed.
-        let caps = (ws.dat.capacity(), ws.missing.capacity(), ws.ready.capacity());
-        ws.dat[5] = 7.0;
+        // Materialize a row, then re-begin: same or smaller shapes keep
+        // capacities (and thus allocations) untouched, and rows come
+        // back unmaterialized (reads are zero).
+        ws.dat.row_mut(2)[1] = 7.0;
+        assert_eq!(ws.dat.row(2)[1], 7.0);
+        let caps = [ws.dat.capacity(), ws.missing.capacity(), ws.ready.capacity()];
         ws.begin(4, 3);
         ws.begin(2, 2);
-        assert_eq!(
-            (ws.dat.capacity(), ws.missing.capacity(), ws.ready.capacity()),
-            caps,
-            "smaller/equal shapes must not regrow any buffer"
-        );
-        assert!(ws.dat.iter().all(|&x| x == 0.0), "DAT must be re-zeroed");
+        let after = [ws.dat.capacity(), ws.missing.capacity(), ws.ready.capacity()];
+        for (a, c) in after.iter().zip(&caps) {
+            assert!(a <= c, "smaller/equal shapes must not regrow any buffer");
+        }
+        assert!(ws.dat.row(1).iter().all(|&x| x == 0.0), "rows must read as zero");
+        assert_eq!(ws.live_dat_rows(), 0);
+    }
+
+    #[test]
+    fn dat_rows_materialize_and_retire() {
+        let mut pool = DatPool::default();
+        pool.begin(5, 2);
+        assert_eq!(pool.row(3), &[0.0, 0.0], "unmaterialized reads are zero");
+        pool.row_mut(3)[0] = 4.0;
+        pool.row_mut(1)[1] = 2.0;
+        assert_eq!(pool.live_rows(), 2);
+        assert_eq!(pool.peak_live_rows(), 2);
+        assert_eq!(pool.row(3), &[4.0, 0.0]);
+        pool.retire(3);
+        assert_eq!(pool.live_rows(), 1, "retiring frees the slot");
+        // The freed slot is reused, zero-filled, by the next row.
+        pool.row_mut(4)[0] = 9.0;
+        assert_eq!(pool.live_rows(), 2);
+        assert_eq!(pool.peak_live_rows(), 2, "peak tracks the frontier, not churn");
+        assert_eq!(pool.row(4), &[9.0, 0.0]);
+        // Retiring a never-materialized row is legal (roots with no
+        // predecessors never materialize).
+        pool.retire(0);
+        assert_eq!(pool.live_rows(), 2);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "read of retired DAT row")]
+    fn reading_a_retired_row_panics_in_debug() {
+        let mut pool = DatPool::default();
+        pool.begin(3, 2);
+        pool.row_mut(1)[0] = 1.0;
+        pool.retire(1);
+        let _ = pool.row(1);
+    }
+
+    #[test]
+    fn dat_copy_from_reproduces_source() {
+        let mut a = DatPool::default();
+        a.begin(4, 2);
+        a.row_mut(1)[0] = 3.0;
+        a.row_mut(2)[1] = 5.0;
+        a.retire(1);
+        let mut b = DatPool::default();
+        b.begin(1, 1); // deliberately mismatched shape
+        b.copy_from(&a);
+        assert_eq!(b.row(2), a.row(2));
+        assert_eq!(b.live_rows(), a.live_rows());
+        assert_eq!(b.slot_of, a.slot_of);
+        // Independent state after the copy.
+        b.row_mut(3)[0] = 8.0;
+        assert_eq!(a.row(3), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn exec_tiles_match_direct_computation() {
+        let inst = tiny_inst(200, 3);
+        let mut tiles = ExecTiles::default();
+        tiles.begin(inst.graph.len(), inst.network.len());
+        // Scattered probes, repeated touches, and a two-row lookup: all
+        // must match the direct division exactly.
+        for &t in &[0usize, 63, 64, 65, 130, 199, 3, 64] {
+            let want: Vec<f64> = (0..3)
+                .map(|u| inst.network.exec_time(inst.graph.cost(t), u))
+                .collect();
+            assert_eq!(tiles.row(&inst, t), want.as_slice(), "task {t}");
+        }
+        let (r1, r2) = tiles.rows2(&inst, 10, Some(150));
+        assert_eq!(r1[0], inst.network.exec_time(inst.graph.cost(10), 0));
+        assert_eq!(r2.unwrap()[2], inst.network.exec_time(inst.graph.cost(150), 2));
+        let (_, none) = tiles.rows2(&inst, 10, None);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn exec_tiles_evict_and_recompute() {
+        // More tiles than slots: force eviction, then revisit evicted
+        // rows — recomputation must be transparent.
+        let n = TILE_ROWS * (MAX_TILE_SLOTS + 4);
+        let inst = tiny_inst(n, 2);
+        let mut tiles = ExecTiles::default();
+        tiles.begin(n, 2);
+        for tile in 0..(MAX_TILE_SLOTS + 4) {
+            let t = tile * TILE_ROWS;
+            assert_eq!(tiles.row(&inst, t)[0], inst.network.exec_time(inst.graph.cost(t), 0));
+        }
+        assert_eq!(tiles.used, MAX_TILE_SLOTS, "slot pool is bounded");
+        // Revisit the very first tile (long evicted by now).
+        assert_eq!(tiles.row(&inst, 1)[1], inst.network.exec_time(inst.graph.cost(1), 1));
     }
 
     #[test]
@@ -264,18 +722,18 @@ mod tests {
         let mut ws = SchedulerWorkspace::new();
         let mut a = ws.take_group_scratch();
         a.begin(3, 2);
-        a.dat[4] = 7.0;
+        a.dat.row_mut(2)[0] = 7.0;
         a.missing.extend([0usize, 1, 2]);
         a.ready.push(Entry(1.0, std::cmp::Reverse(0)));
 
         let mut b = ws.take_group_scratch();
         b.copy_from(&a);
-        assert_eq!(b.dat, a.dat);
+        assert_eq!(b.dat.row(2), a.dat.row(2));
         assert_eq!(b.missing, a.missing);
         assert_eq!(b.ready.len(), 1);
         // The copy is independent state.
-        b.dat[4] = 0.0;
-        assert_eq!(a.dat[4], 7.0);
+        b.dat.row_mut(2)[0] = 0.0;
+        assert_eq!(a.dat.row(2)[0], 7.0);
 
         ws.recycle_group_scratch(a);
         ws.recycle_group_scratch(b);
@@ -284,6 +742,7 @@ mod tests {
         assert_eq!(ws.group_pool.len(), 1, "take must reuse pooled scratch");
         assert!(ws.capacity() >= 6, "pooled scratch counts toward capacity");
         ws.recycle_group_scratch(c);
+        assert!(ws.peak_live_dat_rows() >= 1, "group peaks surface at the workspace");
     }
 
     #[test]
@@ -298,6 +757,6 @@ mod tests {
         assert_eq!(s.timeline_slice(1), &[]);
         assert!(ws.pool.is_empty(), "take must reuse the pooled schedule");
         ws.begin(3, 2);
-        assert!(ws.capacity() >= 3 * 2 + 3 + 3, "capacity reports held elements");
+        assert!(ws.capacity() >= 3 + 3, "capacity reports held elements");
     }
 }

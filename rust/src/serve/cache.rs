@@ -44,6 +44,7 @@ pub struct ResponseCache {
 }
 
 impl ResponseCache {
+    /// FIFO cache holding at most `capacity` responses (0 disables).
     pub fn new(capacity: usize) -> Self {
         ResponseCache { state: Mutex::new(CacheState::default()), capacity }
     }
@@ -52,6 +53,7 @@ impl ResponseCache {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
+    /// Cached response for `key`, if present.
     pub fn get(&self, key: u64) -> Option<Arc<Value>> {
         if self.capacity == 0 {
             return None;
@@ -59,6 +61,7 @@ impl ResponseCache {
         self.lock().map.get(&key).cloned()
     }
 
+    /// Insert a response, evicting oldest-first past capacity.
     pub fn insert(&self, key: u64, payload: Arc<Value>) {
         if self.capacity == 0 {
             return;
@@ -74,10 +77,12 @@ impl ResponseCache {
         }
     }
 
+    /// Number of cached responses.
     pub fn len(&self) -> usize {
         self.lock().map.len()
     }
 
+    /// Cache currently empty?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -19,8 +19,11 @@ pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
 /// One parsed request.
 #[derive(Debug)]
 pub struct Request {
+    /// HTTP method, uppercased (`GET`, `POST`, …).
     pub method: String,
+    /// Request target path (no host, query left as-is).
     pub path: String,
+    /// Decoded request body (UTF-8).
     pub body: String,
     /// Whether the connection should be held open after the response
     /// (HTTP/1.1 default unless `Connection: close`).
@@ -126,6 +129,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Open a keep-alive connection to `addr` (`host:port`).
     pub fn connect(addr: &str) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);

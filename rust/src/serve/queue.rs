@@ -33,6 +33,7 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Queue holding at most `capacity` items (minimum 1).
     pub fn new(capacity: usize) -> Self {
         BoundedQueue {
             state: Mutex::new(State { items: VecDeque::new(), closed: false }),
@@ -94,10 +95,12 @@ impl<T> BoundedQueue<T> {
         self.lock().items.len()
     }
 
+    /// Queue currently empty?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Maximum queued items before [`BoundedQueue::try_push`] refuses.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

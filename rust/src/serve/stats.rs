@@ -33,7 +33,9 @@ pub struct ServeStats {
     pub requests_failed: AtomicU64,
     /// Requests refused as malformed (400).
     pub requests_bad: AtomicU64,
+    /// Responses served from the content-hash cache.
     pub cache_hits: AtomicU64,
+    /// Responses computed by a worker (cache miss).
     pub cache_misses: AtomicU64,
     /// Ring of recent end-to-end request latencies, microseconds.
     latencies_us: Mutex<Ring>,
@@ -46,8 +48,11 @@ pub struct ServeStats {
 pub struct LatencySummary {
     /// Total requests ever measured (not just the ring's tail).
     pub count: u64,
+    /// Median latency, microseconds.
     pub p50_us: u64,
+    /// 99th-percentile latency, microseconds.
     pub p99_us: u64,
+    /// Worst latency in the ring, microseconds.
     pub max_us: u64,
 }
 

@@ -25,9 +25,11 @@ pub enum EventKind {
 /// One scheduled event.
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
+    /// Simulation time the event fires at.
     pub time: f64,
     /// Tie-break sequence number (assigned by [`EventQueue::push`]).
     pub id: u64,
+    /// What happens at `time`.
     pub kind: EventKind,
 }
 
@@ -61,6 +63,7 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// Empty queue; ids start at 0.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), next_id: 0 }
     }
@@ -79,10 +82,12 @@ impl EventQueue {
         self.heap.pop().map(|Reverse(e)| e)
     }
 
+    /// No events pending?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

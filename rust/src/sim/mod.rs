@@ -70,8 +70,11 @@ pub enum ReplayPolicy {
 /// One simulation request: a noise model, a seed, and a replay policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimOptions {
+    /// Noise model applied to task durations and transfers.
     pub perturb: Perturbation,
+    /// Seed of the per-run noise trace.
     pub seed: u64,
+    /// Static replay or online rescheduling.
     pub policy: ReplayPolicy,
 }
 

@@ -235,7 +235,7 @@ fn replan(
     let mut plan = ws.take_schedule(n, net.len());
     for t in 0..n {
         if committed[t] {
-            plan.insert(*actual.assignment(t).unwrap());
+            plan.insert(actual.assignment(t).unwrap());
         }
     }
 

@@ -43,10 +43,12 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The `i`-th positional argument, if present.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.positional.get(i).map(String::as_str)
     }
 
+    /// Number of positional arguments.
     pub fn num_positional(&self) -> usize {
         self.positional.len()
     }

@@ -14,17 +14,24 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always an `f64`; see the module docs).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object; key order preserved for deterministic output.
     Obj(Vec<(String, Value)>),
 }
 
 impl Value {
     // ----- accessors -------------------------------------------------
 
+    /// The `bool` payload, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -32,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The number payload, if this is a [`Value::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -39,6 +47,8 @@ impl Value {
         }
     }
 
+    /// The number payload as an exact unsigned integer: requires a
+    /// non-negative [`Value::Num`] with zero fraction below 2⁵³.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
@@ -48,10 +58,12 @@ impl Value {
         }
     }
 
+    /// [`Value::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// The string payload, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -59,6 +71,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -66,6 +79,7 @@ impl Value {
         }
     }
 
+    /// The key/value pairs, if this is a [`Value::Obj`].
     pub fn as_obj(&self) -> Option<&[(String, Value)]> {
         match self {
             Value::Obj(v) => Some(v),
@@ -81,41 +95,50 @@ impl Value {
         }
     }
 
-    /// Required typed field helpers (error with the key name).
+    /// Required field lookup — errors with the key name when absent.
+    /// The `req_*` helpers below add a type requirement on top.
     pub fn req(&self, key: &str) -> Result<&Value, String> {
         self.get(key).ok_or_else(|| format!("missing field `{key}`"))
     }
 
+    /// Required `f64` field ([`Value::req`] + [`Value::as_f64`]).
     pub fn req_f64(&self, key: &str) -> Result<f64, String> {
         self.req(key)?.as_f64().ok_or_else(|| format!("field `{key}` not a number"))
     }
 
+    /// Required `u64` field ([`Value::req`] + [`Value::as_u64`]).
     pub fn req_u64(&self, key: &str) -> Result<u64, String> {
         self.req(key)?.as_u64().ok_or_else(|| format!("field `{key}` not a u64"))
     }
 
+    /// Required `usize` field ([`Value::req_u64`] narrowed).
     pub fn req_usize(&self, key: &str) -> Result<usize, String> {
         Ok(self.req_u64(key)? as usize)
     }
 
+    /// Required string field ([`Value::req`] + [`Value::as_str`]).
     pub fn req_str(&self, key: &str) -> Result<&str, String> {
         self.req(key)?.as_str().ok_or_else(|| format!("field `{key}` not a string"))
     }
 
+    /// Required bool field ([`Value::req`] + [`Value::as_bool`]).
     pub fn req_bool(&self, key: &str) -> Result<bool, String> {
         self.req(key)?.as_bool().ok_or_else(|| format!("field `{key}` not a bool"))
     }
 
+    /// Required array field ([`Value::req`] + [`Value::as_arr`]).
     pub fn req_arr(&self, key: &str) -> Result<&[Value], String> {
         self.req(key)?.as_arr().ok_or_else(|| format!("field `{key}` not an array"))
     }
 
     // ----- constructors ----------------------------------------------
 
+    /// Build an object from `(&str, Value)` pairs (order preserved).
     pub fn obj(fields: Vec<(&str, Value)>) -> Value {
         Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array from an `f64` slice.
     pub fn num_arr(xs: &[f64]) -> Value {
         Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
     }

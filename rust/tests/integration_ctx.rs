@@ -94,9 +94,10 @@ fn sim_sweep_with_rescheduling_shares_the_context() {
 
 /// The workspace counterpart of the rank-computation contract, on the
 /// per-config timing path: a full 72-config sweep over one instance
-/// grows each scheduler scratch buffer **at most once** — one DAT
-/// matrix, one counter vector, one ready heap, one pooled schedule —
-/// and a warmed workspace serves a second full sweep with zero buffer
+/// grows each scheduler scratch buffer a **bounded, one-time** amount —
+/// the DAT slot map and its pooled rows, the exec tile map and buffers,
+/// the counter vector, the ready heap, one pooled schedule — and a
+/// warmed workspace serves a second full sweep with zero buffer
 /// growth. This is what makes the coordinator's
 /// one-workspace-per-worker-thread reuse O(1) allocations per config.
 #[test]
@@ -110,9 +111,14 @@ fn full_sweep_grows_each_workspace_buffer_at_most_once() {
     let records = h.run_instance_ws("d", 0, &inst, &mut ws);
     assert_eq!(records.len(), 72);
     let cold = SchedulerWorkspace::buffer_allocations() - before;
-    assert_eq!(
-        cold, 4,
-        "cold sweep grows exactly the four workspace buffers (dat, missing, ready, schedule)"
+    assert!(
+        cold > 0,
+        "cold sweep must materialize the workspace buffers"
+    );
+    assert!(
+        cold < 64,
+        "cold growth must stay a small constant (maps, pooled rows, tiles, heap, \
+         schedule), got {cold}"
     );
 
     let before = SchedulerWorkspace::buffer_allocations();
@@ -316,6 +322,81 @@ fn serve_worker_workspace_is_warm_across_requests() {
         "a warmed serve worker must answer repeat requests with zero buffer growth"
     );
     server.shutdown();
+}
+
+/// The frontier-retirement memory contract, deep-chain side: DAT rows
+/// retire the moment their task is placed, so on a 500-task chain the
+/// peak number of simultaneously pooled rows is O(1) — one live
+/// successor row at a time, nowhere near the 500 a dense matrix holds.
+#[test]
+fn dat_pool_peak_tracks_frontier_on_deep_chain() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let n = 500;
+    let mut g = TaskGraph::new();
+    for i in 0..n {
+        g.add_task(format!("t{i}"), 1.0 + (i % 7) as f64);
+    }
+    for i in 0..n - 1 {
+        g.add_edge(i, i + 1, 1.0);
+    }
+    let inst = ProblemInstance::new("deep_chain", g, Network::homogeneous(4, 1.0));
+    let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+    let mut ws = SchedulerWorkspace::new();
+
+    for cfg in [SchedulerConfig::heft(), SchedulerConfig::sufferage_classic()] {
+        let s = cfg.build().schedule_into(&ctx, &mut ws);
+        assert!(s.is_complete());
+        let peak = ws.peak_live_dat_rows();
+        assert!(peak >= 1, "{}: the chain must materialize rows", cfg.name());
+        assert!(
+            peak <= 3,
+            "{}: a chain's frontier is one task wide, but peak pooled rows was {peak}",
+            cfg.name()
+        );
+        ws.recycle(s);
+    }
+}
+
+/// The frontier-retirement memory contract, wide-DAG side: on a
+/// layered DAG the peak pooled-row count tracks the *layer width* (the
+/// widest ready frontier plus the layer being materialized), not the
+/// task count — the structural guarantee that lets the 1M-task bench
+/// leg run in frontier-sized memory.
+#[test]
+fn dat_pool_peak_tracks_layer_width_on_wide_dag() {
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let (layers, width) = (20usize, 100usize);
+    let n = layers * width;
+    let mut g = TaskGraph::new();
+    for i in 0..n {
+        g.add_task(format!("t{i}"), 1.0 + (i % 5) as f64);
+    }
+    // Each task feeds two tasks of the next layer (a sparse layered
+    // mesh, every non-root with predecessors).
+    for l in 0..layers - 1 {
+        for w in 0..width {
+            let src = l * width + w;
+            g.add_edge(src, (l + 1) * width + w, 1.0);
+            g.add_edge(src, (l + 1) * width + (w + 1) % width, 1.0);
+        }
+    }
+    let inst = ProblemInstance::new("wide_layers", g, Network::homogeneous(4, 1.0));
+    let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+    let mut ws = SchedulerWorkspace::new();
+
+    let s = SchedulerConfig::heft().build().schedule_into(&ctx, &mut ws);
+    assert!(s.is_complete());
+    let peak = ws.peak_live_dat_rows();
+    assert!(peak >= width / 2, "a wide DAG must hold a layer's worth of rows: {peak}");
+    assert!(
+        peak <= 3 * width,
+        "peak pooled rows must track the layer width ({width}), got {peak}"
+    );
+    assert!(
+        peak < n / 4,
+        "peak pooled rows ({peak}) must stay far below the task count ({n})"
+    );
+    ws.recycle(s);
 }
 
 /// The single-config convenience paths (`run_one`, `schedule()`)
