@@ -65,6 +65,7 @@ fn main() {
         policy: ReplayPolicy::Static,
         trials: 20,
         seed: 0xD15EA5E,
+        ..SimSweep::default()
     };
     let records = harness.run_instances_sim(&instances, &sweep);
     println!("{}", robustness_table(&records));

@@ -36,7 +36,8 @@ fn main() {
 
     println!("perturbation: {perturb:?}\n");
     for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.1 }] {
-        let sweep = SimSweep { perturb, policy, trials: 20, seed: 0xD15EA5E };
+        let sweep =
+            SimSweep { perturb, policy, trials: 20, seed: 0xD15EA5E, ..SimSweep::default() };
         let records = harness.run_all_sim(&specs, &sweep);
         println!("== policy: {policy:?}");
         println!("{}", robustness_table(&records));
@@ -54,8 +55,10 @@ fn main() {
             perturb,
             seed: 7,
             policy: ReplayPolicy::Static,
+            ..SimOptions::default()
         },
-    );
+    )
+    .expect("complete plan replays cleanly");
     println!(
         "single replay of HEFT on {}: planned {:.4} -> realized {:.4} (ratio {:.4})",
         inst.name,

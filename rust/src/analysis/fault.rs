@@ -1,0 +1,245 @@
+//! Fault-robustness analysis: aggregate fault-sweep [`SimRecord`]s into
+//! per-(scheduler, dataset) survival and degradation rows.
+//!
+//! Where [`super::robustness`] asks *how much do plans stretch under
+//! noise*, this table asks *do they finish at all when machines die,
+//! and at what cost*: completion rate across trials, makespan inflation
+//! of the completed runs versus their zero-fault plans, the fraction of
+//! compute thrown away by crashes, and the retry pressure per task.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::render::{ascii_table, fmt_f, write_csv};
+use crate::benchmark::SimRecord;
+
+/// Aggregated fault survival of one scheduler on one dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRow {
+    /// Scheduler name.
+    pub scheduler: String,
+    /// Dataset name.
+    pub dataset: String,
+    /// Fraction of trials in which every task finished.
+    pub completion_rate: f64,
+    /// Mean realized / planned makespan over *completed* trials
+    /// (weighted by each instance's completed-trial count; 0.0 when
+    /// nothing completed).
+    pub mean_inflation: f64,
+    /// Work lost to killed attempts over total work attempted,
+    /// `Σ lost / Σ (lost + done)` (0.0 when no work was tracked).
+    pub wasted_work_frac: f64,
+    /// Mean execution attempts per task per trial (1.0 = never killed).
+    pub mean_attempts: f64,
+    /// Total unfinished tasks across all instances and trials.
+    pub tasks_failed: usize,
+    /// Total crash events that fired across all instances and trials.
+    pub crashes: usize,
+    /// Instances aggregated.
+    pub instances: usize,
+    /// Total trials aggregated (instances × trials per instance).
+    pub trials: usize,
+}
+
+/// Aggregate fault-sweep records per (dataset, scheduler), sorted by
+/// dataset, then descending completion rate, then ascending inflation
+/// (best survivors first).
+pub fn fault_rows(records: &[SimRecord]) -> Vec<FaultRow> {
+    #[derive(Default)]
+    struct Acc {
+        trials: usize,
+        completed: usize,
+        inflation_weighted: f64,
+        attempts_sum: f64,
+        work_lost: f64,
+        work_done: f64,
+        tasks_failed: usize,
+        crashes: usize,
+        instances: usize,
+    }
+    let mut acc: BTreeMap<(String, String), Acc> = BTreeMap::new();
+    for r in records {
+        let e = acc.entry((r.dataset.clone(), r.scheduler.clone())).or_default();
+        e.trials += r.trials;
+        e.completed += r.completed_trials;
+        // `robustness` already averages over the instance's completed
+        // trials; weighting by that count makes the dataset mean a true
+        // per-completed-trial mean.
+        e.inflation_weighted += r.robustness * r.completed_trials as f64;
+        e.attempts_sum += r.mean_attempts;
+        e.work_lost += r.work_lost;
+        e.work_done += r.work_done;
+        e.tasks_failed += r.tasks_failed;
+        e.crashes += r.crashes;
+        e.instances += 1;
+    }
+    let mut rows: Vec<FaultRow> = acc
+        .into_iter()
+        .map(|((dataset, scheduler), a)| FaultRow {
+            scheduler,
+            dataset,
+            completion_rate: if a.trials > 0 {
+                a.completed as f64 / a.trials as f64
+            } else {
+                0.0
+            },
+            mean_inflation: if a.completed > 0 {
+                a.inflation_weighted / a.completed as f64
+            } else {
+                0.0
+            },
+            wasted_work_frac: {
+                let total = a.work_lost + a.work_done;
+                if total > 0.0 {
+                    a.work_lost / total
+                } else {
+                    0.0
+                }
+            },
+            mean_attempts: if a.instances > 0 {
+                a.attempts_sum / a.instances as f64
+            } else {
+                0.0
+            },
+            tasks_failed: a.tasks_failed,
+            crashes: a.crashes,
+            instances: a.instances,
+            trials: a.trials,
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        a.dataset
+            .cmp(&b.dataset)
+            .then(b.completion_rate.total_cmp(&a.completion_rate))
+            .then(a.mean_inflation.total_cmp(&b.mean_inflation))
+            .then(a.scheduler.cmp(&b.scheduler))
+    });
+    rows
+}
+
+const HEADERS: [&str; 10] = [
+    "dataset",
+    "scheduler",
+    "completion_rate",
+    "mean_inflation",
+    "wasted_work_frac",
+    "mean_attempts",
+    "tasks_failed",
+    "crashes",
+    "instances",
+    "trials",
+];
+
+fn row_cells(rows: &[FaultRow]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.scheduler.clone(),
+                fmt_f(r.completion_rate, 4),
+                fmt_f(r.mean_inflation, 4),
+                fmt_f(r.wasted_work_frac, 4),
+                fmt_f(r.mean_attempts, 4),
+                r.tasks_failed.to_string(),
+                r.crashes.to_string(),
+                r.instances.to_string(),
+                r.trials.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// Render the fault-robustness table as ASCII (one row per dataset ×
+/// scheduler, best survivors first within each dataset).
+pub fn fault_table(records: &[SimRecord]) -> String {
+    let rows = fault_rows(records);
+    format!(
+        "Fault robustness — survival and degradation under injected failures\n{}",
+        ascii_table(&HEADERS, &row_cells(&rows))
+    )
+}
+
+/// Write the fault-robustness table as CSV.
+pub fn write_fault_csv(path: &Path, records: &[SimRecord]) -> std::io::Result<()> {
+    let rows = fault_rows(records);
+    write_csv(path, &HEADERS, &row_cells(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmark::{Harness, SimSweep};
+    use crate::datasets::{DatasetSpec, Structure};
+    use crate::scheduler::SchedulerConfig;
+    use crate::sim::{FaultModel, Perturbation};
+
+    fn fault_records() -> Vec<SimRecord> {
+        let h = Harness::with_schedulers(vec![
+            SchedulerConfig::heft(),
+            SchedulerConfig::met(),
+        ]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let sweep = SimSweep {
+            trials: 3,
+            perturb: Perturbation::none(),
+            faults: FaultModel::with_mtbf(0.2),
+            ..SimSweep::default()
+        };
+        h.run_dataset_sim(&spec, &sweep)
+    }
+
+    #[test]
+    fn rows_aggregate_per_scheduler() {
+        let rows = fault_rows(&fault_records());
+        assert_eq!(rows.len(), 2, "two schedulers, one dataset");
+        for r in &rows {
+            assert_eq!(r.instances, 2);
+            assert_eq!(r.trials, 6);
+            assert!((0.0..=1.0).contains(&r.completion_rate), "{}", r.completion_rate);
+            assert!((0.0..=1.0).contains(&r.wasted_work_frac), "{}", r.wasted_work_frac);
+        }
+    }
+
+    #[test]
+    fn zero_fault_rows_are_clean() {
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+        let sweep = SimSweep {
+            perturb: Perturbation::none(),
+            trials: 2,
+            ..SimSweep::default()
+        };
+        let rows = fault_rows(&h.run_dataset_sim(&spec, &sweep));
+        for r in rows {
+            assert_eq!(r.completion_rate, 1.0);
+            assert_eq!(r.mean_inflation, 1.0, "zero noise, zero faults ⇒ exact plans");
+            assert_eq!(r.wasted_work_frac, 0.0);
+            assert_eq!(r.mean_attempts, 1.0);
+            assert_eq!(r.tasks_failed, 0);
+            assert_eq!(r.crashes, 0);
+        }
+    }
+
+    #[test]
+    fn rows_sorted_best_survivors_first() {
+        let rows = fault_rows(&fault_records());
+        for pair in rows.windows(2) {
+            if pair[0].dataset == pair[1].dataset {
+                assert!(pair[0].completion_rate >= pair[1].completion_rate);
+            }
+        }
+    }
+
+    #[test]
+    fn table_and_csv_render() {
+        let recs = fault_records();
+        let text = fault_table(&recs);
+        assert!(text.contains("completion_rate"));
+        assert!(text.contains("HEFT"));
+        let path = std::env::temp_dir().join("ptgs_fault_table_test.csv");
+        write_fault_csv(&path, &recs).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.lines().count() >= 3, "{body}");
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod adversarial;
 pub mod dedup;
 pub mod effects;
+pub mod fault;
 pub mod interactions;
 pub mod pareto;
 pub mod render;
@@ -13,7 +14,8 @@ pub mod robustness;
 pub use adversarial::{adversarial_search, AdversarialOptions, AdversarialResult};
 pub use dedup::{dedup_rows, dedup_table, write_dedup_csv, DedupRow};
 pub use effects::{effect, Component, EffectRow};
-pub use report::write_report;
+pub use fault::{fault_rows, fault_table, write_fault_csv, FaultRow};
+pub use report::{write_report, write_report_with_sim};
 pub use robustness::{
     robustness_rows, robustness_table, write_robustness_csv, RobustnessRow,
 };

@@ -5,12 +5,24 @@
 use std::path::Path;
 
 use super::Artifact;
-use crate::benchmark::BenchmarkResults;
+use crate::benchmark::{BenchmarkResults, SimRecord};
 
 /// Generate every artifact and write `<out_dir>/REPORT.md`. Returns the
 /// report text.
 pub fn write_report(
     results: &BenchmarkResults,
+    out_dir: &Path,
+    elapsed_secs: f64,
+) -> std::io::Result<String> {
+    write_report_with_sim(results, &[], out_dir, elapsed_secs)
+}
+
+/// [`write_report`] plus simulation sections: when `sim_records` is
+/// non-empty the report additionally renders the robustness table
+/// (`robustness.csv`) and the fault-survival table (`fault.csv`).
+pub fn write_report_with_sim(
+    results: &BenchmarkResults,
+    sim_records: &[SimRecord],
     out_dir: &Path,
     elapsed_secs: f64,
 ) -> std::io::Result<String> {
@@ -56,6 +68,19 @@ pub fn write_report(
         ));
     }
 
+    if !sim_records.is_empty() {
+        super::write_robustness_csv(&out_dir.join("robustness.csv"), sim_records)?;
+        md.push_str(&format!(
+            "## robustness — realized / planned makespan under noise\n\n```text\n{}\n```\n\n",
+            super::robustness_table(sim_records).trim_end()
+        ));
+        super::write_fault_csv(&out_dir.join("fault.csv"), sim_records)?;
+        md.push_str(&format!(
+            "## faults — survival under injected failures\n\n```text\n{}\n```\n\n",
+            super::fault_table(sim_records).trim_end()
+        ));
+    }
+
     std::fs::create_dir_all(out_dir)?;
     std::fs::write(out_dir.join("REPORT.md"), &md)?;
     Ok(md)
@@ -86,6 +111,29 @@ mod tests {
         assert!(dir.join("dedup.csv").exists());
         assert!(md.contains("1.25 s"));
         assert!(dir.join("REPORT.md").exists());
+        assert!(!md.contains("## robustness"), "no sim records ⇒ no sim sections");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn report_with_sim_records_adds_fault_sections() {
+        use crate::benchmark::SimSweep;
+        use crate::sim::FaultModel;
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let results = BenchmarkResults::new(h.run_dataset(&spec));
+        let sweep = SimSweep {
+            trials: 2,
+            faults: FaultModel::with_mtbf(0.3),
+            ..SimSweep::default()
+        };
+        let sim = h.run_dataset_sim(&spec, &sweep);
+        let dir = std::env::temp_dir().join("ptgs_report_sim_test");
+        let md = write_report_with_sim(&results, &sim, &dir, 0.5).unwrap();
+        assert!(md.contains("## robustness"));
+        assert!(md.contains("## faults"));
+        assert!(dir.join("robustness.csv").exists());
+        assert!(dir.join("fault.csv").exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -5,16 +5,20 @@
 //! Noise traces are a function of `(instance, model, base seed, trial)`
 //! only — never of the scheduler — so every scheduler on an instance is
 //! measured against the identical set of realized worlds and the
-//! robustness ratios are directly comparable across the 72 configs.
+//! robustness ratios are directly comparable across the 72 configs. The
+//! same holds for fault traces ([`crate::sim::FaultTrace`]) when the
+//! sweep enables fault injection: every config faces the identical
+//! crash schedule, so survival rates are paired too.
 
 use super::Harness;
 use crate::datasets::DatasetSpec;
 use crate::instance::ProblemInstance;
 use crate::scheduler::SchedulerConfig;
-use crate::sim::{Perturbation, ReplayPolicy};
+use crate::sim::{FaultModel, Perturbation, ReplayPolicy, RetryPolicy};
 use crate::util::{FromJson, ToJson, Value};
 
-/// A simulation sweep: noise model, replay policy, trials per instance.
+/// A simulation sweep: noise model, fault model, replay policy, trials
+/// per instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimSweep {
     /// Noise model applied to every trial.
@@ -26,6 +30,12 @@ pub struct SimSweep {
     /// Base seed; trial `k` on instance `i` derives its trace seed from
     /// `(seed, dataset instance index, k)`.
     pub seed: u64,
+    /// Hazard model for injected faults; [`FaultModel::none`] (the
+    /// default) keeps the sweep bit-identical to its fault-free
+    /// behavior.
+    pub faults: FaultModel,
+    /// Retry policy for tasks killed by injected crashes.
+    pub retry: RetryPolicy,
 }
 
 impl Default for SimSweep {
@@ -35,6 +45,8 @@ impl Default for SimSweep {
             policy: ReplayPolicy::Static,
             trials: 10,
             seed: 0x0B5E_55ED,
+            faults: FaultModel::none(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -68,8 +80,26 @@ pub struct SimRecord {
     pub robustness: f64,
     /// Noise trials aggregated into this record.
     pub trials: usize,
-    /// Total replans across trials (0 under the static policy).
+    /// Trials in which every task finished. Equals `trials` whenever
+    /// fault injection is off; makespan statistics average over these
+    /// trials only (0.0 when none completed).
+    pub completed_trials: usize,
+    /// Total replans across trials (0 under the static policy with no
+    /// faults).
     pub replans: usize,
+    /// Total unfinished tasks across all trials (retries exhausted or
+    /// stranded behind a failed predecessor).
+    pub tasks_failed: usize,
+    /// Mean execution attempts per task per trial (1.0 = no retries
+    /// ever needed; also the fault-free value).
+    pub mean_attempts: f64,
+    /// Total time crashed attempts threw away, across all trials.
+    pub work_lost: f64,
+    /// Total time spent on successful attempts across all trials
+    /// (tracked only under fault injection; 0.0 otherwise).
+    pub work_done: f64,
+    /// Total crash events that fired across all trials.
+    pub crashes: usize,
 }
 
 impl ToJson for SimRecord {
@@ -83,13 +113,22 @@ impl ToJson for SimRecord {
             ("worst_sim_makespan", Value::Num(self.worst_sim_makespan)),
             ("robustness", Value::Num(self.robustness)),
             ("trials", Value::Num(self.trials as f64)),
+            ("completed_trials", Value::Num(self.completed_trials as f64)),
             ("replans", Value::Num(self.replans as f64)),
+            ("tasks_failed", Value::Num(self.tasks_failed as f64)),
+            ("mean_attempts", Value::Num(self.mean_attempts)),
+            ("work_lost", Value::Num(self.work_lost)),
+            ("work_done", Value::Num(self.work_done)),
+            ("crashes", Value::Num(self.crashes as f64)),
         ])
     }
 }
 
 impl FromJson for SimRecord {
     fn from_json(v: &Value) -> Result<Self, String> {
+        let trials = v.req_usize("trials")?;
+        // Fault fields are absent from pre-fault-layer documents; they
+        // default to the values a zero-fault sweep would have written.
         Ok(SimRecord {
             scheduler: v.req_str("scheduler")?.to_string(),
             dataset: v.req_str("dataset")?.to_string(),
@@ -98,8 +137,32 @@ impl FromJson for SimRecord {
             mean_sim_makespan: v.req_f64("mean_sim_makespan")?,
             worst_sim_makespan: v.req_f64("worst_sim_makespan")?,
             robustness: v.req_f64("robustness")?,
-            trials: v.req_usize("trials")?,
+            trials,
+            completed_trials: match v.get("completed_trials") {
+                Some(_) => v.req_usize("completed_trials")?,
+                None => trials,
+            },
             replans: v.req_usize("replans")?,
+            tasks_failed: match v.get("tasks_failed") {
+                Some(_) => v.req_usize("tasks_failed")?,
+                None => 0,
+            },
+            mean_attempts: match v.get("mean_attempts") {
+                Some(_) => v.req_f64("mean_attempts")?,
+                None => 1.0,
+            },
+            work_lost: match v.get("work_lost") {
+                Some(_) => v.req_f64("work_lost")?,
+                None => 0.0,
+            },
+            work_done: match v.get("work_done") {
+                Some(_) => v.req_f64("work_done")?,
+                None => 0.0,
+            },
+            crashes: match v.get("crashes") {
+                Some(_) => v.req_usize("crashes")?,
+                None => 0,
+            },
         })
     }
 }
@@ -110,7 +173,13 @@ struct TrialAgg {
     sum: f64,
     worst: f64,
     ratio_sum: f64,
+    completed: usize,
     replans: usize,
+    tasks_failed: usize,
+    attempts_sum: u64,
+    work_lost: f64,
+    work_done: f64,
+    crashes: usize,
 }
 
 impl Harness {
@@ -196,18 +265,52 @@ impl Harness {
             };
 
         let trials = sweep.trials.max(1);
+        let n = inst.graph.len();
         let mut aggs = vec![TrialAgg::default(); self.schedulers.len()];
         for k in 0..trials {
-            let trace =
-                crate::sim::NoiseTrace::sample(inst, &sweep.perturb, sweep.trial_seed(instance, k));
+            let seed = sweep.trial_seed(instance, k);
+            let trace = crate::sim::NoiseTrace::sample(inst, &sweep.perturb, seed);
             let eff = crate::sim::perturbed_instance(inst, &trace);
+            // The fault world, like the noise trace, is realized once
+            // per trial from the *nominal* instance and shared by every
+            // config — survival comparisons are paired.
+            let faults = crate::sim::FaultTrace::sample(inst, &sweep.faults, seed);
             for ((i, cfg), agg) in self.schedulers.iter().enumerate().zip(&mut aggs) {
                 let plan = &plans[plan_of[i]];
-                let out = crate::sim::simulate_into(&ctx, &eff, plan, cfg, sweep.policy, ws);
-                agg.sum += out.makespan;
-                agg.worst = agg.worst.max(out.makespan);
-                agg.ratio_sum += out.robustness_ratio();
+                let out = crate::sim::simulate_faulty_into(
+                    &ctx,
+                    &eff,
+                    plan,
+                    cfg,
+                    sweep.policy,
+                    &faults,
+                    &sweep.retry,
+                    ws,
+                )
+                .unwrap_or_else(|e| {
+                    panic!("{} on {dataset}/{instance} trial {k}: {e}", cfg.name())
+                });
+                // Makespan statistics cover completed trials only — a
+                // partial schedule's makespan measures what survived,
+                // not the workload, and would drag the mean down.
+                if out.completed {
+                    agg.completed += 1;
+                    agg.sum += out.makespan;
+                    agg.worst = agg.worst.max(out.makespan);
+                    agg.ratio_sum += out.robustness_ratio();
+                }
                 agg.replans += out.replans;
+                match &out.faults {
+                    Some(f) => {
+                        agg.tasks_failed += f.tasks_failed;
+                        agg.attempts_sum +=
+                            f.attempts.iter().map(|&a| u64::from(a)).sum::<u64>();
+                        agg.work_lost += f.work_lost;
+                        agg.work_done += f.work_done;
+                        agg.crashes += f.crashes;
+                    }
+                    None => agg.attempts_sum += n as u64, // every task ran once
+                }
                 ws.recycle(out.schedule); // realized world consumed above
             }
         }
@@ -222,11 +325,29 @@ impl Harness {
                 dataset: dataset.to_string(),
                 instance,
                 static_makespan: plans[plan_of[i]].makespan(),
-                mean_sim_makespan: agg.sum / trials as f64,
+                mean_sim_makespan: if agg.completed > 0 {
+                    agg.sum / agg.completed as f64
+                } else {
+                    0.0
+                },
                 worst_sim_makespan: agg.worst,
-                robustness: agg.ratio_sum / trials as f64,
+                robustness: if agg.completed > 0 {
+                    agg.ratio_sum / agg.completed as f64
+                } else {
+                    0.0
+                },
                 trials,
+                completed_trials: agg.completed,
                 replans: agg.replans,
+                tasks_failed: agg.tasks_failed,
+                mean_attempts: if n > 0 {
+                    agg.attempts_sum as f64 / (trials * n) as f64
+                } else {
+                    0.0
+                },
+                work_lost: agg.work_lost,
+                work_done: agg.work_done,
+                crashes: agg.crashes,
             })
             .collect();
         // The plans outlived the trials; feed their buffers back so the
@@ -384,5 +505,42 @@ mod tests {
         let back =
             Vec::<SimRecord>::from_json(&crate::util::parse(&text).unwrap()).unwrap();
         assert_eq!(records, back);
+    }
+
+    #[test]
+    fn pre_fault_documents_still_parse() {
+        // A record written before the fault layer existed: no
+        // completed_trials / fault fields. Defaults must reconstruct
+        // the zero-fault interpretation.
+        let text = r#"{"scheduler":"heft","dataset":"d","instance":0,
+            "static_makespan":2.0,"mean_sim_makespan":2.5,
+            "worst_sim_makespan":3.0,"robustness":1.25,
+            "trials":4,"replans":1}"#;
+        let r = SimRecord::from_json(&crate::util::parse(text).unwrap()).unwrap();
+        assert_eq!(r.completed_trials, 4);
+        assert_eq!(r.tasks_failed, 0);
+        assert_eq!(r.mean_attempts, 1.0);
+        assert_eq!(r.work_lost, 0.0);
+        assert_eq!(r.crashes, 0);
+    }
+
+    #[test]
+    fn fault_sweep_is_deterministic_and_consistent() {
+        let sweep = SimSweep {
+            trials: 3,
+            faults: crate::sim::FaultModel::with_mtbf(0.2),
+            ..SimSweep::default()
+        };
+        let a = tiny_harness().run_dataset_sim(&tiny_spec(), &sweep);
+        let b = tiny_harness().run_dataset_sim(&tiny_spec(), &sweep);
+        assert_eq!(a, b, "same sweep must realize the same fault worlds");
+        for r in &a {
+            assert!(r.completed_trials <= r.trials);
+            assert!(r.work_lost >= 0.0 && r.work_done >= 0.0);
+            if r.crashes == 0 {
+                assert_eq!(r.completed_trials, r.trials, "no crash ⇒ every trial completes");
+                assert_eq!(r.tasks_failed, 0);
+            }
+        }
     }
 }

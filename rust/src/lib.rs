@@ -120,7 +120,8 @@ pub mod prelude {
     pub use crate::benchmark::{SimRecord, SimSweep};
     pub use crate::serve::{ServeOptions, Server};
     pub use crate::sim::{
-        perturbed_instance, simulate, simulate_against, simulate_into, NoiseTrace,
-        Perturbation, ReplayPolicy, SimOptions, SimOutcome,
+        fault_horizon, perturbed_instance, replay_faulty, simulate, simulate_against,
+        simulate_into, FaultModel, FaultSummary, FaultTrace, NoiseTrace, Perturbation,
+        ReplayPolicy, RetryPolicy, SimOptions, SimOutcome,
     };
 }

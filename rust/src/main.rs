@@ -4,10 +4,10 @@
 //! ptgs generate  --structure chains --ccr 1 --count 100 --out instances.json
 //! ptgs schedule  --scheduler HEFT [--instance f.json --index 0 | --structure chains --ccr 1 --seed 0] [--backend xla]
 //! ptgs benchmark [--schedulers all] [--structures all] [--ccrs all] [--count 100] [--threads N] [--repeats 1] [--fused] [--out results/benchmark.json]
-//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--seed <datasets>] [--sim-seed <noise trials>] [--threads N] [--out results/robustness.csv]
-//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--per-config] [--simulate (+ the simulate flags)] [--threads N] [--out <csv>]
+//! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--faults] [--mtbf 0.5] [--recovery 0.05] [--retries 3] [--strict] [--seed <datasets>] [--sim-seed <noise trials>] [--threads N] [--out results/robustness.csv]
+//! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--per-config] [--simulate (+ the simulate/fault flags)] [--strict] [--threads N] [--out <csv>]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
-//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N] [--fused] [--out-dir results]
+//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N] [--fused] [--simulate (+ the simulate/fault flags)] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
 //! ptgs serve     [--addr 127.0.0.1:7463] [--threads N] [--queue-depth 64] [--timeout-ms 30000] [--cache-size 256] [--schedulers all] [--debug]
 //! ptgs list      schedulers|datasets|artifacts
@@ -196,10 +196,12 @@ fn cmd_benchmark(args: &Args) -> Result<()> {
 
 /// Parse the shared perturbation-sweep flags (`--sigma`,
 /// `--slowdown-prob`, `--slowdown-factor`, `--policy`, `--slack`,
-/// `--trials`, `--sim-seed`) used by `simulate` and `trace`.
+/// `--trials`, `--sim-seed`) plus the fault-injection flags
+/// (`--faults`, `--mtbf`, `--recovery`, `--retries`) used by
+/// `simulate`, `trace`, and `reproduce --simulate`.
 fn sweep_from_args(args: &Args) -> Result<ptgs::benchmark::SimSweep> {
     use ptgs::benchmark::SimSweep;
-    use ptgs::sim::{Perturbation, ReplayPolicy};
+    use ptgs::sim::{FaultModel, Perturbation, ReplayPolicy, RetryPolicy};
 
     let sigma = args.get_parse("sigma", 0.2f64).map_err(|e| anyhow!(e))?;
     let slowdown_prob = args.get_parse("slowdown-prob", 0.0f64).map_err(|e| anyhow!(e))?;
@@ -225,12 +227,69 @@ fn sweep_from_args(args: &Args) -> Result<ptgs::benchmark::SimSweep> {
         other => bail!("unknown policy {other} (static|reschedule)"),
     };
     let trials = args.get_parse("trials", 10usize).map_err(|e| anyhow!(e))?;
+
+    // Fault injection: `--faults` enables the default model; naming any
+    // of `--mtbf`/`--recovery` also enables it, so `ptgs simulate --mtbf
+    // 0.3` does what it says without a second flag.
+    let fault_flags =
+        args.has("faults") || args.get("mtbf").is_some() || args.get("recovery").is_some();
+    let faults = if fault_flags {
+        let mtbf = args.get_parse("mtbf", 0.5f64).map_err(|e| anyhow!(e))?;
+        let recovery = args.get_parse("recovery", 0.05f64).map_err(|e| anyhow!(e))?;
+        if !(mtbf.is_finite() && mtbf > 0.0) {
+            bail!("--mtbf must be > 0, got {mtbf}");
+        }
+        if !(recovery.is_finite() && recovery >= 0.0) {
+            bail!("--recovery must be >= 0, got {recovery}");
+        }
+        FaultModel { recovery, ..FaultModel::with_mtbf(mtbf) }
+    } else {
+        FaultModel::none()
+    };
+    let max_attempts: u32 = args
+        .get_parse("retries", RetryPolicy::default().max_attempts)
+        .map_err(|e| anyhow!(e))?;
+    if max_attempts == 0 {
+        bail!("--retries must be >= 1 (1 = no retries, fail on the first kill)");
+    }
+    let retry = RetryPolicy { max_attempts, ..RetryPolicy::default() };
+
     Ok(SimSweep {
         perturb,
         policy,
         trials,
         seed: args.get_parse("sim-seed", 0x0B5E_55EDu64).map_err(|e| anyhow!(e))?,
+        faults,
+        retry,
     })
+}
+
+/// Print coordinator failure counts when nonzero; under `--strict` a
+/// nonzero count becomes a nonzero exit.
+fn report_metrics(args: &Args, metrics: &ptgs::coordinator::Metrics) -> Result<()> {
+    use std::sync::atomic::Ordering;
+    let failed = metrics.jobs_failed.load(Ordering::Relaxed);
+    if failed == 0 {
+        return Ok(());
+    }
+    eprintln!(
+        "warning: {failed} of {} sweep job(s) failed",
+        metrics.jobs_total.load(Ordering::Relaxed)
+    );
+    for job in metrics.failed_jobs.lock().expect("metrics mutex poisoned").iter() {
+        eprintln!("  failed: {job}");
+    }
+    if args.has("strict") {
+        bail!("{failed} sweep job(s) failed under --strict");
+    }
+    Ok(())
+}
+
+/// Sibling path for the fault-robustness CSV next to the main
+/// robustness CSV: `<stem>_faults.csv` in the same directory.
+fn fault_csv_path(out: &std::path::Path) -> PathBuf {
+    let stem = out.file_stem().and_then(|s| s.to_str()).unwrap_or("robustness");
+    out.with_file_name(format!("{stem}_faults.csv"))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -248,7 +307,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let options = coordinator_options(args)?;
     let coord = Coordinator { schedulers, backend: RankBackend::Native, options };
     let t0 = std::time::Instant::now();
-    let records = coord.run_sim_blocking(&specs, &sweep);
+    let (records, metrics) = coord.run_sim(&specs, &sweep);
     eprintln!(
         "simulate: {} records ({} trials each) in {:.2}s",
         records.len(),
@@ -256,12 +315,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     println!("{}", ptgs::analysis::robustness_table(&records));
+    if !sweep.faults.is_none() {
+        println!("{}", ptgs::analysis::fault_table(&records));
+    }
     if let Some(out) = args.get("out") {
         let out = PathBuf::from(out);
         ptgs::analysis::write_robustness_csv(&out, &records)?;
         println!("robustness CSV written to {}", out.display());
+        if !sweep.faults.is_none() {
+            let fault_out = fault_csv_path(&out);
+            ptgs::analysis::write_fault_csv(&fault_out, &records)?;
+            println!("fault CSV written to {}", fault_out.display());
+        }
     }
-    Ok(())
+    report_metrics(args, &metrics)
 }
 
 /// `ptgs trace` — load real workflow traces, validate them, run every
@@ -378,8 +445,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
                             perturb: Perturbation::none(),
                             seed: 0,
                             policy: ReplayPolicy::Static,
+                            ..SimOptions::default()
                         },
-                    );
+                    )
+                    .map_err(|e| {
+                        anyhow!("zero-noise replay of {} on {}: {e}", cfg.name(), inst.name)
+                    })?;
                     if out.makespan != plan.makespan() {
                         bail!(
                             "zero-noise replay drifted for {} on {}: planned {} realized {}",
@@ -405,7 +476,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     if args.has("simulate") {
         let sweep = sweep_from_args(args)?;
         let t0 = std::time::Instant::now();
-        let records = coord.run_traces_sim_blocking(&set.instances, &sweep);
+        let (records, metrics) = coord.run_traces_sim(&set.instances, &sweep);
         eprintln!(
             "trace: {} sim records ({} trials each) in {:.2}s",
             records.len(),
@@ -413,9 +484,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
         println!("{}", ptgs::analysis::robustness_table(&records));
+        if !sweep.faults.is_none() {
+            println!("{}", ptgs::analysis::fault_table(&records));
+        }
         let out = PathBuf::from(args.get_or("out", "results/trace_robustness.csv"));
         ptgs::analysis::write_robustness_csv(&out, &records)?;
         println!("robustness CSV written to {}", out.display());
+        if !sweep.faults.is_none() {
+            let fault_out = fault_csv_path(&out);
+            ptgs::analysis::write_fault_csv(&fault_out, &records)?;
+            println!("fault CSV written to {}", fault_out.display());
+        }
+        report_metrics(args, &metrics)?;
     } else {
         let results = coord.run_traces_blocking(&set.instances);
         let dedup = ptgs::analysis::dedup_rows(&results.records);
@@ -491,6 +571,32 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
         run_benchmark(SchedulerConfig::all(), &specs, workers, repeats, args.has("fused"))?;
     let elapsed = t0.elapsed().as_secs_f64();
     results.save(&out_dir.join("benchmark.json"))?;
+
+    // `--simulate` extends the report with the perturbation/fault
+    // sweep: robustness + fault-survival sections and their CSVs. The
+    // shared simulate/fault flags (`--sigma`, `--trials`, `--faults`,
+    // `--mtbf`, …) configure it.
+    let sim_records = if args.has("simulate") {
+        let sweep = sweep_from_args(args)?;
+        let coord = Coordinator {
+            schedulers: SchedulerConfig::all(),
+            backend: RankBackend::Native,
+            options: coordinator_options(args)?,
+        };
+        let t1 = std::time::Instant::now();
+        let (records, metrics) = coord.run_sim(&specs, &sweep);
+        eprintln!(
+            "reproduce: {} sim records ({} trials each) in {:.2}s",
+            records.len(),
+            sweep.trials,
+            t1.elapsed().as_secs_f64()
+        );
+        report_metrics(args, &metrics)?;
+        records
+    } else {
+        Vec::new()
+    };
+
     match args.get("artifact") {
         Some(id) => {
             for a in parse_artifacts(id)? {
@@ -498,7 +604,12 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
             }
         }
         None => {
-            let md = ptgs::analysis::write_report(&results, &out_dir, elapsed)?;
+            let md = ptgs::analysis::write_report_with_sim(
+                &results,
+                &sim_records,
+                &out_dir,
+                elapsed,
+            )?;
             println!("{md}");
         }
     }

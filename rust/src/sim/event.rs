@@ -20,6 +20,11 @@ pub enum EventKind {
     TaskFinished { task: TaskId },
     /// One dependency transfer arrived at the destination task's node.
     TransferArrived { src: TaskId, dst: TaskId, at: NodeId },
+    /// A node failed; `permanent` nodes never come back. Consumed by the
+    /// fault controller ([`crate::sim::fault`]), never by plain replay.
+    NodeCrashed { node: NodeId, permanent: bool },
+    /// A transiently-crashed node came back online.
+    NodeRecovered { node: NodeId },
 }
 
 /// One scheduled event.

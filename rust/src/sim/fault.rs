@@ -1,0 +1,982 @@
+//! Fault injection: seeded node-crash traces, bounded task retries, and
+//! failure-aware replanning over the degraded network.
+//!
+//! The noise layer ([`super::perturb`]) stretches times; this layer
+//! breaks machines. A [`FaultModel`] describes per-node hazard rates
+//! (exponential inter-crash times, a probability that a crash is
+//! permanent, exponential transient-outage durations, and optional
+//! link-degradation episodes); [`FaultTrace::sample`] realizes one
+//! deterministic world from `(instance, model, seed)` — like
+//! [`super::NoiseTrace`], traces depend only on the instance and seed,
+//! never on the scheduler, so every config faces the identical failures.
+//!
+//! [`replay_faulty`] executes a plan through that world:
+//!
+//! 1. **Segment replay.** The current plan runs under the same
+//!    event-driven replayer as the fault-free simulator until the next
+//!    fault event could matter.
+//! 2. **Crash.** Tasks running on the failed node are killed; their
+//!    spent work is counted as lost and they are re-released under the
+//!    [`RetryPolicy`] (bounded attempts, exponential backoff, optionally
+//!    never again on a node that killed them). Tasks that already
+//!    finished keep their checkpointed output; transfers that were
+//!    in flight *from* the dead node restart from that checkpoint at the
+//!    crash moment.
+//! 3. **Failure-aware replan.** The uncommitted frontier is
+//!    list-scheduled against the degraded network — crashed nodes are
+//!    masked out of every candidate set — with release floors at the
+//!    replan moment (an online controller cannot place work in the
+//!    past). A ready task with an empty candidate set *fails*; its
+//!    descendants strand, and the run completes partially.
+//! 4. **Recovery.** Transient outages end, the node rejoins the
+//!    candidate set, and the controller replans once more.
+//!
+//! An execution can therefore *fail to complete*. That is reported as
+//! data ([`FaultReplay::completed`], [`super::SimOutcome::completed`]),
+//! never as a panic — the acceptance contract for the whole layer.
+//!
+//! With an empty trace the engine is the plain segment replayer run
+//! once, which is bit-identical to [`super::replay_static`]; the
+//! property tests pin this for all 72 configs.
+
+use std::cmp::Reverse;
+use std::collections::HashMap;
+
+use super::event::{EventKind, EventQueue};
+use super::replay::{replay_segment_into, SegmentWorld};
+use crate::datasets::rng::Rng;
+use crate::graph::TaskId;
+use crate::instance::ProblemInstance;
+use crate::network::NodeId;
+use crate::ranks::RankBackend;
+use crate::schedule::{Assignment, Schedule};
+use crate::scheduler::{
+    data_available_time, Candidate, ReadyEntry, SchedulerConfig, SchedulerWorkspace,
+    SchedulingContext,
+};
+
+/// Salt folded into the fault-trace seed so fault worlds are decoupled
+/// from the noise worlds sampled from the same sweep seed.
+const FAULT_SALT: u64 = 0xFA17_1E55_C0DE_BA5E;
+
+/// Crash events sampled per node are capped at this many; with sane
+/// hazard rates the cap is never reached, and under adversarial rates it
+/// bounds trace size and engine iterations.
+const MAX_EVENTS_PER_NODE: usize = 32;
+
+/// Per-node hazard model for [`FaultTrace::sample`]. All times are
+/// fractions of the instance's *fault horizon* — the serial upper bound
+/// on any schedule's makespan (total work at the slowest node plus every
+/// transfer over the slowest link) — so one model is meaningful across
+/// instances of very different scales.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Mean time between crashes per node, as a fraction of the fault
+    /// horizon. `<= 0` disables crash sampling entirely.
+    pub mtbf: f64,
+    /// Probability that a crash is permanent (the node never recovers).
+    pub permanent_prob: f64,
+    /// Mean transient-outage duration, as a fraction of the horizon.
+    pub recovery: f64,
+    /// Probability that a node suffers one link-degradation episode.
+    pub degrade_prob: f64,
+    /// Communication-time multiplier during a degradation episode.
+    pub degrade_factor: f64,
+}
+
+impl FaultModel {
+    /// No faults: empty traces, behavior identical to the fault-free
+    /// simulator.
+    pub fn none() -> Self {
+        FaultModel {
+            mtbf: 0.0,
+            permanent_prob: 0.0,
+            recovery: 0.0,
+            degrade_prob: 0.0,
+            degrade_factor: 1.0,
+        }
+    }
+
+    /// Enabled model with the CLI's defaults at the given mean time
+    /// between crashes (fraction of the fault horizon).
+    pub fn with_mtbf(mtbf: f64) -> Self {
+        FaultModel {
+            mtbf,
+            permanent_prob: 0.25,
+            recovery: 0.05,
+            degrade_prob: 0.0,
+            degrade_factor: 2.0,
+        }
+    }
+
+    /// True when sampling from this model always yields an empty trace.
+    pub fn is_none(&self) -> bool {
+        self.mtbf <= 0.0 && self.degrade_prob <= 0.0
+    }
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+/// How killed tasks are retried.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total execution attempts per task, the first included. `1` means
+    /// no retries: the first kill fails the task. Values `< 1` are
+    /// treated as `1`.
+    pub max_attempts: u32,
+    /// Re-release delay after the first kill, in absolute time units of
+    /// the instance.
+    pub backoff: f64,
+    /// Multiplier applied to the delay for each subsequent kill of the
+    /// same task (exponential backoff).
+    pub backoff_factor: f64,
+    /// When true, a task is never retried on a node that killed it.
+    pub surviving_only: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff: 0.0, backoff_factor: 2.0, surviving_only: true }
+    }
+}
+
+impl RetryPolicy {
+    /// Attempt budget with the `< 1` guard applied.
+    fn attempts(&self) -> u32 {
+        self.max_attempts.max(1)
+    }
+
+    /// Re-release delay after the `k`-th kill (1-based).
+    fn delay(&self, kill: u32) -> f64 {
+        if self.backoff <= 0.0 {
+            return 0.0;
+        }
+        self.backoff * self.backoff_factor.max(0.0).powi(kill.saturating_sub(1) as i32)
+    }
+}
+
+/// One node crash in a realized fault world.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeCrash {
+    /// The node that fails.
+    pub node: NodeId,
+    /// Crash time.
+    pub at: f64,
+    /// Recovery time for a transient outage; `None` = permanent crash.
+    pub until: Option<f64>,
+}
+
+/// One link-degradation episode: transfers touching `node` that depart
+/// within `[from, until)` take `factor ×` their nominal time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkDegrade {
+    /// The node whose links degrade.
+    pub node: NodeId,
+    /// Episode start.
+    pub from: f64,
+    /// Episode end.
+    pub until: f64,
+    /// Communication-time multiplier (≥ 1 in sampled traces).
+    pub factor: f64,
+}
+
+/// One realized fault world: the crash schedule and link-degradation
+/// episodes every scheduler on this (instance, seed) will face.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultTrace {
+    /// Crashes, sorted by `(at, node)`.
+    pub crashes: Vec<NodeCrash>,
+    /// Link-degradation episodes, sorted by node.
+    pub degrades: Vec<LinkDegrade>,
+}
+
+impl FaultTrace {
+    /// The empty world: no crashes, no degradation.
+    pub fn none() -> Self {
+        FaultTrace::default()
+    }
+
+    /// True when replaying through this trace is the plain fault-free
+    /// replay.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.degrades.is_empty()
+    }
+
+    /// Sample the fault world for `(inst, model, seed)`. Deterministic:
+    /// the same triple always yields a bit-identical trace, and the
+    /// draw depends on the *nominal* instance only — never on a
+    /// scheduler or a noise trace — so sweeps can share one world
+    /// across all 72 configs.
+    pub fn sample(inst: &ProblemInstance, model: &FaultModel, seed: u64) -> FaultTrace {
+        if model.is_none() {
+            return FaultTrace::none();
+        }
+        let horizon = fault_horizon(inst);
+        if horizon <= 0.0 {
+            return FaultTrace::none();
+        }
+        let mut rng = Rng::seeded(seed ^ FAULT_SALT);
+        let mut trace = FaultTrace::none();
+        let mean_outage = (model.recovery * horizon).max(0.0);
+        for node in 0..inst.network.len() {
+            if model.mtbf > 0.0 {
+                let mtbf = model.mtbf * horizon;
+                let mut t = exp_sample(&mut rng, mtbf);
+                let mut events = 0;
+                while t < horizon && events < MAX_EVENTS_PER_NODE {
+                    events += 1;
+                    if rng.uniform() < model.permanent_prob {
+                        trace.crashes.push(NodeCrash { node, at: t, until: None });
+                        break;
+                    }
+                    let outage = exp_sample(&mut rng, mean_outage);
+                    trace.crashes.push(NodeCrash { node, at: t, until: Some(t + outage) });
+                    t += outage + exp_sample(&mut rng, mtbf);
+                }
+            }
+            if model.degrade_prob > 0.0 && rng.uniform() < model.degrade_prob {
+                let from = rng.uniform_in(0.0, horizon);
+                let until = from + exp_sample(&mut rng, mean_outage.max(0.05 * horizon));
+                trace.degrades.push(LinkDegrade {
+                    node,
+                    from,
+                    until,
+                    factor: model.degrade_factor.max(1.0),
+                });
+            }
+        }
+        trace
+            .crashes
+            .sort_by(|a, b| a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)));
+        trace
+    }
+}
+
+/// Draw from Exp(mean); 0 when the mean is non-positive.
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    -mean * (1.0 - rng.uniform()).ln()
+}
+
+/// Serial upper bound on any schedule's makespan: all work on the
+/// slowest node plus every transfer over the slowest link. Scheduler
+/// independent, so hazard rates expressed against it are comparable
+/// across the whole sweep.
+pub fn fault_horizon(inst: &ProblemInstance) -> f64 {
+    let net = &inst.network;
+    let m = net.len();
+    let mut worst_exec_unit = 0.0f64;
+    for v in 0..m {
+        worst_exec_unit = worst_exec_unit.max(net.exec_time(1.0, v));
+    }
+    let mut worst_comm_unit = 0.0f64;
+    for v in 0..m {
+        for w in 0..m {
+            if v != w {
+                worst_comm_unit = worst_comm_unit.max(net.comm_time(1.0, v, w));
+            }
+        }
+    }
+    let g = &inst.graph;
+    let total_cost: f64 = (0..g.len()).map(|t| g.cost(t)).sum();
+    let total_data: f64 = (0..g.len())
+        .map(|t| g.successors(t).iter().map(|&(_, d)| d).sum::<f64>())
+        .sum();
+    total_cost * worst_exec_unit + total_data * worst_comm_unit
+}
+
+/// What one faulty execution did, beyond the realized schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultReplay {
+    /// Realized schedule: every *successful* attempt. Partial when the
+    /// run did not complete.
+    pub schedule: Schedule,
+    /// True when every task ran to completion.
+    pub completed: bool,
+    /// Execution attempts per task (kills plus the successful run; 0
+    /// for a task that never got to start).
+    pub attempts: Vec<u32>,
+    /// Tasks that did not finish: retries exhausted, no surviving
+    /// candidate node, or stranded behind a failed predecessor.
+    pub tasks_failed: usize,
+    /// Time spent on killed attempts (work thrown away by crashes).
+    pub work_lost: f64,
+    /// Time spent on successful attempts.
+    pub work_done: f64,
+    /// Crash events that fired before the run ended.
+    pub crashes: usize,
+    /// Failure-aware replans performed (one per crash or recovery).
+    pub replans: usize,
+}
+
+/// Execute `plan` through the fault world in `trace`, with retries
+/// governed by `retry`. Convenience wrapper building a private context
+/// and workspace; sweeps use [`replay_faulty_into`].
+///
+/// Errors on malformed inputs (a trace naming a node the network does
+/// not have, a plan whose node order contradicts the DAG) — never
+/// panics. A plan with unscheduled tasks is tolerated: those tasks are
+/// reported as failed in the outcome.
+pub fn replay_faulty(
+    inst: &ProblemInstance,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    trace: &FaultTrace,
+    retry: &RetryPolicy,
+) -> Result<FaultReplay, String> {
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    let mut ws = SchedulerWorkspace::new();
+    replay_faulty_into(&ctx, eff, plan, cfg, trace, retry, &mut ws)
+}
+
+/// [`replay_faulty`] against a shared [`SchedulingContext`] and a
+/// reusable [`SchedulerWorkspace`] — the sweep-facing entry point. The
+/// controller's replans reuse the context's nominal priorities and
+/// critical-path pins, and every intermediate schedule cycles through
+/// the workspace pool.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_faulty_into(
+    ctx: &SchedulingContext<'_>,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    trace: &FaultTrace,
+    retry: &RetryPolicy,
+    ws: &mut SchedulerWorkspace,
+) -> Result<FaultReplay, String> {
+    let inst = ctx.instance();
+    let g = &eff.graph;
+    let net = &eff.network;
+    let n = g.len();
+    let m = net.len();
+
+    // Per-node degradation episodes (at most one sampled per node).
+    let mut degrade: Vec<Option<(f64, f64, f64)>> = vec![None; m];
+    for d in &trace.degrades {
+        if d.node < m {
+            degrade[d.node] = Some((d.from, d.until, d.factor));
+        }
+    }
+
+    // Fault events through the same deterministic (time, id) queue as
+    // the replayer: crashes in trace order, each transient outage
+    // scheduling its recovery.
+    let mut faults = EventQueue::new();
+    for c in &trace.crashes {
+        if c.node >= m {
+            return Err(format!(
+                "fault trace names node {} but the network has {m} nodes",
+                c.node
+            ));
+        }
+        faults.push(c.at, EventKind::NodeCrashed { node: c.node, permanent: c.until.is_none() });
+        if let Some(until) = c.until {
+            faults.push(until, EventKind::NodeRecovered { node: c.node });
+        }
+    }
+
+    let mut alive = vec![true; m];
+    let mut dead_forever = vec![false; m];
+    let mut committed = vec![false; n];
+    let mut failed = vec![false; n];
+    let mut kills = vec![0u32; n];
+    let mut release = vec![0.0f64; n];
+    let mut edge_floor: HashMap<(TaskId, TaskId), f64> = HashMap::new();
+    // Nodes each task may no longer run on (RetryPolicy::surviving_only).
+    let mut banned: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    let mut work_lost = 0.0f64;
+    let mut crashes = 0usize;
+    let mut replans = 0usize;
+
+    let mut current = plan.clone();
+    let mut pins: Option<Vec<Option<NodeId>>> = None;
+
+    loop {
+        let world = SegmentWorld { partial: true, edge_floor: &edge_floor, degrade: &degrade };
+        let target = ws.take_schedule(n, m);
+        let actual = replay_segment_into(eff, &current, Some(&release), Some(&world), target)?;
+
+        let Some(ev) = faults.pop() else {
+            return Ok(finalize(actual, n, &kills, work_lost, crashes, replans));
+        };
+        // Everything that will ever run has finished by the event time ⇒
+        // no task can be killed, no transfer is in flight, and — since
+        // failed tasks never resurrect — later events cannot change the
+        // outcome. (Deferred tasks waiting out an outage keep the loop
+        // alive: they are neither placed nor failed.)
+        let resolved = actual.len() + failed.iter().filter(|&&f| f).count();
+        if resolved == n && actual.makespan() <= ev.time {
+            return Ok(finalize(actual, n, &kills, work_lost, crashes, replans));
+        }
+        let now = ev.time;
+
+        match ev.kind {
+            EventKind::NodeCrashed { node, permanent } => {
+                crashes += 1;
+                alive[node] = false;
+                if permanent {
+                    dead_forever[node] = true;
+                }
+                for t in 0..n {
+                    if failed[t] {
+                        continue;
+                    }
+                    let Some(a) = actual.assignment(t) else { continue };
+                    if a.end <= now {
+                        committed[t] = true; // finished; output checkpointed
+                    } else if a.start < now {
+                        if a.node == node {
+                            // Killed mid-flight.
+                            committed[t] = false;
+                            kills[t] += 1;
+                            work_lost += now - a.start;
+                            if kills[t] >= retry.attempts() {
+                                failed[t] = true;
+                            } else {
+                                release[t] = release[t].max(now + retry.delay(kills[t]));
+                                if retry.surviving_only && !banned[t].contains(&node) {
+                                    banned[t].push(node);
+                                }
+                            }
+                        } else {
+                            committed[t] = true; // running elsewhere, unaffected
+                        }
+                    }
+                    // Not yet started: stays uncommitted, replanned below.
+                }
+                // Transfers in flight *from* the dead node restart from
+                // the producer's checkpointed output at the crash moment.
+                for p in 0..n {
+                    if !committed[p] {
+                        continue;
+                    }
+                    let Some(pa) = actual.assignment(p) else { continue };
+                    if pa.node != node || pa.end > now {
+                        continue;
+                    }
+                    for &(s, data) in g.successors(p) {
+                        if committed[s] || failed[s] {
+                            continue;
+                        }
+                        let Some(sa) = actual.assignment(s) else { continue };
+                        let mut dep = pa.end;
+                        if let Some(&fl) = edge_floor.get(&(p, s)) {
+                            dep = dep.max(fl);
+                        }
+                        let comm = world.comm_time(net, data, pa.node, sa.node, dep);
+                        if dep + comm > now {
+                            let slot = edge_floor.entry((p, s)).or_insert(now);
+                            *slot = slot.max(now);
+                        }
+                    }
+                }
+            }
+            EventKind::NodeRecovered { node } => {
+                if !dead_forever[node] {
+                    alive[node] = true;
+                }
+            }
+            // The fault queue is only ever fed node events above.
+            _ => return Err("task event in the fault queue".to_string()),
+        }
+
+        // Failure-aware replan of the uncommitted frontier at `now`.
+        for t in 0..n {
+            if !committed[t] && !failed[t] {
+                release[t] = release[t].max(now);
+            }
+        }
+        let prio = ctx.priorities(cfg.priority);
+        let pinned = pins.get_or_insert_with(|| {
+            if cfg.critical_path {
+                ctx.cp_pinned().to_vec()
+            } else {
+                vec![None; n]
+            }
+        });
+        let next = fault_replan(FaultReplanInputs {
+            inst,
+            committed: &committed,
+            failed: &mut failed,
+            actual: &actual,
+            now,
+            cfg,
+            prio,
+            pinned,
+            alive: &alive,
+            dead_forever: &dead_forever,
+            banned: &banned,
+            release: &release,
+            ws,
+        })?;
+        ws.recycle(std::mem::replace(&mut current, next));
+        ws.recycle(actual);
+        replans += 1;
+    }
+}
+
+/// Build the final [`FaultReplay`] from the last segment replay.
+fn finalize(
+    actual: Schedule,
+    n: usize,
+    kills: &[u32],
+    work_lost: f64,
+    crashes: usize,
+    replans: usize,
+) -> FaultReplay {
+    let mut attempts = vec![0u32; n];
+    let mut tasks_failed = 0usize;
+    let mut work_done = 0.0f64;
+    for (t, slot) in attempts.iter_mut().enumerate() {
+        match actual.assignment(t) {
+            Some(a) => {
+                *slot = kills[t] + 1;
+                work_done += a.end - a.start;
+            }
+            None => {
+                *slot = kills[t];
+                tasks_failed += 1;
+            }
+        }
+    }
+    FaultReplay {
+        schedule: actual,
+        completed: tasks_failed == 0,
+        attempts,
+        tasks_failed,
+        work_lost,
+        work_done,
+        crashes,
+        replans,
+    }
+}
+
+/// Everything [`fault_replan`] reads; bundled so the borrow of `failed`
+/// (the one mutable piece) stays explicit.
+struct FaultReplanInputs<'a, 'b> {
+    inst: &'a ProblemInstance,
+    committed: &'a [bool],
+    failed: &'a mut Vec<bool>,
+    actual: &'a Schedule,
+    now: f64,
+    cfg: &'a SchedulerConfig,
+    prio: &'a [f64],
+    pinned: &'a [Option<NodeId>],
+    alive: &'a [bool],
+    dead_forever: &'a [bool],
+    banned: &'a [Vec<NodeId>],
+    release: &'a [f64],
+    ws: &'b mut SchedulerWorkspace,
+}
+
+/// The failure-aware variant of the online replanner: committed tasks
+/// keep their realized times, the rest are list-scheduled over the
+/// *surviving* candidate set (dead nodes and per-task banned nodes are
+/// masked out) with starts clamped to `max(now, release)`.
+///
+/// A ready task with no usable node right now is **deferred** (left
+/// unplaced, retried at the next replan) while some node it may use is
+/// only transiently down; it is marked **failed** once every node it
+/// could ever use is permanently dead or banned. Descendants of failed
+/// tasks never become ready and strand, which the caller reports as an
+/// incomplete outcome.
+fn fault_replan(input: FaultReplanInputs<'_, '_>) -> Result<Schedule, String> {
+    let FaultReplanInputs {
+        inst,
+        committed,
+        failed,
+        actual,
+        now,
+        cfg,
+        prio,
+        pinned,
+        alive,
+        dead_forever,
+        banned,
+        release,
+        ws,
+    } = input;
+    let g = &inst.graph;
+    let net = &inst.network;
+    let n = g.len();
+    let mut plan = ws.take_schedule(n, net.len());
+    for t in 0..n {
+        if committed[t] {
+            let a = actual.assignment(t).ok_or_else(|| {
+                format!("fault replan: committed task {t} has no realized assignment")
+            })?;
+            plan.insert(a);
+        }
+    }
+
+    ws.begin_queue(n);
+    let SchedulerWorkspace { missing, ready, .. } = ws;
+    missing.extend((0..n).map(|t| {
+        if committed[t] {
+            0
+        } else {
+            g.predecessors(t).iter().filter(|&&(p, _)| !committed[p]).count()
+        }
+    }));
+    ready.extend(
+        (0..n)
+            .filter(|&t| !committed[t] && !failed[t] && missing[t] == 0)
+            .map(|t| ReadyEntry(prio[t], Reverse(t))),
+    );
+
+    while let Some(ReadyEntry(_, Reverse(t))) = ready.pop() {
+        let usable = |u: NodeId| alive[u] && !banned[t].contains(&u);
+        let candidate = |u: NodeId| -> Candidate {
+            let dat = data_available_time(inst, &plan, t, u);
+            let start = dat.max(plan.node_finish_time(u)).max(now).max(release[t]);
+            Candidate { node: u, start, end: start + net.exec_time(g.cost(t), u) }
+        };
+        // A critical-path pin is honored only while its node survives.
+        let pin = pinned[t].filter(|&u| usable(u));
+        let best = match pin {
+            Some(u) => Some(candidate(u)),
+            None => {
+                let mut best: Option<Candidate> = None;
+                for u in (0..net.len()).filter(|&u| usable(u)) {
+                    let c = candidate(u);
+                    if best.as_ref().map_or(true, |b| cfg.compare.eval(&c, b) < 0.0) {
+                        best = Some(c);
+                    }
+                }
+                best
+            }
+        };
+        let Some(best) = best else {
+            // No node can take this task right now. If one of its
+            // permissible nodes is only transiently down, defer: the
+            // recovery event triggers another replan that will place it.
+            // Otherwise every option is permanently gone — fail.
+            let recoverable =
+                (0..net.len()).any(|u| !dead_forever[u] && !banned[t].contains(&u));
+            if !recoverable {
+                failed[t] = true;
+            }
+            continue;
+        };
+        plan.insert(Assignment { task: t, node: best.node, start: best.start, end: best.end });
+        for &(s, _) in g.successors(t) {
+            if committed[s] {
+                continue;
+            }
+            missing[s] -= 1;
+            if missing[s] == 0 && !failed[s] {
+                ready.push(ReadyEntry(prio[s], Reverse(s)));
+            }
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{DatasetSpec, Structure};
+    use crate::graph::TaskGraph;
+    use crate::network::Network;
+    use crate::sim::replay::replay_static;
+
+    fn inst() -> ProblemInstance {
+        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::OutTrees, 1.0) };
+        spec.generate().pop().unwrap()
+    }
+
+    /// Six unit tasks in a chain on a 2-node homogeneous network, with
+    /// a hand-built serial plan on node 0 — failure behavior is exactly
+    /// predictable.
+    fn chain_on_two_nodes() -> (ProblemInstance, Schedule) {
+        let mut g = TaskGraph::new();
+        for i in 0..6 {
+            g.add_task(format!("t{i}"), 1.0);
+        }
+        for i in 0..5 {
+            g.add_edge(i, i + 1, 0.0);
+        }
+        let inst = ProblemInstance::new("chain", g, Network::homogeneous(2, 1.0));
+        let mut plan = Schedule::new(6, 2);
+        for t in 0..6 {
+            plan.insert(Assignment { task: t, node: 0, start: t as f64, end: t as f64 + 1.0 });
+        }
+        (inst, plan)
+    }
+
+    #[test]
+    fn zero_model_samples_empty_trace() {
+        let inst = inst();
+        let trace = FaultTrace::sample(&inst, &FaultModel::none(), 7);
+        assert!(trace.is_empty());
+        assert!(FaultModel::none().is_none());
+        assert!(!FaultModel::with_mtbf(1.0).is_none());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let inst = inst();
+        let model = FaultModel { degrade_prob: 0.5, ..FaultModel::with_mtbf(0.3) };
+        let a = FaultTrace::sample(&inst, &model, 42);
+        let b = FaultTrace::sample(&inst, &model, 42);
+        assert_eq!(a, b, "same (inst, model, seed) must yield identical traces");
+        let c = FaultTrace::sample(&inst, &model, 43);
+        assert_ne!(a, c, "different seeds should realize different fault worlds");
+        assert!(!a.is_empty(), "mtbf 0.3 on this instance should crash something");
+    }
+
+    #[test]
+    fn sampled_crashes_are_sorted_and_within_horizon() {
+        let inst = inst();
+        let model = FaultModel::with_mtbf(0.2);
+        let trace = FaultTrace::sample(&inst, &model, 11);
+        let horizon = fault_horizon(&inst);
+        assert!(horizon > 0.0);
+        for pair in trace.crashes.windows(2) {
+            assert!(pair[0].at <= pair[1].at, "crashes must be time-sorted");
+        }
+        for c in &trace.crashes {
+            assert!(c.at >= 0.0 && c.at < horizon, "crash at {} outside [0, {horizon})", c.at);
+            if let Some(until) = c.until {
+                assert!(until >= c.at, "recovery before crash");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_trace_replay_is_bit_identical_to_static_replay() {
+        let inst = inst();
+        for cfg in [
+            SchedulerConfig::heft(),
+            SchedulerConfig::cpop(),
+            SchedulerConfig::sufferage_classic(),
+        ] {
+            let plan = cfg.build().schedule(&inst);
+            let fr = replay_faulty(
+                &inst,
+                &inst,
+                &plan,
+                &cfg,
+                &FaultTrace::none(),
+                &RetryPolicy::default(),
+            )
+            .unwrap();
+            let st = replay_static(&inst, &plan).unwrap();
+            assert_eq!(fr.schedule, st, "{}: empty fault trace drifted", cfg.name());
+            assert!(fr.completed);
+            assert_eq!(fr.tasks_failed, 0);
+            assert_eq!(fr.crashes, 0);
+            assert_eq!(fr.work_lost, 0.0);
+            assert!(fr.attempts.iter().all(|&a| a == 1));
+        }
+    }
+
+    #[test]
+    fn crash_kills_running_task_and_retries_on_survivor() {
+        let (inst, plan) = chain_on_two_nodes();
+        // Node 0 dies permanently at t=2.5: t0,t1 finished (committed),
+        // t2 killed half-way, t3..t5 not started.
+        let trace = FaultTrace {
+            crashes: vec![NodeCrash { node: 0, at: 2.5, until: None }],
+            degrades: vec![],
+        };
+        let cfg = SchedulerConfig::heft();
+        let fr =
+            replay_faulty(&inst, &inst, &plan, &cfg, &trace, &RetryPolicy::default()).unwrap();
+        assert!(fr.completed, "retries enabled: the chain must finish on node 1");
+        assert_eq!(fr.crashes, 1);
+        assert_eq!(fr.replans, 1);
+        assert!((fr.work_lost - 0.5).abs() < 1e-9, "t2 lost 0.5 units: {}", fr.work_lost);
+        assert_eq!(fr.attempts, vec![1, 1, 2, 1, 1, 1]);
+        // Everything uncommitted ran on the surviving node, after the crash.
+        for t in 2..6 {
+            let a = fr.schedule.assignment(t).unwrap();
+            assert_eq!(a.node, 1, "t{t} must move off the dead node");
+            assert!(a.start >= 2.5 - 1e-9, "t{t} started before the replan moment");
+        }
+        // t2 retried at 2.5 and runs 1 unit; chain finishes at 6.5.
+        assert!((fr.schedule.makespan() - 6.5).abs() < 1e-9, "{}", fr.schedule.makespan());
+    }
+
+    #[test]
+    fn retry_exhaustion_is_a_clean_incomplete_outcome() {
+        let (inst, plan) = chain_on_two_nodes();
+        let trace = FaultTrace {
+            crashes: vec![NodeCrash { node: 0, at: 2.5, until: None }],
+            degrades: vec![],
+        };
+        let retry = RetryPolicy { max_attempts: 1, ..RetryPolicy::default() };
+        let cfg = SchedulerConfig::heft();
+        let fr = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &retry).unwrap();
+        assert!(!fr.completed, "max_attempts 1 ⇒ the killed task fails");
+        assert_eq!(fr.tasks_failed, 4, "t2 failed, t3..t5 stranded");
+        assert_eq!(fr.attempts, vec![1, 1, 1, 0, 0, 0]);
+        assert!(fr.schedule.assignment(2).is_none());
+        assert!(fr.schedule.assignment(1).is_some());
+    }
+
+    #[test]
+    fn all_nodes_dead_is_a_clean_incomplete_outcome() {
+        let (inst, plan) = chain_on_two_nodes();
+        let trace = FaultTrace {
+            crashes: vec![
+                NodeCrash { node: 0, at: 0.25, until: None },
+                NodeCrash { node: 1, at: 0.5, until: None },
+            ],
+            degrades: vec![],
+        };
+        let cfg = SchedulerConfig::heft();
+        let fr =
+            replay_faulty(&inst, &inst, &plan, &cfg, &trace, &RetryPolicy::default()).unwrap();
+        assert!(!fr.completed);
+        assert!(fr.tasks_failed >= 5, "almost everything fails: {}", fr.tasks_failed);
+        assert_eq!(fr.crashes, 2);
+    }
+
+    #[test]
+    fn transient_outage_recovers_and_node_is_reused() {
+        let (inst, plan) = chain_on_two_nodes();
+        // Node 1 (the only alternative) dies permanently at t=0; node 0
+        // suffers a transient outage [2.5, 3.0) killing t2. With
+        // surviving-only retry off, t2 must wait for node 0 to recover.
+        let trace = FaultTrace {
+            crashes: vec![
+                NodeCrash { node: 1, at: 0.0, until: None },
+                NodeCrash { node: 0, at: 2.5, until: Some(3.0) },
+            ],
+            degrades: vec![],
+        };
+        let retry = RetryPolicy { surviving_only: false, ..RetryPolicy::default() };
+        let cfg = SchedulerConfig::heft();
+        let fr = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &retry).unwrap();
+        assert!(fr.completed, "node 0 recovers; the chain finishes there");
+        let a2 = fr.schedule.assignment(2).unwrap();
+        assert_eq!(a2.node, 0);
+        assert!(a2.start >= 3.0 - 1e-9, "t2 must wait out the outage, started {}", a2.start);
+        assert!((fr.schedule.makespan() - 7.0).abs() < 1e-9, "{}", fr.schedule.makespan());
+    }
+
+    #[test]
+    fn surviving_only_bans_the_killing_node() {
+        let (inst, plan) = chain_on_two_nodes();
+        // Transient outage on node 0 kills t2; surviving-only retry must
+        // move t2 to node 1 even though node 0 recovers immediately.
+        let trace = FaultTrace {
+            crashes: vec![NodeCrash { node: 0, at: 2.5, until: Some(2.6) }],
+            degrades: vec![],
+        };
+        let retry = RetryPolicy { surviving_only: true, ..RetryPolicy::default() };
+        let cfg = SchedulerConfig::heft();
+        let fr = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &retry).unwrap();
+        assert!(fr.completed);
+        assert_eq!(fr.schedule.assignment(2).unwrap().node, 1, "t2 banned from node 0");
+    }
+
+    #[test]
+    fn backoff_delays_the_retry() {
+        let (inst, plan) = chain_on_two_nodes();
+        let trace = FaultTrace {
+            crashes: vec![NodeCrash { node: 0, at: 2.5, until: None }],
+            degrades: vec![],
+        };
+        let retry = RetryPolicy { backoff: 1.0, ..RetryPolicy::default() };
+        let cfg = SchedulerConfig::heft();
+        let fr = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &retry).unwrap();
+        assert!(fr.completed);
+        let a2 = fr.schedule.assignment(2).unwrap();
+        assert!(a2.start >= 3.5 - 1e-9, "kill at 2.5 + backoff 1.0: got {}", a2.start);
+    }
+
+    #[test]
+    fn link_degradation_stretches_transfers() {
+        // Two tasks on different nodes with a real transfer between
+        // them; a degradation episode on the producer's node doubles it.
+        let mut g = TaskGraph::new();
+        g.add_task("a", 1.0);
+        g.add_task("b", 1.0);
+        g.add_edge(0, 1, 1.0);
+        let inst = ProblemInstance::new("pair", g, Network::homogeneous(2, 1.0));
+        let mut plan = Schedule::new(2, 2);
+        plan.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+        plan.insert(Assignment { task: 1, node: 1, start: 2.0, end: 3.0 });
+        let clean = replay_static(&inst, &plan).unwrap();
+        let trace = FaultTrace {
+            crashes: vec![],
+            degrades: vec![LinkDegrade { node: 0, from: 0.5, until: 1.5, factor: 2.0 }],
+        };
+        let cfg = SchedulerConfig::heft();
+        let fr =
+            replay_faulty(&inst, &inst, &plan, &cfg, &trace, &RetryPolicy::default()).unwrap();
+        assert!(fr.completed);
+        assert_eq!(fr.crashes, 0);
+        let slow = fr.schedule.assignment(1).unwrap().start;
+        let fast = clean.assignment(1).unwrap().start;
+        assert!(
+            slow > fast + 1e-9,
+            "degraded transfer must delay the consumer: {slow} vs {fast}"
+        );
+    }
+
+    #[test]
+    fn faulty_replay_is_deterministic() {
+        let inst = inst();
+        let model = FaultModel::with_mtbf(0.3);
+        let trace = FaultTrace::sample(&inst, &model, 9);
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let a = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &RetryPolicy::default())
+            .unwrap();
+        let b = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &RetryPolicy::default())
+            .unwrap();
+        assert_eq!(a, b, "same trace must replay identically");
+    }
+
+    #[test]
+    fn completed_faulty_runs_validate_against_the_instance() {
+        let inst = inst();
+        let model = FaultModel { permanent_prob: 0.0, ..FaultModel::with_mtbf(0.5) };
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        for seed in 0..6u64 {
+            let trace = FaultTrace::sample(&inst, &model, seed);
+            let retry = RetryPolicy { max_attempts: 20, ..RetryPolicy::default() };
+            let fr = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &retry).unwrap();
+            if fr.completed {
+                fr.schedule
+                    .validate(&inst)
+                    .unwrap_or_else(|e| panic!("seed {seed}: realized schedule invalid: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn incomplete_plan_is_an_error_not_a_panic() {
+        let (inst, _) = chain_on_two_nodes();
+        let partial = Schedule::new(6, 2); // nothing scheduled
+        // Fault-free entries require completeness and must Err cleanly.
+        let err = replay_static(&inst, &partial).unwrap_err();
+        assert!(err.contains("unscheduled"), "{err}");
+        let cfg = SchedulerConfig::heft();
+        let err = crate::sim::replay_reschedule(&inst, &inst, &partial, &cfg, 0.1).unwrap_err();
+        assert!(err.contains("unscheduled"), "{err}");
+    }
+
+    #[test]
+    fn fault_horizon_is_zero_only_for_empty_graphs() {
+        let empty = ProblemInstance::new(
+            "e",
+            TaskGraph::new(),
+            Network::homogeneous(2, 1.0),
+        );
+        assert_eq!(fault_horizon(&empty), 0.0);
+        assert!(FaultTrace::sample(&empty, &FaultModel::with_mtbf(0.1), 3).is_empty());
+        assert!(fault_horizon(&inst()) > 0.0);
+    }
+}

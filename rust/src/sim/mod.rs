@@ -37,11 +37,26 @@
 //! schedule is kept — it models a replanning controller that can fall
 //! back to the incumbent plan, so rescheduling never degrades the
 //! realized makespan.
+//!
+//! On top of noise, the [`fault`] module breaks machines: a seeded
+//! [`FaultTrace`] of node crashes (permanent or transient) and
+//! link-degradation episodes, bounded task retries under a
+//! [`RetryPolicy`], and failure-aware replanning that masks dead nodes
+//! out of every candidate set. A faulted run can *fail to complete*;
+//! that is reported as data ([`SimOutcome::completed`],
+//! [`SimOutcome::faults`]), never as a panic — which is why the whole
+//! simulate chain now returns `Result` instead of aborting on malformed
+//! plans.
 
 pub mod event;
+pub mod fault;
 pub mod perturb;
 pub mod replay;
 
+pub use fault::{
+    fault_horizon, replay_faulty, FaultModel, FaultReplay, FaultTrace, LinkDegrade,
+    NodeCrash, RetryPolicy,
+};
 pub use perturb::{perturbed_instance, NoiseTrace, Perturbation};
 pub use replay::{
     replay_reschedule, replay_reschedule_into, replay_reschedule_with, replay_static,
@@ -67,15 +82,23 @@ pub enum ReplayPolicy {
     },
 }
 
-/// One simulation request: a noise model, a seed, and a replay policy.
+/// One simulation request: a noise model, a seed, a replay policy, and
+/// (optionally) a fault world.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimOptions {
     /// Noise model applied to task durations and transfers.
     pub perturb: Perturbation,
-    /// Seed of the per-run noise trace.
+    /// Seed of the per-run noise and fault traces.
     pub seed: u64,
     /// Static replay or online rescheduling.
     pub policy: ReplayPolicy,
+    /// Hazard model for injected node crashes and link degradation.
+    /// [`FaultModel::none`] (the default) disables fault injection
+    /// entirely, leaving the simulator bit-identical to its fault-free
+    /// behavior.
+    pub faults: FaultModel,
+    /// How tasks killed by a crash are retried.
+    pub retry: RetryPolicy,
 }
 
 impl Default for SimOptions {
@@ -84,23 +107,50 @@ impl Default for SimOptions {
             perturb: Perturbation::none(),
             seed: 0x51D_E5EED,
             policy: ReplayPolicy::Static,
+            faults: FaultModel::none(),
+            retry: RetryPolicy::default(),
         }
     }
+}
+
+/// Fault accounting for one simulated execution (present only when
+/// fault injection was enabled).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSummary {
+    /// Execution attempts per task (kills plus the successful run; 0
+    /// for a task that never got to start).
+    pub attempts: Vec<u32>,
+    /// Tasks that did not finish (retries exhausted or stranded).
+    pub tasks_failed: usize,
+    /// Time spent on attempts a crash threw away.
+    pub work_lost: f64,
+    /// Time spent on successful attempts.
+    pub work_done: f64,
+    /// Crash events that fired during the run.
+    pub crashes: usize,
 }
 
 /// The realized execution of one plan under one noise trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimOutcome {
     /// The realized schedule (valid against the effective instance).
+    /// Partial when `completed` is false.
     pub schedule: Schedule,
     /// Realized makespan (`schedule.makespan()`).
     pub makespan: f64,
     /// The plan's own (static) makespan, for robustness ratios.
     pub planned_makespan: f64,
-    /// Replans performed (0 under [`ReplayPolicy::Static`]).
+    /// Replans performed (0 under [`ReplayPolicy::Static`] with no
+    /// faults; failure-aware replans otherwise).
     pub replans: usize,
     /// True when rescheduling was requested but the static replay won.
     pub fell_back: bool,
+    /// True when every task ran to completion. Can be false only under
+    /// fault injection — an incomplete execution is a reported outcome,
+    /// not an error.
+    pub completed: bool,
+    /// Fault accounting; `None` when fault injection was disabled.
+    pub faults: Option<FaultSummary>,
 }
 
 impl SimOutcome {
@@ -116,21 +166,28 @@ impl SimOutcome {
 }
 
 /// Simulate the execution of `plan` (produced by `cfg` on `inst`) under
-/// the given noise model and replay policy.
+/// the given noise model, fault model, and replay policy.
 ///
-/// The noise trace depends only on `(inst, opts.perturb, opts.seed)` —
-/// every scheduler evaluated on the same instance and seed faces the
-/// identical realized world, which is what makes robustness ratios
-/// comparable across the 72 configs.
+/// The noise and fault traces depend only on `(inst, model, opts.seed)`
+/// — every scheduler evaluated on the same instance and seed faces the
+/// identical realized world, which is what makes robustness ratios and
+/// fault survival rates comparable across the 72 configs.
+///
+/// Errors on malformed plans (incomplete, or node orders contradicting
+/// the DAG); incomplete *executions* under faults are a successful
+/// return with [`SimOutcome::completed`] false.
 pub fn simulate(
     inst: &ProblemInstance,
     plan: &Schedule,
     cfg: &SchedulerConfig,
     opts: &SimOptions,
-) -> SimOutcome {
+) -> Result<SimOutcome, String> {
     let trace = NoiseTrace::sample(inst, &opts.perturb, opts.seed);
     let eff = perturbed_instance(inst, &trace);
-    simulate_against(inst, &eff, plan, cfg, opts.policy)
+    let faults = FaultTrace::sample(inst, &opts.faults, opts.seed);
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    let mut ws = SchedulerWorkspace::new();
+    simulate_faulty_into(&ctx, &eff, plan, cfg, opts.policy, &faults, &opts.retry, &mut ws)
 }
 
 /// The policy core of [`simulate`], against a pre-built effective
@@ -146,7 +203,7 @@ pub fn simulate_against(
     plan: &Schedule,
     cfg: &SchedulerConfig,
     policy: ReplayPolicy,
-) -> SimOutcome {
+) -> Result<SimOutcome, String> {
     let ctx = SchedulingContext::new(inst, RankBackend::Native);
     simulate_against_ctx(&ctx, eff, plan, cfg, policy)
 }
@@ -170,7 +227,7 @@ pub fn simulate_against_ctx(
     plan: &Schedule,
     cfg: &SchedulerConfig,
     policy: ReplayPolicy,
-) -> SimOutcome {
+) -> Result<SimOutcome, String> {
     let mut ws = SchedulerWorkspace::new();
     simulate_into(ctx, eff, plan, cfg, policy, &mut ws)
 }
@@ -189,15 +246,15 @@ pub fn simulate_into(
     cfg: &SchedulerConfig,
     policy: ReplayPolicy,
     ws: &mut SchedulerWorkspace,
-) -> SimOutcome {
+) -> Result<SimOutcome, String> {
     let planned_makespan = plan.makespan();
     let target = ws.take_schedule(eff.graph.len(), eff.network.len());
-    let static_sched = replay::replay_static_into(eff, plan, target);
+    let static_sched = replay::replay_static_into(eff, plan, target)?;
     let (schedule, replans, fell_back) = match policy {
         ReplayPolicy::Static => (static_sched, 0, false),
         ReplayPolicy::Reschedule { slack } => {
             let (resched, replans) =
-                replay::replay_reschedule_into(ctx, eff, plan, cfg, slack, ws);
+                replay::replay_reschedule_into(ctx, eff, plan, cfg, slack, ws)?;
             if resched.makespan() <= static_sched.makespan() {
                 ws.recycle(static_sched);
                 (resched, replans, false)
@@ -208,7 +265,60 @@ pub fn simulate_into(
         }
     };
     let makespan = schedule.makespan();
-    SimOutcome { schedule, makespan, planned_makespan, replans, fell_back }
+    Ok(SimOutcome {
+        schedule,
+        makespan,
+        planned_makespan,
+        replans,
+        fell_back,
+        completed: true,
+        faults: None,
+    })
+}
+
+/// [`simulate_into`] through a fault world: the sweep-facing entry
+/// point that [`crate::benchmark::Harness`] drives.
+///
+/// With an empty `faults` trace this *is* [`simulate_into`] — same code
+/// path, bit-identical outcomes, `faults: None` — so zero-hazard fault
+/// sweeps reproduce the existing replay exactly. With a non-empty trace
+/// the fault controller ([`replay_faulty`]) takes over: crashes force
+/// failure-aware replans regardless of `policy` (a killed task *must*
+/// be re-placed; slack-drift rescheduling is not layered on top), and
+/// the outcome carries a [`FaultSummary`] plus a possibly-partial
+/// schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_faulty_into(
+    ctx: &SchedulingContext<'_>,
+    eff: &ProblemInstance,
+    plan: &Schedule,
+    cfg: &SchedulerConfig,
+    policy: ReplayPolicy,
+    faults: &FaultTrace,
+    retry: &RetryPolicy,
+    ws: &mut SchedulerWorkspace,
+) -> Result<SimOutcome, String> {
+    if faults.is_empty() {
+        return simulate_into(ctx, eff, plan, cfg, policy, ws);
+    }
+    let planned_makespan = plan.makespan();
+    let fr = fault::replay_faulty_into(ctx, eff, plan, cfg, faults, retry, ws)?;
+    let makespan = fr.schedule.makespan();
+    Ok(SimOutcome {
+        schedule: fr.schedule,
+        makespan,
+        planned_makespan,
+        replans: fr.replans,
+        fell_back: false,
+        completed: fr.completed,
+        faults: Some(FaultSummary {
+            attempts: fr.attempts,
+            tasks_failed: fr.tasks_failed,
+            work_lost: fr.work_lost,
+            work_done: fr.work_done,
+            crashes: fr.crashes,
+        }),
+    })
 }
 
 #[cfg(test)]
@@ -226,11 +336,13 @@ mod tests {
         let inst = inst();
         for cfg in [SchedulerConfig::heft(), SchedulerConfig::sufferage_classic()] {
             let plan = cfg.build().schedule(&inst);
-            let out = simulate(&inst, &plan, &cfg, &SimOptions::default());
+            let out = simulate(&inst, &plan, &cfg, &SimOptions::default()).unwrap();
             assert_eq!(out.makespan, plan.makespan());
             assert_eq!(out.schedule, plan);
             assert_eq!(out.robustness_ratio(), 1.0);
             assert_eq!(out.replans, 0);
+            assert!(out.completed);
+            assert!(out.faults.is_none());
         }
     }
 
@@ -242,10 +354,10 @@ mod tests {
         let opts = SimOptions {
             perturb: Perturbation::lognormal(0.3).with_slowdown(0.2, 2.0),
             seed: 42,
-            policy: ReplayPolicy::Static,
+            ..SimOptions::default()
         };
-        let a = simulate(&inst, &plan, &cfg, &opts);
-        let b = simulate(&inst, &plan, &cfg, &opts);
+        let a = simulate(&inst, &plan, &cfg, &opts).unwrap();
+        let b = simulate(&inst, &plan, &cfg, &opts).unwrap();
         assert_eq!(a, b, "same seed must replay identically");
         let trace = NoiseTrace::sample(&inst, &opts.perturb, opts.seed);
         let eff = perturbed_instance(&inst, &trace);
@@ -264,8 +376,9 @@ mod tests {
                     &inst,
                     &plan,
                     &cfg,
-                    &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
-                );
+                    &SimOptions { perturb, seed, ..SimOptions::default() },
+                )
+                .unwrap();
                 let re = simulate(
                     &inst,
                     &plan,
@@ -274,8 +387,10 @@ mod tests {
                         perturb,
                         seed,
                         policy: ReplayPolicy::Reschedule { slack: 0.05 },
+                        ..SimOptions::default()
                     },
-                );
+                )
+                .unwrap();
                 assert!(
                     re.makespan <= st.makespan,
                     "{} seed {seed}: reschedule {} > static {}",
@@ -299,8 +414,9 @@ mod tests {
                     &inst,
                     &plan,
                     &cfg,
-                    &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
+                    &SimOptions { perturb, seed, ..SimOptions::default() },
                 )
+                .unwrap()
                 .makespan
             })
             .collect();
@@ -320,8 +436,37 @@ mod tests {
         );
         let cfg = SchedulerConfig::heft();
         let plan = cfg.build().schedule(&empty);
-        let out = simulate(&empty, &plan, &cfg, &SimOptions::default());
+        let out = simulate(&empty, &plan, &cfg, &SimOptions::default()).unwrap();
         assert_eq!(out.makespan, 0.0);
         assert_eq!(out.robustness_ratio(), 1.0);
+    }
+
+    #[test]
+    fn faulty_simulation_reports_a_summary() {
+        let inst = inst();
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let mut saw_crash = false;
+        for seed in 0..20u64 {
+            let opts = SimOptions {
+                faults: FaultModel::with_mtbf(0.2),
+                seed,
+                ..SimOptions::default()
+            };
+            let a = simulate(&inst, &plan, &cfg, &opts).unwrap();
+            let b = simulate(&inst, &plan, &cfg, &opts).unwrap();
+            assert_eq!(a, b, "seed {seed}: fault simulation must be deterministic");
+            if let Some(s) = &a.faults {
+                assert_eq!(
+                    a.completed,
+                    s.tasks_failed == 0,
+                    "seed {seed}: completion flag must mirror the failed-task count"
+                );
+                saw_crash |= s.crashes > 0;
+            } else {
+                assert!(a.completed, "fault-free runs always complete");
+            }
+        }
+        assert!(saw_crash, "20 seeds at mtbf 0.2 should hit at least one live crash");
     }
 }

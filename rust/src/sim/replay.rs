@@ -25,6 +25,7 @@
 //! fixed-seed test instances do not hit it.)
 
 use std::cmp::Reverse;
+use std::collections::HashMap;
 
 use super::event::{EventKind, EventQueue};
 use crate::graph::TaskId;
@@ -37,6 +38,57 @@ use crate::scheduler::{
     SchedulingContext,
 };
 
+/// Fault-world context for one segment replay: the extras the
+/// fault-injection engine ([`crate::sim::fault`]) threads through the
+/// shared replayer. `None` everywhere in the fault-free paths — the
+/// extra branches never execute, keeping plain replay bit-identical to
+/// its pre-fault behavior.
+pub(crate) struct SegmentWorld<'a> {
+    /// Allow plans that leave tasks unscheduled (failed / deferred /
+    /// stranded tasks simply never run).
+    pub partial: bool,
+    /// Transfer restart floors: `(producer, consumer) → time` before
+    /// which the (re-sent) transfer cannot depart — set when a crash
+    /// catches the transfer in flight.
+    pub edge_floor: &'a HashMap<(TaskId, TaskId), f64>,
+    /// Per-node link-degradation episode `(from, until, factor)`:
+    /// transfers touching the node that depart within the window take
+    /// `factor ×` their nominal time.
+    pub degrade: &'a [Option<(f64, f64, f64)>],
+}
+
+impl SegmentWorld<'_> {
+    /// Communication time for `data` from `src` to `dst` departing at
+    /// `dep`, with any active degradation episode applied.
+    pub(crate) fn comm_time(
+        &self,
+        net: &crate::network::Network,
+        data: f64,
+        src: NodeId,
+        dst: NodeId,
+        dep: f64,
+    ) -> f64 {
+        let base = net.comm_time(data, src, dst);
+        let mut factor = 1.0f64;
+        for node in [src, dst] {
+            if let Some((from, until, f)) = self.degrade[node] {
+                if dep >= from && dep < until {
+                    factor = factor.max(f);
+                }
+            }
+        }
+        if factor > 1.0 {
+            base * factor
+        } else {
+            base
+        }
+    }
+}
+
+/// A task id that never appears in a plan: marks unscheduled tasks in
+/// the replayer's node map when partial plans are allowed.
+const UNPLACED: usize = usize::MAX;
+
 /// Event-driven replay of `plan` on `eff`, keeping the planned
 /// task→node assignment and the planned per-node execution order.
 ///
@@ -46,11 +98,13 @@ use crate::scheduler::{
 /// and take `eff`'s communication time). Durations and transfer times
 /// come from `eff`, so the result always validates against `eff`.
 ///
-/// Panics if `plan` is not a complete schedule for `eff`'s task set, or
+/// Errors if `plan` is not a complete schedule for `eff`'s task set, or
 /// if the plan's node orders contradict the DAG (which would deadlock a
-/// real executor).
-pub fn replay_static(eff: &ProblemInstance, plan: &Schedule) -> Schedule {
-    replay_with_release(eff, plan, None)
+/// real executor). Never panics on malformed plans — an incomplete
+/// execution is a legal simulation outcome, not a process abort.
+pub fn replay_static(eff: &ProblemInstance, plan: &Schedule) -> Result<Schedule, String> {
+    let out = Schedule::new(eff.graph.len(), eff.network.len());
+    replay_segment_into(eff, plan, None, None, out)
 }
 
 /// [`replay_static`] into a caller-supplied blank schedule, typically
@@ -59,49 +113,65 @@ pub(crate) fn replay_static_into(
     eff: &ProblemInstance,
     plan: &Schedule,
     out: Schedule,
-) -> Schedule {
-    replay_with_release_into(eff, plan, None, out)
+) -> Result<Schedule, String> {
+    replay_segment_into(eff, plan, None, None, out)
 }
 
-fn replay_with_release(
+/// The shared segment replayer: [`replay_static`] with optional
+/// per-task release times and an optional fault world.
+///
+/// Release floors: task `t` may not start before `release[t]` even if
+/// its node and data are ready. The reschedule controller uses this to
+/// pin every replanned task to the wall-clock moment its replan
+/// happened — without it, replay would let "online" decisions start
+/// work before the controller could have known to move it (hindsight
+/// bias).
+///
+/// With a [`SegmentWorld`], the replayer additionally accepts partial
+/// plans (unscheduled tasks never run; their transfers never arrive),
+/// honors transfer restart floors, and stretches transfers under
+/// link-degradation episodes. All three extras are inert when absent,
+/// so the fault-free replay arithmetic is untouched operation for
+/// operation.
+///
+/// `out` must arrive empty and shaped `(|T|, |V|)` — the reschedule and
+/// fault loops feed recycled [`SchedulerWorkspace`] schedules through
+/// here so repeated replays reuse one set of timeline buffers.
+pub(crate) fn replay_segment_into(
     eff: &ProblemInstance,
     plan: &Schedule,
     release: Option<&[f64]>,
-) -> Schedule {
-    let out = Schedule::new(eff.graph.len(), eff.network.len());
-    replay_with_release_into(eff, plan, release, out)
-}
-
-/// [`replay_static`] with optional per-task release times: task `t` may
-/// not start before `release[t]` even if its node and data are ready.
-/// The reschedule controller uses this to pin every replanned task to
-/// the wall-clock moment its replan happened — without it, replay would
-/// let "online" decisions start work before the controller could have
-/// known to move it (hindsight bias). `out` must arrive empty and
-/// shaped `(|T|, |V|)` — the reschedule loop feeds recycled
-/// [`SchedulerWorkspace`] schedules through here so repeated replays
-/// reuse one set of timeline buffers.
-fn replay_with_release_into(
-    eff: &ProblemInstance,
-    plan: &Schedule,
-    release: Option<&[f64]>,
+    world: Option<&SegmentWorld<'_>>,
     mut out: Schedule,
-) -> Schedule {
+) -> Result<Schedule, String> {
     let g = &eff.graph;
     let net = &eff.network;
     let n = g.len();
     debug_assert!(out.is_empty(), "replay target must be blank");
     if n == 0 {
-        return out;
+        return Ok(out);
     }
 
-    let node_of: Vec<NodeId> = (0..n)
-        .map(|t| {
-            plan.assignment(t)
-                .unwrap_or_else(|| panic!("replay needs a complete plan; task {t} unscheduled"))
-                .node
-        })
-        .collect();
+    let partial = world.map_or(false, |w| w.partial);
+    let mut placed = 0usize;
+    let mut node_of: Vec<NodeId> = vec![UNPLACED; n];
+    for (t, slot) in node_of.iter_mut().enumerate() {
+        match plan.assignment(t) {
+            Some(a) => {
+                *slot = a.node;
+                placed += 1;
+            }
+            None if partial => {}
+            None => {
+                return Err(format!(
+                    "replay needs a complete plan; task {t} is unscheduled"
+                ))
+            }
+        }
+    }
+    if placed == 0 {
+        return Ok(out);
+    }
 
     // Planned execution order per node (timelines are start-sorted).
     let queue: Vec<Vec<TaskId>> = (0..net.len())
@@ -117,7 +187,7 @@ fn replay_with_release_into(
     // static replay — `max` with 0 leaves every start bit-identical).
     let mut data_ready: Vec<f64> = match release {
         Some(r) => {
-            assert_eq!(r.len(), n, "release/task arity mismatch");
+            debug_assert_eq!(r.len(), n, "release/task arity mismatch");
             r.to_vec()
         }
         None => vec![0.0f64; n],
@@ -173,9 +243,27 @@ fn replay_with_release_into(
         match ev.kind {
             EventKind::TaskFinished { task } => {
                 finished += 1;
-                let end = out.assignment(task).unwrap().end;
+                let end = out
+                    .assignment(task)
+                    .ok_or_else(|| format!("replay lost task {task}'s own assignment"))?
+                    .end;
                 for &(s, data) in g.successors(task) {
-                    let arrival = end + net.comm_time(data, node_of[task], node_of[s]);
+                    if node_of[s] == UNPLACED {
+                        continue; // partial plan: the consumer never runs
+                    }
+                    let arrival = match world {
+                        None => end + net.comm_time(data, node_of[task], node_of[s]),
+                        Some(w) => {
+                            // A crash-restarted transfer departs no
+                            // earlier than its floor; degradation applies
+                            // at the (possibly delayed) departure time.
+                            let dep = match w.edge_floor.get(&(task, s)) {
+                                Some(&floor) => end.max(floor),
+                                None => end,
+                            };
+                            dep + w.comm_time(net, data, node_of[task], node_of[s], dep)
+                        }
+                    };
                     events.push(
                         arrival,
                         EventKind::TransferArrived { src: task, dst: s, at: node_of[s] },
@@ -199,14 +287,21 @@ fn replay_with_release_into(
                     &mut events,
                 );
             }
+            EventKind::NodeCrashed { .. } | EventKind::NodeRecovered { .. } => {
+                // Fault events are consumed by the fault controller's own
+                // queue ([`crate::sim::fault`]); they never reach replay.
+                return Err("fault event in a replay queue".to_string());
+            }
         }
     }
 
-    assert_eq!(
-        finished, n,
-        "replay deadlocked: plan node order contradicts task precedence"
-    );
-    out
+    if finished != placed {
+        return Err(format!(
+            "replay deadlocked after {finished}/{placed} tasks: \
+             plan node order contradicts task precedence"
+        ));
+    }
+    Ok(out)
 }
 
 /// Re-plan the uncommitted frontier at wall-clock `now`.
@@ -228,14 +323,18 @@ fn replan(
     prio: &[f64],
     pinned: &[Option<NodeId>],
     ws: &mut SchedulerWorkspace,
-) -> Schedule {
+) -> Result<Schedule, String> {
     let g = &inst.graph;
     let net = &inst.network;
     let n = g.len();
     let mut plan = ws.take_schedule(n, net.len());
     for t in 0..n {
         if committed[t] {
-            plan.insert(actual.assignment(t).unwrap());
+            plan.insert(
+                actual
+                    .assignment(t)
+                    .ok_or_else(|| format!("replan committed task {t} has no realized times"))?,
+            );
         }
     }
 
@@ -285,7 +384,7 @@ fn replan(
         }
     }
     debug_assert!(plan.is_complete(), "replan must place every task");
-    plan
+    Ok(plan)
 }
 
 /// Replay with online rescheduling: monitor the static replay of the
@@ -294,14 +393,15 @@ fn replan(
 /// everything already running, re-plan the frontier with the configured
 /// policy, and continue. Returns the realized schedule and the number of
 /// replans performed. Replans are capped at the task count, which bounds
-/// the loop even under adversarial noise.
+/// the loop even under adversarial noise. Errors (never panics) when the
+/// plan is incomplete or its node orders contradict the DAG.
 pub fn replay_reschedule(
     inst: &ProblemInstance,
     eff: &ProblemInstance,
     plan: &Schedule,
     cfg: &SchedulerConfig,
     slack: f64,
-) -> (Schedule, usize) {
+) -> Result<(Schedule, usize), String> {
     let ctx = SchedulingContext::new(inst, RankBackend::Native);
     replay_reschedule_with(&ctx, eff, plan, cfg, slack)
 }
@@ -318,7 +418,7 @@ pub fn replay_reschedule_with(
     plan: &Schedule,
     cfg: &SchedulerConfig,
     slack: f64,
-) -> (Schedule, usize) {
+) -> Result<(Schedule, usize), String> {
     let mut ws = SchedulerWorkspace::new();
     replay_reschedule_into(ctx, eff, plan, cfg, slack, &mut ws)
 }
@@ -338,11 +438,11 @@ pub fn replay_reschedule_into(
     cfg: &SchedulerConfig,
     slack: f64,
     ws: &mut SchedulerWorkspace,
-) -> (Schedule, usize) {
+) -> Result<(Schedule, usize), String> {
     let inst = ctx.instance();
     let n = inst.graph.len();
     if n == 0 {
-        return (replay_static(eff, plan), 0);
+        return Ok((replay_static(eff, plan)?, 0));
     }
     let slack_abs = slack.max(0.0) * plan.makespan();
 
@@ -363,9 +463,9 @@ pub fn replay_reschedule_into(
     let mut replans = 0usize;
     loop {
         let target = ws.take_schedule(n, eff.network.len());
-        let actual = replay_with_release_into(eff, &current, Some(&release), target);
+        let actual = replay_segment_into(eff, &current, Some(&release), None, target)?;
         if replans >= n {
-            return (actual, replans);
+            return Ok((actual, replans));
         }
         // Earliest uncommitted task that fell behind plan (at or after
         // the last replan point); ties break on task id.
@@ -374,8 +474,12 @@ pub fn replay_reschedule_into(
             if committed[t] {
                 continue;
             }
-            let a = actual.assignment(t).unwrap();
-            let p = current.assignment(t).unwrap();
+            let a = actual
+                .assignment(t)
+                .ok_or_else(|| format!("reschedule replay dropped task {t}"))?;
+            let p = current
+                .assignment(t)
+                .ok_or_else(|| format!("reschedule plan dropped task {t}"))?;
             if a.start > p.start + slack_abs && a.start >= frontier {
                 let key = (a.start, t);
                 if viol.map_or(true, |best| key < best) {
@@ -384,12 +488,16 @@ pub fn replay_reschedule_into(
             }
         }
         let Some((now, _)) = viol else {
-            return (actual, replans);
+            return Ok((actual, replans));
         };
         // Everything that started before the violation moment is
         // committed: it is running or done and keeps its realized times.
         for t in 0..n {
-            if actual.assignment(t).unwrap().start < now {
+            let started = actual
+                .assignment(t)
+                .ok_or_else(|| format!("reschedule replay dropped task {t}"))?
+                .start;
+            if started < now {
                 committed[t] = true;
             }
         }
@@ -401,7 +509,7 @@ pub fn replay_reschedule_into(
                 vec![None; n]
             }
         });
-        let next = replan(inst, &committed, &actual, now, cfg, prio, pinned, ws);
+        let next = replan(inst, &committed, &actual, now, cfg, prio, pinned, ws)?;
         ws.recycle(std::mem::replace(&mut current, next));
         ws.recycle(actual); // this iteration's replay, fully consumed
         for t in 0..n {
@@ -438,7 +546,7 @@ mod tests {
         let inst = fork_join();
         for cfg in SchedulerConfig::all() {
             let plan = cfg.build().schedule(&inst);
-            let sim = replay_static(&inst, &plan);
+            let sim = replay_static(&inst, &plan).unwrap();
             assert_eq!(sim, plan, "{} drifted under zero noise", cfg.name());
         }
     }
@@ -452,7 +560,7 @@ mod tests {
             *f = 2.0; // every node at half speed
         }
         let eff = perturbed_instance(&inst, &trace);
-        let sim = replay_static(&eff, &plan);
+        let sim = replay_static(&eff, &plan).unwrap();
         assert!(sim.validate(&eff).is_ok());
         // Everything (compute) doubles; comm unchanged — makespan grows
         // but by at most 2×.
@@ -468,7 +576,7 @@ mod tests {
         trace.task_factor[1] = 3.0; // one branch runs 3× long
         trace.edge_factor[0] = 2.0; // one transfer doubles
         let eff = perturbed_instance(&inst, &trace);
-        let sim = replay_static(&eff, &plan);
+        let sim = replay_static(&eff, &plan).unwrap();
         sim.validate(&eff).unwrap();
         assert!(sim.makespan() >= plan.makespan());
     }
@@ -480,7 +588,7 @@ mod tests {
         let mut trace = NoiseTrace::unit(&inst);
         trace.task_factor[0] = 2.5;
         let eff = perturbed_instance(&inst, &trace);
-        let sim = replay_static(&eff, &plan);
+        let sim = replay_static(&eff, &plan).unwrap();
         for t in 0..inst.graph.len() {
             assert_eq!(
                 sim.assignment(t).unwrap().node,
@@ -499,7 +607,7 @@ mod tests {
         let inst = fork_join();
         for cfg in [SchedulerConfig::heft(), SchedulerConfig::mct()] {
             let plan = cfg.build().schedule(&inst);
-            let (sim, replans) = replay_reschedule(&inst, &inst, &plan, &cfg, 0.1);
+            let (sim, replans) = replay_reschedule(&inst, &inst, &plan, &cfg, 0.1).unwrap();
             assert_eq!(replans, 0, "no drift ⇒ no replan");
             assert_eq!(sim, plan);
         }
@@ -527,11 +635,11 @@ mod tests {
         trace.task_factor[0] = 10.0;
         let eff = perturbed_instance(&inst, &trace);
 
-        let static_sim = replay_static(&eff, &plan);
+        let static_sim = replay_static(&eff, &plan).unwrap();
         assert!((static_sim.makespan() - 15.0).abs() < 1e-9, "{}", static_sim.makespan());
 
         let cfg = SchedulerConfig::heft();
-        let (resched, replans) = replay_reschedule(&inst, &eff, &plan, &cfg, 0.1);
+        let (resched, replans) = replay_reschedule(&inst, &eff, &plan, &cfg, 0.1).unwrap();
         resched.validate(&eff).unwrap();
         assert_eq!(replans, 1, "one drift ⇒ one replan");
         assert!(
@@ -557,9 +665,9 @@ mod tests {
         // Stall one of the fork branches hard.
         trace.task_factor[1] = 10.0;
         let eff = perturbed_instance(&inst, &trace);
-        let (sim, _replans) = replay_reschedule(&inst, &eff, &plan, &cfg, 0.05);
+        let (sim, _replans) = replay_reschedule(&inst, &eff, &plan, &cfg, 0.05).unwrap();
         sim.validate(&eff).unwrap();
-        let static_sim = replay_static(&eff, &plan);
+        let static_sim = replay_static(&eff, &plan).unwrap();
         // The rescheduled run is a valid execution; it may or may not
         // beat static replay (the policy layer takes the min), but it
         // must never corrupt the schedule.

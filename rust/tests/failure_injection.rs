@@ -108,6 +108,72 @@ fn graph_from_json_rejects_self_loop_edges() {
 }
 
 #[test]
+fn replay_of_incomplete_plan_is_an_error_not_a_panic() {
+    use ptgs::schedule::{Assignment, Schedule};
+    use ptgs::scheduler::SchedulerConfig;
+    use ptgs::sim::{replay_faulty, FaultTrace, RetryPolicy};
+
+    let mut g = TaskGraph::new();
+    g.add_task("a", 1.0);
+    g.add_task("b", 1.0);
+    g.add_edge(0, 1, 1.0);
+    let inst = ptgs::instance::ProblemInstance::new(
+        "partial",
+        g,
+        ptgs::network::Network::homogeneous(2, 1.0),
+    );
+    // A plan that never places task 1.
+    let mut partial = Schedule::new(2, 2);
+    partial.insert(Assignment { task: 0, node: 0, start: 0.0, end: 1.0 });
+
+    // Fault-free replay requires a complete plan: descriptive Err.
+    let err = ptgs::sim::replay_static(&inst, &partial).unwrap_err();
+    assert!(err.contains("unscheduled"), "{err}");
+
+    let cfg = SchedulerConfig::heft();
+    let err =
+        ptgs::sim::replay_reschedule(&inst, &inst, &partial, &cfg, 0.1).unwrap_err();
+    assert!(err.contains("unscheduled"), "{err}");
+
+    // The fault engine's world is allowed to be partial: the unplaced
+    // task surfaces as a failed task in the outcome — data, not panic.
+    let fr = replay_faulty(
+        &inst,
+        &inst,
+        &partial,
+        &cfg,
+        &FaultTrace::none(),
+        &RetryPolicy::default(),
+    )
+    .unwrap();
+    assert!(!fr.completed);
+    assert_eq!(fr.tasks_failed, 1);
+}
+
+#[test]
+fn fault_trace_naming_a_missing_node_is_an_error_not_a_panic() {
+    use ptgs::scheduler::SchedulerConfig;
+    use ptgs::sim::{replay_faulty, FaultTrace, NodeCrash, RetryPolicy};
+
+    let mut g = TaskGraph::new();
+    g.add_task("a", 1.0);
+    let inst = ptgs::instance::ProblemInstance::new(
+        "tiny",
+        g,
+        ptgs::network::Network::homogeneous(2, 1.0),
+    );
+    let cfg = SchedulerConfig::heft();
+    let plan = cfg.build().schedule(&inst);
+    let trace = FaultTrace {
+        crashes: vec![NodeCrash { node: 99, at: 0.5, until: None }],
+        degrades: vec![],
+    };
+    let err = replay_faulty(&inst, &inst, &plan, &cfg, &trace, &RetryPolicy::default())
+        .unwrap_err();
+    assert!(err.contains("99"), "{err}");
+}
+
+#[test]
 fn instance_json_with_asymmetric_links_panics_contained() {
     // Network::new asserts symmetry; FromJson goes through it, so a
     // malformed network must not slip through silently. We assert the

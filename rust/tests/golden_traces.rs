@@ -42,6 +42,7 @@ fn fixed_sweep() -> SimSweep {
         policy: ReplayPolicy::Static,
         trials: 3,
         seed: 0xB007_5EED,
+        ..SimSweep::default()
     }
 }
 

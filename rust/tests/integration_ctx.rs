@@ -79,6 +79,7 @@ fn sim_sweep_with_rescheduling_shares_the_context() {
         policy: ReplayPolicy::Reschedule { slack: 0.0 },
         trials: 3,
         seed: 7,
+        ..SimSweep::default()
     };
 
     let ranks_before = SchedulingContext::rank_computations();

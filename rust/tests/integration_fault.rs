@@ -1,0 +1,134 @@
+//! Integration tests for the fault-injection layer: sweep-level
+//! determinism across thread counts, zero-hazard bit-exactness against
+//! the fault-free sweep for all 72 configs, stable fault-table rows,
+//! and the no-panic contract under guaranteed-fatal fault worlds.
+
+use ptgs::analysis::{fault_rows, fault_table};
+use ptgs::benchmark::{Harness, SimSweep};
+use ptgs::coordinator::{Coordinator, CoordinatorOptions};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::scheduler::SchedulerConfig;
+use ptgs::sim::{FaultModel, Perturbation, ReplayPolicy, RetryPolicy};
+
+fn specs() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec { count: 2, ..DatasetSpec::new(Structure::OutTrees, 1.0) },
+        DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 2.0) },
+    ]
+}
+
+fn fault_sweep() -> SimSweep {
+    SimSweep {
+        perturb: Perturbation::none(),
+        policy: ReplayPolicy::Static,
+        trials: 3,
+        seed: 0xFA17_CAFE,
+        faults: FaultModel::with_mtbf(0.2),
+        retry: RetryPolicy::default(),
+    }
+}
+
+/// Zero-hazard fault plumbing is invisible: a sweep with the fault
+/// fields at their inert defaults produces records *equal* to the
+/// plain perturbation sweep, for all 72 configs.
+#[test]
+fn zero_hazard_sweep_matches_fault_free_sweep_all_72() {
+    let h = Harness::all_schedulers();
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::InTrees, 1.0) };
+    let base = SimSweep {
+        perturb: Perturbation::lognormal(0.25),
+        trials: 2,
+        ..SimSweep::default()
+    };
+    let with_inert_faults = SimSweep {
+        faults: FaultModel::none(),
+        retry: RetryPolicy { max_attempts: 1, ..RetryPolicy::default() },
+        ..base
+    };
+    let a = h.run_dataset_sim(&spec, &base);
+    let b = h.run_dataset_sim(&spec, &with_inert_faults);
+    assert_eq!(a.len(), 72);
+    assert_eq!(a, b, "inert fault fields changed sweep records");
+}
+
+/// The parallel fault sweep is deterministic across worker counts:
+/// 1 worker and 4 workers produce byte-identical records (fault worlds
+/// derive from (instance, trial) only, never from scheduling order).
+#[test]
+fn fault_sweep_identical_across_thread_counts() {
+    let schedulers = vec![
+        SchedulerConfig::heft(),
+        SchedulerConfig::met(),
+        SchedulerConfig::sufferage_classic(),
+    ];
+    let sweep = fault_sweep();
+    let run = |workers: usize| {
+        let coord = Coordinator {
+            options: CoordinatorOptions { workers, chunk_size: 1, ..Default::default() },
+            ..Coordinator::with_schedulers(schedulers.clone())
+        };
+        coord.run_sim_blocking(&specs(), &sweep)
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.len(), 3 * 4);
+    assert_eq!(serial, parallel, "fault sweep drifted across thread counts");
+    assert!(
+        serial.iter().any(|r| r.crashes > 0),
+        "hazard 0.2 never fired a crash in the sweep"
+    );
+}
+
+/// Two invocations of the same fault sweep render the same analysis:
+/// fault-table rows (completion rates, inflation, attempts) are exact
+/// constants for a fixed seed.
+#[test]
+fn fault_table_rows_deterministic() {
+    let h = Harness::with_schedulers(vec![SchedulerConfig::heft(), SchedulerConfig::mct()]);
+    let sweep = fault_sweep();
+    let r1 = h.run_all_sim(&specs(), &sweep);
+    let r2 = h.run_all_sim(&specs(), &sweep);
+    assert_eq!(fault_rows(&r1), fault_rows(&r2));
+    let table = fault_table(&r1);
+    assert!(table.contains("completion_rate"), "{table}");
+    for row in fault_rows(&r1) {
+        assert!((0.0..=1.0).contains(&row.completion_rate));
+        assert!(row.mean_inflation.is_finite());
+        assert!((0.0..=1.0).contains(&row.wasted_work_frac));
+    }
+}
+
+/// A fault world that kills every node with no retries cannot panic the
+/// sweep: incompleteness surfaces as data (completed_trials < trials,
+/// tasks_failed > 0) in every record, and aggregation stays finite.
+#[test]
+fn guaranteed_fatal_sweep_reports_failure_as_data() {
+    let h = Harness::with_schedulers(vec![SchedulerConfig::heft(), SchedulerConfig::met()]);
+    let sweep = SimSweep {
+        faults: FaultModel {
+            mtbf: 0.005,
+            permanent_prob: 1.0,
+            recovery: 0.05,
+            degrade_prob: 0.0,
+            degrade_factor: 1.0,
+        },
+        retry: RetryPolicy { max_attempts: 1, ..RetryPolicy::default() },
+        ..fault_sweep()
+    };
+    let records = h.run_all_sim(&specs(), &sweep);
+    let mut saw_failure = false;
+    for r in &records {
+        assert!(r.completed_trials <= r.trials);
+        assert!(r.mean_sim_makespan.is_finite());
+        assert!(r.work_lost >= 0.0 && r.work_done >= 0.0);
+        if r.completed_trials < r.trials {
+            saw_failure = true;
+            assert!(r.tasks_failed > 0, "{}/{}", r.scheduler, r.dataset);
+        }
+    }
+    assert!(saw_failure, "a certain-death sweep completed every trial");
+    for row in fault_rows(&records) {
+        assert!(row.completion_rate.is_finite());
+        assert!(row.mean_inflation.is_finite());
+    }
+}

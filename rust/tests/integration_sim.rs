@@ -34,8 +34,14 @@ fn perturbed_replay_on_dataset_instances() {
                     inst,
                     &plan,
                     &cfg,
-                    &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
-                );
+                    &SimOptions {
+                        perturb,
+                        seed,
+                        policy: ReplayPolicy::Static,
+                        ..SimOptions::default()
+                    },
+                )
+                .unwrap();
                 let trace = NoiseTrace::sample(inst, &perturb, seed);
                 let eff = perturbed_instance(inst, &trace);
                 out.schedule.validate(&eff).unwrap_or_else(|e| {
@@ -68,8 +74,14 @@ fn reschedule_never_increases_makespan_vs_static_replay() {
                         inst,
                         &plan,
                         &cfg,
-                        &SimOptions { perturb, seed, policy: ReplayPolicy::Static },
-                    );
+                        &SimOptions {
+                            perturb,
+                            seed,
+                            policy: ReplayPolicy::Static,
+                            ..SimOptions::default()
+                        },
+                    )
+                    .unwrap();
                     let re = simulate(
                         inst,
                         &plan,
@@ -78,8 +90,10 @@ fn reschedule_never_increases_makespan_vs_static_replay() {
                             perturb,
                             seed,
                             policy: ReplayPolicy::Reschedule { slack: 0.05 },
+                            ..SimOptions::default()
                         },
-                    );
+                    )
+                    .unwrap();
                     assert!(
                         re.makespan <= st.makespan,
                         "{} on {} seed {seed}: reschedule {} > static {}",
@@ -147,6 +161,7 @@ fn coordinator_sim_fanout_matches_serial() {
             policy,
             trials: 3,
             seed: 0xFEED,
+            ..SimSweep::default()
         };
         let coord = Coordinator {
             options: CoordinatorOptions { workers: 4, chunk_size: 1, ..Default::default() },

@@ -159,8 +159,10 @@ fn zero_noise_replay_exact_for_all_72_configs() {
                 perturb: Perturbation::none(),
                 seed: 0,
                 policy: ReplayPolicy::Static,
+                ..SimOptions::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(
             out.makespan,
             plan.makespan(),

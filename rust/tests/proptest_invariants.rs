@@ -15,7 +15,8 @@ use ptgs::scheduler::{
     window_insertion_indexed, SchedulerConfig, SchedulerWorkspace, SchedulingContext,
 };
 use ptgs::sim::{
-    perturbed_instance, simulate, NoiseTrace, Perturbation, ReplayPolicy, SimOptions,
+    perturbed_instance, simulate, FaultModel, FaultTrace, NoiseTrace, Perturbation,
+    ReplayPolicy, RetryPolicy, SimOptions,
 };
 
 /// Arbitrary DAG: vertex order doubles as topological order; edge (i, j)
@@ -400,8 +401,14 @@ fn prop_zero_noise_simulation_reproduces_static_makespan() {
                     &inst,
                     &plan,
                     cfg,
-                    &SimOptions { perturb: Perturbation::none(), seed: case, policy },
-                );
+                    &SimOptions {
+                        perturb: Perturbation::none(),
+                        seed: case,
+                        policy,
+                        ..SimOptions::default()
+                    },
+                )
+                .unwrap();
                 assert_eq!(
                     out.makespan,
                     plan.makespan(),
@@ -439,7 +446,13 @@ fn prop_simulated_schedules_always_validate() {
             }
             let plan = cfg.build().schedule(&inst);
             for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.05 }] {
-                let out = simulate(&inst, &plan, cfg, &SimOptions { perturb, seed: case, policy });
+                let out = simulate(
+                    &inst,
+                    &plan,
+                    cfg,
+                    &SimOptions { perturb, seed: case, policy, ..SimOptions::default() },
+                )
+                .unwrap();
                 if let Err(e) = out.schedule.validate(&eff) {
                     panic!(
                         "seed {case}: {} simulated schedule invalid ({policy:?}): {e}",
@@ -464,24 +477,36 @@ fn prop_simulation_deterministic_per_seed() {
         let plan = cfg.build().schedule(&inst);
         let perturb = Perturbation::lognormal(0.5);
         for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.1 }] {
-            let opts = SimOptions { perturb, seed: 1000 + case, policy };
-            let a = simulate(&inst, &plan, &cfg, &opts);
-            let b = simulate(&inst, &plan, &cfg, &opts);
+            let opts = SimOptions { perturb, seed: 1000 + case, policy, ..SimOptions::default() };
+            let a = simulate(&inst, &plan, &cfg, &opts).unwrap();
+            let b = simulate(&inst, &plan, &cfg, &opts).unwrap();
             assert_eq!(a, b, "seed {case}: simulation not deterministic ({policy:?})");
         }
         let m1 = simulate(
             &inst,
             &plan,
             &cfg,
-            &SimOptions { perturb, seed: 1, policy: ReplayPolicy::Static },
+            &SimOptions {
+                perturb,
+                seed: 1,
+                policy: ReplayPolicy::Static,
+                ..SimOptions::default()
+            },
         )
+        .unwrap()
         .makespan;
         let m2 = simulate(
             &inst,
             &plan,
             &cfg,
-            &SimOptions { perturb, seed: 2, policy: ReplayPolicy::Static },
+            &SimOptions {
+                perturb,
+                seed: 2,
+                policy: ReplayPolicy::Static,
+                ..SimOptions::default()
+            },
         )
+        .unwrap()
         .makespan;
         if (m1 - m2).abs() > 1e-12 {
             distinct_worlds += 1;
@@ -490,6 +515,137 @@ fn prop_simulation_deterministic_per_seed() {
     assert!(
         distinct_worlds > 0,
         "different seeds never changed any realized makespan"
+    );
+}
+
+/// **Fault-layer keystone**: a zero-hazard fault model with retries
+/// disabled is *bit-identical* to the plain zero-noise replay — same
+/// makespan, same schedule, same everything — for every one of the 72
+/// configs. This is what licenses turning the fault engine on by
+/// default in the sweep plumbing: an empty trace costs nothing and
+/// changes nothing.
+#[test]
+fn prop_zero_hazard_faults_reproduce_zero_noise_replay() {
+    let configs = SchedulerConfig::all();
+    for case in 0..4u64 {
+        let mut rng = Rng::seeded(0xFA17_0 + case);
+        let inst = arbitrary_instance(&mut rng);
+        for cfg in &configs {
+            let plan = cfg.build().schedule(&inst);
+            let plain = simulate(
+                &inst,
+                &plan,
+                cfg,
+                &SimOptions {
+                    perturb: Perturbation::none(),
+                    seed: case,
+                    policy: ReplayPolicy::Static,
+                    ..SimOptions::default()
+                },
+            )
+            .unwrap();
+            let faulty = simulate(
+                &inst,
+                &plan,
+                cfg,
+                &SimOptions {
+                    perturb: Perturbation::none(),
+                    seed: case,
+                    policy: ReplayPolicy::Static,
+                    faults: FaultModel::none(),
+                    retry: RetryPolicy { max_attempts: 1, ..RetryPolicy::default() },
+                },
+            )
+            .unwrap();
+            assert_eq!(faulty, plain, "seed {case}: {} drifted under zero hazard", cfg.name());
+            assert_eq!(faulty.makespan, plan.makespan(), "seed {case}: {}", cfg.name());
+            assert!(faulty.completed, "seed {case}: {}", cfg.name());
+        }
+    }
+}
+
+/// Fault worlds and faulty executions are pure functions of
+/// `(instance, model, seed)`: the same triple yields a bit-identical
+/// [`FaultTrace`] and the same plan through it yields an identical
+/// [`ptgs::sim::SimOutcome`] — attempts, work lost, completion status
+/// and all.
+#[test]
+fn prop_fault_world_and_replay_deterministic() {
+    let model = FaultModel::with_mtbf(0.25);
+    let mut saw_crash = false;
+    for case in 0..12u64 {
+        let mut rng = Rng::seeded(0xFA17_DE7 + case);
+        let inst = arbitrary_instance(&mut rng);
+        let t1 = FaultTrace::sample(&inst, &model, case);
+        let t2 = FaultTrace::sample(&inst, &model, case);
+        assert_eq!(t1, t2, "seed {case}: fault trace not deterministic");
+        saw_crash |= !t1.crashes.is_empty();
+        let cfg = SchedulerConfig::heft();
+        let plan = cfg.build().schedule(&inst);
+        let opts = SimOptions {
+            perturb: Perturbation::none(),
+            seed: case,
+            policy: ReplayPolicy::Static,
+            faults: model,
+            retry: RetryPolicy::default(),
+        };
+        let a = simulate(&inst, &plan, &cfg, &opts).unwrap();
+        let b = simulate(&inst, &plan, &cfg, &opts).unwrap();
+        assert_eq!(a, b, "seed {case}: faulty simulation not deterministic");
+    }
+    assert!(saw_crash, "hazard 0.25 never produced a crash in any world");
+}
+
+/// Retry exhaustion is a *clean, reported* outcome, never a panic: under
+/// a near-certain permanent-crash world with retries disabled, every
+/// config still returns `Ok`, incomplete runs carry a fault summary with
+/// failed tasks, and realized times stay finite.
+#[test]
+fn prop_retry_exhaustion_is_clean_incomplete_never_a_panic() {
+    let model = FaultModel {
+        mtbf: 0.01,
+        permanent_prob: 1.0,
+        recovery: 0.05,
+        degrade_prob: 0.0,
+        degrade_factor: 1.0,
+    };
+    let retry = RetryPolicy { max_attempts: 1, ..RetryPolicy::default() };
+    let mut saw_incomplete = false;
+    for case in 0..16u64 {
+        let mut rng = Rng::seeded(0xFA17_FA1 + case);
+        let inst = arbitrary_instance(&mut rng);
+        for cfg in [SchedulerConfig::heft(), SchedulerConfig::met()] {
+            let plan = cfg.build().schedule(&inst);
+            for policy in [ReplayPolicy::Static, ReplayPolicy::Reschedule { slack: 0.1 }] {
+                let out = simulate(
+                    &inst,
+                    &plan,
+                    &cfg,
+                    &SimOptions {
+                        perturb: Perturbation::none(),
+                        seed: case,
+                        policy,
+                        faults: model,
+                        retry,
+                    },
+                )
+                .unwrap_or_else(|e| {
+                    panic!("seed {case}: {} errored under faults: {e}", cfg.name())
+                });
+                assert!(out.makespan.is_finite(), "seed {case}: {}", cfg.name());
+                let summary = out.faults.as_ref().expect("fault summary under nonzero hazard");
+                if out.completed {
+                    assert_eq!(summary.tasks_failed, 0, "seed {case}: {}", cfg.name());
+                } else {
+                    saw_incomplete = true;
+                    assert!(summary.tasks_failed > 0, "seed {case}: {}", cfg.name());
+                }
+            }
+        }
+    }
+    assert!(
+        saw_incomplete,
+        "a certain-death fault world never produced an incomplete run"
     );
 }
 
