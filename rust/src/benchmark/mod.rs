@@ -26,7 +26,9 @@ use std::time::Instant;
 
 use crate::datasets::DatasetSpec;
 use crate::ranks::RankBackend;
-use crate::scheduler::{SchedulerConfig, SchedulerWorkspace, SchedulingContext};
+use crate::scheduler::{
+    CancelToken, Cancelled, SchedulerConfig, SchedulerWorkspace, SchedulingContext,
+};
 use crate::util::{FromJson, ToJson, Value};
 
 /// One (scheduler, instance) measurement.
@@ -219,13 +221,34 @@ impl Harness {
         inst: &crate::instance::ProblemInstance,
         ws: &mut SchedulerWorkspace,
     ) -> Vec<Record> {
+        match self.try_run_instance_ws(dataset, instance, inst, ws, &CancelToken::never()) {
+            Ok(records) => records,
+            Err(Cancelled) => unreachable!("a never-token cannot trip"),
+        }
+    }
+
+    /// [`Harness::run_instance_ws`] with cooperative cancellation — the
+    /// serve daemon's sweep entry point. The token threads into the
+    /// fused engine (or the per-config loops when `fused` is off); a
+    /// trip aborts the sweep at its next iteration, returns every
+    /// pooled buffer to `ws` clean (the next run on the same workspace
+    /// is bit-identical to a fresh one, with zero buffer growth once
+    /// warm), and reports [`Cancelled`].
+    pub fn try_run_instance_ws(
+        &self,
+        dataset: &str,
+        instance: usize,
+        inst: &crate::instance::ProblemInstance,
+        ws: &mut SchedulerWorkspace,
+        cancel: &CancelToken,
+    ) -> Result<Vec<Record>, Cancelled> {
         let ctx = SchedulingContext::new(inst, self.backend.clone());
         for cfg in &self.schedulers {
             ctx.warm_for(cfg);
         }
         inst.graph.freeze(); // CSR built outside the timed region
         if self.options.fused && self.schedulers.len() > 1 {
-            return self.run_instance_fused(&ctx, dataset, instance, ws);
+            return self.run_instance_fused(&ctx, dataset, instance, ws, cancel);
         }
         // Warm the workspace too: otherwise the sweep's *first* config
         // would pay every buffer growth inside its timed region while
@@ -236,7 +259,7 @@ impl Harness {
         ws.recycle(warm);
         self.schedulers
             .iter()
-            .map(|cfg| self.run_one_with(cfg, &ctx, dataset, instance, ws))
+            .map(|cfg| self.run_one_with(cfg, &ctx, dataset, instance, ws, cancel))
             .collect()
     }
 
@@ -252,7 +275,8 @@ impl Harness {
         dataset: &str,
         instance: usize,
         ws: &mut SchedulerWorkspace,
-    ) -> Vec<Record> {
+        cancel: &CancelToken,
+    ) -> Result<Vec<Record>, Cancelled> {
         let inst = ctx.instance();
         // Pre-shape the root-level pools outside the timed region (the
         // fused engine starts from up to three lockstep groups, each
@@ -296,7 +320,9 @@ impl Harness {
                 recycle_outcome(ws, prev);
             }
             let t0 = Instant::now();
-            let out = crate::scheduler::fused_sweep(ctx, &self.schedulers, ws);
+            // A trip mid-sweep already recycled every buffer; the
+            // previous repeat's outcome was recycled at loop top.
+            let out = crate::scheduler::try_fused_sweep(ctx, &self.schedulers, ws, cancel)?;
             let ns = t0.elapsed().as_nanos() as u64;
             best_ns = best_ns.min(ns.max(1));
             outcome = Some(out);
@@ -331,10 +357,10 @@ impl Harness {
             }
         }
         recycle_outcome(ws, outcome);
-        records
+        Ok(records
             .into_iter()
             .map(|r| r.expect("fused groups partition every config"))
-            .collect()
+            .collect())
     }
 
     /// Run one scheduler against a pre-built (warm) context and a
@@ -346,7 +372,8 @@ impl Harness {
         dataset: &str,
         instance: usize,
         ws: &mut SchedulerWorkspace,
-    ) -> Record {
+        cancel: &CancelToken,
+    ) -> Result<Record, Cancelled> {
         let inst = ctx.instance();
         let scheduler = cfg.build_with(self.backend.clone());
         let mut best_ns = u64::MAX;
@@ -356,7 +383,7 @@ impl Harness {
                 ws.recycle(prev);
             }
             let t0 = Instant::now();
-            let s = scheduler.schedule_into(ctx, ws);
+            let s = scheduler.try_schedule_into(ctx, ws, cancel)?;
             let ns = t0.elapsed().as_nanos() as u64;
             best_ns = best_ns.min(ns.max(1)); // never 0: ratios divide by it
             schedule = Some(s);
@@ -379,7 +406,7 @@ impl Harness {
             fused_timing: false,
         };
         ws.recycle(schedule); // the timelines feed the next config's run
-        record
+        Ok(record)
     }
 
     /// Run one scheduler on one instance (builds and warms a private
@@ -395,7 +422,10 @@ impl Harness {
         let ctx = SchedulingContext::new(inst, self.backend.clone());
         ctx.warm_for(cfg);
         let mut ws = SchedulerWorkspace::new();
-        self.run_one_with(cfg, &ctx, dataset, instance, &mut ws)
+        match self.run_one_with(cfg, &ctx, dataset, instance, &mut ws, &CancelToken::never()) {
+            Ok(record) => record,
+            Err(Cancelled) => unreachable!("a never-token cannot trip"),
+        }
     }
 
     /// Run every scheduler on every instance of an externally-supplied
@@ -527,6 +557,25 @@ mod tests {
         let doc = a.to_json().to_string();
         let back = Vec::<Record>::from_json(&crate::util::parse(&doc).unwrap()).unwrap();
         assert_eq!(a, back);
+    }
+
+    #[test]
+    fn cancelled_harness_run_leaves_workspace_reusable() {
+        let h = Harness::all_schedulers();
+        let instances = tiny_spec().generate();
+        let inst = &instances[0];
+        let mut ws = SchedulerWorkspace::new();
+        let key = |rs: &[Record]| {
+            rs.iter()
+                .map(|r| (r.scheduler.clone(), r.makespan.to_bits(), r.schedule_hash))
+                .collect::<Vec<_>>()
+        };
+        let want = key(&h.run_instance_ws("d", 0, inst, &mut ws));
+        let aborted =
+            h.try_run_instance_ws("d", 0, inst, &mut ws, &CancelToken::after_checks(2));
+        assert!(aborted.is_err(), "a 2-poll budget must trip mid-sweep");
+        let again = key(&h.run_instance_ws("d", 0, inst, &mut ws));
+        assert_eq!(want, again, "post-cancel sweep drifted on the same workspace");
     }
 
     #[test]

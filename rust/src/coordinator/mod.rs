@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use crate::benchmark::{BenchmarkResults, Harness, HarnessOptions, Record, SimRecord, SimSweep};
 use crate::datasets::DatasetSpec;
 use crate::ranks::RankBackend;
-use crate::scheduler::{SchedulerConfig, SchedulerWorkspace};
+use crate::scheduler::{CancelToken, SchedulerConfig, SchedulerWorkspace};
 
 /// One unit of work: a contiguous instance range of one dataset.
 #[derive(Debug, Clone)]
@@ -72,6 +72,10 @@ pub struct Metrics {
     /// the rest of the sweep keeps running (see [`Coordinator`] docs on
     /// `run_jobs` failure semantics).
     pub jobs_failed: AtomicUsize,
+    /// Jobs skipped because [`CoordinatorOptions::cancel`] tripped
+    /// before they started. `jobs_done + jobs_failed + jobs_cancelled
+    /// == jobs_total` once `run_jobs` returns.
+    pub jobs_cancelled: AtomicUsize,
     /// Records received by the leader so far.
     pub records: AtomicUsize,
     /// Identity + panic message of every failed job, in completion
@@ -101,6 +105,12 @@ pub struct CoordinatorOptions {
     pub channel_depth: usize,
     /// Harness options applied inside each worker.
     pub harness: HarnessOptions,
+    /// Cooperative cancellation: once this token trips, workers skip
+    /// every not-yet-started job (counted in
+    /// [`Metrics::jobs_cancelled`]) and the run returns with whatever
+    /// records completed. Granularity is per *job* — a shard already
+    /// running finishes normally. Defaults to [`CancelToken::never`].
+    pub cancel: CancelToken,
 }
 
 impl Default for CoordinatorOptions {
@@ -112,6 +122,7 @@ impl Default for CoordinatorOptions {
             chunk_size: 10,
             channel_depth: 64,
             harness: HarnessOptions::default(),
+            cancel: CancelToken::never(),
         }
     }
 }
@@ -202,6 +213,13 @@ impl Coordinator {
     /// queue lock itself also recovers from poisoning
     /// (`unwrap_or_else(into_inner)`): the queue's `Vec` state is valid
     /// after any panic, since `pop` is the only mutation.
+    ///
+    /// Cancellation semantics: once [`CoordinatorOptions::cancel`]
+    /// trips, each worker keeps draining the queue but skips the work,
+    /// counting every skipped job in [`Metrics::jobs_cancelled`] — the
+    /// run returns promptly with the records that completed before the
+    /// trip, and `jobs_done + jobs_failed + jobs_cancelled ==
+    /// jobs_total` still holds.
     fn run_jobs<J, R, F>(&self, jobs: Vec<J>, per_job: F) -> (Vec<R>, Arc<Metrics>)
     where
         J: Send + std::fmt::Debug,
@@ -222,6 +240,7 @@ impl Coordinator {
                 let queue = Arc::clone(&queue);
                 let tx = tx.clone();
                 let metrics = Arc::clone(&metrics);
+                let cancel = self.options.cancel.clone();
                 let harness = Harness {
                     schedulers: self.schedulers.clone(),
                     backend: self.backend.clone(),
@@ -234,6 +253,13 @@ impl Coordinator {
                             queue.lock().unwrap_or_else(|e| e.into_inner()).pop()
                         };
                         let Some(job) = job else { break };
+                        if cancel.is_cancelled() {
+                            // Drain, don't run: every remaining job is
+                            // popped and counted so the accounting
+                            // invariant holds under cancellation too.
+                            metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
                         let batch = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| per_job(&harness, &mut ws, &job)),
                         );
@@ -550,6 +576,51 @@ mod tests {
         assert!(
             failed[0].contains("3") && failed[0].contains("synthetic failure in job 3"),
             "failed job identity + message surfaced: {failed:?}"
+        );
+    }
+
+    #[test]
+    fn cancelled_coordinator_skips_remaining_jobs() {
+        // after_checks(3): the worker's first three per-job polls pass,
+        // the fourth trips — so exactly 3 of 6 jobs run and the other 3
+        // drain into jobs_cancelled (1 worker keeps it deterministic).
+        let coord = Coordinator {
+            options: CoordinatorOptions {
+                workers: 1,
+                chunk_size: 1,
+                cancel: CancelToken::after_checks(3),
+                ..Default::default()
+            },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
+        };
+        let jobs: Vec<usize> = (0..6).collect();
+        let (records, metrics) = coord.run_jobs(jobs, |_harness, _ws, &job| vec![job]);
+        assert_eq!(records.len(), 3, "three jobs completed before the trip");
+        assert_eq!(metrics.jobs_done.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.jobs_cancelled.load(Ordering::Relaxed), 3);
+        assert_eq!(
+            metrics.jobs_done.load(Ordering::Relaxed)
+                + metrics.jobs_failed.load(Ordering::Relaxed)
+                + metrics.jobs_cancelled.load(Ordering::Relaxed),
+            metrics.jobs_total.load(Ordering::Relaxed),
+            "every job is accounted for under cancellation"
+        );
+
+        // A pre-cancelled run completes nothing.
+        let coord = Coordinator {
+            options: CoordinatorOptions {
+                workers: 2,
+                chunk_size: 1,
+                cancel: CancelToken::after_checks(0),
+                ..Default::default()
+            },
+            ..Coordinator::with_schedulers(vec![SchedulerConfig::heft()])
+        };
+        let (res, metrics) = coord.run(&tiny_specs());
+        assert!(res.records.is_empty());
+        assert_eq!(
+            metrics.jobs_cancelled.load(Ordering::Relaxed),
+            metrics.jobs_total.load(Ordering::Relaxed)
         );
     }
 

@@ -9,7 +9,7 @@
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
 //! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N] [--fused] [--simulate (+ the simulate/fault flags)] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
-//! ptgs serve     [--addr 127.0.0.1:7463] [--threads N] [--queue-depth 64] [--timeout-ms 30000] [--cache-size 256] [--schedulers all] [--debug]
+//! ptgs serve     [--addr 127.0.0.1:7463] [--threads N] [--queue-depth 64] [--timeout-ms 30000] [--io-timeout-ms 30000] [--degrade-threshold 0] [--cache-size 256] [--schedulers all] [--debug]
 //! ptgs list      schedulers|datasets|artifacts
 //! ```
 //!
@@ -704,6 +704,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if queue_depth == 0 {
         bail!("--queue-depth must be >= 1");
     }
+    let io_timeout_ms: u64 = args
+        .get_parse("io-timeout-ms", defaults.io_timeout.as_millis() as u64)
+        .map_err(|e| anyhow!(e))?;
+    if io_timeout_ms == 0 {
+        bail!("--io-timeout-ms must be >= 1");
+    }
     let opts = ptgs::serve::ServeOptions {
         addr: args.get_or("addr", &defaults.addr),
         workers: worker_count(args)?.unwrap_or(defaults.workers),
@@ -711,7 +717,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_timeout: std::time::Duration::from_millis(timeout_ms),
         cache_size: args.get_parse("cache-size", defaults.cache_size).map_err(|e| anyhow!(e))?,
         schedulers: parse_schedulers(&args.get_or("schedulers", "all"))?,
+        degrade_threshold: args
+            .get_parse("degrade-threshold", defaults.degrade_threshold)
+            .map_err(|e| anyhow!(e))?,
+        io_timeout: std::time::Duration::from_millis(io_timeout_ms),
         debug: args.has("debug"),
+        ..defaults
     };
     let workers = opts.workers;
     let schedulers = opts.schedulers.len();

@@ -1,0 +1,238 @@
+//! Cooperative cancellation for the scheduling cores.
+//!
+//! A [`CancelToken`] is a cheap, cloneable handle the long-running
+//! scheduling loops ([`super::ParametricScheduler::try_schedule_into`],
+//! [`super::fused::try_fused_sweep`], and the threaded sweep) poll once
+//! per iteration. Cancellation is *cooperative*: nothing is interrupted
+//! mid-placement — the loop observes the token at a safe point, returns
+//! every pooled buffer (partial schedules, fused group scratches) to its
+//! [`super::SchedulerWorkspace`], and reports [`Cancelled`]. A workspace
+//! that hosted a cancelled run is indistinguishable from one that hosted
+//! a completed run: the next run on it is bit-identical to a
+//! fresh-workspace run and performs zero buffer-growth events once warm
+//! (property-tested in `rust/tests/proptest_invariants.rs` and
+//! counter-asserted in `rust/tests/integration_ctx.rs`).
+//!
+//! Three trip conditions compose, checked cheapest-first:
+//!
+//! 1. an explicit [`CancelToken::cancel`] call (one relaxed atomic
+//!    load on the fast path),
+//! 2. a countdown budget ([`CancelToken::after_checks`]) that trips on
+//!    the nth poll — the deterministic, wall-clock-free variant the
+//!    cancellation property tests drive,
+//! 3. a wall-clock deadline ([`CancelToken::with_deadline`]) — the
+//!    serve daemon's per-request deadline, so a request that expires
+//!    *mid-sweep* aborts at the next loop iteration instead of pinning
+//!    its worker to completion.
+//!
+//! Tokens chain: a child token ([`CancelToken::child_with_deadline`])
+//! trips when its own condition fires *or* its parent does, which is how
+//! the daemon's shutdown token cancels every in-flight request at once
+//! during a bounded drain. Once any condition fires the token latches
+//! cancelled (the flag is stored back), so subsequent polls cost one
+//! atomic load regardless of which condition tripped.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The unit error a cancelled scheduling run reports. Carrying no
+/// payload keeps the `Result` the hot loops return as small as the
+/// schedule itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled;
+
+impl fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("scheduling run cancelled")
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+#[derive(Debug)]
+struct Inner {
+    /// Latched cancellation flag — the fast path, and the only state a
+    /// plain [`CancelToken::never`] token carries.
+    cancelled: AtomicBool,
+    /// Wall-clock deadline; consulted only until the flag latches.
+    deadline: Option<Instant>,
+    /// Poll-count budget ([`CancelToken::after_checks`]): decremented
+    /// per poll, trips at zero. Deterministic test instrumentation.
+    budget: Option<AtomicU64>,
+    /// Parent token: this token reports cancelled whenever the parent
+    /// does (shutdown fan-out).
+    parent: Option<CancelToken>,
+}
+
+/// A cloneable cooperative-cancellation handle polled by the scheduling
+/// loops once per iteration. See the module docs for the trip
+/// conditions and the workspace-cleanliness contract.
+#[derive(Debug, Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    fn from_parts(
+        deadline: Option<Instant>,
+        budget: Option<AtomicU64>,
+        parent: Option<CancelToken>,
+    ) -> Self {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline,
+                budget,
+                parent,
+            }),
+        }
+    }
+
+    /// A token that never trips on its own — only an explicit
+    /// [`CancelToken::cancel`] call cancels it. The non-cancellable
+    /// entry points (`schedule_into`, `fused_sweep`) delegate to their
+    /// `try_` variants with one of these; its poll is a single relaxed
+    /// atomic load.
+    pub fn never() -> Self {
+        Self::from_parts(None, None, None)
+    }
+
+    /// A token that trips once the wall clock reaches `deadline` — the
+    /// serve daemon's per-request form.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        Self::from_parts(Some(deadline), None, None)
+    }
+
+    /// A token that trips on its `n`th poll (`after_checks(0)` is
+    /// already cancelled). Deterministic and wall-clock-free: the
+    /// cancellation property tests use it to stop a sweep at an exact
+    /// loop iteration, reproducibly.
+    pub fn after_checks(n: u64) -> Self {
+        Self::from_parts(None, Some(AtomicU64::new(n)), None)
+    }
+
+    /// A child token with its own `deadline` that also trips whenever
+    /// `self` does. The daemon hands each job `shutdown.child_with_deadline(job_deadline)`
+    /// so a drain-phase shutdown cancels every in-flight sweep at once.
+    pub fn child_with_deadline(&self, deadline: Instant) -> Self {
+        Self::from_parts(Some(deadline), None, Some(self.clone()))
+    }
+
+    /// A child token with an [`CancelToken::after_checks`]-style poll
+    /// budget that also trips whenever `self` does. This is the serve
+    /// daemon's deterministic `debug_cancel_after` hook: it lets a test
+    /// abort a request at an exact sweep iteration without racing the
+    /// wall clock, while still inheriting the request's deadline chain.
+    pub fn child_after_checks(&self, n: u64) -> Self {
+        Self::from_parts(None, Some(AtomicU64::new(n)), Some(self.clone()))
+    }
+
+    /// Latch this token cancelled. Every clone and every child observes
+    /// it on their next poll.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Poll the token. Cheap when untripped (one relaxed load for a
+    /// plain token; one `Instant::now()` while a deadline is pending);
+    /// after any condition fires the result latches and every further
+    /// poll is a single load.
+    pub fn is_cancelled(&self) -> bool {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        if let Some(budget) = &self.inner.budget {
+            // Saturating countdown: the poll that finds zero trips the
+            // token (and latches); earlier polls spend one unit each.
+            let mut cur = budget.load(Ordering::Relaxed);
+            loop {
+                if cur == 0 {
+                    self.cancel();
+                    return true;
+                }
+                match budget.compare_exchange_weak(
+                    cur,
+                    cur - 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+        if let Some(deadline) = self.inner.deadline {
+            if Instant::now() >= deadline {
+                self.cancel();
+                return true;
+            }
+        }
+        if let Some(parent) = &self.inner.parent {
+            if parent.is_cancelled() {
+                self.cancel();
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn never_token_only_cancels_explicitly() {
+        let t = CancelToken::never();
+        for _ in 0..1000 {
+            assert!(!t.is_cancelled());
+        }
+        t.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let t = CancelToken::never();
+        let c = t.clone();
+        c.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn after_checks_trips_on_the_nth_poll_exactly() {
+        let t = CancelToken::after_checks(3);
+        assert!(!t.is_cancelled());
+        assert!(!t.is_cancelled());
+        assert!(!t.is_cancelled());
+        assert!(t.is_cancelled(), "fourth poll exhausts a budget of 3");
+        assert!(t.is_cancelled(), "cancellation latches");
+        assert!(CancelToken::after_checks(0).is_cancelled());
+    }
+
+    #[test]
+    fn deadline_trips_and_latches() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(t.is_cancelled());
+        let future = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!future.is_cancelled());
+    }
+
+    #[test]
+    fn child_observes_parent_cancellation() {
+        let parent = CancelToken::never();
+        let child =
+            parent.child_with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!child.is_cancelled());
+        parent.cancel();
+        assert!(child.is_cancelled());
+        // And the other way: a child's own trip never propagates up.
+        let parent2 = CancelToken::never();
+        let child2 = parent2.child_with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(child2.is_cancelled());
+        assert!(!parent2.is_cancelled());
+    }
+}

@@ -40,6 +40,19 @@
 //! from every dataset structure, and the benches gate on it before
 //! timing.
 //!
+//! **Cooperative cancellation:** [`try_fused_sweep`] and
+//! [`try_fused_sweep_threaded`] poll a [`super::cancel::CancelToken`]
+//! once per group iteration. A tripped token abandons the sweep at that
+//! safe point: every live and pending group's schedule and scratch
+//! returns to the workspace pools (pool membership, not contents, is
+//! the cleanliness contract — `begin`/`reset` on the next run restores
+//! state without growth), already-finished group schedules are recycled
+//! too, the scan/fork counters performed so far still flush, and the
+//! call reports [`super::cancel::Cancelled`]. The next sweep on the
+//! same workspace is bit-identical to a fresh-workspace sweep
+//! (property-tested), which is what lets the serve daemon abort a
+//! request mid-sweep and keep the worker's warm workspace.
+//!
 //! **Fork parallelism:** once groups diverge they never interact again
 //! — a forked child is a closed, independent sub-problem. [`fused_sweep_threaded`]
 //! exploits this by draining the group queue from one worker thread per
@@ -60,9 +73,10 @@
 //! shared-scan ratio and fork counts in `BENCH_sweep.json`.
 
 use std::cmp::Reverse;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
+use super::cancel::{CancelToken, Cancelled};
 use super::ctx::SchedulingContext;
 use super::parametric::{select_candidate, Choice, Entry};
 use super::window::{window_append_only_at, window_insertion_indexed, Candidate};
@@ -365,6 +379,11 @@ fn build_root_groups(
 /// threaded driver on the shared work queue. A group's evolution
 /// depends only on its own state, so where children run never changes
 /// what they produce.
+///
+/// Polls `cancel` once per iteration; returns `false` (group abandoned,
+/// caller recycles its state) when the token trips, `true` when the
+/// group placed every task.
+#[allow(clippy::too_many_arguments)]
 fn run_group(
     ctx: &SchedulingContext<'_>,
     configs: &[SchedulerConfig],
@@ -372,8 +391,9 @@ fn run_group(
     grp: &mut GroupState,
     ws: &mut SchedulerWorkspace,
     it: &mut IterScratch,
+    cancel: &CancelToken,
     fork_sink: &mut dyn FnMut(GroupState),
-) {
+) -> bool {
     let inst = ctx.instance();
     let g = &inst.graph;
     let net = &inst.network;
@@ -388,6 +408,9 @@ fn run_group(
     };
     let prio = ctx.priorities(configs[grp.members[0]].priority);
     while let Some(Entry(_, Reverse(t))) = grp.scratch.ready.pop() {
+        if cancel.is_cancelled() {
+            return false;
+        }
         // The sufferage runner-up, when any member wants one: after
         // popping `t`, the heap top is exactly the entry the
         // per-config loop would pop second.
@@ -503,6 +526,17 @@ fn run_group(
         let d0 = it.class_reps[0];
         apply(&mut grp, t, &d0, prio, g, net);
     }
+    true
+}
+
+/// Return an abandoned group's buffers to the workspace pools — the
+/// whole cancellation cleanup (pool membership, not contents, is the
+/// cleanliness contract; the next `begin`/`copy_from` reshapes them
+/// without growth).
+fn recycle_group(ws: &mut SchedulerWorkspace, grp: GroupState) {
+    let GroupState { sched, scratch, .. } = grp;
+    ws.recycle_group_scratch(scratch);
+    ws.recycle(sched);
 }
 
 /// Run every config of `configs` on the context's instance as a fused
@@ -515,11 +549,32 @@ fn run_group(
 /// Groups are reported in ascending order of their first member index;
 /// group schedules come from (and should be recycled back into) the
 /// workspace's schedule pool.
+///
+/// Delegates to [`try_fused_sweep`] with a token that never trips.
 pub fn fused_sweep(
     ctx: &SchedulingContext<'_>,
     configs: &[SchedulerConfig],
     ws: &mut SchedulerWorkspace,
 ) -> FusedOutcome {
+    match try_fused_sweep(ctx, configs, ws, &CancelToken::never()) {
+        Ok(outcome) => outcome,
+        Err(Cancelled) => unreachable!("a never-token cannot trip"),
+    }
+}
+
+/// [`fused_sweep`] with cooperative cancellation: each group iteration
+/// polls `cancel`, and a tripped token abandons the sweep — the live
+/// group, every pending forked group, and every already-finished group
+/// schedule return to the workspace pools, the scan/fork counts
+/// performed so far flush to the process-wide counters, and the call
+/// reports [`Cancelled`]. The workspace is then exactly as reusable as
+/// after a completed sweep (see the module docs).
+pub fn try_fused_sweep(
+    ctx: &SchedulingContext<'_>,
+    configs: &[SchedulerConfig],
+    ws: &mut SchedulerWorkspace,
+    cancel: &CancelToken,
+) -> Result<FusedOutcome, Cancelled> {
     let inst = ctx.instance();
     let n = inst.graph.len();
     let m = inst.network.len();
@@ -527,7 +582,7 @@ pub fn fused_sweep(
     let mut stats = FusedStats::default();
 
     if num_configs == 0 {
-        return FusedOutcome { groups: Vec::new(), stats, num_configs };
+        return Ok(FusedOutcome { groups: Vec::new(), stats, num_configs });
     }
     if n == 0 {
         // Every config trivially produces the same empty schedule.
@@ -537,7 +592,7 @@ pub fn fused_sweep(
             members: (0..num_configs).collect(),
             schedule: ws.take_schedule(0, m),
         }];
-        return FusedOutcome { groups, stats, num_configs };
+        return Ok(FusedOutcome { groups, stats, num_configs });
     }
 
     // The pin set is only materialized when some member reserves the
@@ -553,9 +608,22 @@ pub fn fused_sweep(
     let mut it = IterScratch::default();
     let mut finished: Vec<FusedGroup> = Vec::new();
     while let Some(mut grp) = pending.pop() {
-        run_group(ctx, configs, pins, &mut grp, ws, &mut it, &mut |child| {
-            pending.push(child)
-        });
+        let completed =
+            run_group(ctx, configs, pins, &mut grp, ws, &mut it, cancel, &mut |child| {
+                pending.push(child)
+            });
+        if !completed {
+            recycle_group(ws, grp);
+            for g in pending.drain(..) {
+                recycle_group(ws, g);
+            }
+            for fg in finished.drain(..) {
+                ws.recycle(fg.schedule);
+            }
+            note_window_scans(it.scans);
+            note_fork_events(it.forks);
+            return Err(Cancelled);
+        }
         let GroupState { members, sched, scratch, placed } = grp;
         debug_assert_eq!(placed, n, "fused group must place every task");
         ws.recycle_group_scratch(scratch);
@@ -568,7 +636,7 @@ pub fn fused_sweep(
     stats.fork_events = it.forks;
     note_window_scans(it.scans);
     note_fork_events(it.forks);
-    FusedOutcome { groups: finished, stats, num_configs }
+    Ok(FusedOutcome { groups: finished, stats, num_configs })
 }
 
 /// Shared work queue of the threaded sweep: live groups plus the count
@@ -594,18 +662,41 @@ struct WorkQueue {
 ///
 /// The caller supplies one workspace per desired thread — typically the
 /// same `--threads` pool the instance-level coordinator uses.
+///
+/// Delegates to [`try_fused_sweep_threaded`] with a token that never
+/// trips.
 pub fn fused_sweep_threaded(
     ctx: &SchedulingContext<'_>,
     configs: &[SchedulerConfig],
     workspaces: &mut [SchedulerWorkspace],
 ) -> FusedOutcome {
+    match try_fused_sweep_threaded(ctx, configs, workspaces, &CancelToken::never()) {
+        Ok(outcome) => outcome,
+        Err(Cancelled) => unreachable!("a never-token cannot trip"),
+    }
+}
+
+/// [`fused_sweep_threaded`] with cooperative cancellation. Every worker
+/// polls the shared `cancel` token per group iteration; the first
+/// worker that observes a trip drains the pending-group queue into its
+/// own pools (pools are interchangeable — recycling is buffer reuse,
+/// not state transfer), every other in-flight worker abandons its group
+/// at its own next poll, and the sweep terminates with every buffer
+/// pooled and [`Cancelled`] reported. Worker joins are bounded by one
+/// group iteration per worker after the trip.
+pub fn try_fused_sweep_threaded(
+    ctx: &SchedulingContext<'_>,
+    configs: &[SchedulerConfig],
+    workspaces: &mut [SchedulerWorkspace],
+    cancel: &CancelToken,
+) -> Result<FusedOutcome, Cancelled> {
     assert!(!workspaces.is_empty(), "fused_sweep_threaded needs at least one workspace");
     let inst = ctx.instance();
     let n = inst.graph.len();
     let m = inst.network.len();
     let num_configs = configs.len();
     if workspaces.len() == 1 || num_configs <= 1 || n == 0 {
-        return fused_sweep(ctx, configs, &mut workspaces[0]);
+        return try_fused_sweep(ctx, configs, &mut workspaces[0], cancel);
     }
 
     let mut stats = FusedStats::default();
@@ -621,10 +712,13 @@ pub fn fused_sweep_threaded(
     // u64 contributions are order-independent, so the stats stay
     // deterministic under any thread interleaving.
     let done: Mutex<(Vec<FusedGroup>, u64, u64)> = Mutex::new((Vec::new(), 0, 0));
+    // Set by the first worker that observes a tripped token; groups a
+    // racing worker still completed afterwards are recycled below.
+    let aborted = AtomicBool::new(false);
 
     std::thread::scope(|scope| {
         for ws in workspaces.iter_mut() {
-            let (queue, work_cv, done) = (&queue, &work_cv, &done);
+            let (queue, work_cv, done, aborted) = (&queue, &work_cv, &done, &aborted);
             scope.spawn(move || {
                 ws.exec.begin(n, m);
                 let mut it = IterScratch::default();
@@ -644,10 +738,39 @@ pub fn fused_sweep_threaded(
                         }
                     };
                     let Some(mut grp) = grp else { break };
-                    run_group(ctx, configs, pins, &mut grp, ws, &mut it, &mut |child| {
-                        queue.lock().unwrap().pending.push(child);
-                        work_cv.notify_one();
-                    });
+                    let completed = run_group(
+                        ctx,
+                        configs,
+                        pins,
+                        &mut grp,
+                        ws,
+                        &mut it,
+                        cancel,
+                        &mut |child| {
+                            queue.lock().unwrap().pending.push(child);
+                            work_cv.notify_one();
+                        },
+                    );
+                    if !completed {
+                        aborted.store(true, Ordering::Relaxed);
+                        recycle_group(ws, grp);
+                        // Drain still-queued groups into this worker's
+                        // pools so nothing leaks; other in-flight
+                        // workers abandon theirs at their next poll.
+                        let drained: Vec<GroupState> = {
+                            let mut q = queue.lock().unwrap();
+                            let d: Vec<GroupState> = q.pending.drain(..).collect();
+                            q.in_flight -= 1;
+                            if q.in_flight == 0 {
+                                work_cv.notify_all(); // sweep over
+                            }
+                            d
+                        };
+                        for g in drained {
+                            recycle_group(ws, g);
+                        }
+                        continue;
+                    }
                     let GroupState { members, sched, scratch, placed } = grp;
                     debug_assert_eq!(placed, n, "fused group must place every task");
                     ws.recycle_group_scratch(scratch);
@@ -667,13 +790,21 @@ pub fn fused_sweep_threaded(
     });
 
     let (mut finished, scans, forks) = done.into_inner().unwrap();
+    note_window_scans(scans);
+    note_fork_events(forks);
+    if aborted.load(Ordering::Relaxed) {
+        // Groups completed by workers racing the trip are still
+        // recycled; any workspace's pool will do.
+        for fg in finished.drain(..) {
+            workspaces[0].recycle(fg.schedule);
+        }
+        return Err(Cancelled);
+    }
     finished.sort_by_key(|grp| grp.members[0]);
     stats.final_groups = finished.len();
     stats.window_scans = scans;
     stats.fork_events = forks;
-    note_window_scans(scans);
-    note_fork_events(forks);
-    FusedOutcome { groups: finished, stats, num_configs }
+    Ok(FusedOutcome { groups: finished, stats, num_configs })
 }
 
 #[cfg(test)]
@@ -819,6 +950,74 @@ mod tests {
                 .map(|grp| (grp.members.as_slice(), grp.schedule.content_hash()))
                 .collect();
             assert_eq!(got, want, "{threads}-thread groups drifted from serial");
+        }
+    }
+
+    #[test]
+    fn cancelled_fused_sweep_recycles_and_next_sweep_matches() {
+        let inst = fork_join();
+        let configs = SchedulerConfig::all();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        let baseline = fused_sweep(&ctx, &configs, &mut ws);
+        let want_members: Vec<Vec<usize>> =
+            baseline.groups.iter().map(|g| g.members.clone()).collect();
+        let want_hashes: Vec<u64> =
+            baseline.groups.iter().map(|g| g.schedule.content_hash()).collect();
+        for grp in baseline.groups {
+            ws.recycle(grp.schedule);
+        }
+        // Abort at several depths, including before the first
+        // placement; after every abort the same workspace must host a
+        // sweep bit-identical to the baseline.
+        for k in [0u64, 1, 3, 7, 11] {
+            let tok = CancelToken::after_checks(k);
+            let aborted = try_fused_sweep(&ctx, &configs, &mut ws, &tok);
+            assert!(aborted.is_err(), "budget {k} must trip mid-sweep");
+            let again = fused_sweep(&ctx, &configs, &mut ws);
+            let members: Vec<Vec<usize>> =
+                again.groups.iter().map(|g| g.members.clone()).collect();
+            let hashes: Vec<u64> =
+                again.groups.iter().map(|g| g.schedule.content_hash()).collect();
+            assert_eq!(members, want_members, "post-cancel groups drifted (budget {k})");
+            assert_eq!(hashes, want_hashes, "post-cancel schedules drifted (budget {k})");
+            for grp in again.groups {
+                ws.recycle(grp.schedule);
+            }
+        }
+    }
+
+    #[test]
+    fn cancelled_threaded_sweep_terminates_and_pool_stays_reusable() {
+        let inst = fork_join();
+        let configs = SchedulerConfig::all();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut serial_ws = SchedulerWorkspace::new();
+        let serial = fused_sweep(&ctx, &configs, &mut serial_ws);
+        let want: Vec<(Vec<usize>, u64)> = serial
+            .groups
+            .iter()
+            .map(|g| (g.members.clone(), g.schedule.content_hash()))
+            .collect();
+
+        let mut pool: Vec<SchedulerWorkspace> =
+            (0..3).map(|_| SchedulerWorkspace::new()).collect();
+        // A pre-tripped token cancels immediately; a small budget trips
+        // mid-sweep on whichever worker polls it. Either way the sweep
+        // must terminate (no hung worker) with every buffer pooled.
+        for tok in [CancelToken::after_checks(0), CancelToken::after_checks(5)] {
+            let aborted = try_fused_sweep_threaded(&ctx, &configs, &mut pool, &tok);
+            assert!(aborted.is_err(), "tripped token must cancel the threaded sweep");
+            let again = fused_sweep_threaded(&ctx, &configs, &mut pool);
+            let got: Vec<(Vec<usize>, u64)> = again
+                .groups
+                .iter()
+                .map(|g| (g.members.clone(), g.schedule.content_hash()))
+                .collect();
+            assert_eq!(got, want, "post-cancel threaded sweep drifted from serial");
+            for grp in again.groups {
+                pool[0].recycle(grp.schedule);
+            }
         }
     }
 

@@ -51,6 +51,7 @@
 //! All three produce **bit-identical** schedules for every config
 //! (property-tested; pinned by the golden snapshots).
 
+pub mod cancel;
 mod compare;
 pub mod ctx;
 pub mod fused;
@@ -60,9 +61,13 @@ mod priority;
 mod window;
 pub mod workspace;
 
+pub use cancel::{CancelToken, Cancelled};
 pub use compare::CompareFn;
 pub use ctx::SchedulingContext;
-pub use fused::{fused_sweep, fused_sweep_threaded, FusedGroup, FusedOutcome, FusedStats};
+pub use fused::{
+    fused_sweep, fused_sweep_threaded, try_fused_sweep, try_fused_sweep_threaded, FusedGroup,
+    FusedOutcome, FusedStats,
+};
 pub use lookahead::LookaheadScheduler;
 pub(crate) use parametric::Entry as ReadyEntry;
 pub use parametric::ParametricScheduler;
@@ -202,6 +207,25 @@ impl SchedulerConfig {
         }
     }
 
+    /// The degraded-mode **portfolio**: the five named classics (HEFT,
+    /// CPoP, MCT, MET, Sufferage — Table I's corners of the component
+    /// cube), a small fixed set of strong, behaviourally-diverse
+    /// configs. The serve daemon sweeps only these when it downgrades a
+    /// request under overload (see [`crate::serve`]); the ROADMAP's
+    /// portfolio-scheduling direction builds on the same set. Each
+    /// portfolio answer is produced by the fused engine and therefore
+    /// bit-identical to that config's standalone
+    /// [`ParametricScheduler::schedule_into`] run.
+    pub fn portfolio() -> Vec<SchedulerConfig> {
+        vec![
+            Self::heft(),
+            Self::cpop(),
+            Self::mct(),
+            Self::met(),
+            Self::sufferage_classic(),
+        ]
+    }
+
     /// The paper's systematic name, with Table-I aliases for the classics
     /// (`HEFT`, `MCT`, `MET`, `Sufferage`). Format:
     /// `{EFT|EST|Quickest}_{Ins|App}[_CP]_{UR|AT|CR}[_Suf]`.
@@ -296,6 +320,20 @@ mod tests {
             }
         }
         assert_eq!(SchedulerConfig::ALL.to_vec(), want);
+    }
+
+    #[test]
+    fn portfolio_is_five_distinct_members_of_the_cube() {
+        let p = SchedulerConfig::portfolio();
+        assert_eq!(p.len(), 5);
+        let mut names: Vec<String> = p.iter().map(|c| c.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 5, "portfolio configs must be distinct");
+        for c in &p {
+            assert!(SchedulerConfig::ALL.contains(c), "{} is not in the cube", c.name());
+        }
+        assert_eq!(p[0], SchedulerConfig::heft(), "HEFT leads the portfolio");
     }
 
     #[test]

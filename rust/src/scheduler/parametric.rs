@@ -20,6 +20,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use super::cancel::{CancelToken, Cancelled};
 use super::ctx::SchedulingContext;
 use super::workspace::SchedulerWorkspace;
 use super::window::{
@@ -349,11 +350,35 @@ impl ParametricScheduler {
     /// KEEP IN SYNC: [`super::fused`]'s `apply` mirrors this loop's
     /// tail (placement + successor DAT fold + readiness pushes), and
     /// its sufferage handling mirrors the top-2 selection below.
+    ///
+    /// Delegates to [`ParametricScheduler::try_schedule_into`] with a
+    /// token that never trips.
     pub fn schedule_into(
         &self,
         ctx: &SchedulingContext<'_>,
         ws: &mut SchedulerWorkspace,
     ) -> Schedule {
+        match self.try_schedule_into(ctx, ws, &CancelToken::never()) {
+            Ok(sched) => sched,
+            Err(Cancelled) => unreachable!("a never-token cannot trip"),
+        }
+    }
+
+    /// [`ParametricScheduler::schedule_into`] with cooperative
+    /// cancellation: the loop polls `cancel` once per iteration, and a
+    /// tripped token aborts the run at that safe point — the partial
+    /// schedule is recycled back into the workspace pool and the call
+    /// returns [`Cancelled`]. The workspace is left exactly as clean as
+    /// after a completed run: the next `schedule_into` on it is
+    /// bit-identical to a fresh-workspace run and performs zero
+    /// buffer-growth events once warm (the cancellation property tests
+    /// and `rust/tests/integration_ctx.rs` pin both).
+    pub fn try_schedule_into(
+        &self,
+        ctx: &SchedulingContext<'_>,
+        ws: &mut SchedulerWorkspace,
+        cancel: &CancelToken,
+    ) -> Result<Schedule, Cancelled> {
         let inst = ctx.instance();
         let g = &inst.graph;
         let net = &inst.network;
@@ -361,7 +386,7 @@ impl ParametricScheduler {
         let m = net.len();
         let mut sched = ws.take_schedule(n, m);
         if n == 0 {
-            return sched;
+            return Ok(sched);
         }
 
         let prio = ctx.priorities(self.cfg.priority);
@@ -400,7 +425,12 @@ impl ParametricScheduler {
         let scan_cost = |pin: Option<NodeId>| if pin.is_some() { 1 } else { m as u64 };
 
         let mut scheduled = 0usize;
+        let mut cancelled = false;
         while let Some(Entry(_, Reverse(t))) = ready.pop() {
+            if cancel.is_cancelled() {
+                cancelled = true;
+                break;
+            }
             scans += scan_cost(pin_of(t));
             let choice_t =
                 self.choose_with(ctx, &sched, dat.row(t), exec.row(inst, t), pin_of(t));
@@ -459,9 +489,15 @@ impl ParametricScheduler {
                 }
             }
         }
-        debug_assert_eq!(scheduled, n, "list scheduling must place every task");
         super::fused::note_window_scans(scans);
-        sched
+        if cancelled {
+            // Pool return is the whole cleanup: `begin`/`reset` on the
+            // next run restores every buffer without growth.
+            ws.recycle(sched);
+            return Err(Cancelled);
+        }
+        debug_assert_eq!(scheduled, n, "list scheduling must place every task");
+        Ok(sched)
     }
 }
 
@@ -612,6 +648,32 @@ mod tests {
             assert_eq!(reused, reference, "{} dirty-workspace path drifted", cfg.name());
             ws.recycle(reused);
         }
+    }
+
+    #[test]
+    fn cancelled_run_recycles_and_next_run_is_bit_identical() {
+        let inst = fork_join();
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut ws = SchedulerWorkspace::new();
+        let s = SchedulerConfig::heft().build();
+        let want = s.schedule_reference(&inst);
+        // Abort at every possible iteration (budget k trips with k
+        // tasks placed); after each abort the same workspace must host
+        // a full run bit-identical to the reference.
+        for k in 0..5 {
+            let tok = CancelToken::after_checks(k);
+            let got = s.try_schedule_into(&ctx, &mut ws, &tok);
+            assert_eq!(got, Err(Cancelled), "budget {k} must trip mid-run");
+            let full = s.schedule_into(&ctx, &mut ws);
+            assert_eq!(full, want, "post-cancel run drifted (budget {k})");
+            ws.recycle(full);
+        }
+        // An ample budget never trips and completes normally.
+        let ok = s
+            .try_schedule_into(&ctx, &mut ws, &CancelToken::after_checks(1000))
+            .expect("ample budget must complete");
+        assert_eq!(ok, want);
+        ws.recycle(ok);
     }
 
     #[test]

@@ -109,9 +109,26 @@ pub fn write_response(
     body: &str,
     keep_alive: bool,
 ) -> io::Result<()> {
+    write_response_with(stream, status, body, keep_alive, None)
+}
+
+/// [`write_response`] with an optional `Retry-After: <seconds>` header —
+/// the daemon attaches one to every 429 (queue full) and 503 (shutting
+/// down) so well-behaved clients back off instead of hammering.
+pub fn write_response_with(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+    retry_after: Option<u64>,
+) -> io::Result<()> {
+    let retry = match retry_after {
+        Some(secs) => format!("Retry-After: {secs}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+         Content-Length: {}\r\n{retry}Connection: {}\r\n\r\n",
         reason(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
@@ -143,6 +160,18 @@ impl Client {
         path: &str,
         body: &str,
     ) -> io::Result<(u16, String)> {
+        let resp = self.request_detailed(method, path, body)?;
+        Ok((resp.status, resp.body))
+    }
+
+    /// [`Client::request`] keeping the response headers the daemon's
+    /// clients act on (today: `Retry-After`).
+    pub fn request_detailed(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> io::Result<Response> {
         let head = format!(
             "{method} {path} HTTP/1.1\r\nHost: ptgs\r\n\
              Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
@@ -155,7 +184,19 @@ impl Client {
     }
 }
 
-fn read_response(reader: &mut BufReader<TcpStream>) -> io::Result<(u16, String)> {
+/// One parsed response, as seen by the in-crate [`Client`].
+#[derive(Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Retry-After` header value in seconds, when the daemon sent one
+    /// (it does on every 429 and 503).
+    pub retry_after: Option<u64>,
+    /// Decoded response body (UTF-8 JSON).
+    pub body: String,
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> io::Result<Response> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
         return Err(malformed("eof before status line"));
@@ -166,6 +207,7 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> io::Result<(u16, String)>
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| malformed("malformed status line"))?;
     let mut content_length = 0usize;
+    let mut retry_after = None;
     loop {
         let mut header = String::new();
         if reader.read_line(&mut header)? == 0 {
@@ -181,13 +223,15 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> io::Result<(u16, String)>
                     .trim()
                     .parse()
                     .map_err(|_| malformed("bad Content-Length"))?;
+            } else if name.eq_ignore_ascii_case("retry-after") {
+                retry_after = value.trim().parse().ok();
             }
         }
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
     let body = String::from_utf8(body).map_err(|_| malformed("body not UTF-8"))?;
-    Ok((status, body))
+    Ok(Response { status, retry_after, body })
 }
 
 /// One-shot convenience: connect, send one request, return the reply.
@@ -228,6 +272,28 @@ mod tests {
         assert_eq!((status, body.as_str()), (200, "{\"x\":1}"));
         let (status, body) = client.request("POST", "/echo", "").unwrap();
         assert_eq!((status, body.as_str()), (200, ""));
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn retry_after_header_round_trips() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut stream = stream;
+            let _ = read_request(&mut reader).unwrap().unwrap();
+            write_response_with(&mut stream, 429, "{}", true, Some(7)).unwrap();
+            let _ = read_request(&mut reader).unwrap().unwrap();
+            write_response_with(&mut stream, 200, "{}", true, None).unwrap();
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.request_detailed("POST", "/x", "").unwrap();
+        assert_eq!((resp.status, resp.retry_after), (429, Some(7)));
+        let resp = client.request_detailed("POST", "/x", "").unwrap();
+        assert_eq!((resp.status, resp.retry_after), (200, None));
         drop(client);
         server.join().unwrap();
     }

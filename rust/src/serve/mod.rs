@@ -28,6 +28,29 @@
 //! `GET /healthz`, and `POST /shutdown` — the clean-shutdown control
 //! path (a pure-std process cannot trap SIGTERM; orchestrators should
 //! POST /shutdown and then wait for exit).
+//!
+//! Overload robustness (see ARCHITECTURE.md §Service robustness):
+//!
+//! * **Cooperative cancellation** — every job carries a
+//!   [`crate::scheduler::CancelToken`] chained off the server's
+//!   shutdown token with the request deadline attached, and the sweep
+//!   polls it once per scheduling iteration. A request that expires
+//!   *mid-sweep* aborts at the next iteration (408), its worker's warm
+//!   workspace is returned to clean via pure pool-recycling, and the
+//!   next request on that worker allocates nothing new.
+//! * **Graceful degradation** — when the queue backlog crosses
+//!   [`ServeOptions::degrade_threshold`], new requests downgrade to a
+//!   portfolio fast path ([`SchedulerConfig::portfolio`]): five strong
+//!   configs instead of the full sweep, answered with `degraded: true`
+//!   and never cached. The shed ladder is full sweep → portfolio →
+//!   429 + `Retry-After`.
+//! * **Bounded drain** — shutdown stops accepting, drains queued work,
+//!   and gives in-flight sweeps [`ServeOptions::drain_grace`] before a
+//!   watchdog cancels them; live connections are then waited out under
+//!   the same bound, so shutdown-while-inflight cannot hang the
+//!   process. Socket I/O is bounded by [`ServeOptions::io_timeout`]
+//!   (both directions), so slow-loris readers and writers expire
+//!   instead of pinning connection threads.
 
 pub mod cache;
 pub mod http;
@@ -41,7 +64,7 @@ pub use stats::{LatencySummary, ServeStats};
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -51,7 +74,7 @@ use crate::analysis::dedup_rows;
 use crate::benchmark::{Harness, HarnessOptions};
 use crate::instance::ProblemInstance;
 use crate::ranks::RankBackend;
-use crate::scheduler::{fused, SchedulerConfig, SchedulerWorkspace};
+use crate::scheduler::{fused, CancelToken, Cancelled, SchedulerConfig, SchedulerWorkspace};
 use crate::util::error::{Context, Result};
 use crate::util::{panic_message, FromJson, Value};
 
@@ -72,9 +95,24 @@ pub struct ServeOptions {
     pub cache_size: usize,
     /// Scheduler set swept per request.
     pub schedulers: Vec<SchedulerConfig>,
-    /// Honor the `debug_sleep_ms` / `debug_panic` request fields —
-    /// deterministic hooks for exercising the backpressure, timeout,
-    /// and panic-containment paths in tests. Off in production.
+    /// Queue backlog at which new requests degrade to the portfolio
+    /// fast path ([`SchedulerConfig::portfolio`]) instead of the full
+    /// sweep: `queue.len() >= degrade_threshold` at enqueue time.
+    /// `0` disables degradation (the `--degrade-threshold` flag).
+    pub degrade_threshold: usize,
+    /// Per-direction socket timeout on connection streams (the
+    /// `--io-timeout-ms` flag): idle keep-alive readers, slow-loris
+    /// writers, and stalled response writes all expire under it
+    /// instead of pinning a connection thread.
+    pub io_timeout: Duration,
+    /// How long shutdown lets in-flight sweeps and live connections
+    /// drain before the watchdog cancels the former and stops waiting
+    /// on the latter. Bounds [`Server::wait`] after shutdown.
+    pub drain_grace: Duration,
+    /// Honor the `debug_sleep_ms` / `debug_panic` /
+    /// `debug_cancel_after` request fields — deterministic hooks for
+    /// exercising the backpressure, timeout, cancellation, and
+    /// panic-containment paths in tests. Off in production.
     pub debug: bool,
 }
 
@@ -87,6 +125,9 @@ impl Default for ServeOptions {
             default_timeout: Duration::from_millis(30_000),
             cache_size: 256,
             schedulers: SchedulerConfig::all(),
+            degrade_threshold: 0,
+            io_timeout: Duration::from_secs(30),
+            drain_grace: Duration::from_secs(5),
             debug: false,
         }
     }
@@ -99,6 +140,9 @@ enum JobReply {
     Ok(Arc<Value>),
     /// The job panicked; contained, with this message.
     Failed(String),
+    /// The sweep was cancelled mid-run (deadline expired, a debug
+    /// cancel hook tripped, or shutdown's drain grace ran out).
+    Cancelled,
 }
 
 /// One queued `/schedule` request.
@@ -106,6 +150,12 @@ enum JobReply {
 struct Job {
     inst: ProblemInstance,
     deadline: Instant,
+    /// Cooperative-cancellation token the sweep polls per iteration:
+    /// a child of the server's shutdown token carrying this request's
+    /// deadline (plus the `debug_cancel_after` budget when set).
+    cancel: CancelToken,
+    /// Run the portfolio fast path instead of the full sweep.
+    degraded: bool,
     debug_sleep_ms: u64,
     debug_panic: bool,
     /// Rendezvous back to the connection thread. Capacity 1, so a
@@ -122,6 +172,14 @@ struct Inner {
     cache: ResponseCache,
     stats: ServeStats,
     shutdown: AtomicBool,
+    /// Root of every job's cancellation chain. Cancelled only by the
+    /// shutdown watchdog once [`ServeOptions::drain_grace`] runs out —
+    /// a prompt shutdown never aborts in-flight work.
+    cancel_root: CancelToken,
+    /// Live connection threads (incremented by the acceptor *before*
+    /// spawning, decremented by a drop guard in the thread), so
+    /// shutdown can wait connections out under the drain bound.
+    conns: AtomicUsize,
     local_addr: SocketAddr,
 }
 
@@ -145,6 +203,8 @@ impl Server {
             cache: ResponseCache::new(opts.cache_size),
             stats: ServeStats::default(),
             shutdown: AtomicBool::new(false),
+            cancel_root: CancelToken::never(),
+            conns: AtomicUsize::new(0),
             local_addr,
             opts,
         });
@@ -178,13 +238,46 @@ impl Server {
         request_shutdown(&self.inner);
     }
 
-    /// Block until the acceptor and every worker have exited.
+    /// Block until the acceptor and every worker have exited, then
+    /// wait out live connection threads — all under a bounded drain.
+    ///
+    /// The acceptor exits only on shutdown, so everything after its
+    /// join is drain logic: a watchdog gives queued + in-flight work
+    /// [`ServeOptions::drain_grace`] and then cancels the root token,
+    /// aborting any still-running sweep cooperatively (counted in
+    /// `cancelled_requests`). Workers therefore join within the grace
+    /// plus one cancellation poll interval, and shutdown-while-inflight
+    /// cannot hang. Detached connection threads get the same bound:
+    /// with I/O capped by [`ServeOptions::io_timeout`] they normally
+    /// finish their last write and exit; a pathological peer merely
+    /// costs the grace, never a hang.
     pub fn wait(&mut self) {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
+        let drained = Arc::new(AtomicBool::new(false));
+        let watchdog = {
+            let inner = Arc::clone(&self.inner);
+            let drained = Arc::clone(&drained);
+            std::thread::spawn(move || {
+                let deadline = Instant::now() + inner.opts.drain_grace;
+                while !drained.load(Ordering::SeqCst) {
+                    if Instant::now() >= deadline {
+                        inner.cancel_root.cancel();
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            })
+        };
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        drained.store(true, Ordering::SeqCst);
+        let _ = watchdog.join();
+        let conn_deadline = Instant::now() + self.inner.opts.drain_grace;
+        while self.inner.conns.load(Ordering::SeqCst) > 0 && Instant::now() < conn_deadline {
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 
@@ -219,16 +312,44 @@ fn accept_loop(listener: &TcpListener, inner: &Arc<Inner>) {
         }
         let Ok(stream) = conn else { continue };
         let inner = Arc::clone(inner);
+        // Counted before the spawn so a shutdown racing the thread's
+        // startup still sees it in the drain accounting.
+        inner.conns.fetch_add(1, Ordering::SeqCst);
         // Detached: each connection thread dies with its socket (EOF,
-        // read timeout, or write failure) and holds only an Arc.
+        // I/O timeout, or write failure) and holds only an Arc.
         std::thread::spawn(move || connection_loop(stream, &inner));
     }
 }
 
+/// Decrements the live-connection count however the thread exits
+/// (clean EOF, timeout, write failure, or an unexpected unwind).
+struct ConnGuard<'a>(&'a Inner);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// `Retry-After` seconds attached to shed responses: 429 means the
+/// queue is full *right now* (retry almost immediately), 503 means the
+/// daemon is going away (give the orchestrator time to replace it).
+fn retry_after_for(status: u16) -> Option<u64> {
+    match status {
+        429 => Some(1),
+        503 => Some(5),
+        _ => None,
+    }
+}
+
 fn connection_loop(stream: TcpStream, inner: &Arc<Inner>) {
-    // Idle keep-alive connections expire instead of pinning threads
-    // (and a silent client cannot hold shutdown hostage).
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _guard = ConnGuard(inner);
+    // Bounded I/O in both directions: idle keep-alive readers, partial
+    // slow-loris writers, and stalled response writes all expire
+    // instead of pinning this thread (and a silent client cannot hold
+    // shutdown hostage). `--io-timeout-ms` tunes the bound.
+    let _ = stream.set_read_timeout(Some(inner.opts.io_timeout));
+    let _ = stream.set_write_timeout(Some(inner.opts.io_timeout));
     let mut reader = match stream.try_clone() {
         Ok(s) => io::BufReader::new(s),
         Err(_) => return,
@@ -245,7 +366,13 @@ fn connection_loop(stream: TcpStream, inner: &Arc<Inner>) {
             Err(_) => return, // timeout / reset
         };
         let (status, body) = route(inner, &req);
-        let written = http::write_response(&mut stream, status, &body, req.keep_alive);
+        let written = http::write_response_with(
+            &mut stream,
+            status,
+            &body,
+            req.keep_alive,
+            retry_after_for(status),
+        );
         if req.method == "POST" && req.path == "/shutdown" {
             // Respond first, then bring the daemon down.
             request_shutdown(inner);
@@ -279,16 +406,17 @@ fn handle_schedule(inner: &Arc<Inner>, body: &str) -> (u16, String) {
     if let Some(payload) = inner.cache.get(key) {
         // Byte-identical resubmission: scheduling is deterministic, so
         // the stored payload IS the answer — no parsing, no warm-up,
-        // no sweep.
+        // no sweep. Only full-sweep answers ever enter the cache, so a
+        // hit is never degraded.
         inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
         inner.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
-        let resp = envelope(&payload, true, t0);
+        let resp = envelope(&payload, true, false, t0);
         inner.stats.record_latency(elapsed_us(t0));
         return (200, resp);
     }
     inner.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
 
-    let (inst, timeout, debug_sleep_ms, debug_panic) = match parse_schedule_request(inner, body) {
+    let parsed = match parse_schedule_request(inner, body) {
         Ok(parsed) => parsed,
         Err(msg) => {
             inner.stats.requests_bad.fetch_add(1, Ordering::Relaxed);
@@ -296,9 +424,27 @@ fn handle_schedule(inner: &Arc<Inner>, body: &str) -> (u16, String) {
         }
     };
 
-    let deadline = t0 + timeout;
+    // Degradation ladder, step two (step three is the 429 below): with
+    // a backlog at or past the threshold, answer from the portfolio
+    // fast path rather than queueing another full sweep.
+    let degraded = inner.opts.degrade_threshold > 0
+        && inner.queue.len() >= inner.opts.degrade_threshold;
+
+    let deadline = t0 + parsed.timeout;
+    let mut cancel = inner.cancel_root.child_with_deadline(deadline);
+    if parsed.debug_cancel_after > 0 {
+        cancel = cancel.child_after_checks(parsed.debug_cancel_after);
+    }
     let (reply_tx, reply_rx) = sync_channel(1);
-    let job = Job { inst, deadline, debug_sleep_ms, debug_panic, reply: reply_tx };
+    let job = Job {
+        inst: parsed.inst,
+        deadline,
+        cancel: cancel.clone(),
+        degraded,
+        debug_sleep_ms: parsed.debug_sleep_ms,
+        debug_panic: parsed.debug_panic,
+        reply: reply_tx,
+    };
     if let Err((_, e)) = inner.queue.try_push(job) {
         return match e {
             PushError::Full => {
@@ -310,9 +456,15 @@ fn handle_schedule(inner: &Arc<Inner>, body: &str) -> (u16, String) {
     }
     match reply_rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
         Ok(JobReply::Ok(payload)) => {
-            inner.cache.insert(key, Arc::clone(&payload));
+            if degraded {
+                inner.stats.requests_degraded.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // Degraded answers are never cached: the same body must
+                // get the full sweep once the pressure clears.
+                inner.cache.insert(key, Arc::clone(&payload));
+            }
             inner.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
-            let resp = envelope(&payload, false, t0);
+            let resp = envelope(&payload, false, degraded, t0);
             inner.stats.record_latency(elapsed_us(t0));
             (200, resp)
         }
@@ -320,10 +472,23 @@ fn handle_schedule(inner: &Arc<Inner>, body: &str) -> (u16, String) {
             inner.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
             (500, error_body(&format!("scheduling failed: {msg}")))
         }
+        Ok(JobReply::Cancelled) => {
+            // Reachable before the deadline only via shutdown's drain
+            // watchdog or the deterministic debug cancel hook.
+            if inner.shutdown.load(Ordering::SeqCst) {
+                (503, error_body("shutting down"))
+            } else {
+                inner.stats.requests_timed_out.fetch_add(1, Ordering::Relaxed);
+                (408, error_body("cancelled mid-sweep"))
+            }
+        }
         Err(RecvTimeoutError::Timeout) => {
             // The job may still be queued (its worker will notice the
-            // expired deadline and skip it) or mid-sweep (the reply
-            // lands in the rendezvous buffer and is dropped with it).
+            // expired deadline and skip it) or mid-sweep — the deadline
+            // baked into its token trips at the next iteration poll, so
+            // the worker aborts instead of finishing a sweep nobody is
+            // waiting for. Cancel explicitly too, for belt and braces.
+            cancel.cancel();
             inner.stats.requests_timed_out.fetch_add(1, Ordering::Relaxed);
             (408, error_body("deadline exceeded"))
         }
@@ -331,7 +496,16 @@ fn handle_schedule(inner: &Arc<Inner>, body: &str) -> (u16, String) {
     }
 }
 
-type ParsedRequest = (ProblemInstance, Duration, u64, bool);
+/// The validated fields of one `/schedule` body.
+struct ParsedRequest {
+    inst: ProblemInstance,
+    timeout: Duration,
+    debug_sleep_ms: u64,
+    debug_panic: bool,
+    /// Cancel the job's token on its nth cooperative poll — the
+    /// deterministic mid-sweep-cancellation hook (debug mode only).
+    debug_cancel_after: u64,
+}
 
 fn parse_schedule_request(inner: &Inner, body: &str) -> std::result::Result<ParsedRequest, String> {
     let doc = crate::util::parse(body)?;
@@ -347,12 +521,14 @@ fn parse_schedule_request(inner: &Inner, body: &str) -> std::result::Result<Pars
             Duration::from_millis(ms)
         }
     };
-    let (mut debug_sleep_ms, mut debug_panic) = (0, false);
+    let (mut debug_sleep_ms, mut debug_panic, mut debug_cancel_after) = (0, false, 0);
     if inner.opts.debug {
         debug_sleep_ms = doc.get("debug_sleep_ms").and_then(Value::as_u64).unwrap_or(0);
         debug_panic = doc.get("debug_panic").and_then(Value::as_bool).unwrap_or(false);
+        debug_cancel_after =
+            doc.get("debug_cancel_after").and_then(Value::as_u64).unwrap_or(0);
     }
-    Ok((inst, timeout, debug_sleep_ms, debug_panic))
+    Ok(ParsedRequest { inst, timeout, debug_sleep_ms, debug_panic, debug_cancel_after })
 }
 
 /// Worker: one warm [`SchedulerWorkspace`] for the thread's lifetime.
@@ -367,15 +543,32 @@ fn worker_loop(inner: &Inner) {
         backend: RankBackend::Native,
         options: HarnessOptions::default(),
     };
+    // The degraded fast path's fixed scheduler set. Same fused engine,
+    // same workspace: its answers are bit-identical to each portfolio
+    // config's standalone run (the fused-sweep contract), just five
+    // configs instead of the full sweep.
+    let portfolio = Harness {
+        schedulers: SchedulerConfig::portfolio(),
+        backend: RankBackend::Native,
+        options: HarnessOptions::default(),
+    };
     while let Some(job) = inner.queue.pop() {
         if Instant::now() >= job.deadline {
             // Expired while queued: the requester already answered 408;
             // don't burn a sweep on a result nobody is waiting for.
             continue;
         }
-        let outcome = catch_unwind(AssertUnwindSafe(|| run_schedule_job(&harness, &mut ws, &job)));
+        let h = if job.degraded { &portfolio } else { &harness };
+        let outcome = catch_unwind(AssertUnwindSafe(|| run_schedule_job(h, &mut ws, &job)));
         let reply = match outcome {
-            Ok(payload) => JobReply::Ok(Arc::new(payload)),
+            Ok(Ok(payload)) => JobReply::Ok(Arc::new(payload)),
+            Ok(Err(Cancelled)) => {
+                // The sweep aborted cooperatively and returned every
+                // buffer to the pools: `ws` stays warm for the next
+                // job — no replacement, no new allocations.
+                inner.stats.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                JobReply::Cancelled
+            }
             Err(payload) => {
                 // Same containment policy as `Coordinator::run_jobs`:
                 // the daemon must outlive any one bad request. The
@@ -392,15 +585,31 @@ fn worker_loop(inner: &Inner) {
 
 /// Run one request's sweep and shape the deterministic result payload
 /// (what the cache stores; the per-response envelope wraps it).
-fn run_schedule_job(harness: &Harness, ws: &mut SchedulerWorkspace, job: &Job) -> Value {
+/// [`Cancelled`] means the job's token tripped mid-run and the
+/// workspace was already returned to clean by the sweep itself.
+fn run_schedule_job(
+    harness: &Harness,
+    ws: &mut SchedulerWorkspace,
+    job: &Job,
+) -> std::result::Result<Value, Cancelled> {
     if job.debug_sleep_ms > 0 {
-        std::thread::sleep(Duration::from_millis(job.debug_sleep_ms));
+        // Sliced so a cancelled or shutdown-drained request frees its
+        // worker promptly instead of sleeping out the full duration.
+        let mut left = Duration::from_millis(job.debug_sleep_ms);
+        while !left.is_zero() {
+            if job.cancel.is_cancelled() {
+                return Err(Cancelled);
+            }
+            let step = left.min(Duration::from_millis(10));
+            std::thread::sleep(step);
+            left -= step;
+        }
     }
     if job.debug_panic {
         panic!("debug_panic requested");
     }
     let inst = &job.inst;
-    let records = harness.run_instance_ws(&inst.name, 0, inst, ws);
+    let records = harness.try_run_instance_ws(&inst.name, 0, inst, ws, &job.cancel)?;
     let dedup = dedup_rows(&records);
     let results = Value::Arr(
         records
@@ -431,22 +640,24 @@ fn run_schedule_job(harness: &Harness, ws: &mut SchedulerWorkspace, job: &Job) -
         ),
         None => (0, Value::Arr(Vec::new())),
     };
-    Value::obj(vec![
+    Ok(Value::obj(vec![
         ("instance", Value::Str(inst.name.clone())),
         ("num_tasks", Value::Num(inst.graph.len() as f64)),
         ("num_nodes", Value::Num(inst.network.len() as f64)),
         ("results", results),
         ("distinct_schedules", Value::Num(distinct as f64)),
         ("equivalence_classes", classes),
-    ])
+    ]))
 }
 
 /// Wrap the deterministic payload with the per-response fields. Only
-/// the envelope varies between a fresh and a cached answer.
-fn envelope(payload: &Value, cached: bool, t0: Instant) -> String {
+/// the envelope varies between a fresh, a cached, and a degraded
+/// answer; `degraded: true` marks a portfolio fast-path response.
+fn envelope(payload: &Value, cached: bool, degraded: bool, t0: Instant) -> String {
     Value::obj(vec![
         ("ok", Value::Bool(true)),
         ("cached", Value::Bool(cached)),
+        ("degraded", Value::Bool(degraded)),
         ("latency_us", Value::Num(elapsed_us(t0) as f64)),
         ("payload", payload.clone()),
     ])
@@ -476,6 +687,9 @@ fn stats_json(inner: &Inner) -> Value {
         ("requests_timed_out", count(&s.requests_timed_out)),
         ("requests_failed", count(&s.requests_failed)),
         ("requests_bad", count(&s.requests_bad)),
+        ("degraded_requests", count(&s.requests_degraded)),
+        ("cancelled_requests", count(&s.requests_cancelled)),
+        ("connections_live", Value::Num(inner.conns.load(Ordering::SeqCst) as f64)),
         ("cache_entries", Value::Num(inner.cache.len() as f64)),
         ("cache_hits", count(&s.cache_hits)),
         ("cache_misses", count(&s.cache_misses)),
@@ -515,11 +729,18 @@ mod tests {
     }
 
     fn tiny_body() -> String {
+        body_with(Vec::new())
+    }
+
+    /// A valid `/schedule` body with extra top-level request fields.
+    fn body_with(extra: Vec<(&str, Value)>) -> String {
         use crate::util::ToJson;
         let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
         let mut rng = spec.instance_rng(0);
         let inst = spec.generate_one(&mut rng);
-        Value::obj(vec![("instance", inst.to_json())]).to_string()
+        let mut fields = vec![("instance", inst.to_json())];
+        fields.extend(extra);
+        Value::obj(fields).to_string()
     }
 
     #[test]
@@ -556,6 +777,9 @@ mod tests {
             "requests_timed_out",
             "requests_failed",
             "requests_bad",
+            "degraded_requests",
+            "cancelled_requests",
+            "connections_live",
             "cache_entries",
             "cache_hits",
             "cache_misses",
@@ -571,6 +795,170 @@ mod tests {
         lat.req_u64("p50_us").unwrap();
         lat.req_u64("p99_us").unwrap();
         server.shutdown();
+    }
+
+    #[test]
+    fn debug_cancel_hook_aborts_mid_sweep_with_408() {
+        // cache_size 0 so every request actually reaches the worker —
+        // the post-cancellation 200 then proves the workspace survived.
+        let mut server = Server::start(ServeOptions {
+            cache_size: 0,
+            debug: true,
+            ..tiny_options()
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &tiny_body()).unwrap();
+        assert_eq!(status, 200, "warm-up: {body}");
+
+        // Budget 1: the sweep's second cooperative poll trips the token
+        // — a deterministic mid-sweep abort, no wall clock involved.
+        let cancel_body = body_with(vec![("debug_cancel_after", Value::Num(1.0))]);
+        let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &cancel_body).unwrap();
+        assert_eq!(status, 408, "{body}");
+        assert!(body.contains("cancelled"), "{body}");
+        assert_eq!(server.stats().requests_cancelled.load(Ordering::Relaxed), 1);
+
+        // Same worker, same workspace: the next full request succeeds.
+        let (status, body) = http::roundtrip(&addr, "POST", "/schedule", &tiny_body()).unwrap();
+        assert_eq!(status, 200, "worker must survive a cancelled sweep: {body}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn pressure_degrades_to_portfolio_and_skips_the_cache() {
+        let mut server = Server::start(ServeOptions {
+            degrade_threshold: 1,
+            debug: true,
+            ..tiny_options()
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        // Occupy the single worker, then park one job in the queue so
+        // the next enqueue sees a backlog at the threshold.
+        let spawn_sleeper = |ms: f64| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = body_with(vec![("debug_sleep_ms", Value::Num(ms))]);
+                http::roundtrip(&addr, "POST", "/schedule", &body).unwrap()
+            })
+        };
+        let a = spawn_sleeper(500.0);
+        std::thread::sleep(Duration::from_millis(50));
+        let b = spawn_sleeper(1.0);
+        for _ in 0..400 {
+            if server.inner.queue.len() >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(server.inner.queue.len() >= 1, "sleeper never queued");
+
+        let degraded_body = tiny_body();
+        let (status, body) =
+            http::roundtrip(&addr, "POST", "/schedule", &degraded_body).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let doc = crate::util::parse(&body).unwrap();
+        assert!(doc.req_bool("degraded").unwrap(), "{body}");
+        let results = doc.req("payload").unwrap().req_arr("results").unwrap();
+        let mut got: Vec<String> = results
+            .iter()
+            .map(|r| r.req_str("scheduler").unwrap().to_string())
+            .collect();
+        let mut want: Vec<String> =
+            SchedulerConfig::portfolio().iter().map(|c| c.name()).collect();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want, "portfolio answer: {body}");
+        assert_eq!(server.stats().requests_degraded.load(Ordering::Relaxed), 1);
+        a.join().unwrap();
+        b.join().unwrap();
+
+        // The degraded answer must not have been cached: the same body
+        // under no pressure gets the fresh full sweep.
+        let (status, body) =
+            http::roundtrip(&addr, "POST", "/schedule", &degraded_body).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let doc = crate::util::parse(&body).unwrap();
+        assert!(!doc.req_bool("degraded").unwrap(), "{body}");
+        assert!(!doc.req_bool("cached").unwrap(), "degraded reply leaked into cache: {body}");
+        let results = doc.req("payload").unwrap().req_arr("results").unwrap();
+        assert_eq!(results.len(), 2, "full sweep over tiny_options' two configs: {body}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn full_queue_sheds_with_retry_after() {
+        let mut server = Server::start(ServeOptions {
+            queue_depth: 1,
+            debug: true,
+            ..tiny_options()
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let sleeper = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = body_with(vec![("debug_sleep_ms", Value::Num(500.0))]);
+                http::roundtrip(&addr, "POST", "/schedule", &body).unwrap()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        let filler = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = body_with(vec![("debug_sleep_ms", Value::Num(1.0))]);
+                http::roundtrip(&addr, "POST", "/schedule", &body).unwrap()
+            })
+        };
+        for _ in 0..400 {
+            if server.inner.queue.len() >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut client = http::Client::connect(&addr).unwrap();
+        let resp = client.request_detailed("POST", "/schedule", &tiny_body()).unwrap();
+        assert_eq!(resp.status, 429, "{}", resp.body);
+        assert_eq!(resp.retry_after, Some(1), "429 must carry Retry-After");
+        assert_eq!(server.stats().requests_rejected.load(Ordering::Relaxed), 1);
+        sleeper.join().unwrap();
+        filler.join().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_while_inflight_is_bounded_by_drain_grace() {
+        let mut server = Server::start(ServeOptions {
+            drain_grace: Duration::from_millis(100),
+            debug: true,
+            ..tiny_options()
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        // Park a job that would otherwise pin its worker for 60 s.
+        let inflight = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = body_with(vec![("debug_sleep_ms", Value::Num(60_000.0))]);
+                http::roundtrip(&addr, "POST", "/schedule", &body)
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "drain must be bounded by the grace, not the job ({:?})",
+            t0.elapsed()
+        );
+        assert_eq!(server.stats().requests_cancelled.load(Ordering::Relaxed), 1);
+        // The cancelled requester was answered (503 during shutdown),
+        // not left hanging on a dead socket.
+        let (status, _) = inflight.join().unwrap().expect("in-flight request must get a reply");
+        assert_eq!(status, 503);
     }
 
     #[test]

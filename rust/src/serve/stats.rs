@@ -33,6 +33,13 @@ pub struct ServeStats {
     pub requests_failed: AtomicU64,
     /// Requests refused as malformed (400).
     pub requests_bad: AtomicU64,
+    /// Requests answered 200 by the degraded portfolio fast path
+    /// (queue pressure crossed [`crate::serve::ServeOptions::degrade_threshold`]).
+    pub requests_degraded: AtomicU64,
+    /// Sweeps aborted mid-run by cooperative cancellation (the
+    /// requester's deadline expired mid-sweep, or shutdown's drain
+    /// grace ran out). Counted by the worker at the abort point.
+    pub requests_cancelled: AtomicU64,
     /// Responses served from the content-hash cache.
     pub cache_hits: AtomicU64,
     /// Responses computed by a worker (cache miss).

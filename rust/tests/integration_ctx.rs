@@ -325,6 +325,56 @@ fn serve_worker_workspace_is_warm_across_requests() {
     server.shutdown();
 }
 
+/// The cancellation extension of the workspace contract (PR 9's
+/// acceptance criterion): a request whose token trips **mid-sweep**
+/// answers 408 without running the sweep to completion, returns every
+/// pooled buffer on the abort path, and the same worker then serves
+/// the next full request — with zero new buffer allocations across
+/// the cancelled run *and* the follow-up. The `debug_cancel_after`
+/// hook makes the mid-sweep trip deterministic (a poll-count budget,
+/// no wall clock).
+#[test]
+fn serve_worker_stays_warm_across_a_cancelled_request() {
+    use ptgs::serve::{http, ServeOptions, Server};
+    use ptgs::util::{ToJson, Value};
+
+    let _gate = COUNTER_GATE.lock().unwrap();
+    let mut server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        cache_size: 0,
+        debug: true,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let inst = instances(1).pop().unwrap();
+    let body = Value::obj(vec![("instance", inst.to_json())]).to_string();
+    let cancel_body = Value::obj(vec![
+        ("instance", inst.to_json()),
+        ("debug_cancel_after", Value::Num(2.0)),
+    ])
+    .to_string();
+
+    for _ in 0..2 {
+        let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", &body).unwrap();
+        assert_eq!(status, 200, "warm-up request failed: {resp}");
+    }
+
+    let before = SchedulerWorkspace::buffer_allocations();
+    let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", &cancel_body).unwrap();
+    assert_eq!(status, 408, "mid-sweep cancellation must answer 408: {resp}");
+    let (status, resp) = http::roundtrip(&addr, "POST", "/schedule", &body).unwrap();
+    assert_eq!(status, 200, "post-cancellation request failed: {resp}");
+    assert_eq!(
+        SchedulerWorkspace::buffer_allocations() - before,
+        0,
+        "a cancelled sweep must leave the warm worker allocation-free: \
+         abort cleanup is pure pool-return"
+    );
+    server.shutdown();
+}
+
 /// The frontier-retirement memory contract, deep-chain side: DAT rows
 /// retire the moment their task is placed, so on a 500-task chain the
 /// peak number of simultaneously pooled rows is O(1) — one live

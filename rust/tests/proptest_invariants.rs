@@ -11,8 +11,9 @@ use ptgs::network::Network;
 use ptgs::ranks::{native, RankBackend};
 use ptgs::schedule::EPS;
 use ptgs::scheduler::{
-    data_available_time, fused_sweep, window_append_only, window_insertion,
-    window_insertion_indexed, SchedulerConfig, SchedulerWorkspace, SchedulingContext,
+    data_available_time, fused_sweep, try_fused_sweep, window_append_only, window_insertion,
+    window_insertion_indexed, CancelToken, Cancelled, FusedOutcome, SchedulerConfig,
+    SchedulerWorkspace, SchedulingContext,
 };
 use ptgs::sim::{
     perturbed_instance, simulate, FaultModel, FaultTrace, NoiseTrace, Perturbation,
@@ -228,6 +229,128 @@ fn prop_fused_sweep_equals_per_config_all_72() {
         };
         for (i, inst) in spec.generate().iter().enumerate() {
             check(inst, &format!("{structure:?} instance {i}"));
+        }
+    }
+}
+
+/// Compare two fused outcomes per config: every config's group schedule
+/// in `got` must be bit-identical to its group schedule in `want`.
+fn assert_fused_outcomes_agree(
+    got: &FusedOutcome,
+    want: &FusedOutcome,
+    configs: &[SchedulerConfig],
+    label: &str,
+) {
+    let mg = got.group_of();
+    let mw = want.group_of();
+    for (i, cfg) in configs.iter().enumerate() {
+        assert_eq!(
+            got.groups[mg[i]].schedule,
+            want.groups[mw[i]].schedule,
+            "{label}: {} drifted",
+            cfg.name()
+        );
+    }
+}
+
+/// **Cancellation keystone**: a sweep aborted by a tripped
+/// [`CancelToken`] leaves its workspace fully reusable — the next,
+/// uncancelled sweep on that same (dirty, abort-scarred) workspace is
+/// bit-identical to a sweep on a brand-new workspace, for cancellation
+/// points spread across the whole sweep (the poll-budget token trips at
+/// exact cooperative-check counts, so every abort site is reachable).
+/// This is what licenses `ptgs serve` answering 408 mid-sweep and
+/// keeping the worker's workspace warm for the next request.
+#[test]
+fn prop_cancelled_sweep_leaves_workspace_reusable() {
+    let configs = SchedulerConfig::portfolio();
+    let mut saw_cancel = false;
+    let mut saw_completion = false;
+    for case in 0..10u64 {
+        let mut rng = Rng::seeded(0xCA2C_E1 + case);
+        let inst = arbitrary_instance(&mut rng);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let mut fresh = SchedulerWorkspace::new();
+        let want = fused_sweep(&ctx, &configs, &mut fresh);
+        // Trip the token at a spread of poll counts: pre-start, early,
+        // mid-sweep, and beyond the end (where the sweep completes).
+        for budget in [0u64, 1, 2, 5, 17, 1_000_000] {
+            let mut ws = SchedulerWorkspace::new();
+            match try_fused_sweep(&ctx, &configs, &mut ws, &CancelToken::after_checks(budget)) {
+                Ok(outcome) => {
+                    saw_completion = true;
+                    assert_fused_outcomes_agree(
+                        &outcome,
+                        &want,
+                        &configs,
+                        &format!("seed {case} budget {budget} (completed)"),
+                    );
+                    for grp in outcome.groups {
+                        ws.recycle(grp.schedule);
+                    }
+                }
+                Err(Cancelled) => saw_cancel = true,
+            }
+            // The decisive check: rerun on the same workspace — aborted
+            // or not, it must behave exactly like a fresh one.
+            let again = fused_sweep(&ctx, &configs, &mut ws);
+            assert_fused_outcomes_agree(
+                &again,
+                &want,
+                &configs,
+                &format!("seed {case} budget {budget} (rerun after abort)"),
+            );
+            for grp in again.groups {
+                ws.recycle(grp.schedule);
+            }
+        }
+    }
+    assert!(saw_cancel, "no budget ever tripped mid-sweep");
+    assert!(saw_completion, "no budget ever outlived a sweep");
+}
+
+/// **Degradation keystone**: the portfolio fast path answers with
+/// exactly the schedules each portfolio config would produce standalone
+/// — the fused portfolio sweep (the `ptgs serve` degraded worker path)
+/// is bit-identical per config to `schedule_into` on a private
+/// workspace and to the pre-context reference path, makespan bits
+/// included. Degradation narrows the config set, never the fidelity.
+#[test]
+fn prop_degraded_portfolio_equals_standalone() {
+    let portfolio = SchedulerConfig::portfolio();
+    let mut ws = SchedulerWorkspace::new(); // dirty across cases, like serve workers
+    let mut oracle = SchedulerWorkspace::new();
+    for case in 0..20u64 {
+        let mut rng = Rng::seeded(0xDE62_ADE + case);
+        let inst = arbitrary_instance(&mut rng);
+        let ctx = SchedulingContext::new(&inst, RankBackend::Native);
+        let outcome = fused_sweep(&ctx, &portfolio, &mut ws);
+        let map = outcome.group_of();
+        for (i, cfg) in portfolio.iter().enumerate() {
+            let fused = &outcome.groups[map[i]].schedule;
+            let standalone = cfg.build().schedule_into(&ctx, &mut oracle);
+            assert_eq!(
+                fused,
+                &standalone,
+                "seed {case}: {} portfolio answer drifted from schedule_into",
+                cfg.name()
+            );
+            assert_eq!(
+                fused.makespan().to_bits(),
+                standalone.makespan().to_bits(),
+                "seed {case}: {} makespan bits drifted",
+                cfg.name()
+            );
+            assert_eq!(
+                standalone,
+                cfg.build().schedule_reference(&inst),
+                "seed {case}: {} standalone drifted from the reference path",
+                cfg.name()
+            );
+            oracle.recycle(standalone);
+        }
+        for grp in outcome.groups {
+            ws.recycle(grp.schedule);
         }
     }
 }
