@@ -1,0 +1,135 @@
+//! Adversarial mutant-scoring benchmark: the fused 72-config sweep
+//! scorer (`analysis::score_fused`, one `fused_sweep_threaded` call
+//! per mutant against warm workspaces) against the retained per-config
+//! reference loop (`analysis::score_reference`, 72 isolated
+//! `schedule_with` calls) — the pre-rebuild inner loop generalized
+//! from 2 to 72 configs.
+//!
+//! Before timing anything, every mutant in the chain is asserted to
+//! score **bit-identically** on both paths for both objectives (the
+//! pairwise ratio and max-regret), and a warm second pass over the
+//! whole chain is asserted to perform **zero** workspace buffer
+//! allocations (the serve-worker O(1)-allocs discipline, via the
+//! `SchedulerWorkspace::buffer_allocations()` process counter).
+//!
+//! Emits machine-readable `BENCH_adversarial.json` (override the path
+//! with `PTGS_BENCH_OUT`) including mutants/sec for both scorers and
+//! the measured `speedup_vs_pairwise`, so CI can record the search
+//! throughput trajectory on every run
+//! (`PTGS_BENCH_FAST=1 cargo bench --bench bench_adversarial`).
+
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ptgs::analysis::{propose, score_fused, score_reference, MutationOptions, Objective};
+use ptgs::benchlib::{self, Bencher, Config, Workload};
+use ptgs::datasets::rng::Rng;
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::instance::ProblemInstance;
+use ptgs::scheduler::{SchedulerConfig, SchedulerWorkspace};
+use ptgs::util::Value;
+
+/// A deterministic mutant chain: repeated `propose` steps from one
+/// dataset-sampled seed instance — exactly the candidate stream an
+/// annealing chain scores.
+fn mutant_chain(n: usize) -> Vec<ProblemInstance> {
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Cycles, 1.0) };
+    let mut cur = spec.generate_one(&mut spec.instance_rng(0));
+    let mut rng = Rng::seeded(0xAD7E_55);
+    let opts = MutationOptions::default();
+    let mut chain = Vec::with_capacity(n);
+    for _ in 0..n {
+        cur = propose(&cur, &mut rng, &opts);
+        chain.push(cur.clone());
+    }
+    chain
+}
+
+fn main() {
+    let n_mutants = if benchlib::fast_mode() { 8 } else { 32 };
+    let mut b = Bencher::from_env().with_config(Config {
+        measure_time: Duration::from_millis(200),
+        samples: 10,
+        warmup: Duration::from_millis(100),
+    });
+    let mutants = mutant_chain(n_mutants);
+    let pair = Objective::Pair { a: SchedulerConfig::met(), b: SchedulerConfig::heft() };
+    let mut pool = vec![SchedulerWorkspace::new()];
+
+    // Bit-exactness gate: never publish a speedup over a baseline that
+    // computes something different. Every mutant, both objectives.
+    for (i, inst) in mutants.iter().enumerate() {
+        for obj in [pair, Objective::MaxRegret] {
+            let fused = score_fused(&obj, inst, &mut pool).expect("mutant scores");
+            let reference = score_reference(&obj, inst).expect("mutant scores");
+            assert_eq!(
+                fused.to_bits(),
+                reference.to_bits(),
+                "fused score drifted from the per-config reference on mutant {i} ({obj:?}): \
+                 {fused} vs {reference}"
+            );
+        }
+    }
+    println!("adversarial: fused scoring bit-identical to the per-config reference");
+
+    // O(1)-allocs gate: the gate pass above warmed the pool across the
+    // whole (size-varying) mutant chain, so a second full pass must not
+    // allocate a single schedule buffer.
+    let allocs_before = SchedulerWorkspace::buffer_allocations();
+    for inst in &mutants {
+        score_fused(&Objective::MaxRegret, inst, &mut pool).expect("mutant scores");
+    }
+    let warm_allocs = SchedulerWorkspace::buffer_allocations() - allocs_before;
+    assert_eq!(warm_allocs, 0, "warm fused scoring must be O(1) allocations");
+    println!("adversarial: warm scoring pass performed 0 buffer allocations");
+
+    // Fused scorer: one 72-config fused sweep per mutant, warm pool.
+    b.bench("adversarial/score_fused", || {
+        for inst in &mutants {
+            black_box(score_fused(&Objective::MaxRegret, black_box(inst), &mut pool).unwrap());
+        }
+    });
+
+    // The retained reference: 72 isolated schedule_with calls per
+    // mutant (shared context, no fused lockstep, no workspace reuse).
+    b.bench("adversarial/score_pairwise", || {
+        for inst in &mutants {
+            black_box(score_reference(&Objective::MaxRegret, black_box(inst)).unwrap());
+        }
+    });
+
+    let find = |name: &str| b.results.iter().find(|m| m.name == name);
+    let (Some(fused_leg), Some(pairwise_leg)) =
+        (find("adversarial/score_fused"), find("adversarial/score_pairwise"))
+    else {
+        return;
+    };
+    let fused_rate = mutants.len() as f64 / fused_leg.min.as_secs_f64();
+    let pairwise_rate = mutants.len() as f64 / pairwise_leg.min.as_secs_f64();
+    let speedup = pairwise_leg.min.as_secs_f64() / fused_leg.min.as_secs_f64();
+    println!(
+        "adversarial: fused scoring {fused_rate:.0} mutants/s, \
+         reference {pairwise_rate:.0} mutants/s"
+    );
+    println!("adversarial: fused speedup vs per-config reference: {speedup:.2}x");
+
+    let workload = Workload {
+        tasks: mutants.iter().map(|i| i.graph.len()).sum(),
+        edges: mutants.iter().map(|i| i.graph.num_edges()).sum(),
+        nodes: mutants.iter().map(|i| i.network.len()).max().unwrap_or(0),
+        workspace_capacity: pool[0].capacity(),
+    };
+    let mut doc = benchlib::measurements_json_with_workload(&b.results, &workload);
+    if let Value::Obj(fields) = &mut doc {
+        fields.push(("mutants".to_string(), Value::Num(mutants.len() as f64)));
+        fields.push(("mutants_per_sec_fused".to_string(), Value::Num(fused_rate)));
+        fields.push(("mutants_per_sec_pairwise".to_string(), Value::Num(pairwise_rate)));
+        fields.push(("speedup_vs_pairwise".to_string(), Value::Num(speedup)));
+    }
+    let out = std::env::var("PTGS_BENCH_OUT")
+        .unwrap_or_else(|_| "results/BENCH_adversarial.json".to_string());
+    let path = PathBuf::from(out);
+    benchlib::write_json(&path, &doc).expect("writing BENCH_adversarial.json");
+    println!("wrote {}", path.display());
+}

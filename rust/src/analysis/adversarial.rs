@@ -1,25 +1,641 @@
-//! Adversarial scheduler comparison — the paper's closing future-work
-//! pointer ("an adversarial approach to comparing algorithms was
-//! recently proposed … it may be interesting to evaluate the scheduling
-//! algorithms and algorithmic components using this approach", §V,
-//! citing Coleman & Krishnamachari [14]).
+//! Adversarial instance search at fused-engine speed — the paper's
+//! closing future-work pointer ("an adversarial approach to comparing
+//! algorithms was recently proposed … it may be interesting to evaluate
+//! the scheduling algorithms and algorithmic components using this
+//! approach", §V, citing Coleman & Krishnamachari's PISA).
 //!
 //! Instead of averaging over a fixed dataset, we *search* for problem
-//! instances on which scheduler `A` does maximally worse than scheduler
-//! `B`: a simple (1+λ) evolutionary loop that perturbs task costs, edge
-//! data sizes, node speeds and link strengths of a seed instance,
-//! keeping the mutant with the highest makespan ratio `m(A)/m(B)`.
-//! Deterministic given the seed — failures reproduce exactly.
+//! instances that maximize an adversarial [`Objective`]:
+//!
+//! * [`Objective::Pair`] — PISA's makespan ratio `m(A)/m(B)` between two
+//!   chosen schedulers, and
+//! * [`Objective::MaxRegret`] — the generalized per-component objective
+//!   `max over the 72 configs of m(config) / min-makespan-of-72`: how
+//!   badly can *some* point of the component space lose to the best
+//!   point on one instance.
+//!
+//! Every candidate is scored from **one full 72-config fused sweep**
+//! ([`crate::scheduler::fused_sweep_threaded`] with warm per-chain
+//! [`SchedulerWorkspace`]s — O(1) allocations once warm), so a search
+//! step costs roughly one schedule per distinct outcome instead of 72
+//! isolated runs; `benches/bench_adversarial.rs` gates the fused score
+//! bit-identical against the retained per-config loop
+//! ([`score_reference`]) and records the speedup.
+//!
+//! Two drivers share the [`MutationOp`] operator set (weight nudges,
+//! edge rewire/add/drop, node add/drop, link-strength scaling — each
+//! validity-preserving *by construction*: new edges only ever point
+//! from a lower to a higher topological position):
+//!
+//! * [`adversarial_search`] — the original greedy (1+λ) loop, kept as
+//!   the simple pairwise entry point, and
+//! * [`anneal_search`] — K independent simulated-annealing chains with
+//!   a geometric temperature schedule, sharing a visited-instance
+//!   [`ScoreCache`] keyed on [`ProblemInstance::content_hash`].
+//!
+//! **Determinism contract** (CI-gated): `--chains` is the *logical*
+//! knob — the discovered corpus depends on it — while `--threads` is
+//! pure execution parallelism and must never change a byte of output.
+//! This holds because (a) each chain's trajectory is a function of its
+//! own seeded RNG and of *scores*, (b) scoring is a pure function of
+//! the instance (the fused sweep is bit-identical to the per-config
+//! reference for any workspace count), so a [`ScoreCache`] hit returns
+//! exactly what recomputation would, and (c) the final corpus is the
+//! deduped union of all chains' discoveries ordered by
+//! `(score desc, hash asc)` — independent of completion order. The
+//! advisory counters ([`AnnealResult::evaluations`] /
+//! [`AnnealResult::cache_hits`]) *can* vary with interleaving; the
+//! corpus cannot.
+//!
+//! Top discoveries are emitted through the canonical
+//! [`to_trace_json`] serializer ([`write_corpus`]) as a loadable fifth
+//! dataset (see `rust/tests/data/adversarial/`), and
+//! [`component_rows`] renders them into the per-component robustness
+//! map of `REPORT.md` — which component values hold up, and which
+//! collapse, on searched-for worst-case shapes.
 
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::effects::Component;
+use super::render::{ascii_table, fmt_f, write_csv};
 use crate::datasets::rng::Rng;
+use crate::datasets::traces::to_trace_json;
 use crate::datasets::DatasetSpec;
 use crate::graph::TaskGraph;
 use crate::instance::ProblemInstance;
 use crate::network::Network;
 use crate::ranks::RankBackend;
-use crate::scheduler::{SchedulerConfig, SchedulingContext};
+use crate::scheduler::{
+    fused_sweep_threaded, SchedulerConfig, SchedulerWorkspace, SchedulingContext,
+};
 
-/// Result of an adversarial search.
+/// Floor for weights synthesized by structural operators, mirroring the
+/// dataset generators' positive-weight convention.
+const WEIGHT_FLOOR: f64 = 1e-6;
+
+/// Bounded retry budget for structural operators that sample endpoint
+/// pairs (rewire/add): after this many misses the operator reports
+/// "not applicable" and the driver draws another operator.
+const STRUCTURAL_TRIES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Objectives and scoring
+// ---------------------------------------------------------------------------
+
+/// What the search maximizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// PISA's pairwise objective: `m(A)/m(B)` — find instances where
+    /// scheduler `a` does maximally worse than scheduler `b`.
+    Pair {
+        /// The scheduler being attacked.
+        a: SchedulerConfig,
+        /// The reference scheduler.
+        b: SchedulerConfig,
+    },
+    /// The generalized per-component objective: `max over the 72
+    /// configs of m(config) / min-makespan-of-72`, from one sweep.
+    MaxRegret,
+}
+
+impl Objective {
+    /// Stable identifier used in corpus file/instance names
+    /// (`pair_<A>_vs_<B>` or `max_regret`).
+    pub fn tag(&self) -> String {
+        match self {
+            Objective::Pair { a, b } => format!("pair_{}_vs_{}", a.name(), b.name()),
+            Objective::MaxRegret => "max_regret".into(),
+        }
+    }
+
+    /// Score from the 72 per-config makespans of one sweep.
+    ///
+    /// Degenerate sweeps — any non-finite makespan, or a zero/negative
+    /// denominator — return a descriptive `Err` so the drivers *reject*
+    /// the mutant. The pre-rebuild `ratio()` silently mapped `m(B) ≤ 0`
+    /// to `1.0` and let NaN ratios poison champion selection (NaN
+    /// comparisons drop or keep mutants arbitrarily); the regression
+    /// test `degenerate_instances_are_rejected` pins the fix.
+    fn score_from_makespans(&self, ms: &[f64; 72]) -> Result<f64, String> {
+        for (cfg, &m) in SchedulerConfig::ALL.iter().zip(ms.iter()) {
+            if !m.is_finite() {
+                return Err(format!(
+                    "degenerate instance: {} produced a non-finite makespan ({m})",
+                    cfg.name()
+                ));
+            }
+        }
+        match self {
+            Objective::Pair { a, b } => {
+                let ma = ms[config_index(a)];
+                let mb = ms[config_index(b)];
+                if mb <= 0.0 {
+                    return Err(format!(
+                        "degenerate instance: m({}) = {mb}, the A/B ratio is undefined",
+                        b.name()
+                    ));
+                }
+                Ok(ma / mb)
+            }
+            Objective::MaxRegret => {
+                let min = ms.iter().copied().fold(f64::INFINITY, f64::min);
+                if min <= 0.0 {
+                    return Err(format!(
+                        "degenerate instance: min 72-config makespan is {min}"
+                    ));
+                }
+                let max = ms.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                Ok(max / min)
+            }
+        }
+    }
+}
+
+/// Index of a configuration in [`SchedulerConfig::ALL`].
+fn config_index(cfg: &SchedulerConfig) -> usize {
+    SchedulerConfig::ALL
+        .iter()
+        .position(|c| c == cfg)
+        .expect("every SchedulerConfig is one of the 72 component-space points")
+}
+
+/// All 72 per-config makespans of one instance via the fused engine.
+/// Schedules are recycled back into the pool, so a warm pool performs
+/// no buffer allocations (counter-asserted by `bench_adversarial`).
+fn sweep_makespans(inst: &ProblemInstance, pool: &mut [SchedulerWorkspace]) -> [f64; 72] {
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    let outcome = fused_sweep_threaded(&ctx, &SchedulerConfig::ALL, pool);
+    let mut ms = [0.0f64; 72];
+    for grp in outcome.groups {
+        let m = grp.schedule.makespan();
+        for &i in &grp.members {
+            ms[i] = m;
+        }
+        pool[0].recycle(grp.schedule);
+    }
+    ms
+}
+
+/// Score one instance from a single fused 72-config sweep. `pool` must
+/// be non-empty; one workspace runs the sweep serially, more fan the
+/// post-fork groups out across threads (bit-identical either way).
+pub fn score_fused(
+    objective: &Objective,
+    inst: &ProblemInstance,
+    pool: &mut [SchedulerWorkspace],
+) -> Result<f64, String> {
+    objective.score_from_makespans(&sweep_makespans(inst, pool))
+}
+
+/// The retained per-config reference scorer: one shared context, 72
+/// isolated `schedule_with` calls — the pre-rebuild inner loop,
+/// generalized from 2 to 72 configs. `bench_adversarial` asserts
+/// [`score_fused`] bit-identical to this and records the speedup as
+/// `speedup_vs_pairwise`.
+pub fn score_reference(objective: &Objective, inst: &ProblemInstance) -> Result<f64, String> {
+    let ctx = SchedulingContext::new(inst, RankBackend::Native);
+    let mut ms = [0.0f64; 72];
+    for (slot, cfg) in ms.iter_mut().zip(SchedulerConfig::ALL.iter()) {
+        *slot = cfg.build().schedule_with(&ctx).makespan();
+    }
+    objective.score_from_makespans(&ms)
+}
+
+// ---------------------------------------------------------------------------
+// Mutation operators
+// ---------------------------------------------------------------------------
+
+/// Mutation knobs shared by both drivers.
+#[derive(Debug, Clone, Copy)]
+pub struct MutationOptions {
+    /// Multiplicative perturbation range: mutated weights scale by
+    /// `exp(U(−strength, strength))`.
+    pub strength: f64,
+    /// Fraction of weights touched by a weight-nudge mutation.
+    pub rate: f64,
+}
+
+impl Default for MutationOptions {
+    fn default() -> Self {
+        MutationOptions { strength: 0.6, rate: 0.3 }
+    }
+}
+
+/// One instance-mutation operator. Structural operators preserve
+/// validity *by construction*: created edges always point from a lower
+/// to a higher topological position of the current DAG (so acyclicity
+/// is never re-checked, it cannot break), weights stay positive, and
+/// the network stays symmetric and schedulable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutationOp {
+    /// Multiplicative noise on a random subset of task costs, edge data
+    /// sizes, node speeds and link strengths (topology untouched).
+    WeightNudge,
+    /// Move one endpoint of an existing edge to a topologically
+    /// compatible new task.
+    EdgeRewire,
+    /// Add one new dependency edge between unconnected tasks.
+    EdgeAdd,
+    /// Remove one dependency edge.
+    EdgeDrop,
+    /// Add one task, wired under a random existing task (and, coin-flip,
+    /// over a topologically later one).
+    NodeAdd,
+    /// Remove one task, bridging its predecessors to its successors so
+    /// dependency chains survive the deletion.
+    NodeDrop,
+    /// Scale link strengths (all off-diagonal links, or one pair) —
+    /// shifts the instance's effective CCR.
+    LinkScale,
+}
+
+impl MutationOp {
+    /// Every operator, in a fixed order (uniformly drawn by
+    /// [`propose`]).
+    pub const ALL: [MutationOp; 7] = [
+        MutationOp::WeightNudge,
+        MutationOp::EdgeRewire,
+        MutationOp::EdgeAdd,
+        MutationOp::EdgeDrop,
+        MutationOp::NodeAdd,
+        MutationOp::NodeDrop,
+        MutationOp::LinkScale,
+    ];
+
+    /// Stable snake-case identifier.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MutationOp::WeightNudge => "weight_nudge",
+            MutationOp::EdgeRewire => "edge_rewire",
+            MutationOp::EdgeAdd => "edge_add",
+            MutationOp::EdgeDrop => "edge_drop",
+            MutationOp::NodeAdd => "node_add",
+            MutationOp::NodeDrop => "node_drop",
+            MutationOp::LinkScale => "link_scale",
+        }
+    }
+}
+
+/// Mutable intermediate representation of an instance. Operators edit
+/// this flat form and [`Blueprint::build`] reconstructs a validated
+/// `TaskGraph`/`Network` pair — `TaskGraph` has no edge removal, so
+/// structural mutation cannot work on the frozen graph directly.
+struct Blueprint {
+    tasks: Vec<(String, f64)>,
+    edges: Vec<(usize, usize, f64)>,
+    speeds: Vec<f64>,
+    links: Vec<f64>,
+}
+
+impl Blueprint {
+    fn of(inst: &ProblemInstance) -> Blueprint {
+        let g = &inst.graph;
+        let tasks = (0..g.len()).map(|t| (g.name(t).to_string(), g.cost(t))).collect();
+        let edges = g.edges().collect();
+        let m = inst.network.len();
+        let speeds = (0..m).map(|v| inst.network.speed(v)).collect();
+        let mut links = vec![0.0; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                links[i * m + j] = inst.network.link(i, j);
+            }
+        }
+        Blueprint { tasks, edges, speeds, links }
+    }
+
+    fn build(&self, name: &str) -> ProblemInstance {
+        let mut g = TaskGraph::with_capacity(self.tasks.len());
+        for (n, c) in &self.tasks {
+            g.add_task(n.clone(), *c);
+        }
+        for &(s, d, w) in &self.edges {
+            g.add_edge(s, d, w);
+        }
+        ProblemInstance::new(name, g, Network::new(self.speeds.clone(), self.links.clone()))
+    }
+
+    /// Topological position of every task (`pos[u] < pos[v]` holds for
+    /// every edge `(u, v)`). Operators only ever create edges from a
+    /// lower to a strictly higher position — adding an edge consistent
+    /// with an existing topological order keeps that order valid, so
+    /// the result is acyclic by construction.
+    fn topo_positions(&self) -> Vec<usize> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(s, d, _) in &self.edges {
+            indeg[d] += 1;
+            succ[s].push(d);
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
+        let mut pos = vec![usize::MAX; n];
+        let mut head = 0;
+        let mut next = 0;
+        while head < queue.len() {
+            let t = queue[head];
+            head += 1;
+            pos[t] = next;
+            next += 1;
+            for &d in &succ[t] {
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    queue.push(d);
+                }
+            }
+        }
+        debug_assert_eq!(next, n, "blueprints are always acyclic");
+        pos
+    }
+
+    fn has_edge(&self, s: usize, d: usize) -> bool {
+        self.edges.iter().any(|&(a, b, _)| a == s && b == d)
+    }
+}
+
+/// `exp(U(−strength, strength))` — the multiplicative noise factor.
+fn scale(rng: &mut Rng, strength: f64) -> f64 {
+    rng.uniform_in(-strength, strength).exp()
+}
+
+/// A plausible weight for new structure: a uniformly drawn existing
+/// edge weight (falling back to the mean task cost, then `1.0`),
+/// floored away from zero.
+fn reference_weight(bp: &Blueprint, rng: &mut Rng) -> f64 {
+    if !bp.edges.is_empty() {
+        let e = rng.uniform_int(0, bp.edges.len() as u64 - 1) as usize;
+        return bp.edges[e].2.max(WEIGHT_FLOOR);
+    }
+    let n = bp.tasks.len() as f64;
+    let mean = bp.tasks.iter().map(|t| t.1).sum::<f64>() / n.max(1.0);
+    if mean > WEIGHT_FLOOR {
+        mean
+    } else {
+        1.0
+    }
+}
+
+fn weight_nudge(bp: &mut Blueprint, rng: &mut Rng, opts: &MutationOptions) {
+    for t in &mut bp.tasks {
+        if rng.uniform() < opts.rate {
+            t.1 *= scale(rng, opts.strength);
+        }
+    }
+    for e in &mut bp.edges {
+        if rng.uniform() < opts.rate {
+            e.2 *= scale(rng, opts.strength);
+        }
+    }
+    for s in &mut bp.speeds {
+        if rng.uniform() < opts.rate {
+            *s *= scale(rng, opts.strength);
+        }
+    }
+    let m = bp.speeds.len();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            if rng.uniform() < opts.rate {
+                let f = scale(rng, opts.strength);
+                bp.links[i * m + j] *= f;
+                bp.links[j * m + i] *= f;
+            }
+        }
+    }
+}
+
+fn edge_rewire(bp: &mut Blueprint, rng: &mut Rng) -> bool {
+    let n = bp.tasks.len();
+    if bp.edges.is_empty() || n < 3 {
+        return false;
+    }
+    let pos = bp.topo_positions();
+    for _ in 0..STRUCTURAL_TRIES {
+        let e = rng.uniform_int(0, bp.edges.len() as u64 - 1) as usize;
+        let (s, d, w) = bp.edges[e];
+        let keep_src = rng.uniform() < 0.5;
+        let cand = rng.uniform_int(0, n as u64 - 1) as usize;
+        let (ns, nd) = if keep_src { (s, cand) } else { (cand, d) };
+        if ns == nd || pos[ns] >= pos[nd] || (ns, nd) == (s, d) || bp.has_edge(ns, nd) {
+            continue;
+        }
+        bp.edges[e] = (ns, nd, w);
+        return true;
+    }
+    false
+}
+
+fn edge_add(bp: &mut Blueprint, rng: &mut Rng, opts: &MutationOptions) -> bool {
+    let n = bp.tasks.len();
+    if n < 2 {
+        return false;
+    }
+    let pos = bp.topo_positions();
+    for _ in 0..STRUCTURAL_TRIES {
+        let u = rng.uniform_int(0, n as u64 - 1) as usize;
+        let v = rng.uniform_int(0, n as u64 - 1) as usize;
+        if u == v {
+            continue;
+        }
+        let (s, d) = if pos[u] < pos[v] { (u, v) } else { (v, u) };
+        if bp.has_edge(s, d) {
+            continue;
+        }
+        let w = reference_weight(bp, rng) * scale(rng, opts.strength);
+        bp.edges.push((s, d, w));
+        return true;
+    }
+    false
+}
+
+fn edge_drop(bp: &mut Blueprint, rng: &mut Rng) -> bool {
+    if bp.edges.is_empty() {
+        return false;
+    }
+    let e = rng.uniform_int(0, bp.edges.len() as u64 - 1) as usize;
+    bp.edges.swap_remove(e);
+    true
+}
+
+fn node_add(bp: &mut Blueprint, rng: &mut Rng, opts: &MutationOptions) -> bool {
+    let n = bp.tasks.len();
+    if n == 0 {
+        return false;
+    }
+    let pos = bp.topo_positions();
+    let mean_cost = bp.tasks.iter().map(|t| t.1).sum::<f64>() / n as f64;
+    let cost = mean_cost.max(WEIGHT_FLOOR) * scale(rng, opts.strength);
+    // A fresh unique name: `to_trace_json` (corpus emission) requires
+    // task-name uniqueness.
+    let mut k = n;
+    let name = loop {
+        let cand = format!("adv_t{k}");
+        if !bp.tasks.iter().any(|(nm, _)| *nm == cand) {
+            break cand;
+        }
+        k += 1;
+    };
+    let new = n;
+    bp.tasks.push((name, cost));
+    let u = rng.uniform_int(0, n as u64 - 1) as usize;
+    let w = reference_weight(bp, rng) * scale(rng, opts.strength);
+    bp.edges.push((u, new, w));
+    // Coin-flip interior placement: `new → v` is safe for any `v`
+    // topologically after `u` (a cycle would need a path `v ⇝ u`,
+    // which `pos[v] > pos[u]` rules out; `new` has no other edges).
+    let downstream: Vec<usize> = (0..n).filter(|&v| pos[v] > pos[u]).collect();
+    if !downstream.is_empty() && rng.uniform() < 0.5 {
+        let v = downstream[rng.uniform_int(0, downstream.len() as u64 - 1) as usize];
+        let w2 = reference_weight(bp, rng) * scale(rng, opts.strength);
+        bp.edges.push((new, v, w2));
+    }
+    true
+}
+
+fn node_drop(bp: &mut Blueprint, rng: &mut Rng) -> bool {
+    let n = bp.tasks.len();
+    if n < 2 {
+        return false;
+    }
+    let t = rng.uniform_int(0, n as u64 - 1) as usize;
+    let preds: Vec<(usize, f64)> =
+        bp.edges.iter().filter(|e| e.1 == t).map(|e| (e.0, e.2)).collect();
+    let succs: Vec<(usize, f64)> =
+        bp.edges.iter().filter(|e| e.0 == t).map(|e| (e.1, e.2)).collect();
+    bp.edges.retain(|e| e.0 != t && e.1 != t);
+    // Bridge p → s with the bottleneck of the two dropped hops so
+    // dependency chains survive. `p → t → s` existed, so `p → s` is
+    // consistent with the original topological order (acyclic-safe).
+    for &(p, wp) in &preds {
+        for &(s, ws) in &succs {
+            if !bp.has_edge(p, s) {
+                bp.edges.push((p, s, wp.min(ws).max(WEIGHT_FLOOR)));
+            }
+        }
+    }
+    bp.tasks.remove(t);
+    for e in &mut bp.edges {
+        if e.0 > t {
+            e.0 -= 1;
+        }
+        if e.1 > t {
+            e.1 -= 1;
+        }
+    }
+    true
+}
+
+fn link_scale(bp: &mut Blueprint, rng: &mut Rng, opts: &MutationOptions) -> bool {
+    let m = bp.speeds.len();
+    if m < 2 {
+        return false;
+    }
+    let f = scale(rng, opts.strength);
+    if rng.uniform() < 0.5 {
+        // Global rescale: shifts the instance's effective CCR.
+        for i in 0..m {
+            for j in 0..m {
+                if i != j {
+                    bp.links[i * m + j] *= f;
+                }
+            }
+        }
+    } else {
+        let i = rng.uniform_int(0, m as u64 - 1) as usize;
+        let mut j = rng.uniform_int(0, m as u64 - 2) as usize;
+        if j >= i {
+            j += 1;
+        }
+        bp.links[i * m + j] *= f;
+        bp.links[j * m + i] *= f;
+    }
+    true
+}
+
+/// Apply one operator to an instance. Returns `None` when the operator
+/// is not applicable (e.g. dropping an edge of an edgeless graph, or a
+/// structural sampler exhausting its retry budget); the mutant keeps
+/// the parent's name.
+pub fn apply_mutation(
+    inst: &ProblemInstance,
+    op: MutationOp,
+    rng: &mut Rng,
+    opts: &MutationOptions,
+) -> Option<ProblemInstance> {
+    let mut bp = Blueprint::of(inst);
+    let applied = match op {
+        MutationOp::WeightNudge => {
+            weight_nudge(&mut bp, rng, opts);
+            true
+        }
+        MutationOp::EdgeRewire => edge_rewire(&mut bp, rng),
+        MutationOp::EdgeAdd => edge_add(&mut bp, rng, opts),
+        MutationOp::EdgeDrop => edge_drop(&mut bp, rng),
+        MutationOp::NodeAdd => node_add(&mut bp, rng, opts),
+        MutationOp::NodeDrop => node_drop(&mut bp, rng),
+        MutationOp::LinkScale => link_scale(&mut bp, rng, opts),
+    };
+    applied.then(|| bp.build(&inst.name))
+}
+
+/// Propose one mutant: draw operators uniformly until one applies.
+/// Terminates because [`MutationOp::WeightNudge`] always applies.
+pub fn propose(inst: &ProblemInstance, rng: &mut Rng, opts: &MutationOptions) -> ProblemInstance {
+    loop {
+        let pick = rng.uniform_int(0, MutationOp::ALL.len() as u64 - 1) as usize;
+        if let Some(mutant) = apply_mutation(inst, MutationOp::ALL[pick], rng, opts) {
+            return mutant;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared visited-instance dedup / score cache
+// ---------------------------------------------------------------------------
+
+/// Visited-instance dedup shared across annealing chains: a
+/// [`ProblemInstance::content_hash`] → score memo.
+///
+/// Determinism: scoring is a *pure* function of the instance, so a
+/// cache hit returns exactly the value a recomputation would — chain
+/// trajectories cannot observe thread interleaving through the cache,
+/// only skip redundant fused sweeps. `None` records an instance the
+/// degenerate-makespan guard rejected.
+#[derive(Debug, Default)]
+pub struct ScoreCache {
+    map: Mutex<HashMap<u64, Option<f64>>>,
+}
+
+impl ScoreCache {
+    /// Fresh empty cache.
+    pub fn new() -> Self {
+        ScoreCache::default()
+    }
+
+    fn lookup(&self, hash: u64) -> Option<Option<f64>> {
+        self.map.lock().expect("score cache poisoned").get(&hash).copied()
+    }
+
+    fn insert(&self, hash: u64, score: Option<f64>) {
+        self.map.lock().expect("score cache poisoned").insert(hash, score);
+    }
+
+    /// Distinct instances scored (or rejected) so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("score cache poisoned").len()
+    }
+
+    /// Whether nothing has been scored yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Greedy (1+λ) driver — the original pairwise entry point, rebuilt
+// ---------------------------------------------------------------------------
+
+/// Result of a greedy adversarial search.
 #[derive(Debug, Clone)]
 pub struct AdversarialResult {
     /// The instance maximizing `m(A)/m(B)` found within the budget.
@@ -32,17 +648,17 @@ pub struct AdversarialResult {
     pub generations: usize,
 }
 
-/// Search options.
+/// Greedy search options.
 #[derive(Debug, Clone)]
 pub struct AdversarialOptions {
     /// Mutants per generation (λ).
     pub offspring: usize,
     /// Generations.
     pub generations: usize,
-    /// Multiplicative weight-perturbation range: each mutated weight is
-    /// scaled by `exp(U(−strength, strength))`.
+    /// Multiplicative weight-perturbation range (see
+    /// [`MutationOptions::strength`]).
     pub strength: f64,
-    /// Fraction of weights mutated per offspring.
+    /// Fraction of weights mutated per weight-nudge offspring.
     pub rate: f64,
 }
 
@@ -52,115 +668,457 @@ impl Default for AdversarialOptions {
     }
 }
 
-fn ratio(a: &SchedulerConfig, b: &SchedulerConfig, inst: &ProblemInstance) -> f64 {
-    // Both contenders schedule the same instance: share one context so
-    // the search's inner loop computes ranks/priorities once per mutant.
-    let ctx = SchedulingContext::new(inst, RankBackend::Native);
-    let ma = a.build().schedule_with(&ctx).makespan();
-    let mb = b.build().schedule_with(&ctx).makespan();
-    if mb <= 0.0 {
-        1.0
-    } else {
-        ma / mb
-    }
-}
-
-/// Mutate one instance: multiplicative noise on a random subset of the
-/// weights (graph costs/data, node speeds, link strengths), preserving
-/// topology. Weights stay positive by construction.
-fn mutate(inst: &ProblemInstance, rng: &mut Rng, opts: &AdversarialOptions) -> ProblemInstance {
-    let g = &inst.graph;
-    let perturb = |rng: &mut Rng, w: f64| -> f64 {
-        w * rng.uniform_in(-opts.strength, opts.strength).exp()
-    };
-
-    let mut ng = TaskGraph::new();
-    for t in 0..g.len() {
-        let cost = if rng.uniform() < opts.rate {
-            perturb(rng, g.cost(t))
-        } else {
-            g.cost(t)
-        };
-        ng.add_task(g.name(t), cost);
-    }
-    for (s, d, w) in g.edges() {
-        let w = if rng.uniform() < opts.rate { perturb(rng, w) } else { w };
-        ng.add_edge(s, d, w);
-    }
-
-    let n = inst.network.len();
-    let speeds: Vec<f64> = (0..n)
-        .map(|v| {
-            let s = inst.network.speed(v);
-            if rng.uniform() < opts.rate {
-                perturb(rng, s)
-            } else {
-                s
-            }
-        })
-        .collect();
-    let mut links = vec![0.0; n * n];
-    for i in 0..n {
-        links[i * n + i] = 1.0;
-        for j in (i + 1)..n {
-            let w = inst.network.link(i, j);
-            let w = if rng.uniform() < opts.rate { perturb(rng, w) } else { w };
-            links[i * n + j] = w;
-            links[j * n + i] = w;
-        }
-    }
-    ProblemInstance::new(
-        format!("{}~adv", inst.name),
-        ng,
-        Network::new(speeds, links),
-    )
-}
-
 /// Search for an instance on which `a` is maximally worse than `b`,
-/// starting from a dataset-sampled seed instance.
+/// starting from a dataset-sampled seed instance — the original (1+λ)
+/// greedy loop, now scored through the fused engine with the full
+/// operator set. Mutants the degenerate-makespan guard rejects are
+/// skipped (never scored as `1.0` or NaN); a degenerate *seed*
+/// instance is an `Err`. Deterministic given the seed.
 pub fn adversarial_search(
     a: &SchedulerConfig,
     b: &SchedulerConfig,
     seed_spec: &DatasetSpec,
     rng_seed: u64,
     opts: &AdversarialOptions,
-) -> AdversarialResult {
+) -> Result<AdversarialResult, String> {
+    let objective = Objective::Pair { a: *a, b: *b };
+    let mut pool = vec![SchedulerWorkspace::new()];
     let mut rng = Rng::seeded(rng_seed);
+    let mopts = MutationOptions { strength: opts.strength, rate: opts.rate };
     let mut champion = {
         let mut stream = seed_spec.instance_rng(0);
         seed_spec.generate_one(&mut stream)
     };
-    let seed_ratio = ratio(a, b, &champion);
+    let seed_ratio =
+        score_fused(&objective, &champion, &mut pool).map_err(|e| format!("seed instance: {e}"))?;
     let mut best = seed_ratio;
 
     for _gen in 0..opts.generations {
         let mut improved = false;
         for _ in 0..opts.offspring {
-            let cand = mutate(&champion, &mut rng, opts);
-            let r = ratio(a, b, &cand);
+            let cand = propose(&champion, &mut rng, &mopts);
+            let Ok(r) = score_fused(&objective, &cand, &mut pool) else { continue };
             if r > best {
                 best = r;
                 champion = cand;
                 improved = true;
             }
         }
-        // Restart pressure: if a full generation stalls, widen mutations
-        // a touch by mutating the champion unconditionally once.
+        // Restart pressure: if a full generation stalls, mutate the
+        // champion once more unconditionally.
         if !improved {
-            let cand = mutate(&champion, &mut rng, opts);
-            let r = ratio(a, b, &cand);
-            if r > best {
-                best = r;
-                champion = cand;
+            let cand = propose(&champion, &mut rng, &mopts);
+            if let Ok(r) = score_fused(&objective, &cand, &mut pool) {
+                if r > best {
+                    best = r;
+                    champion = cand;
+                }
             }
         }
     }
-    AdversarialResult {
+    Ok(AdversarialResult {
         instance: champion,
         ratio: best,
         seed_ratio,
         generations: opts.generations,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Simulated-annealing driver
+// ---------------------------------------------------------------------------
+
+/// Simulated-annealing search options.
+#[derive(Debug, Clone)]
+pub struct AnnealOptions {
+    /// Independent chains (the *logical* knob: the corpus depends on
+    /// it, unlike the thread count).
+    pub chains: usize,
+    /// Annealing steps per chain.
+    pub steps: usize,
+    /// Initial temperature (scores are makespan ratios near 1, so the
+    /// default accepts small regressions early on).
+    pub temp0: f64,
+    /// Geometric cooling factor applied per step.
+    pub cooling: f64,
+    /// Multiplicative weight-perturbation range.
+    pub strength: f64,
+    /// Fraction of weights touched per weight-nudge mutation.
+    pub rate: f64,
+    /// Corpus size: the top-N discoveries kept.
+    pub top: usize,
+}
+
+impl Default for AnnealOptions {
+    fn default() -> Self {
+        AnnealOptions {
+            chains: 4,
+            steps: 64,
+            temp0: 0.05,
+            cooling: 0.95,
+            strength: 0.6,
+            rate: 0.3,
+            top: 8,
+        }
     }
+}
+
+/// One discovered adversarial instance.
+#[derive(Debug, Clone)]
+pub struct Discovery {
+    /// The instance (parent-lineage name; [`write_corpus`] renames by
+    /// rank).
+    pub instance: ProblemInstance,
+    /// Its objective score.
+    pub score: f64,
+    /// Its [`ProblemInstance::content_hash`] — the corpus sort
+    /// tiebreaker and dedup key.
+    pub hash: u64,
+    /// Lowest-numbered chain that reached it (merge order, not thread
+    /// timing).
+    pub chain: usize,
+}
+
+/// Result of [`anneal_search`].
+#[derive(Debug)]
+pub struct AnnealResult {
+    /// Top discoveries, deduped by content hash, ordered by
+    /// `(score desc, hash asc)`, truncated to [`AnnealOptions::top`].
+    pub corpus: Vec<Discovery>,
+    /// Best score discovered.
+    pub best_score: f64,
+    /// Best score among the chains' unperturbed start instances.
+    pub seed_score: f64,
+    /// Fused sweeps actually run (advisory: with a shared cache this
+    /// can vary across thread interleavings; the corpus cannot).
+    pub evaluations: usize,
+    /// Cache hits (advisory, see [`AnnealResult::evaluations`]).
+    pub cache_hits: usize,
+    /// Mutants rejected by the degenerate-makespan guard (advisory).
+    pub rejected: usize,
+}
+
+struct ChainOut {
+    discoveries: Vec<(u64, f64, ProblemInstance)>,
+    seed_score: f64,
+    evaluations: usize,
+    cache_hits: usize,
+    rejected: usize,
+}
+
+/// Score through the shared cache; `None` = rejected as degenerate.
+fn memo_score(
+    objective: &Objective,
+    inst: &ProblemInstance,
+    hash: u64,
+    cache: &ScoreCache,
+    pool: &mut [SchedulerWorkspace],
+    out: &mut ChainOut,
+) -> Option<f64> {
+    if let Some(memo) = cache.lookup(hash) {
+        out.cache_hits += 1;
+        return memo;
+    }
+    let score = score_fused(objective, inst, pool).ok();
+    out.evaluations += 1;
+    if score.is_none() {
+        out.rejected += 1;
+    }
+    cache.insert(hash, score);
+    score
+}
+
+/// Record a discovery once per content hash; occasionally prunes to
+/// keep chain memory bounded (deterministic: prune order is
+/// `(score desc, hash asc)`).
+fn push_discovery(
+    list: &mut Vec<(u64, f64, ProblemInstance)>,
+    cap: usize,
+    hash: u64,
+    score: f64,
+    inst: &ProblemInstance,
+) {
+    if list.iter().any(|d| d.0 == hash) {
+        return;
+    }
+    list.push((hash, score, inst.clone()));
+    if list.len() > cap {
+        list.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        list.truncate(cap / 2);
+    }
+}
+
+fn run_chain(
+    objective: &Objective,
+    spec: &DatasetSpec,
+    seed: u64,
+    chain: usize,
+    opts: &AnnealOptions,
+    cache: &ScoreCache,
+    pool_size: usize,
+) -> Result<ChainOut, String> {
+    let mut pool: Vec<SchedulerWorkspace> =
+        (0..pool_size.max(1)).map(|_| SchedulerWorkspace::new()).collect();
+    let mut rng = Rng::seeded(seed).fork(chain as u64 + 1);
+    let mopts = MutationOptions { strength: opts.strength, rate: opts.rate };
+    let cap = opts.top.max(8) * 8;
+    let mut out = ChainOut {
+        discoveries: Vec::new(),
+        seed_score: 0.0,
+        evaluations: 0,
+        cache_hits: 0,
+        rejected: 0,
+    };
+
+    // Chains start from distinct instances of the dataset family —
+    // diverse starting points, same stream the generators use.
+    let mut cur = {
+        let mut srng = spec.instance_rng(chain);
+        spec.generate_one(&mut srng)
+    };
+    let hash = cur.content_hash();
+    let Some(mut cur_score) = memo_score(objective, &cur, hash, cache, &mut pool, &mut out)
+    else {
+        return Err(format!(
+            "chain {chain}: the {} start instance is degenerate (zero or non-finite makespan)",
+            spec.name()
+        ));
+    };
+    out.seed_score = cur_score;
+    push_discovery(&mut out.discoveries, cap, hash, cur_score, &cur);
+
+    let mut temp = opts.temp0.max(f64::MIN_POSITIVE);
+    for _ in 0..opts.steps {
+        let cand = propose(&cur, &mut rng, &mopts);
+        let hash = cand.content_hash();
+        let verdict = memo_score(objective, &cand, hash, cache, &mut pool, &mut out);
+        // Drawn unconditionally: the chain's RNG stream is a function
+        // of its own trajectory alone, never of cache state.
+        let draw = rng.uniform();
+        if let Some(s) = verdict {
+            push_discovery(&mut out.discoveries, cap, hash, s, &cand);
+            if s >= cur_score || draw < ((s - cur_score) / temp).exp() {
+                cur = cand;
+                cur_score = s;
+            }
+        }
+        temp *= opts.cooling;
+    }
+    Ok(out)
+}
+
+/// Run K simulated-annealing chains sharing one [`ScoreCache`] and
+/// merge their discoveries into the top-N corpus.
+///
+/// `threads` is pure execution parallelism: chains are distributed
+/// round-robin over `min(threads, chains)` workers, and any thread
+/// budget left over (`threads / chains`) widens each chain's fused
+/// workspace pool. **The corpus is byte-identical for any `threads`
+/// value** (the CI-gated determinism contract; see the module docs) —
+/// only `seed`, `spec`, the objective and the options change it.
+pub fn anneal_search(
+    objective: &Objective,
+    spec: &DatasetSpec,
+    seed: u64,
+    opts: &AnnealOptions,
+    threads: usize,
+) -> Result<AnnealResult, String> {
+    let chains = opts.chains.max(1);
+    let cache = ScoreCache::new();
+    let pool_size = (threads.max(1) / chains).max(1);
+    let mut outs: Vec<Option<Result<ChainOut, String>>> = (0..chains).map(|_| None).collect();
+
+    if threads <= 1 || chains == 1 {
+        for (chain, slot) in outs.iter_mut().enumerate() {
+            *slot = Some(run_chain(objective, spec, seed, chain, opts, &cache, pool_size));
+        }
+    } else {
+        let workers = threads.min(chains);
+        let joined = std::thread::scope(|scope| {
+            let cache = &cache;
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let mut res = Vec::new();
+                        let mut chain = w;
+                        while chain < chains {
+                            res.push((
+                                chain,
+                                run_chain(objective, spec, seed, chain, opts, cache, pool_size),
+                            ));
+                            chain += workers;
+                        }
+                        res
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("anneal chain worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for batch in joined {
+            for (chain, result) in batch {
+                outs[chain] = Some(result);
+            }
+        }
+    }
+
+    // Merge in chain order (deterministic, independent of completion
+    // order), dedup by content hash, keep the global top-N.
+    let mut merged: Vec<Discovery> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut seed_score = f64::NEG_INFINITY;
+    let (mut evaluations, mut cache_hits, mut rejected) = (0, 0, 0);
+    for (chain, slot) in outs.into_iter().enumerate() {
+        let out = slot.expect("every chain ran")?;
+        seed_score = seed_score.max(out.seed_score);
+        evaluations += out.evaluations;
+        cache_hits += out.cache_hits;
+        rejected += out.rejected;
+        for (hash, score, instance) in out.discoveries {
+            if seen.insert(hash) {
+                merged.push(Discovery { instance, score, hash, chain });
+            }
+        }
+    }
+    merged.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.hash.cmp(&b.hash)));
+    merged.truncate(opts.top.max(1));
+    let best_score = merged.first().map(|d| d.score).unwrap_or(seed_score);
+    Ok(AnnealResult { corpus: merged, best_score, seed_score, evaluations, cache_hits, rejected })
+}
+
+// ---------------------------------------------------------------------------
+// Corpus emission and the per-component robustness map
+// ---------------------------------------------------------------------------
+
+/// Write the discovered corpus as one canonical trace-JSON file per
+/// instance (`adv_<tag>_<rank>.json`, instance renamed to match), via
+/// the lossless [`to_trace_json`] serializer — the files load back as
+/// a fifth dataset through `TraceSet`/`ptgs trace`. Returns the paths
+/// written, in rank order. Byte-deterministic for a given corpus.
+pub fn write_corpus(
+    dir: &Path,
+    corpus: &[Discovery],
+    tag: &str,
+) -> std::io::Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::with_capacity(corpus.len());
+    for (rank, d) in corpus.iter().enumerate() {
+        let stem = format!("adv_{tag}_{rank:02}");
+        let mut inst = d.instance.clone();
+        inst.name.clone_from(&stem);
+        let path = dir.join(format!("{stem}.json"));
+        std::fs::write(&path, to_trace_json(&inst).to_string_pretty())?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+/// One cell of the per-component robustness map over a discovered
+/// corpus: how configs carrying `component = value` fare relative to
+/// the per-instance optimum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComponentMapRow {
+    /// Component name (`initial_priority`, `append_only`, …).
+    pub component: String,
+    /// Component value (`UpwardRanking`, `True`, …).
+    pub value: String,
+    /// Mean `m(config) / min-makespan-of-72` over all (instance,
+    /// config-with-value) pairs.
+    pub mean_ratio: f64,
+    /// Worst such ratio.
+    pub worst_ratio: f64,
+    /// Fraction of pairs attaining the per-instance optimum (ratio 1).
+    pub optimal_share: f64,
+    /// Pairs aggregated.
+    pub n: usize,
+}
+
+/// Aggregate the per-component robustness map over a corpus: one fused
+/// 72-config sweep per instance, ratios to the per-instance minimum,
+/// grouped by component value — the "insertion beats append-only,
+/// except on these shapes" view. Degenerate instances are an `Err`.
+pub fn component_rows(instances: &[ProblemInstance]) -> Result<Vec<ComponentMapRow>, String> {
+    let mut pool = vec![SchedulerWorkspace::new()];
+    let mut per_instance: Vec<[f64; 72]> = Vec::with_capacity(instances.len());
+    for inst in instances {
+        let ms = sweep_makespans(inst, &mut pool);
+        let min = ms.iter().copied().fold(f64::INFINITY, f64::min);
+        if !min.is_finite() || min <= 0.0 {
+            return Err(format!(
+                "instance {}: degenerate 72-config sweep (min makespan {min})",
+                inst.name
+            ));
+        }
+        let mut ratios = [0.0f64; 72];
+        for (r, &m) in ratios.iter_mut().zip(ms.iter()) {
+            *r = m / min;
+        }
+        per_instance.push(ratios);
+    }
+
+    let mut rows = Vec::new();
+    for comp in Component::ALL {
+        for value in comp.values() {
+            let mut sum = 0.0;
+            let mut worst = 0.0;
+            let mut optimal = 0usize;
+            let mut n = 0usize;
+            for ratios in &per_instance {
+                for (cfg, &r) in SchedulerConfig::ALL.iter().zip(ratios.iter()) {
+                    if comp.value_of(cfg) != value {
+                        continue;
+                    }
+                    sum += r;
+                    if r > worst {
+                        worst = r;
+                    }
+                    if r <= 1.0 + 1e-12 {
+                        optimal += 1;
+                    }
+                    n += 1;
+                }
+            }
+            rows.push(ComponentMapRow {
+                component: comp.as_str().to_string(),
+                value: value.to_string(),
+                mean_ratio: if n > 0 { sum / n as f64 } else { 0.0 },
+                worst_ratio: worst,
+                optimal_share: if n > 0 { optimal as f64 / n as f64 } else { 0.0 },
+                n,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+const MAP_HEADERS: [&str; 6] =
+    ["component", "value", "mean_ratio", "worst_ratio", "optimal_share", "n"];
+
+fn map_cells(rows: &[ComponentMapRow]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                r.component.clone(),
+                r.value.clone(),
+                fmt_f(r.mean_ratio, 4),
+                fmt_f(r.worst_ratio, 4),
+                fmt_f(r.optimal_share, 4),
+                r.n.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// ASCII rendering of [`component_rows`].
+pub fn component_table(rows: &[ComponentMapRow]) -> String {
+    ascii_table(&MAP_HEADERS, &map_cells(rows))
+}
+
+/// CSV rendering of [`component_rows`].
+pub fn write_component_csv(path: &Path, rows: &[ComponentMapRow]) -> std::io::Result<()> {
+    write_csv(path, &MAP_HEADERS, &map_cells(rows))
 }
 
 #[cfg(test)]
@@ -168,23 +1126,76 @@ mod tests {
     use super::*;
     use crate::datasets::Structure;
 
-    fn small_opts() -> AdversarialOptions {
-        AdversarialOptions { offspring: 6, generations: 10, ..Default::default() }
+    fn small_greedy() -> AdversarialOptions {
+        AdversarialOptions { offspring: 6, generations: 8, ..Default::default() }
+    }
+
+    fn small_anneal() -> AnnealOptions {
+        AnnealOptions { chains: 2, steps: 6, top: 4, ..Default::default() }
+    }
+
+    fn spec(st: Structure, ccr: f64) -> DatasetSpec {
+        DatasetSpec { count: 1, ..DatasetSpec::new(st, ccr) }
+    }
+
+    /// Satellite regression: degenerate instances (zero makespan, and
+    /// a zero-makespan pair denominator) are a descriptive `Err` on
+    /// both scoring paths — never a silent `1.0` or a NaN that poisons
+    /// champion selection.
+    #[test]
+    fn degenerate_instances_are_rejected() {
+        let mut g = TaskGraph::new();
+        g.add_task("free", 0.0); // zero cost ⇒ zero makespan everywhere
+        let degenerate = ProblemInstance::new("degenerate", g, Network::homogeneous(2, 1.0));
+        let pair = Objective::Pair { a: SchedulerConfig::met(), b: SchedulerConfig::heft() };
+        let mut pool = vec![SchedulerWorkspace::new()];
+        for obj in [pair, Objective::MaxRegret] {
+            let fused = score_fused(&obj, &degenerate, &mut pool);
+            let reference = score_reference(&obj, &degenerate);
+            assert!(fused.is_err(), "{obj:?}: fused scoring must reject");
+            assert!(reference.is_err(), "{obj:?}: reference scoring must reject");
+            assert!(
+                fused.unwrap_err().contains("degenerate"),
+                "the error names the problem"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_score_matches_reference_bitwise() {
+        let spec = spec(Structure::Cycles, 2.0);
+        let mut stream = spec.instance_rng(0);
+        let inst = spec.generate_one(&mut stream);
+        let mut pool = vec![SchedulerWorkspace::new()];
+        let pair = Objective::Pair { a: SchedulerConfig::met(), b: SchedulerConfig::heft() };
+        for obj in [pair, Objective::MaxRegret] {
+            let f = score_fused(&obj, &inst, &mut pool).unwrap();
+            let r = score_reference(&obj, &inst).unwrap();
+            assert_eq!(f.to_bits(), r.to_bits(), "{obj:?}");
+        }
+    }
+
+    #[test]
+    fn max_regret_is_at_least_one() {
+        let spec = spec(Structure::InTrees, 1.0);
+        let mut stream = spec.instance_rng(0);
+        let inst = spec.generate_one(&mut stream);
+        let s = score_reference(&Objective::MaxRegret, &inst).unwrap();
+        assert!(s >= 1.0, "max/min over the same sweep is >= 1, got {s}");
     }
 
     #[test]
     fn finds_instances_where_quickest_loses_badly() {
-        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::OutTrees, 0.5) };
         let res = adversarial_search(
-            &SchedulerConfig::met(),  // Quickest-based
+            &SchedulerConfig::met(), // Quickest-based
             &SchedulerConfig::heft(),
-            &spec,
+            &spec(Structure::OutTrees, 0.5),
             7,
-            &small_opts(),
-        );
+            &small_greedy(),
+        )
+        .unwrap();
         assert!(res.ratio >= res.seed_ratio, "search must never regress");
         assert!(res.ratio > 1.0, "MET must be beatable somewhere");
-        // The adversarial instance is a real, valid instance.
         assert!(res.instance.validate().is_ok());
         let s = SchedulerConfig::met().build().schedule(&res.instance);
         assert!(s.validate(&res.instance).is_ok());
@@ -192,50 +1203,105 @@ mod tests {
 
     #[test]
     fn self_comparison_stays_at_one() {
-        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
         let res = adversarial_search(
             &SchedulerConfig::heft(),
             &SchedulerConfig::heft(),
-            &spec,
+            &spec(Structure::Chains, 1.0),
             3,
-            &small_opts(),
-        );
+            &small_greedy(),
+        )
+        .unwrap();
         assert!((res.ratio - 1.0).abs() < 1e-12);
     }
 
     #[test]
-    fn deterministic_given_seed() {
-        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::InTrees, 1.0) };
-        let r1 = adversarial_search(
-            &SchedulerConfig::mct(),
-            &SchedulerConfig::heft(),
-            &spec,
-            11,
-            &small_opts(),
-        );
-        let r2 = adversarial_search(
-            &SchedulerConfig::mct(),
-            &SchedulerConfig::heft(),
-            &spec,
-            11,
-            &small_opts(),
-        );
+    fn greedy_deterministic_given_seed() {
+        let spec = spec(Structure::InTrees, 1.0);
+        let run = || {
+            adversarial_search(
+                &SchedulerConfig::mct(),
+                &SchedulerConfig::heft(),
+                &spec,
+                11,
+                &small_greedy(),
+            )
+            .unwrap()
+        };
+        let (r1, r2) = (run(), run());
         assert_eq!(r1.ratio, r2.ratio);
         assert_eq!(r1.instance, r2.instance);
     }
 
     #[test]
-    fn mutation_preserves_topology() {
-        let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Cycles, 1.0) };
+    fn operators_preserve_validity_smoke() {
+        let spec = spec(Structure::Cycles, 1.0);
         let mut stream = spec.instance_rng(0);
         let inst = spec.generate_one(&mut stream);
         let mut rng = Rng::seeded(5);
-        let mutant = mutate(&inst, &mut rng, &AdversarialOptions::default());
+        let opts = MutationOptions::default();
+        for op in MutationOp::ALL {
+            if let Some(mutant) = apply_mutation(&inst, op, &mut rng, &opts) {
+                assert!(mutant.validate().is_ok(), "{op:?} broke validity");
+            }
+        }
+        // Weight nudges preserve topology exactly (the original
+        // contract of the weight-only mutator).
+        let mutant = apply_mutation(&inst, MutationOp::WeightNudge, &mut rng, &opts).unwrap();
         assert_eq!(mutant.graph.len(), inst.graph.len());
-        assert_eq!(mutant.graph.num_edges(), inst.graph.num_edges());
         let e1: Vec<(usize, usize)> = inst.graph.edges().map(|(s, d, _)| (s, d)).collect();
         let e2: Vec<(usize, usize)> = mutant.graph.edges().map(|(s, d, _)| (s, d)).collect();
         assert_eq!(e1, e2);
-        assert!(mutant.validate().is_ok());
+    }
+
+    #[test]
+    fn anneal_improves_or_matches_seed_and_dedups() {
+        let res = anneal_search(
+            &Objective::MaxRegret,
+            &spec(Structure::OutTrees, 1.0),
+            21,
+            &small_anneal(),
+            1,
+        )
+        .unwrap();
+        assert!(res.best_score >= res.seed_score);
+        assert!(!res.corpus.is_empty() && res.corpus.len() <= 4);
+        let hashes: HashSet<u64> = res.corpus.iter().map(|d| d.hash).collect();
+        assert_eq!(hashes.len(), res.corpus.len(), "corpus is hash-deduped");
+        for w in res.corpus.windows(2) {
+            assert!(w[0].score >= w[1].score, "corpus sorted by score desc");
+        }
+    }
+
+    #[test]
+    fn anneal_corpus_identical_across_thread_counts() {
+        let spec = spec(Structure::InTrees, 2.0);
+        let obj = Objective::Pair { a: SchedulerConfig::met(), b: SchedulerConfig::heft() };
+        let r1 = anneal_search(&obj, &spec, 42, &small_anneal(), 1).unwrap();
+        let r4 = anneal_search(&obj, &spec, 42, &small_anneal(), 4).unwrap();
+        assert_eq!(r1.corpus.len(), r4.corpus.len());
+        for (a, b) in r1.corpus.iter().zip(&r4.corpus) {
+            assert_eq!(a.hash, b.hash);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(a.instance, b.instance);
+        }
+        assert_eq!(r1.seed_score.to_bits(), r4.seed_score.to_bits());
+    }
+
+    #[test]
+    fn component_map_covers_every_component_value() {
+        let spec = spec(Structure::Chains, 1.0);
+        let mut stream = spec.instance_rng(0);
+        let instances = vec![spec.generate_one(&mut stream)];
+        let rows = component_rows(&instances).unwrap();
+        // 3 priorities + 3 compares + 2×3 booleans = 12 rows.
+        assert_eq!(rows.len(), 12);
+        for r in &rows {
+            assert!(r.n > 0, "{}/{} aggregated nothing", r.component, r.value);
+            assert!(r.mean_ratio >= 1.0 - 1e-12);
+            assert!(r.worst_ratio >= r.mean_ratio - 1e-12 || r.n == 1);
+        }
+        let table = component_table(&rows);
+        assert!(table.contains("append_only"));
+        assert!(table.contains("optimal_share"));
     }
 }

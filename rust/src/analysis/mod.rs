@@ -11,11 +11,16 @@ pub mod render;
 pub mod report;
 pub mod robustness;
 
-pub use adversarial::{adversarial_search, AdversarialOptions, AdversarialResult};
+pub use adversarial::{
+    adversarial_search, anneal_search, apply_mutation, component_rows, component_table,
+    propose, score_fused, score_reference, write_component_csv, write_corpus,
+    AdversarialOptions, AdversarialResult, AnnealOptions, AnnealResult, ComponentMapRow,
+    Discovery, MutationOp, MutationOptions, Objective, ScoreCache,
+};
 pub use dedup::{dedup_rows, dedup_table, write_dedup_csv, DedupRow};
 pub use effects::{effect, Component, EffectRow};
 pub use fault::{fault_rows, fault_table, write_fault_csv, FaultRow};
-pub use report::{write_report, write_report_with_sim};
+pub use report::{write_report, write_report_full, write_report_with_sim};
 pub use robustness::{
     robustness_rows, robustness_table, write_robustness_csv, RobustnessRow,
 };

@@ -6,6 +6,7 @@ use std::path::Path;
 
 use super::Artifact;
 use crate::benchmark::{BenchmarkResults, SimRecord};
+use crate::instance::ProblemInstance;
 
 /// Generate every artifact and write `<out_dir>/REPORT.md`. Returns the
 /// report text.
@@ -14,7 +15,7 @@ pub fn write_report(
     out_dir: &Path,
     elapsed_secs: f64,
 ) -> std::io::Result<String> {
-    write_report_with_sim(results, &[], out_dir, elapsed_secs)
+    write_report_full(results, &[], &[], out_dir, elapsed_secs)
 }
 
 /// [`write_report`] plus simulation sections: when `sim_records` is
@@ -23,6 +24,21 @@ pub fn write_report(
 pub fn write_report_with_sim(
     results: &BenchmarkResults,
     sim_records: &[SimRecord],
+    out_dir: &Path,
+    elapsed_secs: f64,
+) -> std::io::Result<String> {
+    write_report_full(results, sim_records, &[], out_dir, elapsed_secs)
+}
+
+/// [`write_report_with_sim`] plus the adversarial section: when
+/// `adversarial` is non-empty (a discovered corpus, e.g. loaded via
+/// `ptgs reproduce --adversarial-corpus`) the report additionally
+/// renders the per-component robustness map over those worst-case
+/// instances (`adversarial_components.csv`).
+pub fn write_report_full(
+    results: &BenchmarkResults,
+    sim_records: &[SimRecord],
+    adversarial: &[ProblemInstance],
     out_dir: &Path,
     elapsed_secs: f64,
 ) -> std::io::Result<String> {
@@ -81,6 +97,18 @@ pub fn write_report_with_sim(
         ));
     }
 
+    if !adversarial.is_empty() {
+        let rows = super::component_rows(adversarial)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        super::write_component_csv(&out_dir.join("adversarial_components.csv"), &rows)?;
+        md.push_str(&format!(
+            "## adversarial — per-component robustness map over {} discovered \
+             instances\n\n```text\n{}\n```\n\n",
+            adversarial.len(),
+            super::component_table(&rows).trim_end()
+        ));
+    }
+
     std::fs::create_dir_all(out_dir)?;
     std::fs::write(out_dir.join("REPORT.md"), &md)?;
     Ok(md)
@@ -134,6 +162,22 @@ mod tests {
         assert!(md.contains("## faults"));
         assert!(dir.join("robustness.csv").exists());
         assert!(dir.join("fault.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn report_with_adversarial_corpus_adds_component_map() {
+        let h = Harness::with_schedulers(vec![SchedulerConfig::heft()]);
+        let spec = DatasetSpec { count: 2, ..DatasetSpec::new(Structure::Chains, 1.0) };
+        let results = BenchmarkResults::new(h.run_dataset(&spec));
+        let corpus: Vec<_> =
+            (0..2).map(|i| spec.generate_one(&mut spec.instance_rng(i))).collect();
+        let dir = std::env::temp_dir().join("ptgs_report_adv_test");
+        let md = write_report_full(&results, &[], &corpus, &dir, 0.5).unwrap();
+        assert!(md.contains("## adversarial"));
+        assert!(md.contains("2 discovered instances"));
+        assert!(md.contains("optimal_share"));
+        assert!(dir.join("adversarial_components.csv").exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

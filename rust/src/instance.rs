@@ -54,6 +54,47 @@ impl ProblemInstance {
         }
     }
 
+    /// Structural content hash (FNV-1a, the same family and constants
+    /// as [`crate::schedule::Schedule::content_hash`]): mixes the task
+    /// count and costs, the adjacency (successor lists with edge
+    /// weights, in task order), the node count and speeds, and the
+    /// upper-triangle link matrix. The instance **name is deliberately
+    /// excluded** — the adversarial search renames instances freely
+    /// (mutant lineage tags, corpus ranks), and two structurally
+    /// identical instances must land on one dedup/score-cache entry.
+    /// Collisions are possible in principle (64-bit hash) but not
+    /// between the instances one search run visits in practice.
+    pub fn content_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        };
+        let g = &self.graph;
+        mix(g.len() as u64);
+        for t in 0..g.len() {
+            mix(g.cost(t).to_bits());
+            for &(d, w) in g.successors(t) {
+                mix(t as u64);
+                mix(d as u64);
+                mix(w.to_bits());
+            }
+        }
+        let m = self.network.len();
+        mix(m as u64);
+        for v in 0..m {
+            mix(self.network.speed(v).to_bits());
+        }
+        for i in 0..m {
+            for j in i..m {
+                mix(self.network.link(i, j).to_bits());
+            }
+        }
+        h
+    }
+
     /// Structural validation of both components.
     pub fn validate(&self) -> Result<(), String> {
         self.graph.validate()?;
@@ -124,6 +165,26 @@ mod tests {
         let text = p.to_json().to_string();
         let back = ProblemInstance::from_json(&crate::util::parse(&text).unwrap()).unwrap();
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn content_hash_ignores_name_tracks_structure() {
+        let p = tiny();
+        let mut renamed = p.clone();
+        renamed.name = "something-else".into();
+        assert_eq!(p.content_hash(), renamed.content_hash(), "names are excluded");
+
+        let mut heavier = p.clone();
+        let mut g = TaskGraph::new();
+        g.add_task("a", 2.5); // cost changed
+        g.add_task("b", 4.0);
+        g.add_edge(0, 1, 3.0);
+        heavier.graph = g;
+        assert_ne!(p.content_hash(), heavier.content_hash(), "cost changes the hash");
+
+        let mut faster = p.clone();
+        faster.network = Network::homogeneous(2, 2.0);
+        assert_ne!(p.content_hash(), faster.content_hash(), "links change the hash");
     }
 
     #[test]

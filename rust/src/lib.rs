@@ -54,8 +54,11 @@
 //!   per-request deadlines, warm per-worker workspaces, and a
 //!   content-hash response cache.
 //! * [`analysis`] — pareto fronts, per-component effects, pairwise
-//!   interactions, the robustness table, and renderers for every
-//!   table/figure in the paper.
+//!   interactions, the robustness table, renderers for every
+//!   table/figure in the paper, and the adversarial instance search
+//!   ([`analysis::anneal_search`]): simulated-annealing chains scored
+//!   by the fused 72-config sweep, with validity-preserving structural
+//!   mutations and a content-hash dedup cache.
 //! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`
 //!   (execution requires the off-by-default `xla` cargo feature).
 //!

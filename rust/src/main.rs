@@ -7,9 +7,10 @@
 //! ptgs simulate  [--schedulers all] [--structures all] [--ccrs all] [--count 20] [--sigma 0.2] [--slowdown-prob 0] [--slowdown-factor 2] [--trials 10] [--policy static|reschedule] [--slack 0.1] [--faults] [--mtbf 0.5] [--recovery 0.05] [--retries 3] [--strict] [--seed <datasets>] [--sim-seed <noise trials>] [--threads N] [--out results/robustness.csv]
 //! ptgs trace     --input <file|dir[,...]> [--ccr <f64>] [--schedulers all] [--max-tasks <n>] [--nodes 4] [--heterogeneity 0.333] [--net-seed <u64>] [--no-verify] [--per-config] [--simulate (+ the simulate/fault flags)] [--strict] [--threads N] [--out <csv>]
 //! ptgs analyze   [--results results/benchmark.json] [--artifact all] [--out-dir results]
-//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N] [--fused] [--simulate (+ the simulate/fault flags)] [--out-dir results]
+//! ptgs reproduce [--count 100] [--repeats 3] [--artifact all] [--threads N] [--fused] [--simulate (+ the simulate/fault flags)] [--adversarial-corpus <dir|file[,...]>] [--out-dir results]
 //! ptgs rank      [--structure chains] [--ccr 1] [--seed 0] [--backend native|xla]
 //! ptgs serve     [--addr 127.0.0.1:7463] [--threads N] [--queue-depth 64] [--timeout-ms 30000] [--io-timeout-ms 30000] [--degrade-threshold 0] [--cache-size 256] [--schedulers all] [--debug]
+//! ptgs adversarial [--objective pair --a MET --b HEFT | --objective max-regret] [--anneal --chains 4 --steps 64 --top 8 --temp 0.05 --cooling 0.95 --corpus-out <dir>] [--structure out_trees --ccr 1 --seed <u64>] [--generations 50] [--threads N] [--out <json>]
 //! ptgs list      schedulers|datasets|artifacts
 //! ```
 //!
@@ -54,6 +55,8 @@ COMMANDS:
   rank       compute task ranks (native or XLA backend)
   serve      run the scheduling daemon (HTTP/1.1 JSON API, fused sweep
              per request; POST /shutdown for clean exit)
+  adversarial  search for worst-case instances (greedy A/B pair, or
+             --anneal simulated annealing over the fused 72-config sweep)
   list       list schedulers | datasets | artifacts
 
 Run `ptgs <COMMAND> --help`-style flags per the module docs in
@@ -597,6 +600,27 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
         Vec::new()
     };
 
+    // `--adversarial-corpus <dir|file[,...]>` feeds a discovered corpus
+    // (`ptgs adversarial --anneal --corpus-out`, or the vendored fifth
+    // dataset under rust/tests/data/adversarial) into the report as a
+    // per-component robustness map over worst-case shapes.
+    let adversarial = match args.get("adversarial-corpus") {
+        Some(list) => {
+            let paths: Vec<PathBuf> = list.split(',').map(PathBuf::from).collect();
+            let set = ptgs::datasets::traces::TraceSet::load_paths(
+                &paths,
+                &ptgs::datasets::traces::TraceOptions::default(),
+            )
+            .map_err(|e| anyhow!("loading adversarial corpus: {e}"))?;
+            eprintln!(
+                "reproduce: {} adversarial corpus instances loaded",
+                set.instances.len()
+            );
+            set.instances
+        }
+        None => Vec::new(),
+    };
+
     match args.get("artifact") {
         Some(id) => {
             for a in parse_artifacts(id)? {
@@ -604,9 +628,10 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
             }
         }
         None => {
-            let md = ptgs::analysis::write_report_with_sim(
+            let md = ptgs::analysis::write_report_full(
                 &results,
                 &sim_records,
+                &adversarial,
                 &out_dir,
                 elapsed,
             )?;
@@ -638,23 +663,90 @@ fn cmd_rank(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ptgs adversarial --a MET --b HEFT [--structure out_trees --ccr 1]
-/// [--generations 50] [--seed 0]` — search for an instance where A is
-/// maximally worse than B (paper §V future work, ref [14]).
+/// `ptgs adversarial` — search for worst-case problem instances (paper
+/// §V future work, ref [14]). The default is the greedy (1+λ) pairwise
+/// search (`--a MET --b HEFT`); `--anneal` runs K simulated-annealing
+/// chains over the fused 72-config sweep, with `--objective pair` or
+/// `--objective max-regret`, and `--corpus-out <dir>` emits the top
+/// discoveries as loadable trace JSONs plus their per-component
+/// robustness map. One `--seed` drives both the dataset-sampled start
+/// instances and the search RNG (`--search-seed` is a deprecated
+/// alias); the corpus depends on `--chains` but never on `--threads`.
 fn cmd_adversarial(args: &Args) -> Result<()> {
-    let name_a = args.get_or("a", "MET");
-    let name_b = args.get_or("b", "HEFT");
-    let a = SchedulerConfig::from_name(&name_a)
-        .ok_or_else(|| anyhow!("unknown scheduler {name_a}"))?;
-    let b = SchedulerConfig::from_name(&name_b)
-        .ok_or_else(|| anyhow!("unknown scheduler {name_b}"))?;
-    let spec = spec_from_args(args, "out_trees")?;
+    let objective = objective_from_args(args)?;
+    let mut spec = spec_from_args(args, "out_trees")?;
+    let seed = adversarial_seed(args)?.unwrap_or(spec.seed);
+    spec.seed = seed;
+
+    if args.has("anneal") {
+        let chains = args.get_parse("chains", 4usize).map_err(|e| anyhow!(e))?;
+        if chains == 0 {
+            bail!("--chains must be >= 1");
+        }
+        let steps = args.get_parse("steps", 64usize).map_err(|e| anyhow!(e))?;
+        if steps == 0 {
+            bail!("--steps must be >= 1");
+        }
+        let top = args.get_parse("top", 8usize).map_err(|e| anyhow!(e))?;
+        if top == 0 {
+            bail!("--top must be >= 1");
+        }
+        let opts = ptgs::analysis::AnnealOptions {
+            chains,
+            steps,
+            top,
+            temp0: args.get_parse("temp", 0.05f64).map_err(|e| anyhow!(e))?,
+            cooling: args.get_parse("cooling", 0.95f64).map_err(|e| anyhow!(e))?,
+            ..Default::default()
+        };
+        let threads = worker_count(args)?.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        let res = ptgs::analysis::anneal_search(&objective, &spec, seed, &opts, threads)
+            .map_err(|e| anyhow!(e))?;
+        println!(
+            "adversarial anneal: objective {} on {} (seed {seed}, {chains} chains x \
+             {steps} steps, {threads} threads)",
+            objective.tag(),
+            spec.name(),
+        );
+        println!("seed instance score:     {:.4}", res.seed_score);
+        println!("best discovered score:   {:.4}", res.best_score);
+        for (rank, d) in res.corpus.iter().enumerate() {
+            println!(
+                "  #{rank:02}  score {:.4}  tasks {:3}  nodes {:2}  chain {}  hash {:016x}",
+                d.score,
+                d.instance.graph.len(),
+                d.instance.network.len(),
+                d.chain,
+                d.hash,
+            );
+        }
+        println!(
+            "evaluations: {} fused sweeps, {} cache hits, {} rejected (advisory)",
+            res.evaluations, res.cache_hits, res.rejected,
+        );
+        if let Some(dir) = args.get("corpus-out") {
+            let dir = PathBuf::from(dir);
+            let paths = ptgs::analysis::write_corpus(&dir, &res.corpus, &objective.tag())?;
+            println!("corpus: {} trace JSONs written to {}", paths.len(), dir.display());
+            let instances: Vec<ProblemInstance> =
+                res.corpus.iter().map(|d| d.instance.clone()).collect();
+            let rows = ptgs::analysis::component_rows(&instances).map_err(|e| anyhow!(e))?;
+            println!("{}", ptgs::analysis::component_table(&rows));
+        }
+        return Ok(());
+    }
+
+    let ptgs::analysis::Objective::Pair { a, b } = objective else {
+        bail!("--objective max-regret requires --anneal");
+    };
     let opts = ptgs::analysis::AdversarialOptions {
         generations: args.get_parse("generations", 50).map_err(|e| anyhow!(e))?,
         ..Default::default()
     };
-    let rng_seed = args.get_parse("search-seed", 0u64).map_err(|e| anyhow!(e))?;
-    let res = ptgs::analysis::adversarial_search(&a, &b, &spec, rng_seed, &opts);
+    let res =
+        ptgs::analysis::adversarial_search(&a, &b, &spec, seed, &opts).map_err(|e| anyhow!(e))?;
     println!(
         "adversarial search: worst-case m({})/m({}) on {} seeds",
         a.name(),
@@ -779,6 +871,42 @@ fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
         options.workers = n;
     }
     Ok(options)
+}
+
+/// Parse the adversarial objective: `--objective pair` (default, with
+/// `--a`/`--b` naming the attacked and reference schedulers) or
+/// `--objective max-regret` (worst config over best of all 72).
+fn objective_from_args(args: &Args) -> Result<ptgs::analysis::Objective> {
+    match args.get_or("objective", "pair").as_str() {
+        "pair" => {
+            let name_a = args.get_or("a", "MET");
+            let name_b = args.get_or("b", "HEFT");
+            let a = SchedulerConfig::from_name(&name_a)
+                .ok_or_else(|| anyhow!("unknown scheduler {name_a}"))?;
+            let b = SchedulerConfig::from_name(&name_b)
+                .ok_or_else(|| anyhow!("unknown scheduler {name_b}"))?;
+            Ok(ptgs::analysis::Objective::Pair { a, b })
+        }
+        "max-regret" | "max_regret" => Ok(ptgs::analysis::Objective::MaxRegret),
+        other => bail!("unknown --objective {other} (pair|max-regret)"),
+    }
+}
+
+/// The adversarial search seed: `--seed` is the primary spelling
+/// (consistent with every other subcommand); the legacy
+/// `--search-seed` is a **deprecated** alias (mirrors the
+/// `--workers` → `--threads` precedent) that warns on stderr. One seed
+/// drives both the dataset-sampled start instances and the search RNG,
+/// so the two spellings are exactly equivalent.
+fn adversarial_seed(args: &Args) -> Result<Option<u64>> {
+    if let Some(v) = args.get("seed") {
+        return Ok(Some(v.parse().map_err(|e| anyhow!("invalid --seed: {e}"))?));
+    }
+    if let Some(v) = args.get("search-seed") {
+        eprintln!("warning: --search-seed is deprecated; use --seed");
+        return Ok(Some(v.parse().map_err(|e| anyhow!("invalid --search-seed: {e}"))?));
+    }
+    Ok(None)
 }
 
 fn spec_from_args(args: &Args, default_structure: &str) -> Result<DatasetSpec> {

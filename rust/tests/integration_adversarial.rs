@@ -1,0 +1,183 @@
+//! Adversarial-search integration: the CI-gated determinism contract
+//! (same seed ⇒ byte-identical discovered corpus across thread counts),
+//! the corpus round-trip through the trace loader (the "fifth
+//! dataset"), and the vendored worst-case fixtures under
+//! `rust/tests/data/adversarial/`.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use ptgs::analysis::{anneal_search, component_rows, write_corpus, AnnealOptions, Objective};
+use ptgs::datasets::traces::{TraceOptions, TraceSet};
+use ptgs::datasets::{DatasetSpec, Structure};
+use ptgs::scheduler::SchedulerConfig;
+
+fn ptgs() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ptgs"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Read every corpus file in `dir` as (file name, bytes), sorted.
+fn corpus_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+fn small_opts(chains: usize) -> AnnealOptions {
+    AnnealOptions { chains, steps: 8, top: 4, ..AnnealOptions::default() }
+}
+
+/// The determinism contract, library level: for a fixed seed the
+/// written corpus is byte-identical whether the chains run serially
+/// (threads=1) or in parallel (threads=4) — for one chain and for
+/// several. `--chains` is the logical knob; `--threads` must never
+/// change a byte.
+#[test]
+fn corpus_byte_identical_across_thread_counts() {
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::OutTrees, 1.0) };
+    let obj = Objective::MaxRegret;
+    for chains in [1usize, 4] {
+        let opts = small_opts(chains);
+        let r1 = anneal_search(&obj, &spec, 1234, &opts, 1).unwrap();
+        let r4 = anneal_search(&obj, &spec, 1234, &opts, 4).unwrap();
+        let d1 = tmpdir(&format!("ptgs_adv_t1_c{chains}"));
+        let d4 = tmpdir(&format!("ptgs_adv_t4_c{chains}"));
+        write_corpus(&d1, &r1.corpus, &obj.tag()).unwrap();
+        write_corpus(&d4, &r4.corpus, &obj.tag()).unwrap();
+        let (b1, b4) = (corpus_bytes(&d1), corpus_bytes(&d4));
+        assert!(!b1.is_empty(), "chains={chains}: corpus must not be empty");
+        assert_eq!(b1, b4, "chains={chains}: corpus depends on --threads");
+        let _ = std::fs::remove_dir_all(d1);
+        let _ = std::fs::remove_dir_all(d4);
+    }
+}
+
+/// Different chain counts are *allowed* to discover different corpora —
+/// the knob is logical — but the same chain count must reproduce.
+#[test]
+fn corpus_reproducible_for_fixed_chain_count() {
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::InTrees, 2.0) };
+    let obj = Objective::Pair { a: SchedulerConfig::met(), b: SchedulerConfig::heft() };
+    let opts = small_opts(2);
+    let a = anneal_search(&obj, &spec, 7, &opts, 2).unwrap();
+    let b = anneal_search(&obj, &spec, 7, &opts, 3).unwrap();
+    assert_eq!(a.corpus.len(), b.corpus.len());
+    for (x, y) in a.corpus.iter().zip(&b.corpus) {
+        assert_eq!(x.hash, y.hash);
+        assert_eq!(x.score.to_bits(), y.score.to_bits());
+        assert_eq!(x.instance, y.instance);
+    }
+}
+
+/// End-to-end through the binary: `ptgs adversarial --anneal
+/// --corpus-out` twice with the same seed but different `--threads`,
+/// corpora compared byte for byte — the same invariant the CI
+/// adversarial-smoke leg gates with `cmp`.
+#[test]
+fn cli_anneal_corpus_deterministic_across_threads() {
+    let d1 = tmpdir("ptgs_adv_cli_a");
+    let d4 = tmpdir("ptgs_adv_cli_b");
+    for (dir, threads) in [(&d1, "1"), (&d4, "4")] {
+        let out = ptgs()
+            .args([
+                "adversarial",
+                "--anneal",
+                "--objective",
+                "max-regret",
+                "--structure",
+                "out_trees",
+                "--ccr",
+                "1",
+                "--seed",
+                "77",
+                "--chains",
+                "2",
+                "--steps",
+                "6",
+                "--top",
+                "3",
+                "--threads",
+                threads,
+                "--corpus-out",
+            ])
+            .arg(dir)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("best discovered score:"), "{text}");
+        assert!(text.contains("corpus:"), "{text}");
+        assert!(text.contains("optimal_share"), "component map printed: {text}");
+    }
+    let (b1, b4) = (corpus_bytes(&d1), corpus_bytes(&d4));
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, "CLI corpus depends on --threads");
+    let _ = std::fs::remove_dir_all(d1);
+    let _ = std::fs::remove_dir_all(d4);
+}
+
+/// A freshly discovered corpus loads back through the trace loader (the
+/// fifth-dataset path), survives the round-trip structurally, and
+/// renders a full 12-row per-component robustness map.
+#[test]
+fn discovered_corpus_loads_as_fifth_dataset() {
+    let spec = DatasetSpec { count: 1, ..DatasetSpec::new(Structure::Chains, 1.0) };
+    let obj = Objective::MaxRegret;
+    let res = anneal_search(&obj, &spec, 99, &small_opts(2), 2).unwrap();
+    let dir = tmpdir("ptgs_adv_roundtrip");
+    let paths = write_corpus(&dir, &res.corpus, &obj.tag()).unwrap();
+    assert_eq!(paths.len(), res.corpus.len());
+
+    let set = TraceSet::load_paths(&[dir.clone()], &TraceOptions::default()).unwrap();
+    assert_eq!(set.instances.len(), res.corpus.len());
+    for (loaded, d) in set.instances.iter().zip(&res.corpus) {
+        // write_corpus renames by rank; structure must survive exactly.
+        assert_eq!(loaded.graph, d.instance.graph, "{}", loaded.name);
+        assert_eq!(loaded.network, d.instance.network, "{}", loaded.name);
+        assert_eq!(loaded.content_hash(), d.hash, "{}", loaded.name);
+        assert!(loaded.name.starts_with("adv_max_regret_"), "{}", loaded.name);
+    }
+
+    let rows = component_rows(&set.instances).unwrap();
+    assert_eq!(rows.len(), 12, "3+3+2+2+2 component values");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The vendored fifth dataset: every fixture under
+/// `rust/tests/data/adversarial/` loads, validates, schedules under
+/// all 72 configs, and actually separates the component space (some
+/// config is strictly worse than the best — max-regret > 1).
+#[test]
+fn vendored_adversarial_fixtures_load_and_discriminate() {
+    let dir = PathBuf::from("rust/tests/data/adversarial");
+    let set = TraceSet::load_paths(&[dir], &TraceOptions::default()).unwrap();
+    assert_eq!(set.instances.len(), 4, "four vendored worst-case fixtures");
+    for inst in &set.instances {
+        inst.validate().unwrap_or_else(|e| panic!("{}: {e}", inst.name));
+        let s = ptgs::analysis::score_reference(&Objective::MaxRegret, inst)
+            .unwrap_or_else(|e| panic!("{}: {e}", inst.name));
+        assert!(s > 1.0 + 1e-9, "{}: fixture separates nothing (max-regret {s})", inst.name);
+        let sched = SchedulerConfig::heft().build().schedule(inst);
+        sched.validate(inst).unwrap_or_else(|e| panic!("{}: {e}", inst.name));
+    }
+    let rows = component_rows(&set.instances).unwrap();
+    assert_eq!(rows.len(), 12);
+    assert!(rows.iter().all(|r| r.n > 0));
+    assert!(
+        rows.iter().any(|r| r.worst_ratio > 1.0 + 1e-9),
+        "the robustness map over the fixtures must show losses somewhere"
+    );
+}

@@ -285,3 +285,53 @@ fn rank_xla_backend_if_artifacts_present() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("backend: Xla"));
 }
+
+#[test]
+fn adversarial_seed_and_search_seed_are_equivalent() {
+    // `--seed` is the primary spelling; `--search-seed` is the
+    // deprecated alias — both must drive the whole command (dataset
+    // seed instance + search RNG) identically.
+    let common = [
+        "adversarial",
+        "--a",
+        "MET",
+        "--b",
+        "HEFT",
+        "--structure",
+        "out_trees",
+        "--ccr",
+        "1",
+        "--generations",
+        "3",
+    ];
+    let with_seed = ptgs().args(common).args(["--seed", "9"]).output().unwrap();
+    assert!(with_seed.status.success(), "{}", String::from_utf8_lossy(&with_seed.stderr));
+    let with_alias = ptgs().args(common).args(["--search-seed", "9"]).output().unwrap();
+    assert!(with_alias.status.success(), "{}", String::from_utf8_lossy(&with_alias.stderr));
+
+    assert_eq!(
+        String::from_utf8_lossy(&with_seed.stdout),
+        String::from_utf8_lossy(&with_alias.stdout),
+        "--seed and --search-seed must produce identical searches"
+    );
+    let text = String::from_utf8_lossy(&with_seed.stdout);
+    assert!(text.contains("adversarial ratio:"), "{text}");
+    assert!(
+        !String::from_utf8_lossy(&with_seed.stderr).contains("deprecated"),
+        "--seed is the primary spelling, no warning"
+    );
+    assert!(
+        String::from_utf8_lossy(&with_alias.stderr).contains("--search-seed is deprecated"),
+        "the alias warns on stderr"
+    );
+}
+
+#[test]
+fn adversarial_max_regret_requires_anneal() {
+    let out = ptgs()
+        .args(["adversarial", "--objective", "max-regret", "--generations", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("requires --anneal"));
+}

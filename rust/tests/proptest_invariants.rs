@@ -830,3 +830,53 @@ fn prop_trace_round_trip_and_ccr() {
         }
     }
 }
+
+/// Every adversarial mutation operator preserves instance validity —
+/// acyclicity, positive-finite weights and speeds, a symmetric
+/// schedulable network — over arbitrary instances and seeds, and
+/// multi-step `propose` chains (the annealing trajectory) stay valid
+/// and schedulable end to end.
+#[test]
+fn prop_mutation_operators_preserve_validity() {
+    use ptgs::analysis::{apply_mutation, propose, MutationOp, MutationOptions};
+
+    let opts = MutationOptions::default();
+    let heft = SchedulerConfig::heft().build();
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(0xAD7E + case);
+        let inst = arbitrary_instance(&mut rng);
+        for op in MutationOp::ALL {
+            let Some(mutant) = apply_mutation(&inst, op, &mut rng, &opts) else {
+                continue; // operator not applicable to this shape
+            };
+            mutant
+                .validate()
+                .unwrap_or_else(|e| panic!("seed {case}: {} broke validity: {e}", op.as_str()));
+            for t in 0..mutant.graph.len() {
+                let c = mutant.graph.cost(t);
+                assert!(c.is_finite() && c >= 0.0, "seed {case}: {} cost {c}", op.as_str());
+            }
+            for (_, _, w) in mutant.graph.edges() {
+                assert!(w.is_finite() && w >= 0.0, "seed {case}: {} edge {w}", op.as_str());
+            }
+            for v in 0..mutant.network.len() {
+                let s = mutant.network.speed(v);
+                assert!(s.is_finite() && s > 0.0, "seed {case}: {} speed {s}", op.as_str());
+            }
+            let s = heft.schedule(&mutant);
+            s.validate(&mutant)
+                .unwrap_or_else(|e| panic!("seed {case}: {} unschedulable: {e}", op.as_str()));
+        }
+
+        // A 5-step propose chain (what annealing actually walks).
+        let mut cur = inst;
+        for step in 0..5 {
+            cur = propose(&cur, &mut rng, &opts);
+            cur.validate()
+                .unwrap_or_else(|e| panic!("seed {case} step {step}: chain invalid: {e}"));
+            let s = heft.schedule(&cur);
+            s.validate(&cur)
+                .unwrap_or_else(|e| panic!("seed {case} step {step}: unschedulable: {e}"));
+        }
+    }
+}
